@@ -1,0 +1,30 @@
+"""Shared benchmark utilities: wall-clock timing of jitted callables and a
+tiny result-reporting contract (name, us_per_call, derived)."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+import jax
+
+Row = Tuple[str, float, str]
+
+
+def time_jit(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median wall time (us) of fn(*args) after jit warmup."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def emit(rows: List[Row]) -> None:
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

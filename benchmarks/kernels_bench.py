@@ -1,0 +1,61 @@
+"""Pallas kernel benchmarks: jnp reference path vs the kernel in interpret
+mode (CPU container: interpret mode validates semantics; wall-clock wins
+require real TPU -- the XLA path below is what production uses on CPU)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_jit
+from repro.core import skew
+from repro.core.cayley import build_rotation
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+
+
+def run():
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    # block_oft_apply
+    for t, d, b in [(2048, 1024, 32), (8192, 4096, 32)]:
+        x = jax.random.normal(key, (t, d), jnp.float32)
+        qp = skew.random_skew(key, (d // b,), b, scale=0.05)
+        r = build_rotation(qp, b, 5)
+        ref = jax.jit(kref.block_oft_apply_ref)
+        us = time_jit(ref, x, r)
+        rows.append((f"kernel/block_oft_apply/ref/{t}x{d}", us,
+                     f"xla_jnp;b={b}"))
+    # cayley_neumann build
+    for r_blocks, b in [(128, 32), (512, 32), (64, 64)]:
+        qp = skew.random_skew(key, (r_blocks,), b, scale=0.05)
+        ref = jax.jit(lambda q: kref.cayley_neumann_ref(q, b, 5))
+        us = time_jit(ref, qp)
+        rows.append((f"kernel/cayley_neumann/ref/{r_blocks}x{b}", us,
+                     "xla_jnp;k=5"))
+    # nf4 dequant
+    from repro.config.base import QuantConfig
+    from repro.quant import nf4
+    qcfg = QuantConfig(kind="nf4", block_size=64, double_quant=False)
+    for d_in, d_out in [(1024, 1024), (4096, 4096)]:
+        w = 0.02 * jax.random.normal(key, (d_in, d_out))
+        q = nf4.quantize(w, qcfg)
+        ref = jax.jit(lambda c, a: kref.nf4_dequant_ref(c, a, 64,
+                                                        jnp.float32))
+        us = time_jit(ref, q["nf4_codes"], q["absmax"])
+        rows.append((f"kernel/nf4_dequant/ref/{d_in}x{d_out}", us,
+                     "xla_jnp"))
+
+    # interpret-mode correctness spot check (timing not meaningful on CPU)
+    x = jax.random.normal(key, (256, 512), jnp.float32)
+    qp = skew.random_skew(key, (16,), 32, scale=0.05)
+    r = build_rotation(qp, 32, 5)
+    err = float(jnp.max(jnp.abs(kops.block_oft_apply(x, r)
+                                - kref.block_oft_apply_ref(x, r))))
+    rows.append(("kernel/block_oft_apply/interpret_max_err", 0.0,
+                 f"{err:.2e}"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,0 +1,66 @@
+"""Roofline report: reads artifacts/dryrun/*.json and prints the per-cell
+table that EXPERIMENTS.md §Roofline embeds (single-pod cells) plus the
+multi-pod dry-run summary for §Dry-run."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+ARTIFACTS = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def load(mesh: str):
+    recs = []
+    for p in sorted(ARTIFACTS.glob(f"*__{mesh}.json")):
+        try:
+            recs.append(json.loads(p.read_text()))
+        except json.JSONDecodeError:
+            continue
+    return recs
+
+
+def fmt_bytes(b):
+    return f"{b / 1e9:.2f}GB"
+
+
+def roofline_table(mesh="single"):
+    rows = []
+    header = ("arch", "shape", "compute_s", "memory_s", "collective_s",
+              "bottleneck", "useful_frac", "temp_mem", "args_mem")
+    rows.append(",".join(header))
+    for r in load(mesh):
+        if r.get("skipped"):
+            rows.append(f"{r['arch']},{r['shape']},SKIP({r['skipped']}),,,,,,")
+            continue
+        t = r["roofline"]
+        mem = r.get("memory_analysis", {})
+        rows.append(",".join([
+            r["arch"], r["shape"], f"{t['compute_s']:.3e}",
+            f"{t['memory_s']:.3e}", f"{t['collective_s']:.3e}",
+            t["bottleneck"],
+            f"{r['model_flops']['useful_fraction']:.3f}",
+            fmt_bytes(mem.get("temp_size_in_bytes", 0)),
+            fmt_bytes(mem.get("argument_size_in_bytes", 0)),
+        ]))
+    return rows
+
+
+def run():
+    out = []
+    for mesh in ("single", "multi"):
+        recs = [r for r in load(mesh) if not r.get("skipped")]
+        out.append((f"roofline/{mesh}_cells_compiled", 0.0,
+                    f"{len(recs)}"))
+    return out
+
+
+def main():
+    for line in roofline_table("single"):
+        print(line)
+    print()
+    for name, _, derived in run():
+        print(f"{name},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Benchmark driver: one module per paper table/figure. Prints
+``name,us_per_call,derived`` CSV rows (benchmarks/README convention)."""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (fig1_oft_vs_oftv2, fig4_memory, kernels_bench,
+                            requant_error, roofline_report, table12_speed,
+                            table345_quality)
+    from benchmarks.common import emit
+
+    modules = [
+        ("fig1 (OFT vs OFTv2 time/memory)", fig1_oft_vs_oftv2),
+        ("fig4 (memory across scales/formats)", fig4_memory),
+        ("table1/2 (step time vs LoRA/QLoRA)", table12_speed),
+        ("table3/4/5 (quality proxy at matched budget)", table345_quality),
+        ("§4 requantization error", requant_error),
+        ("kernels", kernels_bench),
+        ("roofline artifacts", roofline_report),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for title, mod in modules:
+        print(f"# --- {title} ---")
+        try:
+            emit(mod.run())
+        except Exception:                                   # noqa: BLE001
+            failures += 1
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

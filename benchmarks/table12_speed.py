@@ -1,0 +1,52 @@
+"""Paper Tables 1-2: training step time, LoRA vs OFTv2 (bf16) and QLoRA vs
+QOFT (NF4), measured on CPU at a reduced model scale (2 layers, d=256).
+The paper's observation to reproduce: OFTv2 is within a small factor of
+LoRA in full precision and at parity (or faster) in the quantized setting
+where dequant dominates."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_jit
+from repro.config.base import (AdapterConfig, ModelConfig, QuantConfig,
+                               RunConfig, TrainConfig)
+from repro.models import build
+from repro.train import state as state_lib
+from repro.train.step import make_train_step
+
+
+def step_time(adapter: str, quant: str, d=256, layers=2, seq=128, batch=4):
+    cfg = ModelConfig(name="bench", num_layers=layers, d_model=d,
+                      num_heads=8, num_kv_heads=4, d_ff=4 * d,
+                      vocab_size=2048, rope_theta=1e4)
+    run = RunConfig(model=cfg,
+                    adapter=AdapterConfig(kind=adapter, block_size=32,
+                                          neumann_terms=5, rank=16),
+                    quant=QuantConfig(kind=quant),
+                    train=TrainConfig(learning_rate=1e-3, steps=100,
+                                      warmup_steps=0))
+    model = build(run)
+    params = model.init(jax.random.PRNGKey(0))
+    st = state_lib.create(params)
+    batch_d = {"tokens": jax.random.randint(jax.random.PRNGKey(1),
+                                            (batch, seq), 0, 2048)}
+    fn = jax.jit(make_train_step(model, run))
+    return time_jit(fn, st, batch_d, iters=5, warmup=2)
+
+
+def run():
+    rows = []
+    for name, adapter, quant in [
+            ("table1/lora_bf16", "lora", "none"),
+            ("table1/oftv2_bf16", "oftv2", "none"),
+            ("table1/oftv1_bf16", "oftv1", "none"),
+            ("table2/qlora_nf4", "lora", "nf4"),
+            ("table2/qoft_nf4", "oftv2", "nf4")]:
+        us = step_time(adapter, quant)
+        rows.append((name, us, "train_step;d=256;L=2;seq=128;b=4"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,0 +1,52 @@
+"""QOFT: orthogonal finetuning of an NF4-quantized frozen base (the paper's
+§4). Shows the memory story: frozen weights at ~0.53 bytes/param, trainable
+state = packed-skew adapters only.
+
+    PYTHONPATH=src python examples/qoft_finetune.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import (AdapterConfig, ModelConfig, QuantConfig,
+                               RunConfig, TrainConfig)
+from repro.data.loader import ShardedLoader
+from repro.data.synthetic import SyntheticSpec
+from repro.models import build
+from repro.quant.common import storage_bytes
+from repro.train.loop import run_training
+
+
+def tree_bytes(tree):
+    return sum(l.nbytes for l in jax.tree_util.tree_leaves(tree))
+
+
+def main():
+    cfg = ModelConfig(name="qoft-demo", num_layers=2, d_model=256,
+                      num_heads=8, num_kv_heads=4, d_ff=512, vocab_size=512,
+                      rope_theta=1e4)
+    run = RunConfig(
+        model=cfg,
+        adapter=AdapterConfig(kind="oftv2", block_size=32, neumann_terms=5),
+        quant=QuantConfig(kind="nf4", block_size=64, double_quant=True),
+        train=TrainConfig(global_batch=8, seq_len=64, steps=50,
+                          learning_rate=8e-3, warmup_steps=5, ckpt_every=0,
+                          log_every=10, ckpt_dir="/tmp/repro_qoft"))
+    model = build(run)
+    params = model.init(jax.random.PRNGKey(0))
+    bb = tree_bytes(params["base"])
+    ab = tree_bytes(params["adapter"])
+    nb = model.param_counts()["base"]
+    print(f"frozen base: {nb / 1e6:.2f}M params in {bb / 1e6:.2f}MB "
+          f"({bb / nb:.3f} bytes/param, NF4 + double quant)")
+    print(f"trainable:   {ab / 1e3:.1f}KB of packed-skew adapters")
+
+    loader = ShardedLoader(SyntheticSpec(vocab_size=512, seq_len=64,
+                                         noise=0.05), global_batch=8, seed=1)
+    out = run_training(model, run, loader)
+    print(f"loss: {out['losses'][0]:.3f} -> {out['losses'][-1]:.3f}")
+    assert out["losses"][-1] < out["losses"][0]
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Batched serving with an unmerged OFTv2 adapter: prefill a batch of
+prompts, decode continuations with the ring KV cache (this is how the paper
+evaluates finetuned models -- adapters loaded as extra layers, never merged
+into the quantized base).
+
+    PYTHONPATH=src python examples/serve.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import (AdapterConfig, ModelConfig, QuantConfig,
+                               RunConfig)
+from repro.models import build
+from repro.train.serving import generate
+
+
+def main():
+    cfg = ModelConfig(name="serve-demo", num_layers=2, d_model=128,
+                      num_heads=4, num_kv_heads=2, d_ff=256, vocab_size=256,
+                      rope_theta=1e4)
+    run = RunConfig(model=cfg,
+                    adapter=AdapterConfig(kind="oftv2", block_size=32,
+                                          neumann_terms=5),
+                    quant=QuantConfig(kind="nf4", block_size=64))
+    model = build(run)
+    params = model.init(jax.random.PRNGKey(0))
+
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (4, 12), 0, 256)
+    out = generate(model, params, prompts, steps=8, temperature=0.0)
+    assert out.shape == (4, 20)
+    print("prompts -> continuations (greedy):")
+    for row in out:
+        toks = [int(t) for t in row]
+        print(" ", toks[:12], "->", toks[12:])
+    # determinism check: greedy decode is reproducible
+    out2 = generate(model, params, prompts, steps=8, temperature=0.0)
+    assert jnp.array_equal(out, out2)
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

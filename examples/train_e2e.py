@@ -1,0 +1,68 @@
+"""End-to-end driver: OFTv2-finetune a ~27M-parameter decoder (a scaled
+granite-family config) for a few hundred steps on the synthetic corpus,
+with checkpointing + auto-resume + straggler monitoring -- the full
+production loop at laptop scale.
+
+    PYTHONPATH=src python examples/train_e2e.py --steps 300
+    (re-running resumes from the latest checkpoint)
+"""
+import argparse
+
+import numpy as np
+
+from repro.config.base import (AdapterConfig, ModelConfig, QuantConfig,
+                               RunConfig, TrainConfig)
+from repro.data.loader import ShardedLoader
+from repro.data.synthetic import SyntheticSpec
+from repro.distributed.fault import PreemptionGuard
+from repro.models import build
+from repro.train.loop import run_training
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--adapter", default="oftv2",
+                    choices=["oftv2", "oftv1", "lora", "none"])
+    ap.add_argument("--quant", default="none",
+                    choices=["none", "nf4", "awq", "int8"])
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_e2e")
+    args = ap.parse_args()
+
+    # ~27M params: 8L x d=384 (granite-family geometry, scaled)
+    cfg = ModelConfig(name="granite-27m", num_layers=8, d_model=384,
+                      num_heads=8, num_kv_heads=2, head_dim=48, d_ff=1152,
+                      vocab_size=8192, rope_theta=1e4)
+    run = RunConfig(
+        model=cfg,
+        adapter=AdapterConfig(kind=args.adapter, block_size=32,
+                              neumann_terms=5, rank=16),
+        quant=QuantConfig(kind=args.quant),
+        train=TrainConfig(global_batch=4, seq_len=128, steps=args.steps,
+                          learning_rate=8e-3, warmup_steps=20,
+                          schedule="cosine", ckpt_every=100, ckpt_keep=2,
+                          log_every=20, ckpt_dir=args.ckpt_dir))
+    model = build(run)
+    counts = model.param_counts()
+    print(f"[e2e] base {counts['base'] / 1e6:.1f}M frozen, "
+          f"adapter {counts['adapter'] / 1e3:.1f}K trainable "
+          f"({args.adapter}/{args.quant})")
+
+    loader = ShardedLoader(
+        SyntheticSpec(vocab_size=cfg.vocab_size, seq_len=run.train.seq_len,
+                      noise=0.05),
+        global_batch=run.train.global_batch, seed=0)
+    guard = PreemptionGuard(install=True)   # SIGTERM -> checkpoint + exit
+    out = run_training(model, run, loader, guard=guard)
+    first = np.mean(out["losses"][:10])
+    last = np.mean(out["losses"][-10:])
+    print(f"[e2e] loss {first:.3f} -> {last:.3f} over "
+          f"{out['last_step']} steps "
+          f"({out.get('wall_time', 0):.0f}s, "
+          f"{out['stragglers']} straggler steps)")
+    assert last < first
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

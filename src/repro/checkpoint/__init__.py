@@ -1,0 +1,5 @@
+from repro.checkpoint.elastic import reshard_tree
+from repro.checkpoint.manager import CheckpointManager
+from repro.checkpoint.serialization import load_tree, save_tree
+
+__all__ = ["CheckpointManager", "load_tree", "save_tree", "reshard_tree"]

@@ -1,0 +1,28 @@
+"""Elastic restart: restore a checkpoint onto a different mesh/topology.
+
+Checkpoints store *logical* (unsharded) arrays + the config hash; restoring
+is therefore topology-free: we rebuild the target sharding from the new
+mesh's rules and `jax.device_put` each leaf with its new NamedSharding.
+A job checkpointed on 2x(16,16) pods restarts cleanly on (16,16), (8,8), or
+a single host -- the elastic-scaling test exercises 1 -> {2,4}-device CPU
+meshes end to end.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+
+def reshard_tree(tree: Any, specs: Any, mesh: Optional[Mesh]):
+    """device_put every leaf with its PartitionSpec under `mesh` (or leave on
+    default device when mesh is None)."""
+    if mesh is None:
+        return jax.tree_util.tree_map(jax.numpy.asarray, tree)
+
+    def put(leaf, spec):
+        spec = spec if spec is not None else PartitionSpec()
+        return jax.device_put(leaf, NamedSharding(mesh, spec))
+
+    return jax.tree_util.tree_map(put, tree, specs)

@@ -1,0 +1,93 @@
+"""Fault-tolerant checkpoint manager.
+
+  * atomic: write to <dir>/tmp_step_N then os.rename -> step_N (a crashed
+    writer never corrupts the latest checkpoint)
+  * keep-k garbage collection
+  * async: saves run on a background thread (the train loop never blocks on
+    I/O); `wait()` joins before exit / preemption flush
+  * latest_step() / restore() drive auto-resume in the train loop
+"""
+from __future__ import annotations
+
+import os
+import re
+import shutil
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+from repro.checkpoint import serialization as ser
+
+_STEP_RE = re.compile(r"^step_(\d+)$")
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
+        self.directory = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------- query --
+    def steps(self):
+        out = []
+        for name in os.listdir(self.directory):
+            m = _STEP_RE.match(name)
+            if m and os.path.exists(os.path.join(self.directory, name,
+                                                 "manifest.msgpack")):
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    # -------------------------------------------------------------- save --
+    def _save_sync(self, step: int, tree: Any, metadata: Dict) -> None:
+        final = os.path.join(self.directory, f"step_{step}")
+        tmp = os.path.join(self.directory, f"tmp_step_{step}")
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        ser.save_tree(tmp, tree, metadata={**metadata, "step": step})
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self._gc()
+
+    def save(self, step: int, tree: Any, metadata: Optional[Dict] = None
+             ) -> None:
+        self.wait()
+        meta = dict(metadata or {})
+        if self.async_save:
+            # device_get on the caller thread (cheap for PEFT state), I/O on
+            # the background thread
+            import jax
+            host_tree = jax.tree_util.tree_map(
+                lambda x: jax.device_get(x) if hasattr(x, "shape") else x,
+                tree)
+            self._thread = threading.Thread(
+                target=self._save_sync, args=(step, host_tree, meta),
+                daemon=True)
+            self._thread.start()
+        else:
+            self._save_sync(step, tree, meta)
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self) -> None:
+        steps = self.steps()
+        for s in steps[:-self.keep] if self.keep > 0 else []:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s}"),
+                          ignore_errors=True)
+
+    # ------------------------------------------------------------ restore --
+    def restore(self, step: Optional[int] = None, like: Any = None
+                ) -> Tuple[Any, Dict]:
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        path = os.path.join(self.directory, f"step_{step}")
+        return ser.load_tree(path, like=like)

@@ -1,0 +1,101 @@
+"""Checkpoint serialization: pytree -> flat npz + msgpack manifest.
+
+No orbax/tensorstore in this container, so we implement a compact
+self-describing format:
+
+  <dir>/manifest.msgpack   -- treedef paths, shapes, dtypes, metadata
+  <dir>/arrays.npz         -- one entry per leaf (key = joined path)
+
+Leaves are gathered to host numpy. On multi-host deployments each process
+would write its addressable shards (path + shard index); the single-process
+container writes full arrays, but the manifest already records logical
+shapes so `elastic.py` can re-shard on restore onto a different mesh.
+"""
+from __future__ import annotations
+
+import io
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import msgpack
+import numpy as np
+
+SEP = "/"
+
+
+def _flatten_with_paths(tree, prefix=()):
+    out = []
+    if isinstance(tree, dict):
+        for k in sorted(tree.keys()):
+            out.extend(_flatten_with_paths(tree[k], prefix + (str(k),)))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.extend(_flatten_with_paths(v, prefix + (str(i),)))
+    elif tree is None:
+        pass
+    else:
+        out.append((SEP.join(prefix), tree))
+    return out
+
+
+def save_tree(path: str, tree: Any, metadata: Dict[str, Any] | None = None
+              ) -> None:
+    os.makedirs(path, exist_ok=True)
+    leaves = _flatten_with_paths(tree)
+    arrays = {}
+    manifest = {"leaves": [], "metadata": metadata or {}}
+    for key, leaf in leaves:
+        arr = np.asarray(jax.device_get(leaf))
+        arrays[key] = arr
+        manifest["leaves"].append(
+            {"key": key, "shape": list(arr.shape), "dtype": str(arr.dtype)})
+    with open(os.path.join(path, "manifest.msgpack"), "wb") as f:
+        f.write(msgpack.packb(manifest))
+    np.savez(os.path.join(path, "arrays.npz"), **arrays)
+
+
+def load_manifest(path: str) -> dict:
+    with open(os.path.join(path, "manifest.msgpack"), "rb") as f:
+        return msgpack.unpackb(f.read())
+
+
+def load_tree(path: str, like: Any | None = None) -> Tuple[Any, dict]:
+    """Returns (tree, metadata). If `like` is given, arrays are placed into
+    its structure (and must match shapes); otherwise a nested dict keyed by
+    path segments is returned."""
+    manifest = load_manifest(path)
+    npz = np.load(os.path.join(path, "arrays.npz"))
+    flat = {e["key"]: npz[e["key"]] for e in manifest["leaves"]}
+
+    if like is None:
+        tree: dict = {}
+        for key, arr in flat.items():
+            node = tree
+            parts = key.split(SEP)
+            for p in parts[:-1]:
+                node = node.setdefault(p, {})
+            node[parts[-1]] = arr
+        return tree, manifest["metadata"]
+
+    like_leaves = _flatten_with_paths(like)
+    lookup = dict(like_leaves)
+    missing = [k for k, _ in like_leaves if k not in flat]
+    extra = [k for k in flat if k not in lookup]
+    if missing or extra:
+        raise ValueError(f"checkpoint mismatch: missing={missing[:5]} "
+                         f"extra={extra[:5]}")
+
+    def build(tree, prefix=()):
+        if isinstance(tree, dict):
+            return {k: build(v, prefix + (str(k),))
+                    for k, v in tree.items()}
+        if isinstance(tree, (list, tuple)):
+            vals = [build(v, prefix + (str(i),)) for i, v in enumerate(tree)]
+            return type(tree)(vals) if not hasattr(tree, "_fields") \
+                else type(tree)(*vals)
+        if tree is None:
+            return None
+        return flat[SEP.join(prefix)]
+
+    return build(like), manifest["metadata"]

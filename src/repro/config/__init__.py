@@ -1,0 +1,8 @@
+from repro.config.base import (SHAPES, AdapterConfig, ModelConfig,
+                               ParallelConfig, QuantConfig, RunConfig,
+                               ShapePreset, TrainConfig)
+
+__all__ = [
+    "SHAPES", "AdapterConfig", "ModelConfig", "ParallelConfig", "QuantConfig",
+    "RunConfig", "ShapePreset", "TrainConfig",
+]

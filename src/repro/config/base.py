@@ -1,0 +1,305 @@
+"""Typed configuration system.
+
+Every experiment is described by a ``RunConfig`` bundling:
+  * ``ModelConfig``    -- architecture (one per assigned arch in repro.configs)
+  * ``AdapterConfig``  -- the paper's technique (oftv1 / oftv2 / lora / none)
+  * ``QuantConfig``    -- frozen-base quantization (none / nf4 / awq / int8)
+  * ``ParallelConfig`` -- mesh + sharding + remat + microbatching
+  * ``TrainConfig``    -- optimizer / schedule / loop
+
+Configs are frozen dataclasses so they can be hashed as jit static args and
+stored verbatim in checkpoints.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Optional, Tuple
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture description.
+
+    ``family`` selects the assembly path in ``repro.models.model``:
+      dense | moe | hybrid | ssm | encoder | vlm
+    """
+
+    name: str = "unnamed"
+    family: str = "dense"
+
+    num_layers: int = 2
+    d_model: int = 128
+    num_heads: int = 4
+    num_kv_heads: int = 2
+    head_dim: int = 0          # 0 -> d_model // num_heads
+    d_ff: int = 512
+    vocab_size: int = 1024
+
+    # --- MoE ---
+    num_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0          # 0 -> d_ff
+    dense_residual: bool = False   # arctic: dense FFN in parallel with MoE
+    moe_period: int = 1        # MoE on layers where idx % moe_period == moe_offset
+    moe_offset: int = 0
+    capacity_factor: float = 1.25
+
+    # --- hybrid (jamba): attention on layers where idx % attn_period == attn_offset,
+    # SSM elsewhere. attn_period == 0 -> pure attention model. ---
+    attn_period: int = 0
+    attn_offset: int = 0
+
+    # --- SSM (mamba2 / SSD) ---
+    ssm_state: int = 0
+    ssm_headdim: int = 64
+    ssm_expand: int = 2
+    ssm_conv_width: int = 4
+    ssm_chunk: int = 128
+    ssm_ngroups: int = 1
+
+    # --- attention details ---
+    causal: bool = True
+    sliding_window: int = 0    # 0 = full attention
+    rope_theta: float = 500000.0
+    use_rope: bool = True
+    attn_logit_softcap: float = 0.0
+    attn_chunk: int = 1024     # kv-chunk for online-softmax attention
+
+    # --- modality frontend stubs ---
+    frontend: str = "none"     # none | audio_frames | vision_patches
+    frontend_dim: int = 0      # dim of precomputed frame/patch embeddings
+    num_frontend_tokens: int = 0   # vlm: image tokens prepended to text
+
+    # --- assembly ---
+    is_encoder: bool = False   # encoder-only (bidirectional, no decode step)
+    act: str = "silu"          # silu (SwiGLU) | gelu (plain MLP)
+    glu: bool = True           # gated MLP (SwiGLU) vs plain 2-layer MLP
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-5
+    scan_layers: bool = True   # scan-over-layers (compact HLO for the dry-run)
+    scan_block: int = 1        # layers per scan body (jamba: attn_period)
+
+    # --- numerics ---
+    dtype: str = "float32"       # activation dtype
+    param_dtype: str = "float32"
+
+    # --- TP padding (filled by with_mesh_padding) ---
+    pad_heads_to: int = 0      # 0 -> num_heads (no padding)
+    pad_vocab_to: int = 0      # 0 -> vocab_size
+
+    def __post_init__(self):
+        if self.head_dim == 0 and self.num_heads:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+        if self.moe_d_ff == 0:
+            object.__setattr__(self, "moe_d_ff", self.d_ff)
+
+    # ---- derived ----
+    @property
+    def padded_heads(self) -> int:
+        return self.pad_heads_to or self.num_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        return self.pad_vocab_to or self.vocab_size
+
+    @property
+    def is_ssm_layer(self):
+        """Callable: layer_idx -> bool (True = SSM/mamba layer)."""
+        if self.family == "ssm":
+            return lambda i: True
+        if self.family == "hybrid" and self.attn_period > 0:
+            return lambda i: (i % self.attn_period) != self.attn_offset
+        return lambda i: False
+
+    def is_moe_layer(self, i: int) -> bool:
+        if self.num_experts <= 0:
+            return False
+        return (i % self.moe_period) == self.moe_offset
+
+    def with_mesh_padding(self, model_axis: int) -> "ModelConfig":
+        """Pad head count / vocab so TP sharding divides evenly (exact numerics:
+        padded q-heads feed zero o-proj columns; padded vocab rows get -inf logits
+        masked in the loss)."""
+        import math
+
+        heads = self.num_heads
+        if heads % model_axis != 0:
+            heads = _round_up(heads, model_axis)
+        vocab = _round_up(self.vocab_size, math.lcm(256, model_axis))
+        return dataclasses.replace(self, pad_heads_to=heads, pad_vocab_to=vocab)
+
+    def param_count(self, active_only: bool = False) -> int:
+        """Analytic parameter count (unpadded), used for MODEL_FLOPS and memory
+        accounting.  MoE: active_only counts top_k experts only."""
+        d, h = self.d_model, self.num_heads
+        hd, kv = self.head_dim, self.num_kv_heads
+        att = d * h * hd + 2 * d * kv * hd + h * hd * d  # q,k,v,o
+        if self.glu:
+            mlp_dense = 3 * d * self.d_ff
+        else:
+            mlp_dense = 2 * d * self.d_ff
+        if self.num_experts:
+            e = self.top_k if active_only else self.num_experts
+            mlp_moe = e * (3 if self.glu else 2) * d * self.moe_d_ff + d * self.num_experts
+        else:
+            mlp_moe = 0
+        ssm = 0
+        if self.ssm_state:
+            d_in = self.ssm_expand * d
+            nh = d_in // self.ssm_headdim
+            ssm = (d * (2 * d_in + 2 * self.ssm_ngroups * self.ssm_state + nh)  # in_proj
+                   + d_in * d            # out_proj
+                   + self.ssm_conv_width * (d_in + 2 * self.ssm_ngroups * self.ssm_state)
+                   + 2 * nh)             # A_log, dt_bias
+        total = 0
+        for i in range(self.num_layers):
+            if self.is_ssm_layer(i):
+                total += ssm
+            else:
+                total += att
+            if self.is_moe_layer(i):
+                total += mlp_moe
+                if self.dense_residual:
+                    total += mlp_dense
+            else:
+                total += mlp_dense
+            total += 2 * d  # norms
+        total += self.vocab_size * d  # embed
+        if not self.tie_embeddings and not self.is_encoder:
+            total += self.vocab_size * d
+        if self.frontend != "none" and self.frontend_dim:
+            total += self.frontend_dim * d
+        total += d  # final norm
+        return total
+
+
+@dataclass(frozen=True)
+class AdapterConfig:
+    """The paper's technique + baselines."""
+
+    kind: str = "oftv2"        # none | oftv1 | oftv2 | lora
+    block_size: int = 32       # OFT block size b
+    neumann_terms: int = 5     # k; 0 = exact Cayley (matrix solve)
+    rank: int = 16             # LoRA rank r
+    alpha: float = 16.0        # LoRA scaling
+    targets: Tuple[str, ...] = ("q", "k", "v", "o", "gate", "up", "down",
+                                "in_proj", "out_proj")
+    adapt_experts: bool = False
+    use_pallas: bool = False   # route adapter math through Pallas kernels
+
+    @property
+    def is_oft(self) -> bool:
+        return self.kind in ("oftv1", "oftv2")
+
+
+@dataclass(frozen=True)
+class QuantConfig:
+    kind: str = "none"         # none | nf4 | awq | int8
+    block_size: int = 64       # nf4 absmax block (along in-features)
+    double_quant: bool = True
+    double_block: int = 256
+    group_size: int = 128      # awq
+    # beyond-paper (EXPERIMENTS.md §Perf/llama3 it-4): under ZeRO-3, gather
+    # the quantized codes across the fsdp axes and dequantize locally, so
+    # uint8 crosses the wire instead of dequantized bf16 (~3.7x less).
+    gather_codes: bool = True
+
+    @property
+    def enabled(self) -> bool:
+        return self.kind != "none"
+
+
+@dataclass(frozen=True)
+class ParallelConfig:
+    mesh_shape: Tuple[int, ...] = (1, 1)
+    mesh_axes: Tuple[str, ...] = ("data", "model")
+    remat: str = "full"          # none | full
+    microbatches: int = 1        # grad-accumulation microbatches inside train_step
+    seq_shard_saved: bool = True  # SP: shard saved activations' seq dim over model
+    moe_layout: str = "auto"     # auto | tp | ep
+    gradient_compression: str = "none"   # none | int8
+    decode_cache_seq_shard: bool = True  # split-KV decode for big archs
+
+    @property
+    def data_axes(self) -> Tuple[str, ...]:
+        """Axes that shard the batch (pod + data when present)."""
+        return tuple(a for a in self.mesh_axes if a in ("pod", "data"))
+
+    @property
+    def model_axis(self) -> str:
+        return "model" if "model" in self.mesh_axes else self.mesh_axes[-1]
+
+    @property
+    def model_axis_size(self) -> int:
+        for ax, sz in zip(self.mesh_axes, self.mesh_shape):
+            if ax == "model":
+                return sz
+        return 1
+
+    @property
+    def data_axis_size(self) -> int:
+        n = 1
+        for ax, sz in zip(self.mesh_axes, self.mesh_shape):
+            if ax in ("pod", "data"):
+                n *= sz
+        return n
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    seed: int = 0
+    global_batch: int = 8
+    seq_len: int = 128
+    steps: int = 100
+    learning_rate: float = 4e-4
+    schedule: str = "cosine"     # constant | cosine | linear
+    warmup_steps: int = 10
+    min_lr_ratio: float = 0.1
+    weight_decay: float = 0.0
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    grad_clip: float = 1.0
+    log_every: int = 10
+    ckpt_every: int = 50
+    ckpt_keep: int = 3
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    eval_every: int = 0
+    z_loss: float = 0.0
+
+
+@dataclass(frozen=True)
+class RunConfig:
+    model: ModelConfig = field(default_factory=ModelConfig)
+    adapter: AdapterConfig = field(default_factory=AdapterConfig)
+    quant: QuantConfig = field(default_factory=QuantConfig)
+    parallel: ParallelConfig = field(default_factory=ParallelConfig)
+    train: TrainConfig = field(default_factory=TrainConfig)
+
+    def replace(self, **kw) -> "RunConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Input-shape presets assigned to this paper (LM family): every (arch x shape)
+# cell is one of these.
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ShapePreset:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str   # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k":    ShapePreset("train_4k",    4096,   256, "train"),
+    "prefill_32k": ShapePreset("prefill_32k", 32768,  32,  "prefill"),
+    "decode_32k":  ShapePreset("decode_32k",  32768,  128, "decode"),
+    "long_500k":   ShapePreset("long_500k",   524288, 1,   "decode"),
+}

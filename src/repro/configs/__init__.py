@@ -1,0 +1,62 @@
+"""Architecture registry: --arch <id> resolves here.
+
+Each module exports config() (the exact public-literature config), smoke()
+(a reduced same-family config for CPU tests), FAMILY, and capability flags
+used by the dry-run cell matrix (LONG_CONTEXT_OK, DECODE_OK)."""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+from repro.config.base import SHAPES, ModelConfig
+from repro.configs import (arctic_480b, granite_8b, hubert_xlarge,
+                           internvl2_1b, jamba_v01_52b, llama3_405b,
+                           mamba2_370m, mistral_nemo_12b, mixtral_8x22b,
+                           paper_models, yi_34b)
+
+REGISTRY = {
+    "granite-8b": granite_8b,
+    "mistral-nemo-12b": mistral_nemo_12b,
+    "llama3-405b": llama3_405b,
+    "yi-34b": yi_34b,
+    "mixtral-8x22b": mixtral_8x22b,
+    "arctic-480b": arctic_480b,
+    "jamba-v0.1-52b": jamba_v01_52b,
+    "internvl2-1b": internvl2_1b,
+    "mamba2-370m": mamba2_370m,
+    "hubert-xlarge": hubert_xlarge,
+    # the paper's own models (bench targets)
+    "qwen2.5-7b": paper_models,
+}
+
+ASSIGNED = [k for k in REGISTRY if k != "qwen2.5-7b"]
+
+
+def get_config(name: str) -> ModelConfig:
+    return REGISTRY[name].config()
+
+
+def get_smoke(name: str) -> ModelConfig:
+    return REGISTRY[name].smoke()
+
+
+def cell_skip_reason(name: str, shape: str) -> Optional[str]:
+    """None = the (arch x shape) cell runs; else the documented skip reason
+    (DESIGN.md §5)."""
+    mod = REGISTRY[name]
+    kind = SHAPES[shape].kind
+    if kind == "decode" and not getattr(mod, "DECODE_OK", True):
+        return "encoder-only: no decode step"
+    if shape == "long_500k" and not getattr(mod, "LONG_CONTEXT_OK", False):
+        return "pure full attention: 500k decode cache infeasible " \
+               "(needs sub-quadratic attention)"
+    return None
+
+
+def cells(shapes=None):
+    """All (arch, shape, skip_reason) cells of the assignment matrix."""
+    shapes = shapes or list(SHAPES)
+    out = []
+    for arch in ASSIGNED:
+        for shape in shapes:
+            out.append((arch, shape, cell_skip_reason(arch, shape)))
+    return out

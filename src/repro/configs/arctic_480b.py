@@ -1,0 +1,29 @@
+"""arctic-480b [moe]: 35L d_model=7168 56H (GQA kv=8) d_ff=4864
+vocab=32000, MoE 128e top-2 + dense residual
+[hf:Snowflake/snowflake-arctic-base; hf].
+
+128 experts -> expert-parallel layout (experts sharded over `data`);
+dense-residual FFN runs in parallel with the MoE branch every layer.
+56 heads TP-padded to 64. Experts are frozen (not adapter targets) --
+DESIGN.md §Arch-applicability."""
+from repro.config.base import ModelConfig
+
+FAMILY = "moe"
+LONG_CONTEXT_OK = False   # full attention
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="arctic-480b", family="moe", num_layers=35, d_model=7168,
+        num_heads=56, num_kv_heads=8, head_dim=128, d_ff=4864,
+        vocab_size=32000, num_experts=128, top_k=2, moe_period=1,
+        dense_residual=True, rope_theta=1_000_000.0,
+        dtype="bfloat16", param_dtype="bfloat16")
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="arctic-480b-smoke", family="moe", num_layers=2, d_model=128,
+        num_heads=4, num_kv_heads=2, head_dim=32, d_ff=128, vocab_size=512,
+        num_experts=8, top_k=2, moe_period=1, dense_residual=True,
+        rope_theta=1e4)

@@ -1,0 +1,30 @@
+"""hubert-xlarge [audio]: 48L d_model=1280 16H (kv=16, i.e. MHA) d_ff=5120
+vocab=504 -- encoder-only, same arch as wav2vec2 [arXiv:2106.07447;
+unverified].
+
+Per task spec the conv feature extractor is a STUB: input_specs provide
+precomputed 512-dim frames. Encoder-only => decode_32k / long_500k skipped.
+RoPE stands in for HuBERT's conv positional embedding (frontend stub);
+plain (non-GLU) GELU MLP matches wav2vec2."""
+from repro.config.base import ModelConfig
+
+FAMILY = "encoder"
+LONG_CONTEXT_OK = False
+DECODE_OK = False
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="hubert-xlarge", family="encoder", num_layers=48, d_model=1280,
+        num_heads=16, num_kv_heads=16, head_dim=80, d_ff=5120,
+        vocab_size=504, is_encoder=True, causal=False, glu=False,
+        act="gelu", frontend="audio_frames", frontend_dim=512,
+        rope_theta=1e4, dtype="bfloat16", param_dtype="bfloat16")
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="hubert-xlarge-smoke", family="encoder", num_layers=2,
+        d_model=64, num_heads=4, num_kv_heads=4, head_dim=16, d_ff=128,
+        vocab_size=32, is_encoder=True, causal=False, glu=False, act="gelu",
+        frontend="audio_frames", frontend_dim=24, rope_theta=1e4)

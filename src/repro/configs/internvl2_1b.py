@@ -1,0 +1,28 @@
+"""internvl2-1b [vlm]: 24L d_model=896 14H (GQA kv=2) d_ff=4864
+vocab=151655 -- InternViT + InternLM2(Qwen2-0.5B) backbone
+[arXiv:2404.16821; hf].
+
+Per task spec the modality frontend is a STUB: input_specs provide
+precomputed patch embeddings (256 tokens x 1024 = InternViT-300M output
+after pixel-shuffle) projected into the LM. 14 heads TP-padded to 16."""
+from repro.config.base import ModelConfig
+
+FAMILY = "vlm"
+LONG_CONTEXT_OK = False
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="internvl2-1b", family="vlm", num_layers=24, d_model=896,
+        num_heads=14, num_kv_heads=2, head_dim=64, d_ff=4864,
+        vocab_size=151655, frontend="vision_patches", frontend_dim=1024,
+        num_frontend_tokens=256, tie_embeddings=True,
+        rope_theta=1_000_000.0, dtype="bfloat16", param_dtype="bfloat16")
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="internvl2-1b-smoke", family="vlm", num_layers=2, d_model=112,
+        num_heads=7, num_kv_heads=1, head_dim=16, d_ff=256, vocab_size=500,
+        frontend="vision_patches", frontend_dim=32, num_frontend_tokens=4,
+        tie_embeddings=True, rope_theta=1e4)

@@ -1,0 +1,33 @@
+"""jamba-v0.1-52b [hybrid]: 32L d_model=4096 32H (GQA kv=8) d_ff=14336
+vocab=65536, MoE 16e top-2 -- Mamba+attn 1:7 interleave
+[arXiv:2403.19887; hf].
+
+Period-8 scan groups (attention at offset 3, mamba elsewhere; MoE on odd
+layers per Jamba's every-other-layer placement). ssm_state=16 matches
+Jamba's d_state; the SSM core is our SSD (mamba2) implementation --
+documented adaptation. long_500k runs: mamba state is O(1), the single
+attention-in-8 keeps a KV cache."""
+from repro.config.base import ModelConfig
+
+FAMILY = "hybrid"
+LONG_CONTEXT_OK = True
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="jamba-v0.1-52b", family="hybrid", num_layers=32, d_model=4096,
+        num_heads=32, num_kv_heads=8, head_dim=128, d_ff=14336,
+        vocab_size=65536, num_experts=16, top_k=2, moe_period=2,
+        moe_offset=1, attn_period=8, attn_offset=3, scan_block=8,
+        ssm_state=16, ssm_headdim=64, ssm_expand=2, ssm_chunk=256,
+        use_rope=False,   # Jamba uses no positional embedding in attn
+        dtype="bfloat16", param_dtype="bfloat16")
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="jamba-v0.1-52b-smoke", family="hybrid", num_layers=8,
+        d_model=64, num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128,
+        vocab_size=512, num_experts=4, top_k=2, moe_period=2, moe_offset=1,
+        attn_period=4, attn_offset=3, scan_block=4, ssm_state=16,
+        ssm_headdim=16, ssm_expand=2, ssm_chunk=8, use_rope=False)

@@ -1,0 +1,21 @@
+"""llama3-405b [dense]: 126L d_model=16384 128H (GQA kv=8) d_ff=53248
+vocab=128256 -- GQA 128k vocab [arXiv:2407.21783; unverified]."""
+from repro.config.base import ModelConfig
+
+FAMILY = "dense"
+LONG_CONTEXT_OK = False
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="llama3-405b", family="dense", num_layers=126, d_model=16384,
+        num_heads=128, num_kv_heads=8, head_dim=128, d_ff=53248,
+        vocab_size=128256, rope_theta=500_000.0,
+        dtype="bfloat16", param_dtype="bfloat16")
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="llama3-405b-smoke", family="dense", num_layers=3, d_model=128,
+        num_heads=8, num_kv_heads=2, head_dim=16, d_ff=384, vocab_size=512,
+        rope_theta=5e5)

@@ -1,0 +1,26 @@
+"""mamba2-370m [ssm]: 48L d_model=1024 (attn-free) d_ff=0 vocab=50280,
+ssm_state=128 -- SSD (state-space duality) [arXiv:2405.21060; unverified].
+
+Attention-free: every layer is an SSD block, no MLP (d_ff=0). long_500k
+runs with an O(1) recurrent decode state. OFT adapts in_proj/out_proj."""
+from repro.config.base import ModelConfig
+
+FAMILY = "ssm"
+LONG_CONTEXT_OK = True
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="mamba2-370m", family="ssm", num_layers=48, d_model=1024,
+        num_heads=0, num_kv_heads=0, head_dim=0, d_ff=0, vocab_size=50280,
+        ssm_state=128, ssm_headdim=64, ssm_expand=2, ssm_chunk=256,
+        ssm_ngroups=1, use_rope=False, tie_embeddings=True,
+        dtype="bfloat16", param_dtype="bfloat16")
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="mamba2-370m-smoke", family="ssm", num_layers=2, d_model=64,
+        num_heads=0, num_kv_heads=0, head_dim=0, d_ff=0, vocab_size=512,
+        ssm_state=16, ssm_headdim=16, ssm_expand=2, ssm_chunk=8,
+        use_rope=False, tie_embeddings=True)

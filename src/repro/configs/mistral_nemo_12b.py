@@ -1,0 +1,22 @@
+"""mistral-nemo-12b [dense]: 40L d_model=5120 32H (GQA kv=8) d_ff=14336
+vocab=131072 -- 128k ctx [hf:mistralai/Mistral-Nemo-Base-2407; hf].
+head_dim=128 (q dim 4096 != d_model, supported natively)."""
+from repro.config.base import ModelConfig
+
+FAMILY = "dense"
+LONG_CONTEXT_OK = False
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="mistral-nemo-12b", family="dense", num_layers=40, d_model=5120,
+        num_heads=32, num_kv_heads=8, head_dim=128, d_ff=14336,
+        vocab_size=131072, rope_theta=1_000_000.0,
+        dtype="bfloat16", param_dtype="bfloat16")
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="mistral-nemo-12b-smoke", family="dense", num_layers=2,
+        d_model=128, num_heads=4, num_kv_heads=2, head_dim=48, d_ff=256,
+        vocab_size=512, rope_theta=1e4)

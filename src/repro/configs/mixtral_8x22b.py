@@ -1,0 +1,26 @@
+"""mixtral-8x22b [moe]: 56L d_model=6144 48H (GQA kv=8) d_ff=16384
+vocab=32768, MoE 8e top-2, SWA [arXiv:2401.04088; hf].
+
+Sliding window => long_500k decode runs with a window-capped ring KV cache.
+8 experts do not divide the 16-wide axes -> TP-within-expert MoE layout."""
+from repro.config.base import ModelConfig
+
+FAMILY = "moe"
+LONG_CONTEXT_OK = True    # SWA bounds the KV cache
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="mixtral-8x22b", family="moe", num_layers=56, d_model=6144,
+        num_heads=48, num_kv_heads=8, head_dim=128, d_ff=16384,
+        vocab_size=32768, num_experts=8, top_k=2, moe_period=1,
+        sliding_window=4096, rope_theta=1_000_000.0,
+        dtype="bfloat16", param_dtype="bfloat16")
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="mixtral-8x22b-smoke", family="moe", num_layers=2, d_model=128,
+        num_heads=4, num_kv_heads=2, head_dim=32, d_ff=256, vocab_size=512,
+        num_experts=4, top_k=2, moe_period=1, sliding_window=8,
+        rope_theta=1e4)

@@ -1,0 +1,41 @@
+"""The paper's own models (benchmark/fidelity targets, not assigned archs):
+Qwen2.5-7B (Fig 1 scalability runs) and Llama-2-7B/13B (Table 4
+parameter-count fidelity: LoRA r=16 -> 39.98M, OFTv2 b=32 -> 17.65M)."""
+from repro.config.base import ModelConfig
+
+FAMILY = "dense"
+LONG_CONTEXT_OK = False
+
+
+def qwen25_7b() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2.5-7b", family="dense", num_layers=28, d_model=3584,
+        num_heads=28, num_kv_heads=4, head_dim=128, d_ff=18944,
+        vocab_size=152064, rope_theta=1_000_000.0,
+        dtype="bfloat16", param_dtype="bfloat16")
+
+
+def llama2_7b() -> ModelConfig:
+    return ModelConfig(
+        name="llama2-7b", family="dense", num_layers=32, d_model=4096,
+        num_heads=32, num_kv_heads=32, head_dim=128, d_ff=11008,
+        vocab_size=32000, rope_theta=10_000.0,
+        dtype="bfloat16", param_dtype="bfloat16")
+
+
+def llama2_13b() -> ModelConfig:
+    return ModelConfig(
+        name="llama2-13b", family="dense", num_layers=40, d_model=5120,
+        num_heads=40, num_kv_heads=40, head_dim=128, d_ff=13824,
+        vocab_size=32000, rope_theta=10_000.0,
+        dtype="bfloat16", param_dtype="bfloat16")
+
+
+config = qwen25_7b
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2.5-7b-smoke", family="dense", num_layers=2, d_model=128,
+        num_heads=4, num_kv_heads=2, head_dim=32, d_ff=256, vocab_size=512,
+        rope_theta=1e4)

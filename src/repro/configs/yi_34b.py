@@ -1,0 +1,24 @@
+"""yi-34b [dense]: 60L d_model=7168 56H (GQA kv=8) d_ff=20480 vocab=64000
+-- llama-arch GQA [arXiv:2403.04652; hf]. 56 heads are TP-padded to 64 on
+the 16-wide model axis (exact numerics: zero o-proj columns)."""
+from repro.config.base import ModelConfig
+
+FAMILY = "dense"
+LONG_CONTEXT_OK = False
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="yi-34b", family="dense", num_layers=60, d_model=7168,
+        num_heads=56, num_kv_heads=8, head_dim=128, d_ff=20480,
+        vocab_size=64000, rope_theta=5_000_000.0,
+        dtype="bfloat16", param_dtype="bfloat16")
+
+
+def smoke() -> ModelConfig:
+    # 7 heads: deliberately not a power of two so the padding path is
+    # exercised in the smoke tests as well
+    return ModelConfig(
+        name="yi-34b-smoke", family="dense", num_layers=2, d_model=112,
+        num_heads=7, num_kv_heads=1, head_dim=16, d_ff=256, vocab_size=500,
+        rope_theta=1e4)

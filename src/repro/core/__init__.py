@@ -1,0 +1,18 @@
+"""The paper's contribution: OFTv2 (input-centric orthogonal finetuning),
+Cayley-Neumann parameterization, QOFT, plus OFTv1/LoRA/QLoRA baselines."""
+from repro.core.adapter import (adapted_linear, adapter_init,
+                                adapter_param_count, merge_adapter,
+                                wants_adapter)
+from repro.core.cayley import (build_rotation, cayley_exact, cayley_neumann,
+                               orthogonality_error)
+from repro.core.oft import (apply_blockdiag, oft_init, oft_param_count,
+                            oftv1_transform_weight, oftv2_transform_input)
+from repro.core.skew import pack_dim, pack_skew, unpack_skew
+
+__all__ = [
+    "adapted_linear", "adapter_init", "adapter_param_count", "merge_adapter",
+    "wants_adapter", "build_rotation", "cayley_exact", "cayley_neumann",
+    "orthogonality_error", "apply_blockdiag", "oft_init", "oft_param_count",
+    "oftv1_transform_weight", "oftv2_transform_input", "pack_dim",
+    "pack_skew", "unpack_skew",
+]

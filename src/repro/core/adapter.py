@@ -1,0 +1,91 @@
+"""Uniform adapter API: every linear layer in the model zoo goes through
+``adapted_linear``.  This is the single integration point of the paper's
+technique with the framework -- OFTv2/QOFT (sequential, input-centric),
+OFTv1 (sequential, weight-centric baseline), LoRA/QLoRA (parallel, low-rank
+baseline), or no adapter.
+
+Parameter layout contract (enforced by repro.train.state):
+  base params  (frozen, possibly quantized)  live under  tree["base"]
+  adapter params (trainable)                 live under  tree["adapter"]
+so `jax.grad` over the adapter tree alone gives the PEFT memory story.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import AdapterConfig, QuantConfig
+from repro.core import lora as lora_lib
+from repro.core import oft as oft_lib
+from repro.quant.common import dequantize_linear
+
+
+def wants_adapter(name: str, acfg: AdapterConfig) -> bool:
+    return acfg.kind != "none" and name in acfg.targets
+
+
+def adapter_init(key, name: str, d_in: int, d_out: int, acfg: AdapterConfig,
+                 dtype=jnp.float32) -> Optional[dict]:
+    """Adapter params for one linear (or None when not targeted)."""
+    if not wants_adapter(name, acfg):
+        return None
+    if acfg.is_oft:
+        return oft_lib.oft_init(d_in, acfg.block_size, dtype=dtype)
+    if acfg.kind == "lora":
+        return lora_lib.lora_init(key, d_in, d_out, acfg.rank, dtype=dtype)
+    raise ValueError(f"unknown adapter kind {acfg.kind}")
+
+
+def adapter_param_count(name: str, d_in: int, d_out: int,
+                        acfg: AdapterConfig) -> int:
+    if not wants_adapter(name, acfg):
+        return 0
+    if acfg.is_oft:
+        return oft_lib.oft_param_count(d_in, acfg.block_size)
+    return lora_lib.lora_param_count(d_in, d_out, acfg.rank)
+
+
+def adapted_linear(x: jnp.ndarray, qstate: dict, adapter: Optional[dict],
+                   acfg: AdapterConfig, qcfg: QuantConfig,
+                   constrain=None) -> jnp.ndarray:
+    """y = adapted forward of one frozen linear.
+
+    OFTv2/QOFT path never touches the quant state before the matmul --
+    quantization-agnostic by construction (paper §4, eq. 3).
+
+    constrain (optional, on-mesh only): gather-codes optimization -- the
+    ZeRO-3 all-gather is forced onto the uint8 quant state (replicate it,
+    dequantize locally) instead of the dequantized bf16 weight, cutting
+    weight-gather wire ~4x (EXPERIMENTS.md §Perf/llama3 it-4).
+    """
+    if (constrain is not None and qcfg.gather_codes and qcfg.enabled
+            and "w" not in qstate):
+        qstate = {k: constrain(v) for k, v in qstate.items()}
+    w = dequantize_linear(qstate, qcfg, x.dtype)
+    if adapter is None or acfg.kind == "none":
+        return x @ w
+    if acfg.kind == "oftv2":
+        xr = oft_lib.oftv2_transform_input(x, adapter, acfg)
+        return xr @ w
+    if acfg.kind == "oftv1":
+        # Weight-centric baseline: materializes (and backprops through) the
+        # transformed d_in x d_out weight every call -- the paper's bottleneck.
+        wt = oft_lib.oftv1_transform_weight(w, adapter, acfg)
+        return x @ wt
+    if acfg.kind == "lora":
+        return x @ w + lora_lib.lora_delta(x, adapter, acfg)
+    raise ValueError(f"unknown adapter kind {acfg.kind}")
+
+
+def merge_adapter(w: jnp.ndarray, adapter: Optional[dict],
+                  acfg: AdapterConfig) -> jnp.ndarray:
+    """Fold the adapter into a (dequantized) weight for deployment."""
+    if adapter is None or acfg.kind == "none":
+        return w
+    if acfg.is_oft:
+        return oft_lib.oft_merge(w, adapter, acfg)
+    if acfg.kind == "lora":
+        return lora_lib.lora_merge(w, adapter, acfg)
+    raise ValueError(f"unknown adapter kind {acfg.kind}")

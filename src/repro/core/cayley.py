@@ -1,0 +1,78 @@
+"""Cayley and Cayley-Neumann orthogonal parameterizations (paper §3.3).
+
+Exact Cayley:      R = (I + Q)(I - Q)^{-1}          (rotation; needs a solve)
+Cayley-Neumann:    R = (I + Q)(I + sum_{i=1..k} Q^i) (matrix-free; stable)
+
+Q is skew-symmetric, so exact Cayley is exactly orthogonal; the Neumann
+truncation is approximately orthogonal with error O(||Q||^{k+1}) -- the
+property tests in tests/test_cayley.py assert the geometric decay.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.skew import unpack_skew
+
+
+def _eye_like(q: jnp.ndarray) -> jnp.ndarray:
+    b = q.shape[-1]
+    return jnp.broadcast_to(jnp.eye(b, dtype=q.dtype), q.shape)
+
+
+def cayley_exact(q: jnp.ndarray) -> jnp.ndarray:
+    """(..., b, b) skew Q -> orthogonal R via exact Cayley transform.
+
+    Used by the OFTv1 baseline (paper's original formulation). The solve is
+    the numerical-stability / cost bottleneck the CNP removes.
+    """
+    eye = _eye_like(q)
+    # R = (I+Q)(I-Q)^{-1}  =>  R (I-Q) = (I+Q)  =>  (I-Q)^T R^T = (I+Q)^T
+    lhs = jnp.swapaxes(eye - q, -1, -2)
+    rhs = jnp.swapaxes(eye + q, -1, -2)
+    rt = jnp.linalg.solve(lhs, rhs)
+    return jnp.swapaxes(rt, -1, -2)
+
+
+def neumann_inverse(q: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Truncated Neumann series  I + Q + Q^2 + ... + Q^k  ~=  (I - Q)^{-1}.
+
+    Unrolled (k is small and static); each term is one small matmul that the
+    Pallas kernel keeps VMEM-resident.
+    """
+    eye = _eye_like(q)
+    if k <= 0:
+        return eye
+    acc = eye + q
+    power = q
+    for _ in range(k - 1):
+        power = power @ q
+        acc = acc + power
+    return acc
+
+
+def cayley_neumann(q: jnp.ndarray, k: int) -> jnp.ndarray:
+    """(..., b, b) skew Q -> approximately-orthogonal R = (I+Q) * Neumann_k(Q)."""
+    eye = _eye_like(q)
+    if k <= 0:
+        return cayley_exact(q)
+    return (eye + q) @ neumann_inverse(q, k)
+
+
+def build_rotation(q_packed: jnp.ndarray, block_size: int,
+                   neumann_terms: int) -> jnp.ndarray:
+    """Packed skew params (..., r, pack_dim(b)) -> block rotations (..., r, b, b).
+
+    neumann_terms == 0 selects the exact Cayley transform (OFTv1 fidelity);
+    otherwise the Cayley-Neumann parameterization (OFTv2 default, k=5 in the
+    paper's reference implementation).
+    """
+    q = unpack_skew(q_packed, block_size)
+    if neumann_terms <= 0:
+        return cayley_exact(q)
+    return cayley_neumann(q, neumann_terms)
+
+
+def orthogonality_error(r: jnp.ndarray) -> jnp.ndarray:
+    """max-norm of RᵀR - I (scalar, for monitoring/tests)."""
+    eye = jnp.eye(r.shape[-1], dtype=r.dtype)
+    return jnp.max(jnp.abs(jnp.swapaxes(r, -1, -2) @ r - eye))

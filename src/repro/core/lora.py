@@ -1,0 +1,37 @@
+"""LoRA / QLoRA baseline (paper compares against Hu et al. 2022 / Dettmers
+et al. 2023).  Parallel low-rank update: y = x @ W + (alpha/r) * (x @ A) @ B."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import AdapterConfig
+
+
+def lora_init(key, d_in: int, d_out: int, rank: int,
+              dtype=jnp.float32) -> dict:
+    """A ~ N(0, 1/r) (kaiming-ish), B = 0 => adapter starts as identity map."""
+    ka, _ = jax.random.split(key)
+    a = jax.random.normal(ka, (d_in, rank), dtype=dtype) / jnp.sqrt(
+        jnp.asarray(rank, dtype=dtype))
+    b = jnp.zeros((rank, d_out), dtype=dtype)
+    return {"lora_a": a, "lora_b": b}
+
+
+def lora_param_count(d_in: int, d_out: int, rank: int) -> int:
+    return rank * (d_in + d_out)
+
+
+def lora_delta(x: jnp.ndarray, params: dict, cfg: AdapterConfig) -> jnp.ndarray:
+    """(alpha/r) * (x @ A) @ B  -- the parallel branch added to the frozen path."""
+    scale = cfg.alpha / cfg.rank
+    a = params["lora_a"].astype(x.dtype)
+    b = params["lora_b"].astype(x.dtype)
+    return ((x @ a) @ b) * jnp.asarray(scale, dtype=x.dtype)
+
+
+def lora_merge(w: jnp.ndarray, params: dict, cfg: AdapterConfig) -> jnp.ndarray:
+    """W' = W + (alpha/r) A @ B -- note this *changes the dynamic range* of W,
+    which is the paper's requantization argument against QLoRA (§4)."""
+    scale = cfg.alpha / cfg.rank
+    return w + scale * (params["lora_a"] @ params["lora_b"]).astype(w.dtype)

@@ -1,0 +1,52 @@
+"""Merge-back + requantization analysis (paper §4, "QOFT vs QLoRA").
+
+The paper argues the merged OFT weight R@W preserves per-column l2 norms
+exactly (orthogonality) and element dynamic range approximately, while
+LoRA's W + AB shifts the dynamic range by up to ||AB||_inf -- so
+requantizing a merged QOFT model is strictly better conditioned. These
+functions quantify that claim; tests/test_merging.py and
+benchmarks/requant_error.py exercise them.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax.numpy as jnp
+
+from repro.config.base import AdapterConfig, QuantConfig
+from repro.core.adapter import merge_adapter
+from repro.quant import nf4
+
+
+def column_norm_drift(w: jnp.ndarray, merged: jnp.ndarray) -> jnp.ndarray:
+    """max_j | ||merged[:,j]|| - ||w[:,j]|| | / ||w[:,j]|| -- exactly 0 for OFT
+    (up to Neumann truncation + float error)."""
+    n0 = jnp.linalg.norm(w, axis=0)
+    n1 = jnp.linalg.norm(merged, axis=0)
+    return jnp.max(jnp.abs(n1 - n0) / jnp.maximum(n0, 1e-12))
+
+
+def dynamic_range_shift(w: jnp.ndarray, merged: jnp.ndarray) -> jnp.ndarray:
+    """| max|merged| - max|w| | -- the requantization-range perturbation."""
+    return jnp.abs(jnp.max(jnp.abs(merged)) - jnp.max(jnp.abs(w)))
+
+
+def lora_worstcase_range_shift(adapter: dict, acfg: AdapterConfig) -> jnp.ndarray:
+    """||(alpha/r) A@B||_inf -- the paper's worst-case bound for QLoRA."""
+    delta = (acfg.alpha / acfg.rank) * (adapter["lora_a"] @ adapter["lora_b"])
+    return jnp.max(jnp.abs(delta))
+
+
+def requantization_report(w: jnp.ndarray, adapter: dict, acfg: AdapterConfig,
+                          qcfg: QuantConfig) -> Dict[str, float]:
+    """Merge -> requantize -> measure. Returns scalars (floats)."""
+    merged = merge_adapter(w, adapter, acfg)
+    q = nf4.quantize(merged, qcfg)
+    back = nf4.dequantize(q, qcfg, merged.dtype)
+    return {
+        "column_norm_drift": float(column_norm_drift(w, merged)),
+        "dynamic_range_shift": float(dynamic_range_shift(w, merged)),
+        "requant_max_err": float(jnp.max(jnp.abs(merged - back))),
+        "requant_rel_fro": float(jnp.linalg.norm(merged - back)
+                                 / jnp.linalg.norm(merged)),
+    }

@@ -1,0 +1,107 @@
+"""OFT: weight-centric (v1) and input-centric (v2) orthogonal finetuning.
+
+Weight convention throughout the framework: linear weights are stored as
+``W: (d_in, d_out)`` and the forward pass is ``y = x @ W``.  OFT learns a
+block-diagonal orthogonal ``R = Diag(R_1..R_r)`` acting on the *input*
+features (paper eq. 1/2, transposed to row-vector convention):
+
+    v1 (weight-centric):  y = x @ (R_bd @ W)      -- O(d^2 n) matrix-matrix
+    v2 (input-centric) :  y = (x @ R_bd) @ W      -- O(T d b + T d n) matvecs
+
+Both are implemented blockwise (never materializing the d x d ``R_bd``) and
+are numerically identical; tests/test_oft.py asserts it. The complexity gap
+is real nonetheless: v1 re-materializes (and differentiates through) a full
+d x n weight every step, v2 touches activations only -- that is the paper's
+entire scalability claim, and it is what the dry-run memory/flops analysis
+shows at scale.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import AdapterConfig
+from repro.core import cayley, skew
+
+
+def num_blocks(d: int, block_size: int) -> int:
+    if d % block_size != 0:
+        raise ValueError(f"d_in={d} not divisible by OFT block size {block_size}")
+    return d // block_size
+
+
+def oft_init(d_in: int, block_size: int, dtype=jnp.float32) -> dict:
+    """Zero-init packed skew params => R = I => finetuning starts at the
+    pretrained model (paper §3.3)."""
+    r = num_blocks(d_in, block_size)
+    return {"q_packed": jnp.zeros((r, skew.pack_dim(block_size)), dtype=dtype)}
+
+
+def oft_param_count(d_in: int, block_size: int) -> int:
+    return num_blocks(d_in, block_size) * skew.pack_dim(block_size)
+
+
+def build_r(params: dict, cfg: AdapterConfig) -> jnp.ndarray:
+    """(r, p) packed -> (r, b, b) block rotations."""
+    if cfg.use_pallas:
+        from repro.kernels import ops as kops
+        return kops.cayley_neumann(params["q_packed"], cfg.block_size,
+                                   cfg.neumann_terms)
+    return cayley.build_rotation(params["q_packed"], cfg.block_size,
+                                 cfg.neumann_terms)
+
+
+def apply_blockdiag(x: jnp.ndarray, r_blocks: jnp.ndarray) -> jnp.ndarray:
+    """y = x @ Diag(R_1..R_r) for x: (..., d), r_blocks: (r, b, b)."""
+    rb, b, _ = r_blocks.shape
+    lead = x.shape[:-1]
+    xr = x.reshape(lead + (rb, b))
+    yr = jnp.einsum("...rb,rbc->...rc", xr, r_blocks.astype(x.dtype))
+    return yr.reshape(lead + (rb * b,))
+
+
+def oftv2_transform_input(x: jnp.ndarray, params: dict,
+                          cfg: AdapterConfig) -> jnp.ndarray:
+    """Input-centric OFT (the paper's contribution): x' = x @ R_bd."""
+    r_blocks = build_r(params, cfg)
+    if cfg.use_pallas:
+        from repro.kernels import ops as kops
+        return kops.block_oft_apply(x, r_blocks)
+    return apply_blockdiag(x, r_blocks)
+
+
+def oftv1_transform_weight(w: jnp.ndarray, params: dict,
+                           cfg: AdapterConfig) -> jnp.ndarray:
+    """Weight-centric OFT baseline: W' = R_bd @ W (matrix-matrix, cubic).
+
+    w: (d_in, d_out). Reshaped blockwise: W'[i] = R_i @ W[i]."""
+    r_blocks = build_r(params, cfg)
+    rb, b, _ = r_blocks.shape
+    d_in, d_out = w.shape
+    wr = w.reshape(rb, b, d_out)
+    wt = jnp.einsum("rab,rbn->ran", r_blocks.astype(w.dtype), wr)
+    return wt.reshape(d_in, d_out)
+
+
+def oft_merge(w: jnp.ndarray, params: dict, cfg: AdapterConfig) -> jnp.ndarray:
+    """Merge the adapter into the pretrained weight for deployment
+    (identical math to v1's weight transform -- done once, not per step)."""
+    return oftv1_transform_weight(w, params, cfg)
+
+
+def oft_flops_per_step(d_in: int, d_out: int, tokens: int, block_size: int,
+                       input_centric: bool, neumann_terms: int = 5) -> int:
+    """Analytic adapter-overhead FLOPs (2*mnk per matmul), used by the Fig-1
+    benchmark and roofline cross-checks.
+
+    v1: build R (r * k * 2b^3) + weight transform (2 * d_in * b * d_out)
+        [per step, independent of token count]
+    v2: build R (same) + blockdiag apply (2 * tokens * d_in * b)
+    """
+    r = num_blocks(d_in, block_size)
+    build = r * max(neumann_terms, 1) * 2 * block_size ** 3
+    if input_centric:
+        return build + 2 * tokens * d_in * block_size
+    return build + 2 * d_in * block_size * d_out

@@ -1,0 +1,83 @@
+"""Packed skew-symmetric matrices.
+
+The paper stores each OFT block's skew-symmetric generator Q (b x b, Q = -Qᵀ,
+zero diagonal) as its packed strict-upper-triangular vector of length
+b(b-1)/2, cutting parameter storage ~2x and letting the orthogonal transform
+be reconstructed on the fly (paper §3.3, "custom CUDA kernel"; our TPU
+adaptation lives in repro.kernels.cayley_neumann).
+
+All ops here are pure jnp, jit/vmap/grad-safe, and serve as the reference
+implementation the Pallas kernels are tested against.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def pack_dim(b: int) -> int:
+    """Number of packed params for a b x b skew-symmetric matrix."""
+    return b * (b - 1) // 2
+
+
+@functools.lru_cache(maxsize=None)
+def _triu_indices(b: int):
+    iu = np.triu_indices(b, k=1)
+    return np.asarray(iu[0]), np.asarray(iu[1])
+
+
+@functools.lru_cache(maxsize=None)
+def _unpack_gather_index(b: int) -> np.ndarray:
+    """(b, b) int32 map: flat packed index of |Q[i, j]| (diagonal maps to slot 0;
+    it is multiplied by sign 0)."""
+    idx = np.zeros((b, b), dtype=np.int32)
+    rows, cols = _triu_indices(b)
+    for k, (i, j) in enumerate(zip(rows, cols)):
+        idx[i, j] = k
+        idx[j, i] = k
+    return idx
+
+
+@functools.lru_cache(maxsize=None)
+def _unpack_sign(b: int) -> np.ndarray:
+    """(b, b) sign map: +1 above diagonal, -1 below, 0 on diagonal."""
+    s = np.zeros((b, b), dtype=np.float32)
+    rows, cols = _triu_indices(b)
+    s[rows, cols] = 1.0
+    s[cols, rows] = -1.0
+    return s
+
+
+def unpack_skew(q_packed: jnp.ndarray, b: int) -> jnp.ndarray:
+    """(..., pack_dim(b)) -> (..., b, b) skew-symmetric Q.
+
+    Implemented as a single gather + sign multiply: this is the exact dataflow
+    the paper's CUDA kernel implements, expressed shape-wise so XLA/Pallas can
+    fuse it.
+    """
+    if q_packed.shape[-1] != pack_dim(b):
+        raise ValueError(
+            f"packed dim {q_packed.shape[-1]} does not match block size {b} "
+            f"(expected {pack_dim(b)})")
+    idx = jnp.asarray(_unpack_gather_index(b))
+    sign = jnp.asarray(_unpack_sign(b), dtype=q_packed.dtype)
+    q = jnp.take(q_packed, idx.reshape(-1), axis=-1)
+    q = q.reshape(q_packed.shape[:-1] + (b, b))
+    return q * sign
+
+
+def pack_skew(q: jnp.ndarray) -> jnp.ndarray:
+    """(..., b, b) -> (..., pack_dim(b)): extract strict upper triangle."""
+    b = q.shape[-1]
+    rows, cols = _triu_indices(b)
+    return q[..., rows, cols]
+
+
+def random_skew(key, shape_prefix, b: int, scale: float = 0.1,
+                dtype=jnp.float32) -> jnp.ndarray:
+    """Random packed skew params (for tests); OFT training inits to zeros."""
+    import jax
+    return scale * jax.random.normal(key, tuple(shape_prefix) + (pack_dim(b),),
+                                     dtype=dtype)

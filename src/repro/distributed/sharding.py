@@ -1,0 +1,61 @@
+"""Sharding glue: logical-axis rules -> NamedShardings, and the `constrain`
+hook threaded through the model (no-op off-mesh, divisibility-checked
+with_sharding_constraint on-mesh)."""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.models.spec import AxisRules
+
+
+def axis_size(mesh: Mesh, names) -> int:
+    if names is None:
+        return 1
+    if isinstance(names, str):
+        names = (names,)
+    n = 1
+    for name in names:
+        n *= mesh.shape[name]
+    return n
+
+
+def make_constrain(rules: AxisRules, mesh: Optional[Mesh]):
+    """constrain(x, *logical_axes) -> x with a sharding constraint.
+
+    Axes that do not divide the corresponding dim are dropped (e.g. seq=1 in
+    decode, or padded-free head counts) rather than failing."""
+    if mesh is None:
+        return lambda x, *axes: x
+
+    def constrain(x, *axes):
+        spec = []
+        for i in range(x.ndim):
+            lg = axes[i] if i < len(axes) else None
+            mesh_ax = rules.lookup(lg)
+            if mesh_ax is not None and x.shape[i] % axis_size(mesh, mesh_ax) == 0 \
+                    and x.shape[i] >= axis_size(mesh, mesh_ax):
+                spec.append(mesh_ax)
+            else:
+                spec.append(None)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, PartitionSpec(*spec)))
+
+    return constrain
+
+
+def named_sharding_tree(spec_tree: Any, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s if s is not None else PartitionSpec()),
+        spec_tree, is_leaf=lambda s: isinstance(s, PartitionSpec) or s is None)
+
+
+def batch_spec(pcfg, ndim: int) -> PartitionSpec:
+    """Batch tensors: leading dim over (pod, data)."""
+    axes = pcfg.data_axes
+    lead = axes if len(axes) > 1 else (axes[0] if axes else None)
+    return PartitionSpec(lead, *([None] * (ndim - 1)))

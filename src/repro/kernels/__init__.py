@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the paper's compute hot-spots (validated in
+interpret mode on CPU; compiled path on real TPUs):
+
+  block_oft_apply -- OFTv2's input-centric block-diagonal transform
+  cayley_neumann  -- packed-skew -> rotation builder (the paper's CUDA
+                     kernel, TPU-adapted)
+  nf4_dequant     -- QOFT/QLoRA frozen-weight LUT dequantization
+"""
+from repro.kernels.ops import block_oft_apply, cayley_neumann, nf4_dequant
+
+__all__ = ["block_oft_apply", "cayley_neumann", "nf4_dequant"]

@@ -1,0 +1,62 @@
+"""Pallas TPU kernel: block-diagonal orthogonal transform of activations.
+
+The OFTv2 hot loop: y[t, i, :] = x[t, i, :] @ R_i for every token t and OFT
+block i.  TPU adaptation of the paper's input-centric matvec (DESIGN.md §4):
+
+  * grid = (token tiles, block tiles); each program owns a
+    (TOKEN_TILE, BLOCK_TILE, b) activation tile and the matching
+    (BLOCK_TILE, b, b) rotation tile, both VMEM-resident.
+  * the batched small-matmul maps to the MXU as a dot_general with the OFT
+    block index as a batch dim; token tiles of 256 keep the operand matrix
+    (256 x b) MXU-aligned for b in {16, 32, 64}.
+  * x is never materialized in transformed form in HBM beyond the output
+    tile -- matching the paper's "matrix-free" framing.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TOKEN_TILE = 256
+DEFAULT_BLOCK_TILE = 8
+
+
+def _kernel(x_ref, r_ref, o_ref):
+    x = x_ref[...]          # (TT, RT, b)
+    r = r_ref[...]          # (RT, b, b)
+    o_ref[...] = jax.lax.dot_general(
+        x.astype(jnp.float32),
+        r.astype(jnp.float32),
+        # contract x's last dim with r's middle dim; batch over the block dim
+        dimension_numbers=(((2,), (1,)), ((1,), (0,))),
+        preferred_element_type=jnp.float32,
+    ).transpose(1, 0, 2).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("token_tile", "block_tile",
+                                             "interpret"))
+def block_oft_apply_kernel(x3: jnp.ndarray, r_blocks: jnp.ndarray,
+                           token_tile: int = DEFAULT_TOKEN_TILE,
+                           block_tile: int = DEFAULT_BLOCK_TILE,
+                           interpret: bool = True) -> jnp.ndarray:
+    """x3: (T, r, b) activations, r_blocks: (r, b, b) -> (T, r, b).
+
+    T must be a multiple of token_tile and r of block_tile (ops.py pads).
+    """
+    t, rb, b = x3.shape
+    grid = (t // token_tile, rb // block_tile)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((token_tile, block_tile, b), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((block_tile, b, b), lambda i, j: (j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((token_tile, block_tile, b),
+                               lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, rb, b), x3.dtype),
+        interpret=interpret,
+    )(x3, r_blocks)

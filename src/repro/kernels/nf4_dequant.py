@@ -1,0 +1,68 @@
+"""Pallas TPU kernel: NF4 dequantization (packed 4-bit codes + per-block
+absmax -> bf16/f32 weight tile).
+
+Feeds the frozen matmul in QOFT/QLoRA. TPU adaptation of bitsandbytes'
+CUDA LUT dequant: the 16-entry codebook lookup is a VMEM gather on the VPU;
+unpacking (two codes per byte) is shift/mask; per-block absmax scaling is a
+broadcast multiply. Tiles are chosen so a (IN_TILE x OUT_TILE) bf16 output
+tile plus its codes (half) and scales fit comfortably in VMEM, and OUT_TILE
+is lane-aligned (128).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.quant.nf4 import NF4_TABLE
+
+DEFAULT_IN_TILE = 256    # rows of the dequantized weight per program
+DEFAULT_OUT_TILE = 128   # lane-aligned columns
+
+
+def _make_kernel(block_size: int, in_tile: int):
+    def kernel(codes_ref, absmax_ref, table_ref, o_ref):
+        codes = codes_ref[...]                       # (IN/2, OUT) uint8
+        absmax = absmax_ref[...]                     # (IN/bs, OUT) f32
+        table = table_ref[...]                       # (16,) f32
+        out = o_ref.shape                            # (IN, OUT)
+        hi = (codes >> 4).astype(jnp.int32)
+        lo = (codes & 0xF).astype(jnp.int32)
+        idx = jnp.stack([hi, lo], axis=1).reshape(out)       # interleave rows
+        vals = jnp.take(table, idx.reshape(-1), axis=0).reshape(out)
+        scaled = (vals.reshape(in_tile // block_size, block_size, out[1])
+                  * absmax[:, None, :])
+        o_ref[...] = scaled.reshape(out).astype(o_ref.dtype)
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("block_size", "out_dtype",
+                                             "in_tile", "out_tile",
+                                             "interpret"))
+def nf4_dequant_kernel(codes: jnp.ndarray, absmax: jnp.ndarray,
+                       block_size: int, out_dtype=jnp.float32,
+                       in_tile: int = DEFAULT_IN_TILE,
+                       out_tile: int = DEFAULT_OUT_TILE,
+                       interpret: bool = True) -> jnp.ndarray:
+    """codes: (d_in//2, d_out) uint8, absmax: (d_in//bs, d_out) f32
+    -> (d_in, d_out) out_dtype.  d_in % in_tile == 0, d_out % out_tile == 0,
+    in_tile % (2*block_size) == 0 (ops.py pads/validates)."""
+    d_in = codes.shape[0] * 2
+    d_out = codes.shape[1]
+    table = jnp.asarray(NF4_TABLE)
+    grid = (d_in // in_tile, d_out // out_tile)
+    return pl.pallas_call(
+        _make_kernel(block_size, in_tile),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((in_tile // 2, out_tile), lambda i, j: (i, j)),
+            pl.BlockSpec((in_tile // block_size, out_tile),
+                         lambda i, j: (i, j)),
+            pl.BlockSpec((16,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((in_tile, out_tile), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((d_in, d_out), out_dtype),
+        interpret=interpret,
+    )(codes, absmax, table)

@@ -1,0 +1,128 @@
+"""Public jit'd wrappers for the Pallas kernels: shape plumbing (leading-dim
+flattening, tile padding), interpret-mode auto-detection (CPU container =>
+interpret=True; real TPU => compiled), and custom VJPs so the kernels are
+drop-in replacements for the jnp paths in repro.core / repro.quant.
+
+Backward rules:
+  * block_oft_apply: dx is another block-diagonal apply with R transposed
+    (the same kernel, R^T); dR is a token-contraction einsum.
+  * cayley_neumann: forward via kernel, backward via jax.vjp of the jnp
+    oracle (identical math, so gradients are exact).
+  * nf4_dequant: non-differentiable by design (frozen quantized weights).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as kref
+from repro.kernels.block_oft_apply import block_oft_apply_kernel
+from repro.kernels.cayley_neumann import cayley_neumann_kernel
+from repro.kernels.nf4_dequant import nf4_dequant_kernel
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pick_tile(n: int, candidates) -> int:
+    for c in candidates:
+        if n % c == 0:
+            return c
+    return n
+
+
+# ------------------------------------------------------ block_oft_apply ----
+def _block_apply_raw(x: jnp.ndarray, r_blocks: jnp.ndarray) -> jnp.ndarray:
+    rb, b, _ = r_blocks.shape
+    lead = x.shape[:-1]
+    t = 1
+    for s in lead:
+        t *= s
+    x3 = x.reshape(t, rb, b)
+    token_tile = _pick_tile(t, [256, 128, 64, 32, 16, 8, 4, 2, 1])
+    block_tile = _pick_tile(rb, [8, 4, 2, 1])
+    y3 = block_oft_apply_kernel(x3, r_blocks, token_tile=token_tile,
+                                block_tile=block_tile, interpret=_interpret())
+    return y3.reshape(x.shape)
+
+
+@jax.custom_vjp
+def block_oft_apply(x: jnp.ndarray, r_blocks: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., d) @ blockdiag(r_blocks): Pallas path of OFTv2's input
+    transform."""
+    return _block_apply_raw(x, r_blocks)
+
+
+def _boa_fwd(x, r_blocks):
+    return _block_apply_raw(x, r_blocks), (x, r_blocks)
+
+
+def _boa_bwd(res, g):
+    x, r_blocks = res
+    rb, b, _ = r_blocks.shape
+    dx = _block_apply_raw(g, jnp.swapaxes(r_blocks, -1, -2))
+    lead = g.shape[:-1]
+    t = 1
+    for s in lead:
+        t *= s
+    x3 = x.reshape(t, rb, b)
+    g3 = g.reshape(t, rb, b)
+    dr = jnp.einsum("trb,trc->rbc", x3.astype(jnp.float32),
+                    g3.astype(jnp.float32)).astype(r_blocks.dtype)
+    return dx, dr
+
+
+block_oft_apply.defvjp(_boa_fwd, _boa_bwd)
+
+
+# ------------------------------------------------------- cayley_neumann ----
+def _cn_raw(q_packed: jnp.ndarray, block_size: int,
+            neumann_terms: int) -> jnp.ndarray:
+    if neumann_terms <= 0:
+        # exact Cayley needs a solve -> no kernel path; use the oracle
+        return kref.cayley_neumann_ref(q_packed, block_size, neumann_terms)
+    rb = q_packed.shape[0]
+    block_tile = _pick_tile(rb, [8, 4, 2, 1])
+    return cayley_neumann_kernel(q_packed, block_size, neumann_terms,
+                                 block_tile=block_tile,
+                                 interpret=_interpret())
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def cayley_neumann(q_packed: jnp.ndarray, block_size: int,
+                   neumann_terms: int) -> jnp.ndarray:
+    """Packed skew (r, p) -> rotations (r, b, b): Pallas CNP builder."""
+    return _cn_raw(q_packed, block_size, neumann_terms)
+
+
+def _cn_fwd(q_packed, block_size, neumann_terms):
+    return _cn_raw(q_packed, block_size, neumann_terms), q_packed
+
+
+def _cn_bwd(block_size, neumann_terms, q_packed, g):
+    _, vjp = jax.vjp(
+        lambda q: kref.cayley_neumann_ref(q, block_size, neumann_terms),
+        q_packed)
+    return vjp(g)
+
+
+cayley_neumann.defvjp(_cn_fwd, _cn_bwd)
+
+
+# ---------------------------------------------------------- nf4_dequant ----
+def nf4_dequant(codes: jnp.ndarray, absmax: jnp.ndarray, block_size: int,
+                dtype=jnp.float32) -> jnp.ndarray:
+    """Packed NF4 codes + absmax -> dense weight (Pallas path)."""
+    d_in = codes.shape[0] * 2
+    d_out = codes.shape[1]
+    in_tile = _pick_tile(d_in, [c for c in (512, 256, 128, 64, 32, 16)
+                                if c % block_size == 0 and c % 2 == 0])
+    if d_in % in_tile or in_tile % block_size:
+        in_tile = d_in
+    out_tile = _pick_tile(d_out, [128, 64, 32, 16, 8, 4, 2, 1])
+    return nf4_dequant_kernel(codes, absmax, block_size, out_dtype=dtype,
+                              in_tile=in_tile, out_tile=out_tile,
+                              interpret=_interpret())

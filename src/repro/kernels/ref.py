@@ -1,0 +1,42 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Kernel tests sweep shapes/dtypes and assert_allclose against these; the
+model layers use the same math via repro.core / repro.quant, so the oracle
+== framework numerics by construction.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cayley as _cayley
+from repro.core import skew as _skew
+from repro.quant.nf4 import NF4_TABLE
+
+
+def block_oft_apply_ref(x: jnp.ndarray, r_blocks: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., d), r_blocks: (r, b, b) -> x @ blockdiag(R_1..R_r)."""
+    rb, b, _ = r_blocks.shape
+    lead = x.shape[:-1]
+    xr = x.reshape(lead + (rb, b))
+    yr = jnp.einsum("...rb,rbc->...rc", xr, r_blocks.astype(x.dtype))
+    return yr.reshape(lead + (rb * b,))
+
+
+def cayley_neumann_ref(q_packed: jnp.ndarray, block_size: int,
+                       neumann_terms: int) -> jnp.ndarray:
+    """(r, pack_dim(b)) -> (r, b, b) block rotations."""
+    return _cayley.build_rotation(q_packed, block_size, neumann_terms)
+
+
+def nf4_dequant_ref(codes: jnp.ndarray, absmax: jnp.ndarray,
+                    block_size: int, dtype=jnp.float32) -> jnp.ndarray:
+    """codes: (d_in//2, d_out) uint8 packed NF4, absmax: (d_in//bs, d_out)."""
+    d_in = codes.shape[0] * 2
+    d_out = codes.shape[1]
+    hi = (codes >> 4).astype(jnp.int32)
+    lo = (codes & 0xF).astype(jnp.int32)
+    idx = jnp.stack([hi, lo], axis=1).reshape(d_in, d_out)
+    vals = jnp.take(jnp.asarray(NF4_TABLE), idx, axis=0)
+    w = vals.reshape(d_in // block_size, block_size, d_out) * absmax[:, None, :]
+    return w.reshape(d_in, d_out).astype(dtype)

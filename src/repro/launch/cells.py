@@ -1,0 +1,180 @@
+"""Dry-run cell setup: for one (arch x shape x mesh) cell build the model,
+abstract inputs (ShapeDtypeStruct -- weak-type-correct, shardable, no device
+allocation), and the matching sharding trees.
+
+This module must be import-safe before jax device init (dryrun.py sets
+XLA_FLAGS first); it only touches jax inside functions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.config.base import (SHAPES, AdapterConfig, ModelConfig,
+                               ParallelConfig, QuantConfig, RunConfig,
+                               ShapePreset, TrainConfig)
+from repro.configs import get_config
+from repro.distributed.sharding import (axis_size, make_constrain,
+                                        named_sharding_tree)
+from repro.launch.mesh import production_parallel_config
+from repro.models import build
+from repro.models.model import Model
+from repro.models.spec import default_rules, rules_variant
+from repro.optim.adamw import AdamWState
+from repro.train import state as state_lib
+from repro.train.step import (make_serve_decode, make_serve_prefill,
+                              make_train_step)
+
+SDS = jax.ShapeDtypeStruct
+
+
+def checked_spec(shape: Tuple[int, ...], spec: PartitionSpec,
+                 mesh: Mesh) -> PartitionSpec:
+    """Drop spec entries that don't divide the dim (e.g. batch=1 long_500k)."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, ax in zip(shape, entries):
+        n = axis_size(mesh, ax) if ax is not None else 1
+        out.append(ax if (n > 1 and dim % n == 0 and dim >= n) else None)
+    return PartitionSpec(*out)
+
+
+def checked_sharding_tree(abstract: Any, specs: Any, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda a, s: NamedSharding(mesh, checked_spec(a.shape, s, mesh)),
+        abstract, specs,
+        is_leaf=lambda x: isinstance(x, PartitionSpec) or x is None)
+
+
+@dataclass
+class Cell:
+    arch: str
+    shape: ShapePreset
+    run: RunConfig
+    model: Model
+    step_fn: Callable
+    abstract_args: tuple
+    arg_shardings: tuple
+    mode: str
+
+
+def _batch_abstract(cfg: ModelConfig, shape: ShapePreset):
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        return {"tokens": SDS((b, 1), jnp.int32),
+                "positions": SDS((b, 1), jnp.int32),
+                "cache_index": SDS((b,), jnp.int32)}
+    if cfg.frontend == "audio_frames":
+        d = {"frames": SDS((b, s, cfg.frontend_dim), jnp.bfloat16),
+             "labels": SDS((b, s), jnp.int32)}
+        return d
+    if cfg.frontend == "vision_patches":
+        n = cfg.num_frontend_tokens
+        return {"tokens": SDS((b, s - n), jnp.int32),
+                "patches": SDS((b, n, cfg.frontend_dim), jnp.bfloat16)}
+    return {"tokens": SDS((b, s), jnp.int32)}
+
+
+def _batch_specs(batch_abs, rules):
+    lead = rules.lookup("batch")
+
+    def spec(a):
+        return PartitionSpec(lead, *([None] * (len(a.shape) - 1)))
+
+    return jax.tree_util.tree_map(spec, batch_abs)
+
+
+def abstract_train_state(model: Model):
+    params = model.abstract_params()
+    adapter = params["adapter"]
+    f32 = jax.tree_util.tree_map(lambda a: SDS(a.shape, jnp.float32), adapter)
+    opt = AdamWState(step=SDS((), jnp.int32), mu=f32,
+                     nu=jax.tree_util.tree_map(lambda x: x, f32))
+    return state_lib.TrainState(step=SDS((), jnp.int32),
+                                base=params["base"], adapter=adapter,
+                                opt=opt, comp_err=None)
+
+
+def train_state_specs(model: Model, rules):
+    specs = model.param_specs(rules)
+    aspec = specs["adapter"]
+    opt = AdamWState(step=PartitionSpec(), mu=aspec,
+                     nu=jax.tree_util.tree_map(lambda x: x, aspec))
+    return state_lib.TrainState(step=PartitionSpec(), base=specs["base"],
+                                adapter=aspec, opt=opt, comp_err=None)
+
+
+def make_cell(arch: str, shape_name: str, mesh: Mesh, *, multi_pod: bool,
+              adapter_kind: str = "oftv2", quant_kind: str = "none",
+              microbatches: int = 4, remat: str = "full",
+              overrides: Optional[dict] = None,
+              global_batch_override: int = 0,
+              rules_preset: str = "baseline") -> Cell:
+    shape = SHAPES[shape_name]
+    if global_batch_override:
+        shape = dataclasses.replace(shape,
+                                    global_batch=global_batch_override)
+    pcfg = production_parallel_config(
+        multi_pod=multi_pod,
+        microbatches=microbatches if shape.kind == "train" else 1,
+        remat=remat)
+    model_axis = pcfg.model_axis_size
+    cfg = get_config(arch).with_mesh_padding(model_axis)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    run = RunConfig(
+        model=cfg,
+        adapter=AdapterConfig(kind=adapter_kind, block_size=32,
+                              neumann_terms=5),
+        quant=QuantConfig(kind=quant_kind),
+        parallel=pcfg,
+        train=TrainConfig(global_batch=shape.global_batch,
+                          seq_len=shape.seq_len, steps=1000,
+                          warmup_steps=100))
+    rules = rules_variant(pcfg, rules_preset)
+    model = build(run, constrain=make_constrain(rules, mesh))
+
+    batch_abs = _batch_abstract(cfg, shape)
+    batch_specs = _batch_specs(batch_abs, rules)
+    batch_shardings = checked_sharding_tree(batch_abs, batch_specs, mesh)
+
+    if shape.kind == "train":
+        state_abs = abstract_train_state(model)
+        state_specs = train_state_specs(model, rules)
+        state_shardings = jax.tree_util.tree_map(
+            lambda a, s: NamedSharding(mesh, checked_spec(a.shape, s, mesh)),
+            state_abs, state_specs,
+            is_leaf=lambda x: isinstance(x, (PartitionSpec,
+                                             jax.ShapeDtypeStruct)))
+        fn = make_train_step(model, run)
+        return Cell(arch, shape, run, model, fn,
+                    (state_abs, batch_abs), (state_shardings,
+                                             batch_shardings), "train")
+
+    params_abs = model.abstract_params()
+    params_specs = model.param_specs(rules)
+    params_shardings = checked_sharding_tree(params_abs, params_specs, mesh)
+
+    if shape.kind == "prefill":
+        fn = make_serve_prefill(model)
+        return Cell(arch, shape, run, model, fn,
+                    (params_abs, batch_abs),
+                    (params_shardings, batch_shardings), "prefill")
+
+    # decode
+    caches_abs = model.make_caches(shape.global_batch, shape.seq_len,
+                                   abstract=True)
+    caches_specs = model.cache_specs(rules, shape.global_batch,
+                                     shape.seq_len)
+    caches_shardings = checked_sharding_tree(caches_abs, caches_specs, mesh)
+    batch_abs["caches"] = caches_abs
+    batch_shardings["caches"] = caches_shardings
+    fn = make_serve_decode(model)
+    return Cell(arch, shape, run, model, fn,
+                (params_abs, batch_abs), (params_shardings,
+                                          batch_shardings), "decode")

@@ -1,0 +1,351 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init). Everything below is normal module code.
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape)
+cell on the production meshes and extract the roofline inputs.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch granite-8b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --jobs 3
+
+Per cell it records (artifacts/dryrun/<arch>__<shape>__<mesh>.json):
+  * compiled.memory_analysis()  -- per-device bytes (proves it fits)
+  * compiled.cost_analysis()    -- per-device FLOPs / HBM bytes
+  * collective wire bytes       -- parsed from the post-SPMD optimized HLO
+  * the three roofline terms + bottleneck + MODEL_FLOPS ratio
+"""
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+from pathlib import Path
+
+ARTIFACTS = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+def _compile_cell(cell, mesh):
+    import jax
+    with mesh:
+        jitted = jax.jit(cell.step_fn, in_shardings=cell.arg_shardings)
+        lowered = jitted.lower(*cell.abstract_args)
+        compiled = lowered.compile()
+    return lowered, compiled
+
+
+def _cost_of(compiled):
+    cost_raw = compiled.cost_analysis()
+    if isinstance(cost_raw, list):
+        cost_raw = cost_raw[0] if cost_raw else {}
+    return {k: float(v) for k, v in cost_raw.items()
+            if isinstance(v, (int, float))}
+
+
+def run_probes(arch, shape_name, mesh, multi_pod, adapter, quant,
+               microbatches, remat, overrides, n_dev,
+               rules_preset="baseline"):
+    """Two unrolled reduced-depth compiles (g=1, g=2): HLO cost analysis
+    counts scan bodies once, so per-layer-group flops/bytes/collective
+    deltas are recovered from unrolled probes and extrapolated to full
+    depth (x microbatches for train). DESIGN.md §Roofline-method."""
+    from repro.config.base import SHAPES
+    from repro.configs import get_config
+    from repro.launch.cells import make_cell
+    from repro.roofline import analysis as ra
+
+    shape = SHAPES[shape_name]
+    cfg_full = get_config(arch)
+    sb = max(cfg_full.scan_block, 1)
+    n_groups = cfg_full.num_layers // sb
+    m = microbatches if shape.kind == "train" else 1
+    gb = shape.global_batch
+    probe_batch, scale = 0, 1.0
+    if shape.kind == "train":
+        # probe at the per-microbatch batch, floored at the batch-shard
+        # count (a smaller batch would replicate instead of shard and blow
+        # up per-device numbers); `scale` renormalizes the batch-linear
+        # quantities when the floor binds (only in batch-everywhere presets
+        # where there are no weight-gather collectives to misattribute).
+        from repro.distributed.sharding import axis_size
+        from repro.models.spec import rules_variant
+        from repro.launch.mesh import production_parallel_config
+        pcfg_p = production_parallel_config(multi_pod=multi_pod)
+        rules = rules_variant(pcfg_p, rules_preset)
+        shards = min(axis_size(mesh, rules.lookup("batch")), gb)
+        probe_batch = max(gb // m, shards)
+        scale = (gb / m) / probe_batch
+
+    stats = {}
+    for g in (1, 2):
+        ov = dict(overrides or {})
+        ov.update(num_layers=sb * g, scan_layers=False)
+        cellp = make_cell(arch, shape_name, mesh, multi_pod=multi_pod,
+                          adapter_kind=adapter, quant_kind=quant,
+                          microbatches=1, remat=remat, overrides=ov,
+                          global_batch_override=probe_batch,
+                          rules_preset=rules_preset)
+        _, compiled = _compile_cell(cellp, mesh)
+        cost = _cost_of(compiled)
+        wire, _ = ra.parse_collectives(compiled.as_text(), n_dev)
+        stats[g] = {"flops": cost.get("flops", 0.0),
+                    "bytes": cost.get("bytes accessed", 0.0),
+                    "wire": wire}
+
+    out = {"probe_raw": stats, "n_groups": n_groups, "microbatches": m,
+           "batch_scale": scale}
+    for key in ("flops", "bytes", "wire"):
+        body = max(stats[2][key] - stats[1][key], 0.0)
+        base = max(stats[1][key] - body, 0.0)
+        out[key] = m * scale * (base + body * n_groups)
+    return out
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
+             adapter: str = "oftv2", quant: str = "none",
+             microbatches: int = 4, remat: str = "full",
+             dump_hlo: bool = False, tag: str = "",
+             overrides: dict | None = None, probes: bool = True,
+             rules_preset: str = "baseline") -> dict:
+    import jax
+    from repro.config.base import SHAPES
+    from repro.launch.cells import make_cell
+    from repro.launch.mesh import make_production_mesh
+    from repro.roofline import analysis as ra
+    from repro.roofline.hw import V5E
+
+    multi_pod = mesh_kind == "multi"
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.size
+    cell = make_cell(arch, shape_name, mesh, multi_pod=multi_pod,
+                     adapter_kind=adapter, quant_kind=quant,
+                     microbatches=microbatches, remat=remat,
+                     overrides=overrides, rules_preset=rules_preset)
+
+    with mesh:
+        jitted = jax.jit(cell.step_fn, in_shardings=cell.arg_shardings)
+        lowered = jitted.lower(*cell.abstract_args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    # ---- memory analysis (proves it fits) -------------------------------
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "alias_size_in_bytes",
+                     "generated_code_size_in_bytes"):
+            v = getattr(ma, attr, None)
+            if v is not None:
+                mem[attr] = int(v)
+        print("memory_analysis:", mem)
+    except Exception as e:                                    # noqa: BLE001
+        mem = {"error": str(e)}
+        print("memory_analysis unavailable:", e)
+
+    # ---- cost analysis ---------------------------------------------------
+    cost_raw = compiled.cost_analysis()
+    if isinstance(cost_raw, list):
+        cost_raw = cost_raw[0] if cost_raw else {}
+    cost = {k: float(v) for k, v in cost_raw.items()
+            if isinstance(v, (int, float))}
+    flops = cost.get("flops", 0.0)
+    bytes_acc = cost.get("bytes accessed", 0.0)
+    print(f"cost_analysis: flops={flops:.3e} bytes={bytes_acc:.3e}")
+
+    # ---- collectives from post-SPMD HLO ---------------------------------
+    hlo = compiled.as_text()
+    wire_bytes, per_kind = ra.parse_collectives(hlo, n_dev)
+    if dump_hlo:
+        ARTIFACTS.mkdir(parents=True, exist_ok=True)
+        (ARTIFACTS / f"{arch}__{shape_name}__{mesh_kind}{tag}.hlo"
+         ).write_text(hlo)
+
+    # ---- probe calibration (scan bodies are cost-counted once) ----------
+    shape = SHAPES[shape_name]
+    probe = None
+    cal_flops, cal_bytes, cal_wire = flops, bytes_acc, wire_bytes
+    if probes:
+        probe = run_probes(arch, shape_name, mesh, multi_pod, adapter,
+                           quant, microbatches, remat, overrides, n_dev,
+                           rules_preset=rules_preset)
+        cal_flops, cal_bytes, cal_wire = (probe["flops"], probe["bytes"],
+                                          probe["wire"])
+        if cell.mode in ("train", "prefill"):
+            # chunked-attention core runs under lax.scan -> add analytically
+            from repro.distributed.sharding import axis_size
+            from repro.models.spec import rules_variant
+            rules = rules_variant(cell.run.parallel, rules_preset)
+            batch_shards = min(axis_size(mesh, rules.lookup("batch")),
+                               shape.global_batch)
+            head_shards = axis_size(mesh, rules.lookup("heads"))
+            corr = ra.attention_correction(
+                cell.run.model, shape.seq_len, shape.global_batch,
+                cell.mode, batch_shards, head_shards,
+                microbatches=(microbatches if cell.mode == "train" else 1))
+            cfgm = cell.run.model
+            n_attn = sum(0 if cfgm.is_ssm_layer(i) else 1
+                         for i in range(cfgm.num_layers))
+            probe["attn_correction_per_layer"] = corr
+            cal_flops += corr["flops"] * n_attn
+            cal_bytes += corr["bytes"] * n_attn
+
+    # ---- roofline --------------------------------------------------------
+    terms = ra.roofline_terms(cal_flops, cal_bytes, cal_wire)
+    tokens = shape.global_batch * (shape.seq_len if cell.mode == "train"
+                                   else (shape.seq_len if cell.mode ==
+                                         "prefill" else 1))
+    mf = ra.model_flops(cell.run.model, tokens, cell.mode)
+    mf_per_dev = mf / n_dev
+    useful = mf_per_dev / cal_flops if cal_flops else 0.0
+
+    record = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "devices": n_dev, "mode": cell.mode, "adapter": adapter,
+        "quant": quant, "microbatches": microbatches, "remat": remat,
+        "tag": tag, "overrides": overrides or {},
+        "rules_preset": rules_preset,
+        "adapter_params": cell.model.param_counts()["adapter"],
+        "base_params": cell.model.param_counts()["base"],
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory_analysis": mem,
+        "cost_analysis": {"flops_raw": flops, "bytes_raw": bytes_acc,
+                          "flops": cal_flops, "bytes_accessed": cal_bytes},
+        "collectives": {"wire_bytes_raw": wire_bytes,
+                        "wire_bytes_per_device": cal_wire,
+                        "per_kind": per_kind},
+        "probe": probe,
+        "roofline": terms,
+        "model_flops": {"global": mf, "per_device": mf_per_dev,
+                        "useful_fraction": useful},
+        "hw": {"peak_flops": V5E.peak_flops_bf16, "hbm_bw": V5E.hbm_bw,
+               "link_bw": V5E.ici_link_bw},
+    }
+    print(f"roofline: compute={terms['compute_s']:.4e}s "
+          f"memory={terms['memory_s']:.4e}s "
+          f"collective={terms['collective_s']:.4e}s "
+          f"bottleneck={terms['bottleneck']} useful={useful:.2f}")
+    return record
+
+
+def cell_path(arch, shape, mesh_kind, tag="") -> Path:
+    return ARTIFACTS / f"{arch}__{shape}__{mesh_kind}{tag}.json"
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch")
+    p.add_argument("--shape")
+    p.add_argument("--mesh", default="single", choices=["single", "multi"])
+    p.add_argument("--adapter", default="oftv2")
+    p.add_argument("--quant", default="none")
+    p.add_argument("--microbatches", type=int, default=4)
+    p.add_argument("--remat", default="full")
+    p.add_argument("--dump-hlo", action="store_true")
+    p.add_argument("--no-probes", action="store_true",
+                   help="skip calibration probes (multi-pod cells: the "
+                        "roofline table is single-pod only)")
+    p.add_argument("--tag", default="", help="artifact suffix for variants")
+    p.add_argument("--rules", default="baseline",
+                   choices=["baseline", "dp", "dp_fsdp", "ep_model"])
+    p.add_argument("--override", action="append", default=[],
+                   help="cfg overrides key=value (int/float/bool)")
+    p.add_argument("--all", action="store_true",
+                   help="run every runnable cell x both meshes (subprocesses)")
+    p.add_argument("--jobs", type=int, default=2)
+    p.add_argument("--cell-timeout", type=float, default=2400.0)
+    p.add_argument("--force", action="store_true")
+    args = p.parse_args(argv)
+
+    ARTIFACTS.mkdir(parents=True, exist_ok=True)
+
+    if args.all:
+        from repro.configs import cells as cell_matrix
+        todo = []
+        for arch, shape, skip in cell_matrix():
+            for mesh_kind in ("single", "multi"):
+                path = cell_path(arch, shape, mesh_kind)
+                if skip:
+                    path.write_text(json.dumps(
+                        {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                         "skipped": skip}, indent=1))
+                    continue
+                if path.exists() and not args.force:
+                    continue
+                todo.append((arch, shape, mesh_kind))
+        # single-pod first: the roofline table depends on those
+        todo.sort(key=lambda t: (t[2] != "single",))
+        print(f"[dryrun] {len(todo)} cells to compile")
+        procs: list = []
+        fails = []
+        while todo or procs:
+            while todo and len(procs) < args.jobs:
+                arch, shape, mesh_kind = todo.pop(0)
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", arch, "--shape", shape, "--mesh",
+                       mesh_kind, "--microbatches", str(args.microbatches)]
+                if mesh_kind == "multi":
+                    cmd.append("--no-probes")
+                print(f"[dryrun] start {arch} {shape} {mesh_kind}",
+                      flush=True)
+                procs.append(((arch, shape, mesh_kind), time.time(),
+                              subprocess.Popen(
+                                  cmd, stdout=subprocess.PIPE,
+                                  stderr=subprocess.STDOUT, text=True)))
+            still = []
+            for key, t_start, proc in procs:
+                if proc.poll() is None:
+                    if time.time() - t_start > args.cell_timeout:
+                        proc.kill()
+                        fails.append(key)
+                        print(f"[dryrun] TIMEOUT {key}", flush=True)
+                    else:
+                        still.append((key, t_start, proc))
+                else:
+                    out = proc.stdout.read()
+                    ok = proc.returncode == 0
+                    print(f"[dryrun] done {key} rc={proc.returncode} "
+                          f"({time.time() - t_start:.0f}s)", flush=True)
+                    if not ok:
+                        fails.append(key)
+                        (ARTIFACTS / ("FAIL__%s__%s__%s.log" % key)
+                         ).write_text(out)
+            procs = still
+            time.sleep(2)
+        print(f"[dryrun] complete; {len(fails)} failures: {fails}")
+        return 1 if fails else 0
+
+    overrides = {}
+    for ov in args.override:
+        k, v = ov.split("=", 1)
+        try:
+            overrides[k] = int(v)
+        except ValueError:
+            try:
+                overrides[k] = float(v)
+            except ValueError:
+                overrides[k] = {"true": True, "false": False}.get(v, v)
+
+    try:
+        rec = run_cell(args.arch, args.shape, args.mesh,
+                       adapter=args.adapter, quant=args.quant,
+                       microbatches=args.microbatches, remat=args.remat,
+                       dump_hlo=args.dump_hlo, tag=args.tag,
+                       overrides=overrides or None,
+                       probes=not args.no_probes,
+                       rules_preset=args.rules)
+    except Exception:
+        traceback.print_exc()
+        return 1
+    path = cell_path(args.arch, args.shape, args.mesh, args.tag)
+    path.write_text(json.dumps(rec, indent=1))
+    print(f"[dryrun] wrote {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,24 @@
+"""Production mesh definitions (TPU v5e).
+
+make_production_mesh is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state -- the dry-run sets
+XLA_FLAGS before any jax init, tests run with 1 device.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.config.base import ParallelConfig
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def production_parallel_config(*, multi_pod: bool = False,
+                               **overrides) -> ParallelConfig:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return ParallelConfig(mesh_shape=shape, mesh_axes=axes, **overrides)

@@ -1,0 +1,112 @@
+"""Production training entrypoint.
+
+Single-host CPU (default) or on-mesh SPMD when --mesh is given.  On a real
+multi-host TPU deployment each host runs this same binary (jax.distributed
+initializes from the standard env vars; see run_multipod.sh) -- the loop,
+checkpointing, preemption handling and data slicing are already
+process-aware.
+
+    PYTHONPATH=src python -m repro.launch.train --arch granite-8b \
+        --smoke --adapter oftv2 --steps 50
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.config.base import (AdapterConfig, QuantConfig, RunConfig,
+                               TrainConfig)
+from repro.configs import REGISTRY, get_config, get_smoke
+from repro.data.loader import ShardedLoader
+from repro.data.synthetic import SyntheticSpec
+from repro.distributed.fault import PreemptionGuard
+from repro.distributed.sharding import (batch_spec, make_constrain,
+                                        named_sharding_tree)
+from repro.launch.mesh import production_parallel_config
+from repro.models import build
+from repro.models.spec import default_rules
+from repro.train.loop import run_training
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-8b", choices=list(REGISTRY))
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config (CPU-sized)")
+    ap.add_argument("--adapter", default="oftv2",
+                    choices=["oftv2", "oftv1", "lora", "none"])
+    ap.add_argument("--quant", default="none",
+                    choices=["none", "nf4", "awq", "int8"])
+    ap.add_argument("--block-size", type=int, default=32)
+    ap.add_argument("--neumann", type=int, default=5)
+    ap.add_argument("--rank", type=int, default=16)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=4e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--grad-compression", default="none",
+                    choices=["none", "int8"])
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--mesh", default="none",
+                    choices=["none", "single", "multi"],
+                    help="production mesh (requires matching device count)")
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    mesh = None
+    if args.mesh != "none":
+        from repro.launch.mesh import make_production_mesh
+        mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+        pcfg = production_parallel_config(
+            multi_pod=(args.mesh == "multi"),
+            microbatches=args.microbatches,
+            gradient_compression=args.grad_compression)
+        cfg = cfg.with_mesh_padding(pcfg.model_axis_size)
+    else:
+        from repro.config.base import ParallelConfig
+        pcfg = ParallelConfig(microbatches=args.microbatches,
+                              gradient_compression=args.grad_compression)
+
+    run = RunConfig(
+        model=cfg,
+        adapter=AdapterConfig(kind=args.adapter, block_size=args.block_size,
+                              neumann_terms=args.neumann, rank=args.rank),
+        quant=QuantConfig(kind=args.quant),
+        parallel=pcfg,
+        train=TrainConfig(global_batch=args.batch, seq_len=args.seq,
+                          steps=args.steps, learning_rate=args.lr,
+                          warmup_steps=max(args.steps // 20, 1),
+                          ckpt_every=max(args.steps // 4, 1), ckpt_keep=2,
+                          log_every=10, ckpt_dir=args.ckpt_dir))
+
+    rules = default_rules(pcfg)
+    model = build(run, constrain=make_constrain(rules, mesh))
+    counts = model.param_counts()
+    print(f"[train] {cfg.name}: base {counts['base'] / 1e6:.1f}M frozen, "
+          f"adapter {counts['adapter'] / 1e6:.3f}M trainable")
+
+    kind = ("audio" if cfg.frontend == "audio_frames" else
+            "vlm" if cfg.frontend == "vision_patches" else "lm")
+    spec = SyntheticSpec(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                         kind=kind, frontend_dim=cfg.frontend_dim,
+                         num_frontend_tokens=cfg.num_frontend_tokens,
+                         num_classes=cfg.vocab_size)
+    loader = ShardedLoader(spec, global_batch=args.batch,
+                           process_index=jax.process_index(),
+                           process_count=jax.process_count(), seed=0)
+    guard = PreemptionGuard(install=True)
+    if mesh is not None:
+        with mesh:
+            out = run_training(model, run, loader, guard=guard)
+    else:
+        out = run_training(model, run, loader, guard=guard)
+    print(f"[train] final loss "
+          f"{float(np.mean(out['losses'][-5:])):.4f} at step "
+          f"{out['last_step']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,236 @@
+"""Attention: GQA / MQA / MHA, causal or bidirectional, optional sliding
+window, RoPE, memory-efficient chunked online-softmax (flash-style at the
+JAX level so 32k-prefill never materializes an S x S score matrix), and
+single-token decode against a (possibly seq-sharded) KV cache.
+
+Sharding contract (baseline rules): q/k/v computed from a residual that is
+replicated over `model`; q heads sharded over `model` (padded per config),
+kv heads replicated (GQA keeps them small), so the attention core needs no
+collectives; the o-projection contracts the model-sharded head dim
+(all-reduce inserted by SPMD). Decode for large archs shards the cache seq
+dim over `model` instead (split-KV / FlashDecoding pattern).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import AdapterConfig, ModelConfig, QuantConfig
+from repro.core.adapter import adapted_linear
+from repro.models.linears import adapter_defs, linear_defs
+from repro.models.spec import ParamDef
+
+NEG_INF = -1e30
+
+
+# ----------------------------------------------------------------- RoPE ----
+def rope_tables(positions: jnp.ndarray, head_dim: int, theta: float,
+                dtype=jnp.float32) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """positions: (B, S) int32 -> cos/sin (B, S, head_dim//2)."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang).astype(dtype), jnp.sin(ang).astype(dtype)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, S, H, hd); cos/sin: (B, S, hd//2). Rotate-half convention."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[:, :, None, :]
+    s = sin[:, :, None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+# ----------------------------------------------------------- param defs ----
+def attention_defs(cfg: ModelConfig, acfg: AdapterConfig, qcfg: QuantConfig,
+                   model_axis_size: int = 1):
+    d = cfg.d_model
+    h = cfg.padded_heads
+    hd = cfg.head_dim
+    kv = cfg.num_kv_heads
+    base = {
+        "q": linear_defs(d, h * hd, "embed", "heads", qcfg),
+        "k": linear_defs(d, kv * hd, "embed", "kv_heads", qcfg),
+        "v": linear_defs(d, kv * hd, "embed", "kv_heads", qcfg),
+        "o": linear_defs(h * hd, d, "heads", "embed", qcfg),
+    }
+    adapters = {}
+    for name, (di, do) in {"q": (d, h * hd), "k": (d, kv * hd),
+                           "v": (d, kv * hd), "o": (h * hd, d)}.items():
+        a = adapter_defs(name, di, do, acfg, model_axis_size)
+        if a is not None:
+            adapters[name] = a
+    return base, adapters
+
+
+# ------------------------------------------------------- masking helpers ---
+def _mask_bias(q_pos: jnp.ndarray, k_pos: jnp.ndarray, causal: bool,
+               window: int) -> jnp.ndarray:
+    """Additive bias (..., Sq, Sk) from absolute positions.
+
+    q_pos: (B, Sq), k_pos: (B, Sk). Negative k_pos marks an invalid
+    (not-yet-written) cache slot."""
+    diff = q_pos[:, :, None] - k_pos[:, None, :]        # (B, Sq, Sk)
+    ok = (k_pos >= 0)[:, None, :]
+    if causal:
+        ok = ok & (diff >= 0)
+    if window > 0:
+        ok = ok & (diff < window)
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _gqa_scores(q: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    """q: (B, Sq, KV, G, hd), k: (B, Sk, KV, hd) -> (B, KV, G, Sq, Sk)."""
+    return jnp.einsum("bqkgh,bskh->bkgqs", q, k)
+
+
+def _gqa_out(p: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """p: (B, KV, G, Sq, Sk), v: (B, Sk, KV, hd) -> (B, Sq, KV, G, hd)."""
+    return jnp.einsum("bkgqs,bskh->bqkgh", p, v)
+
+
+# --------------------------------------------------- chunked core (train) --
+def attention_core(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                   q_pos: jnp.ndarray, k_pos: jnp.ndarray, *, causal: bool,
+                   window: int, chunk: int, softcap: float = 0.0
+                   ) -> jnp.ndarray:
+    """Online-softmax attention.
+
+    q: (B, Sq, H, hd) with H = KV * G; k/v: (B, Sk, KV, hd).
+    Chunks both q (outer loop via scan) and kv (inner online-softmax scan) so
+    peak memory is O(q_chunk * kv_chunk) per head -- 32k/500k-safe."""
+    b, sq, h, hd = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    qg = (q * scale.astype(q.dtype)).reshape(b, sq, kvh, g, hd)
+
+    if sq * skv <= chunk * chunk * 4 or skv <= chunk:
+        # small case: single dense pass
+        s = _gqa_scores(qg.astype(jnp.float32), k.astype(jnp.float32))
+        if softcap > 0:
+            s = softcap * jnp.tanh(s / softcap)
+        s = s + _mask_bias(q_pos, k_pos, causal, window)[:, None, None]
+        p = jax.nn.softmax(s, axis=-1)
+        o = _gqa_out(p.astype(v.dtype), v)
+        return o.reshape(b, sq, h, hd)
+
+    qc = min(chunk, sq)
+    kc = min(chunk, skv)
+    nq, nk = sq // qc, skv // kc
+    assert sq % qc == 0 and skv % kc == 0, (sq, qc, skv, kc)
+
+    qg_c = qg.reshape(b, nq, qc, kvh, g, hd).transpose(1, 0, 2, 3, 4, 5)
+    qpos_c = q_pos.reshape(b, nq, qc).transpose(1, 0, 2)
+    k_c = k.reshape(b, nk, kc, kvh, hd).transpose(1, 0, 2, 3, 4)
+    v_c = v.reshape(b, nk, kc, kvh, hd).transpose(1, 0, 2, 3, 4)
+    kpos_c = k_pos.reshape(b, nk, kc).transpose(1, 0, 2)
+
+    def q_block(carry, qi):
+        qq, qp = qi   # (B, qc, KV, G, hd), (B, qc)
+
+        def kv_block(state, ki):
+            m_prev, l_prev, acc = state
+            kk, vv, kp = ki
+            s = _gqa_scores(qq.astype(jnp.float32), kk.astype(jnp.float32))
+            if softcap > 0:
+                s = softcap * jnp.tanh(s / softcap)
+            s = s + _mask_bias(qp, kp, causal, window)[:, None, None]
+            m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+            alpha = jnp.exp(m_prev - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bkgqs,bskh->bkgqh", p, vv.astype(jnp.float32))
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((b, kvh, g, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kvh, g, qc), jnp.float32)
+        a0 = jnp.zeros((b, kvh, g, qc, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_block, (m0, l0, a0),
+                                      (k_c, v_c, kpos_c))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return carry, out.transpose(0, 3, 1, 2, 4)   # (B, qc, KV, G, hd)
+
+    _, outs = jax.lax.scan(q_block, None, (qg_c, qpos_c))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, sq, h, hd)
+    return out.astype(v.dtype)
+
+
+# ------------------------------------------------------------ full layer ---
+def attention_apply(base: dict, adapters: dict, x: jnp.ndarray,
+                    positions: jnp.ndarray, cfg: ModelConfig,
+                    acfg: AdapterConfig, qcfg: QuantConfig,
+                    cache: Optional[dict] = None,
+                    cache_index: Optional[jnp.ndarray] = None,
+                    collect_cache: bool = False,
+                    constrain=None
+                    ) -> Tuple[jnp.ndarray, Optional[dict]]:
+    """x: (B, S, d). If cache is given (decode), S == 1 and the KV cache
+    {"k","v": (B, S_max, KV, hd)} is updated at cache_index.
+
+    Returns (output (B, S, d), new_cache_or_None)."""
+    b, s, d = x.shape
+    h, hd, kv = cfg.padded_heads, cfg.head_dim, cfg.num_kv_heads
+
+    def lin(name, inp):
+        return adapted_linear(inp, base[name], adapters.get(name), acfg,
+                              qcfg, constrain=constrain)
+
+    q = lin("q", x).reshape(b, s, h, hd)
+    k = lin("k", x).reshape(b, s, kv, hd)
+    v = lin("v", x).reshape(b, s, kv, hd)
+
+    if cfg.use_rope:
+        cos, sin = rope_tables(positions, hd, cfg.rope_theta, x.dtype)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+
+    new_cache = None
+    if cache is not None:
+        # decode: ring-buffer scatter of this step's k/v. For SWA the cache
+        # holds only `window` slots (slot = index % window) and the stored
+        # absolute positions make masking exact; for full attention the
+        # buffer covers all of s_max so slot == index.
+        s_cache = cache["k"].shape[1]
+        write = cache_index % s_cache
+        slot = jnp.arange(s_cache, dtype=jnp.int32)[None, :]
+        hit2 = slot == write.reshape(-1, 1)                       # (B, S_c)
+        hit = hit2[:, :, None, None]
+        k_cache = jnp.where(hit, k.astype(cache["k"].dtype), cache["k"])
+        v_cache = jnp.where(hit, v.astype(cache["v"].dtype), cache["v"])
+        k_pos = jnp.where(hit2, positions.astype(jnp.int32),
+                          cache["pos"])                           # (B, S_c)
+        new_cache = {"k": k_cache, "v": v_cache, "pos": k_pos}
+        out = attention_core(
+            q, k_cache.astype(q.dtype), v_cache.astype(q.dtype),
+            positions, k_pos, causal=True, window=cfg.sliding_window,
+            chunk=cfg.attn_chunk, softcap=cfg.attn_logit_softcap)
+    else:
+        out = attention_core(q, k, v, positions, positions,
+                             causal=(cfg.causal and not cfg.is_encoder),
+                             window=cfg.sliding_window, chunk=cfg.attn_chunk,
+                             softcap=cfg.attn_logit_softcap)
+        if collect_cache:
+            # prefill: the computed k/v ARE the cache (S_max == prefill S);
+            # for SWA keep only the trailing window slots (ring layout: slot
+            # i holds absolute position aligned with i % window)
+            if cfg.sliding_window > 0 and s > cfg.sliding_window:
+                w = cfg.sliding_window
+                start = s - w
+                kk, vv, pp = k[:, start:], v[:, start:], positions[:, start:]
+                shift = start % w
+                kk = jnp.roll(kk, shift, axis=1)
+                vv = jnp.roll(vv, shift, axis=1)
+                pp = jnp.roll(pp, shift, axis=1)
+                new_cache = {"k": kk, "v": vv, "pos": pp.astype(jnp.int32)}
+            else:
+                new_cache = {"k": k, "v": v,
+                             "pos": positions.astype(jnp.int32)}
+
+    y = lin("o", out.reshape(b, s, h * hd))
+    return y, new_cache

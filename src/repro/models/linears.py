@@ -1,0 +1,126 @@
+"""Frozen (possibly quantized) linear layers + their adapter defs.
+
+``linear_defs`` gives the base (frozen) parameter layout for one linear --
+raw bf16 or NF4/AWQ/int8 quantized -- and ``adapter_defs`` the trainable
+adapter layout (OFT packed-skew or LoRA A/B). The apply path is
+``repro.core.adapter.adapted_linear``.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import AdapterConfig, QuantConfig
+from repro.core import adapter as ad
+from repro.core import skew
+from repro.models.spec import CompositeDef, ParamDef
+from repro.quant.common import quantize_linear
+
+
+class QuantLinearDef(CompositeDef):
+    """Composite leaf: a quantized frozen linear (codes + scales expand from
+    one sampled weight at init; shapes/specs known statically)."""
+
+    def __init__(self, d_in: int, d_out: int, in_axis: Optional[str],
+                 out_axis: Optional[str], qcfg: QuantConfig,
+                 scale: float = 1.0):
+        self.d_in, self.d_out = d_in, d_out
+        self.in_axis, self.out_axis = in_axis, out_axis
+        self.qcfg = qcfg
+        self.scale = scale
+
+    def expand_defs(self) -> dict:
+        q = self.qcfg
+        d_in, d_out = self.d_in, self.d_out
+        ia, oa = self.in_axis, self.out_axis
+        if q.kind == "nf4":
+            nb = d_in // q.block_size
+            defs = {"nf4_codes": ParamDef((d_in // 2, d_out), (ia, oa),
+                                          "zeros", dtype=jnp.uint8)}
+            if q.double_quant and d_out % q.double_block == 0:
+                defs["absmax_q8"] = ParamDef((nb, d_out), (ia, oa), "zeros",
+                                             dtype=jnp.int8)
+                defs["absmax_scale"] = ParamDef(
+                    (nb, d_out // q.double_block), (ia, oa), "ones",
+                    dtype=jnp.float32)
+                defs["absmax_offset"] = ParamDef((), (), "zeros",
+                                                 dtype=jnp.float32)
+            else:
+                defs["absmax"] = ParamDef((nb, d_out), (ia, oa), "ones",
+                                          dtype=jnp.float32)
+            return defs
+        if q.kind == "awq":
+            ng = d_in // q.group_size
+            return {
+                "awq_codes": ParamDef((d_in // 2, d_out), (ia, oa), "zeros",
+                                      dtype=jnp.uint8),
+                "awq_scale": ParamDef((ng, d_out), (ia, oa), "ones",
+                                      dtype=jnp.float32),
+                "awq_zero": ParamDef((ng, d_out), (ia, oa), "zeros",
+                                     dtype=jnp.int8),
+                "awq_act_scale": ParamDef((d_in,), (ia,), "ones",
+                                          dtype=jnp.float32),
+            }
+        if q.kind == "int8":
+            return {
+                "int8_codes": ParamDef((d_in, d_out), (ia, oa), "zeros",
+                                       dtype=jnp.int8),
+                "int8_scale": ParamDef((d_out,), (oa,), "ones",
+                                       dtype=jnp.float32),
+            }
+        raise ValueError(self.qcfg.kind)
+
+    def init(self, key, param_dtype):
+        import numpy as np
+        std = self.scale / np.sqrt(self.d_in)
+        w = std * jax.random.normal(key, (self.d_in, self.d_out), jnp.float32)
+        return quantize_linear(w, self.qcfg)
+
+
+def linear_defs(d_in: int, d_out: int, in_axis: Optional[str],
+                out_axis: Optional[str], qcfg: QuantConfig,
+                scale: float = 1.0):
+    """Base (frozen) defs for one linear: {"w": ...} or quantized composite."""
+    quantizable = qcfg.enabled and d_in % 2 == 0
+    if qcfg.kind == "nf4":
+        quantizable = quantizable and d_in % qcfg.block_size == 0
+    elif qcfg.kind == "awq":
+        quantizable = quantizable and d_in % qcfg.group_size == 0
+    if not quantizable:
+        # raw bf16 weight (also the fallback for layers too small/misaligned
+        # to quantize, e.g. tiny smoke configs)
+        return {"w": ParamDef((d_in, d_out), (in_axis, out_axis), "normal",
+                              scale=scale)}
+    return QuantLinearDef(d_in, d_out, in_axis, out_axis, qcfg, scale=scale)
+
+
+def adapter_defs(name: str, d_in: int, d_out: int, acfg: AdapterConfig,
+                 model_axis_size: int = 1):
+    """Trainable adapter defs for one linear (None if not targeted).
+
+    OFT block sharding: when the host linear's input features are
+    model-sharded (down/o projections under TP) and the shard boundary is
+    block-aligned, the block dim gets the 'oft_block_sharded' logical axis
+    so the transform stays collective-free (DESIGN.md §3)."""
+    if not ad.wants_adapter(name, acfg):
+        return None
+    if acfg.is_oft:
+        b = acfg.block_size
+        r = d_in // b
+        sharded_input = name in ("o", "down", "fc2", "out_proj")
+        aligned = (model_axis_size > 1 and r % model_axis_size == 0
+                   and (d_in // model_axis_size) % b == 0)
+        block_axis = "oft_block_sharded" if (sharded_input and aligned) \
+            else "oft_block"
+        return {"q_packed": ParamDef((r, skew.pack_dim(b)),
+                                     (block_axis, None), "zeros")}
+    if acfg.kind == "lora":
+        return {
+            "lora_a": ParamDef((d_in, acfg.rank), (None, "lora_rank"),
+                               "normal", scale=1.0),
+            "lora_b": ParamDef((acfg.rank, d_out), ("lora_rank", None),
+                               "zeros"),
+        }
+    raise ValueError(acfg.kind)

@@ -1,0 +1,262 @@
+"""Mamba-2 (SSD, state-space duality -- arXiv:2405.21060) in pure JAX.
+
+Layer structure (per token, d_inner = expand * d_model, H heads of dim P,
+G groups sharing B/C, state size N):
+
+    z, x, B, C, dt = projections(u)          # separate linears (TP-clean;
+                                             # numerics == fused in_proj)
+    x, B, C <- causal depthwise conv1d + silu
+    dt <- softplus(dt + dt_bias); a = dt * A  (A = -exp(A_log) < 0)
+    h_t = exp(a_t) h_{t-1} + dt_t * x_t (x) B_t      (state h: (H, P, N))
+    y_t = C_t . h_t + D * x_t
+    out = out_proj( rmsnorm(y * silu(z)) )
+
+Three execution paths:
+  * ssd_chunked  -- training/prefill: intra-chunk quasi-attention +
+                    inter-chunk state scan (the SSD algorithm)
+  * ssd_naive    -- O(S) sequential oracle (tests)
+  * decode step  -- O(1) per token with carried (conv_state, ssm_state):
+                    this is what makes long_500k runnable for SSM/hybrid.
+
+Sharding: heads/d_inner -> `model`; B/C/dt projections replicated (small);
+per-device SSD needs no collectives; out_proj all-reduces.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import AdapterConfig, ModelConfig, QuantConfig
+from repro.core.adapter import adapted_linear
+from repro.models.linears import adapter_defs, linear_defs
+from repro.models.spec import ParamDef
+
+
+def dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    nheads = d_inner // cfg.ssm_headdim
+    return d_inner, nheads, cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_headdim
+
+
+def mamba_defs(cfg: ModelConfig, acfg: AdapterConfig, qcfg: QuantConfig,
+               model_axis_size: int = 1):
+    d = cfg.d_model
+    d_inner, h, g, n, p = dims(cfg)
+    w = cfg.ssm_conv_width
+    base = {
+        "z_proj": linear_defs(d, d_inner, "embed", "ssm_inner", qcfg),
+        "x_proj": linear_defs(d, d_inner, "embed", "ssm_inner", qcfg),
+        "b_proj": linear_defs(d, g * n, "embed", None, qcfg),
+        "c_proj": linear_defs(d, g * n, "embed", None, qcfg),
+        "dt_proj": linear_defs(d, h, "embed", "ssm_inner", qcfg),
+        "conv_x": {"w": ParamDef((w, d_inner), ("conv", "ssm_inner"), "normal",
+                                 scale=1.0)},
+        "conv_b": {"w": ParamDef((w, g * n), ("conv", None), "normal")},
+        "conv_c": {"w": ParamDef((w, g * n), ("conv", None), "normal")},
+        "a_log": ParamDef((h,), ("ssm_inner",), "zeros"),
+        "d_skip": ParamDef((h,), ("ssm_inner",), "ones"),
+        "dt_bias": ParamDef((h,), ("ssm_inner",), "zeros"),
+        "norm": ParamDef((d_inner,), ("ssm_inner",), "ones"),
+        "out_proj": linear_defs(d_inner, d, "ssm_inner", "embed", qcfg),
+    }
+    adapters = {}
+    for name, (di, do) in {"in_proj": (d, d_inner),
+                           "out_proj": (d_inner, d)}.items():
+        a = adapter_defs(name, di, do, acfg, model_axis_size)
+        if a is not None:
+            adapters[name] = a
+    return base, adapters
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray,
+                 state: Optional[jnp.ndarray] = None
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, C), w: (W, C) depthwise causal conv.
+    state: (B, W-1, C) trailing context (decode). Returns (y, new_state)."""
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)        # (B, S+W-1, C)
+    y = sum(xp[:, j:j + x.shape[1], :] * w[j][None, None, :]
+            for j in range(width))
+    new_state = xp[:, -(width - 1):, :] if width > 1 else pad
+    return y, new_state
+
+
+def _rmsnorm(x, w, eps):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps).astype(x.dtype)) * w.astype(x.dtype)
+
+
+# ----------------------------------------------------------- SSD cores -----
+def ssd_naive(x, dt, a_coef, bm, cm, d_skip, h0=None):
+    """Sequential oracle. x: (B,S,H,P), dt: (B,S,H), a_coef: (H,) (negative),
+    bm/cm: (B,S,G,N). Returns (y: (B,S,H,P), h_final: (B,H,P,N))."""
+    b, s, h, p = x.shape
+    g, n = bm.shape[2], bm.shape[3]
+    rep = h // g
+    bm_h = jnp.repeat(bm, rep, axis=2)            # (B,S,H,N)
+    cm_h = jnp.repeat(cm, rep, axis=2)
+
+    def step(hprev, inp):
+        xt, dtt, bt, ct = inp                     # (B,H,P),(B,H),(B,H,N),(B,H,N)
+        decay = jnp.exp(dtt.astype(jnp.float32)
+                        * a_coef[None, :]).astype(hprev.dtype)   # (B,H)
+        hnew = hprev * decay[..., None, None] + \
+            ((dtt[..., None] * xt)[..., None]
+             * bt[..., None, :]).astype(hprev.dtype)
+        yt = jnp.einsum("bhpn,bhn->bhp", hnew, ct.astype(hprev.dtype))
+        return hnew, yt
+
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, n), x.dtype)
+    xs = (x.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2),
+          bm_h.transpose(1, 0, 2, 3), cm_h.transpose(1, 0, 2, 3))
+    h_final, ys = jax.lax.scan(step, h0, xs)
+    y = ys.transpose(1, 0, 2, 3) + x * d_skip[None, None, :, None]
+    return y, h_final
+
+
+def ssd_chunked(x, dt, a_coef, bm, cm, d_skip, chunk: int):
+    """Chunked SSD (the Mamba-2 algorithm): quadratic intra-chunk attention
+    with decay mask + linear inter-chunk state recurrence."""
+    b, s, h, p = x.shape
+    g, n = bm.shape[2], bm.shape[3]
+    if s % chunk:
+        return ssd_naive(x, dt, a_coef, bm, cm, d_skip)
+    nc, q = s // chunk, chunk
+    rep = h // g
+
+    xc = x.reshape(b, nc, q, h, p)
+    dtc = dt.reshape(b, nc, q, h)
+    bc = bm.reshape(b, nc, q, g, n)
+    cc = cm.reshape(b, nc, q, g, n)
+    a = dtc * a_coef[None, None, None, :]                 # (B,NC,Q,H) <= 0
+    cs = jnp.cumsum(a, axis=2)                            # within-chunk cumsum
+    total = cs[:, :, -1, :]                               # (B,NC,H)
+
+    # --- intra-chunk: Y[i] = sum_{j<=i} (C_i.B_j) exp(cs_i - cs_j) dt_j x_j
+    bh = jnp.repeat(bc, rep, axis=3)                      # (B,NC,Q,H,N)
+    ch = jnp.repeat(cc, rep, axis=3)
+    cb = jnp.einsum("bcihn,bcjhn->bchij", ch.astype(jnp.float32),
+                    bh.astype(jnp.float32))               # (B,NC,H,Q,Q)
+    seg = cs[:, :, :, None, :].transpose(0, 1, 4, 2, 3) \
+        - cs[:, :, None, :, :].transpose(0, 1, 4, 2, 3)   # (B,NC,H,Q,Q) cs_i-cs_j
+    causal = jnp.tril(jnp.ones((q, q), bool))
+    decay = jnp.where(causal[None, None, None], jnp.exp(seg), 0.0)
+    w_ij = cb * decay                                     # (B,NC,H,Q,Q)
+    dx = dtc[..., None] * xc                              # (B,NC,Q,H,P)
+    y_intra = jnp.einsum("bchij,bcjhp->bcihp", w_ij,
+                         dx.astype(jnp.float32))
+
+    # --- chunk states: S_c = sum_j exp(total - cs_j) B_j (x) dt_j x_j
+    state_decay = jnp.exp(total[:, :, None, :] - cs)      # (B,NC,Q,H)
+    sc = jnp.einsum("bcjhn,bcjh,bcjhp->bchpn", bh.astype(jnp.float32),
+                    state_decay, dx.astype(jnp.float32))  # (B,NC,H,P,N)
+
+    # --- inter-chunk recurrence over running state
+    def chunk_step(hprev, inp):
+        sc_c, tot_c = inp                                 # (B,H,P,N),(B,H)
+        hnew = hprev * jnp.exp(tot_c)[..., None, None] + sc_c
+        return hnew, hprev
+
+    h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    h_final, h_prevs = jax.lax.scan(
+        chunk_step, h0, (sc.transpose(1, 0, 2, 3, 4),
+                         total.transpose(1, 0, 2)))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)            # (B,NC,H,P,N)
+
+    # --- inter-chunk output: Y[i] += exp(cs_i) C_i . h_entering
+    y_inter = jnp.einsum("bcihn,bchpn->bcihp", ch.astype(jnp.float32),
+                         h_prevs) * jnp.exp(cs)[..., None]
+    y = (y_intra + y_inter).reshape(b, s, h, p).astype(x.dtype)
+    return y + x * d_skip[None, None, :, None].astype(x.dtype), \
+        h_final.astype(x.dtype)
+
+
+# ------------------------------------------------------------ layer apply --
+def _projections(base, adapters, u, acfg, qcfg):
+    def lin(name, pname, inp):
+        return adapted_linear(inp, base[pname], adapters.get(name), acfg,
+                              qcfg)
+    z = lin("in_proj", "z_proj", u)
+    x = lin("in_proj", "x_proj", u)
+    bm = lin(None, "b_proj", u)
+    cm = lin(None, "c_proj", u)
+    dt = lin(None, "dt_proj", u)
+    return z, x, bm, cm, dt
+
+
+def mamba_apply(base: dict, adapters: dict, u: jnp.ndarray, cfg: ModelConfig,
+                acfg: AdapterConfig, qcfg: QuantConfig,
+                state: Optional[dict] = None, collect_state: bool = False
+                ) -> Tuple[jnp.ndarray, Optional[dict]]:
+    """u: (B, S, d_model). state (decode): {"conv_x","conv_b","conv_c":
+    (B, W-1, C), "ssm": (B, H, P, N)}. Returns (y, new_state_or_None)."""
+    bsz, s, _ = u.shape
+    d_inner, h, g, n, p = dims(cfg)
+    z, x, bm, cm, dt = _projections(base, adapters, u, acfg, qcfg)
+
+    decoding = state is not None
+    cx, ncx = _causal_conv(x, base["conv_x"]["w"],
+                           state["conv_x"] if decoding else None)
+    cb, ncb = _causal_conv(bm, base["conv_b"]["w"],
+                           state["conv_b"] if decoding else None)
+    cc, ncc = _causal_conv(cm, base["conv_c"]["w"],
+                           state["conv_c"] if decoding else None)
+    x = jax.nn.silu(cx).reshape(bsz, s, h, p)
+    bm = jax.nn.silu(cb).reshape(bsz, s, g, n)
+    cm = jax.nn.silu(cc).reshape(bsz, s, g, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + base["dt_bias"].astype(jnp.float32)[None, None])
+    a_coef = -jnp.exp(base["a_log"].astype(jnp.float32))
+    d_skip = base["d_skip"].astype(jnp.float32)
+
+    new_state = None
+    if decoding:
+        # O(1) recurrence step(s) from carried state
+        y, h_final = ssd_naive(x, dt.astype(x.dtype), a_coef, bm, cm,
+                               d_skip.astype(x.dtype),
+                               h0=state["ssm"].astype(x.dtype))
+        new_state = {"conv_x": ncx, "conv_b": ncb, "conv_c": ncc,
+                     "ssm": h_final}
+    else:
+        y, h_final = ssd_chunked(x, dt.astype(x.dtype), a_coef, bm, cm,
+                                 d_skip.astype(x.dtype), cfg.ssm_chunk)
+        if collect_state:
+            # prefill: trailing conv context + final SSM state seed decoding
+            new_state = {"conv_x": ncx, "conv_b": ncb, "conv_c": ncc,
+                         "ssm": h_final}
+
+    y = y.reshape(bsz, s, d_inner)
+    y = y * jax.nn.silu(z)
+    y = _rmsnorm(y, base["norm"], cfg.norm_eps)
+    out = adapted_linear(y, base["out_proj"], adapters.get("out_proj"),
+                         acfg, qcfg)
+    return out, new_state
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, dtype) -> dict:
+    d_inner, h, g, n, p = dims(cfg)
+    w = cfg.ssm_conv_width
+    return {
+        "conv_x": jnp.zeros((batch, w - 1, d_inner), dtype),
+        "conv_b": jnp.zeros((batch, w - 1, g * n), dtype),
+        "conv_c": jnp.zeros((batch, w - 1, g * n), dtype),
+        "ssm": jnp.zeros((batch, h, p, n), dtype),
+    }
+
+
+def abstract_decode_state(cfg: ModelConfig, batch: int, dtype):
+    d_inner, h, g, n, p = dims(cfg)
+    w = cfg.ssm_conv_width
+    return {
+        "conv_x": jax.ShapeDtypeStruct((batch, w - 1, d_inner), dtype),
+        "conv_b": jax.ShapeDtypeStruct((batch, w - 1, g * n), dtype),
+        "conv_c": jax.ShapeDtypeStruct((batch, w - 1, g * n), dtype),
+        "ssm": jax.ShapeDtypeStruct((batch, h, p, n), dtype),
+    }

@@ -1,0 +1,52 @@
+"""Dense MLP (SwiGLU or GELU) with adapter integration."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import AdapterConfig, ModelConfig, QuantConfig
+from repro.core.adapter import adapted_linear
+from repro.models.linears import adapter_defs, linear_defs
+
+
+def mlp_defs(cfg: ModelConfig, acfg: AdapterConfig, qcfg: QuantConfig,
+             model_axis_size: int = 1, d_ff: int = 0):
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    base = {"up": linear_defs(d, ff, "embed", "mlp", qcfg),
+            "down": linear_defs(ff, d, "mlp", "embed", qcfg)}
+    names = {"up": (d, ff), "down": (ff, d)}
+    if cfg.glu:
+        base["gate"] = linear_defs(d, ff, "embed", "mlp", qcfg)
+        names["gate"] = (d, ff)
+    adapters = {}
+    for name, (di, do) in names.items():
+        a = adapter_defs(name, di, do, acfg, model_axis_size)
+        if a is not None:
+            adapters[name] = a
+    return base, adapters
+
+
+def _act(x, kind: str):
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x)
+    raise ValueError(kind)
+
+
+def mlp_apply(base: dict, adapters: dict, x: jnp.ndarray, cfg: ModelConfig,
+              acfg: AdapterConfig, qcfg: QuantConfig,
+              constrain=None) -> jnp.ndarray:
+    def lin(name, inp):
+        return adapted_linear(inp, base[name], adapters.get(name), acfg,
+                              qcfg, constrain=constrain)
+
+    up = lin("up", x)
+    if cfg.glu:
+        up = _act(lin("gate", x), cfg.act) * up
+    else:
+        up = _act(up, cfg.act)
+    return lin("down", up)

@@ -1,0 +1,231 @@
+"""Public model API used by train/serve/dry-run:
+
+    build(run_cfg)            -> Model (defs + jit-ready fns)
+    model.init(key)           -> {"base":..., "adapter":...}
+    model.abstract_params()   -> same tree of ShapeDtypeStruct
+    model.param_specs(rules)  -> same tree of PartitionSpec
+    model.loss(params, batch)            -> scalar loss, metrics   (train)
+    model.forward(params, batch)         -> logits                 (prefill)
+    model.prefill(params, batch)         -> logits, caches
+    model.decode_step(params, batch)     -> logits, new caches     (decode)
+    model.init_cache / abstract_cache    -> KV / SSM decode state
+
+Batch schemas (synthetic data pipeline + dry-run input_specs):
+    LM:      {"tokens": (B,S) i32}                (labels = shifted tokens)
+    VLM:     {"tokens": (B,S_text) i32, "patches": (B,N_img,frontend_dim)}
+    audio:   {"frames": (B,S,frontend_dim), "labels": (B,S) i32}
+    decode:  {"tokens": (B,1) i32, "positions": (B,1) i32, "caches": ...,
+              "cache_index": (B,) i32}
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig, ParallelConfig, RunConfig
+from repro.models import attention as attn_mod
+from repro.models import mamba2 as mamba_mod
+from repro.models import spec as spec_mod
+from repro.models import transformer as tfm
+from repro.models.transformer import Statics
+
+
+def pick_ep(cfg: ModelConfig, pcfg: Optional[ParallelConfig]) -> bool:
+    if cfg.num_experts <= 0 or pcfg is None:
+        return False
+    if pcfg.moe_layout == "ep":
+        return True
+    if pcfg.moe_layout == "tp":
+        return False
+    # auto: EP when experts divide the data axis (or vice versa)
+    ds = pcfg.data_axis_size
+    return ds > 1 and (cfg.num_experts % ds == 0)
+
+
+@dataclass
+class Model:
+    cfg: ModelConfig
+    run: RunConfig
+    base_defs: dict
+    adapter_defs: dict
+    ep: bool
+    constrain: Callable = tfm._noop_constrain
+
+    # ------------------------------------------------------------ params --
+    def statics(self, mode: str, remat: bool = False) -> Statics:
+        return Statics(cfg=self.cfg, acfg=self.run.adapter,
+                       qcfg=self.run.quant, ep=self.ep,
+                       constrain=self.constrain, remat=remat, mode=mode)
+
+    def init(self, key) -> dict:
+        pd = jnp.dtype(self.cfg.param_dtype)
+        out = {"base": spec_mod.init_tree(key, self.base_defs, pd)}
+        out["adapter"] = spec_mod.init_tree(
+            jax.random.fold_in(key, 1), self.adapter_defs, jnp.float32) \
+            if self.adapter_defs else {}
+        return out
+
+    def abstract_params(self) -> dict:
+        pd = jnp.dtype(self.cfg.param_dtype)
+        return {
+            "base": spec_mod.abstract_tree(self.base_defs, pd),
+            "adapter": spec_mod.abstract_tree(self.adapter_defs, jnp.float32)
+            if self.adapter_defs else {},
+        }
+
+    def param_specs(self, rules) -> dict:
+        return {
+            "base": spec_mod.spec_tree(self.base_defs, rules),
+            "adapter": spec_mod.spec_tree(self.adapter_defs, rules)
+            if self.adapter_defs else {},
+        }
+
+    def param_counts(self) -> Dict[str, int]:
+        return {
+            "base": spec_mod.count_tree(self.base_defs),
+            "adapter": spec_mod.count_tree(self.adapter_defs)
+            if self.adapter_defs else 0,
+        }
+
+    # ----------------------------------------------------------- forward --
+    def _embed(self, st: Statics, params, batch):
+        cfg = self.cfg
+        if cfg.frontend == "audio_frames":
+            x = tfm.project_frontend(st, params, batch["frames"])
+        elif cfg.frontend == "vision_patches":
+            xt = tfm.embed_tokens(st, params, batch["tokens"])
+            xi = tfm.project_frontend(st, params, batch["patches"])
+            x = jnp.concatenate([xi, xt], axis=1)
+        else:
+            x = tfm.embed_tokens(st, params, batch["tokens"])
+        b, s = x.shape[0], x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None],
+                                     (b, s))
+        return x, positions
+
+    def forward(self, params, batch, mode: str = "train",
+                remat: bool = False):
+        """Full-sequence forward. Returns (logits, aux, caches)."""
+        st = self.statics(mode, remat=remat)
+        x, positions = self._embed(st, params, batch)
+        x = st.constrain(x, "batch", "seq", None)
+        x, aux, caches = tfm._run_stack(st, params, x, positions)
+        logits = tfm.logits_head(st, params, x)
+        return logits, aux, caches
+
+    def loss(self, params, batch, remat: bool = False):
+        """Next-token (or per-frame) CE. Returns (loss, metrics)."""
+        cfg = self.cfg
+        logits, aux, _ = self.forward(params, batch, mode="train",
+                                      remat=remat)
+        if cfg.is_encoder:
+            labels = batch["labels"]
+            lg = logits
+        elif cfg.frontend == "vision_patches":
+            n_img = batch["patches"].shape[1]
+            labels = batch["tokens"][:, 1:]
+            lg = logits[:, n_img:-1]
+        else:
+            labels = batch["tokens"][:, 1:]
+            lg = logits[:, :-1]
+        logp = jax.nn.log_softmax(lg.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+        loss = jnp.mean(nll)
+        tc = self.run.train
+        total = loss + 1e-2 * aux / max(cfg.num_layers, 1)
+        if tc.z_loss > 0:
+            zl = jnp.mean(jnp.square(jax.nn.logsumexp(
+                lg.astype(jnp.float32), axis=-1)))
+            total = total + tc.z_loss * zl
+        return total, {"ce": loss, "aux": aux}
+
+    # ----------------------------------------------------------- serving --
+    def prefill(self, params, batch):
+        logits, _, caches = self.forward(params, batch, mode="prefill")
+        return logits, caches
+
+    def decode_step(self, params, batch):
+        """batch: {"tokens": (B,1), "positions": (B,1), "cache_index": (B,),
+        "caches": {...}}. Returns (logits (B,1,V), new_caches)."""
+        st = self.statics("decode")
+        cfg = self.cfg
+        if cfg.frontend == "audio_frames":
+            raise ValueError("encoder-only model has no decode step")
+        x = tfm.embed_tokens(st, params, batch["tokens"])
+        x = st.constrain(x, "batch", None, None)
+        x, _, caches = tfm._run_stack(st, params, x, batch["positions"],
+                                      caches=batch["caches"],
+                                      cache_index=batch["cache_index"])
+        logits = tfm.logits_head(st, params, x)
+        return logits, caches
+
+    # ------------------------------------------------------------ caches --
+    def _cache_entry(self, p: int, batch: int, s_max: int, abstract: bool):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        if tfm.layer_kind(cfg, p) == "attn":
+            kv_s = s_max if cfg.sliding_window <= 0 \
+                else min(s_max, cfg.sliding_window)
+            shape = (batch, kv_s, cfg.num_kv_heads, cfg.head_dim)
+            pshape = (batch, kv_s)
+            if abstract:
+                return {"k": jax.ShapeDtypeStruct(shape, dt),
+                        "v": jax.ShapeDtypeStruct(shape, dt),
+                        "pos": jax.ShapeDtypeStruct(pshape, jnp.int32)}
+            return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt),
+                    "pos": jnp.full(pshape, -1, jnp.int32)}
+        if abstract:
+            return mamba_mod.abstract_decode_state(cfg, batch, dt)
+        return mamba_mod.init_decode_state(cfg, batch, dt)
+
+    def _stack_cache(self, entry, n, abstract: bool):
+        if abstract:
+            return jax.tree_util.tree_map(
+                lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype),
+                entry)
+        return jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (n,) + a.shape).copy(), entry)
+
+    def make_caches(self, batch: int, s_max: int, abstract: bool = False):
+        g, n = tfm.group_structure(self.cfg)
+        return {f"pos_{p}": self._stack_cache(
+            self._cache_entry(p, batch, s_max, abstract), n, abstract)
+            for p in range(g)}
+
+    def cache_specs(self, rules, batch: int, s_max: int):
+        """PartitionSpecs for the decode caches (seq-sharded split-KV for
+        attention when enabled; SSM states batch-sharded)."""
+        from jax.sharding import PartitionSpec as P
+        g, n = tfm.group_structure(self.cfg)
+        seq_axis = rules.lookup("seq") if \
+            self.run.parallel.decode_cache_seq_shard else None
+        out = {}
+        for p in range(g):
+            if tfm.layer_kind(self.cfg, p) == "attn":
+                spec = P(None, rules.lookup("batch"), seq_axis, None, None)
+                out[f"pos_{p}"] = {"k": spec, "v": spec,
+                                   "pos": P(None, rules.lookup("batch"),
+                                            seq_axis)}
+            else:
+                bspec = rules.lookup("batch")
+                inner = rules.lookup("ssm_inner")
+                out[f"pos_{p}"] = {
+                    "conv_x": P(None, bspec, None, inner),
+                    "conv_b": P(None, bspec, None, None),
+                    "conv_c": P(None, bspec, None, None),
+                    "ssm": P(None, bspec, inner, None, None),
+                }
+        return out
+
+
+def build(run: RunConfig, constrain: Callable = tfm._noop_constrain) -> Model:
+    cfg = run.model
+    ep = pick_ep(cfg, run.parallel)
+    base_defs, adapter_defs = tfm.build_defs(cfg, run.adapter, run.quant,
+                                             run.parallel, ep)
+    return Model(cfg=cfg, run=run, base_defs=base_defs,
+                 adapter_defs=adapter_defs, ep=ep, constrain=constrain)

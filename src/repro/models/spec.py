@@ -1,0 +1,273 @@
+"""Single-source-of-truth parameter definitions.
+
+Every layer declares its parameters once as a tree of ``ParamDef`` (shape +
+logical axes + initializer). From that one tree we derive:
+
+  * materialized params        (init_tree)        -- real training runs
+  * abstract params            (abstract_tree)    -- dry-run .lower() without
+                                                     allocating 405B weights
+  * PartitionSpecs             (spec_tree)        -- jit in_shardings
+  * parameter counts           (count_tree)
+
+Logical axes are mapped to mesh axes by ``AxisRules`` (MaxText-style), so
+re-sharding experiments (§Perf hillclimbs) are one-dict changes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec
+
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]      # logical axis name per dim (None = replicated)
+    init: str = "normal"                 # normal | zeros | ones | embed | identity_skew
+    scale: float = 1.0                   # stddev multiplier for normal
+    dtype: Any = None                    # None -> param_dtype at init time
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+class CompositeDef:
+    """A leaf that expands to several related arrays initialized together
+    (e.g. a quantized linear: codes + scales from one sampled weight).
+
+    Subclasses implement: expand_defs() -> def tree (for abstract/spec/count)
+    and init(key, param_dtype) -> param subtree."""
+
+    def expand_defs(self) -> dict:
+        raise NotImplementedError
+
+    def init(self, key, param_dtype):
+        raise NotImplementedError
+
+
+def is_composite(x) -> bool:
+    return isinstance(x, CompositeDef)
+
+
+class StackedDef(CompositeDef):
+    """n copies of an inner composite, stacked on a leading 'layers' dim
+    (scan-over-layers parameter layout)."""
+
+    def __init__(self, inner: CompositeDef, n: int):
+        self.inner = inner
+        self.n = n
+
+    def expand_defs(self) -> dict:
+        return stack_defs(self.inner.expand_defs(), self.n)
+
+    def init(self, key, param_dtype):
+        keys = jax.random.split(key, self.n)
+        return jax.vmap(lambda k: self.inner.init(k, param_dtype))(keys)
+
+
+def stack_defs(tree, n: int):
+    """Add a leading ('layers', n) dim to every leaf (scan stacking)."""
+    if is_def(tree):
+        return ParamDef((n,) + tree.shape, ("layers",) + tree.axes,
+                        tree.init, tree.scale, tree.dtype)
+    if is_composite(tree):
+        return StackedDef(tree, n)
+    if isinstance(tree, dict):
+        return {k: stack_defs(v, n) for k, v in tree.items()}
+    raise TypeError(f"bad def tree node: {type(tree)}")
+
+
+# ---------------------------------------------------------------------------
+# Axis rules: logical axis -> mesh axis (or tuple of mesh axes, or None).
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class AxisRules:
+    rules: Tuple[Tuple[str, Any], ...]
+
+    def lookup(self, logical: Optional[str]):
+        if logical is None:
+            return None
+        for k, v in self.rules:
+            if k == logical:
+                return v
+        return None
+
+    def spec(self, axes: Tuple[Optional[str], ...]) -> PartitionSpec:
+        return PartitionSpec(*[self.lookup(a) for a in axes])
+
+
+def default_rules(pcfg) -> AxisRules:
+    return rules_variant(pcfg, "baseline")
+
+
+def rules_variant(pcfg, preset: str = "baseline") -> AxisRules:
+    """Sharding strategies (DESIGN.md §3; presets are the §Perf hillclimb
+    lever -- one-dict re-sharding experiments).
+
+    baseline : FSDP over (pod, data) + TP over model (Megatron-style)
+    dp       : pure data parallelism over every axis, params replicated
+               (small models: kills the TP activation all-reduces)
+    dp_fsdp  : batch over (data, model); params ZeRO-3 over data only
+    ep_model : no attention/dense TP; experts EP over `model`, expert d_ff
+               over `data` (arctic-class MoE: trades TP all-reduces for
+               dispatch all-to-alls)
+    """
+    fsdp = pcfg.data_axes if len(pcfg.data_axes) > 1 else (
+        pcfg.data_axes[0] if pcfg.data_axes else None)
+    has_model = "model" in pcfg.mesh_axes
+    model = "model" if has_model else None
+    all_axes = tuple(pcfg.mesh_axes)
+
+    base = {
+        "batch": fsdp,
+        "vocab": model,
+        "embed": fsdp,            # d_model dim of weights (ZeRO-3)
+        "heads": model,           # q heads / attn out dim
+        "kv_heads": None,         # small; replicated (GQA)
+        "head_dim": None,
+        "mlp": model,             # d_ff dim
+        # EP within a pod: 'data' (16) divides all assigned expert counts
+        # (128, 16); across pods experts are replicated (DP) -- DESIGN.md §3
+        "expert": "data" if "data" in pcfg.mesh_axes else None,
+        "expert_mlp": model,      # d_ff dim of expert stacks
+        "oft_block_sharded": model,   # OFT blocks on a model-sharded input
+        "oft_block": None,        # OFT blocks on replicated inputs
+        "lora_rank": None,
+        "layers": None,
+        "seq": model,             # SP: sequence dim of saved activations
+        "ssm_inner": model,       # mamba d_inner / heads
+        "ssm_state": None,
+        "conv": None,
+    }
+    if preset == "dp":
+        base.update(batch=all_axes, vocab=None, embed=None, heads=None,
+                    mlp=None, expert=None, expert_mlp=None,
+                    oft_block_sharded=None, seq=None, ssm_inner=None)
+    elif preset == "dp_fsdp":
+        base.update(batch=all_axes, vocab=None,
+                    embed="data", heads=None, mlp=None, expert=None,
+                    expert_mlp=None, oft_block_sharded=None, seq=None,
+                    ssm_inner=None)
+    elif preset == "ep_model":
+        base.update(heads=None, mlp=None, seq=None, ssm_inner=None,
+                    oft_block_sharded=None,
+                    expert=model, expert_mlp="data")
+    elif preset != "baseline":
+        raise ValueError(f"unknown rules preset {preset}")
+    return AxisRules(rules=tuple(base.items()))
+
+
+# ---------------------------------------------------------------------------
+# Tree derivations
+# ---------------------------------------------------------------------------
+def _map_defs(tree, fn):
+    if is_def(tree):
+        return fn(tree)
+    if is_composite(tree):
+        return _map_defs(tree.expand_defs(), fn)
+    if isinstance(tree, dict):
+        return {k: _map_defs(v, fn) for k, v in tree.items()}
+    raise TypeError(f"bad def tree node: {type(tree)}")
+
+
+def _path_hash(path) -> int:
+    """Deterministic across processes (unlike builtin str hash, which is
+    PYTHONHASHSEED-salted): same config + seed -> same init everywhere."""
+    import zlib
+    return zlib.crc32("/".join(path).encode())
+
+
+def init_tree(key, defs, param_dtype=jnp.float32):
+    """Materialize params. Keys are derived per-leaf from the tree path hash
+    so initialization is order-independent."""
+    leaves = []
+
+    def collect(tree, path):
+        if is_def(tree) or is_composite(tree):
+            leaves.append((path, tree))
+        else:
+            for k in sorted(tree.keys()):
+                collect(tree[k], path + (k,))
+
+    collect(defs, ())
+
+    out = {}
+    for path, d in leaves:
+        sub = jax.random.fold_in(key, _path_hash(path) % (2 ** 31))
+        if is_composite(d):
+            val = d.init(sub, param_dtype)
+            node = out
+            for k in path[:-1]:
+                node = node.setdefault(k, {})
+            node[path[-1]] = val
+            continue
+        dtype = d.dtype or param_dtype
+        if d.init == "zeros":
+            val = jnp.zeros(d.shape, dtype)
+        elif d.init == "ones":
+            val = jnp.ones(d.shape, dtype)
+        elif d.init == "normal":
+            fan_in = d.shape[0] if len(d.shape) >= 2 else max(d.shape[-1], 1)
+            std = d.scale / np.sqrt(fan_in)
+            val = (std * jax.random.normal(sub, d.shape, jnp.float32)).astype(dtype)
+        elif d.init == "embed":
+            val = (d.scale * jax.random.normal(sub, d.shape, jnp.float32)
+                   ).astype(dtype)
+        else:
+            raise ValueError(f"unknown init {d.init}")
+        node = out
+        for k in path[:-1]:
+            node = node.setdefault(k, {})
+        node[path[-1]] = val
+    return out
+
+
+def abstract_tree(defs, param_dtype=jnp.float32):
+    return _map_defs(defs, lambda d: jax.ShapeDtypeStruct(
+        d.shape, d.dtype or param_dtype))
+
+
+def spec_tree(defs, rules: AxisRules):
+    return _map_defs(defs, lambda d: rules.spec(d.axes))
+
+
+def count_tree(defs) -> int:
+    total = 0
+
+    def add(d):
+        nonlocal total
+        n = 1
+        for s in d.shape:
+            n *= s
+        total += n
+        return None
+
+    _map_defs(defs, add)
+    return total
+
+
+def bytes_tree(defs, param_dtype=jnp.float32) -> int:
+    total = 0
+
+    def add(d):
+        nonlocal total
+        n = 1
+        for s in d.shape:
+            n *= s
+        dt = np.dtype(jnp.dtype(d.dtype or param_dtype).name)
+        total += n * dt.itemsize
+        return None
+
+    _map_defs(defs, add)
+    return total

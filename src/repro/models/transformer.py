@@ -1,0 +1,273 @@
+"""Model assembly: embeddings/frontends -> scan-over-layers decoder/encoder
+stack -> head.  One assembly covers all 10 assigned families via ModelConfig
+flags; layer heterogeneity (jamba's 1-attention-per-8 interleave) is handled
+with a scan *group*: the scan body applies ``scan_block`` consecutive layers
+whose types repeat periodically, so HLO stays compact (one group traced
+once) for the 126-layer dry-runs.
+
+Params layout:  {"base": frozen (possibly quantized), "adapter": trainable}
+Both trees mirror:  embed / frontend / groups/pos_{i}/... / final_norm / head
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import (AdapterConfig, ModelConfig, ParallelConfig,
+                               QuantConfig, RunConfig)
+from repro.models import attention as attn_mod
+from repro.models import mamba2 as mamba_mod
+from repro.models import mlp as mlp_mod
+from repro.models import moe as moe_mod
+from repro.models.linears import linear_defs
+from repro.models.spec import ParamDef, stack_defs
+
+
+def _noop_constrain(x, *axes):
+    return x
+
+
+@dataclass(frozen=True)
+class Statics:
+    """Static context threaded through every apply function."""
+    cfg: ModelConfig
+    acfg: AdapterConfig
+    qcfg: QuantConfig
+    ep: bool = False                       # expert-parallel MoE layout
+    constrain: Callable = _noop_constrain  # sharding-constraint hook
+    remat: bool = False
+    mode: str = "train"                    # train | prefill | decode
+
+
+# ---------------------------------------------------------------------------
+# layer-kind pattern
+# ---------------------------------------------------------------------------
+def layer_kind(cfg: ModelConfig, i: int) -> str:
+    return "mamba" if cfg.is_ssm_layer(i) else "attn"
+
+
+def group_structure(cfg: ModelConfig) -> Tuple[int, int]:
+    """(group_size, n_groups); layer types must be periodic in group_size."""
+    g = max(cfg.scan_block, 1)
+    assert cfg.num_layers % g == 0, (cfg.num_layers, g)
+    n = cfg.num_layers // g
+    for p in range(g):
+        kinds = {layer_kind(cfg, grp * g + p) for grp in range(n)}
+        moes = {cfg.is_moe_layer(grp * g + p) for grp in range(n)}
+        assert len(kinds) == 1 and len(moes) == 1, \
+            f"layer pattern not periodic with scan_block={g}"
+    return g, n
+
+
+# ---------------------------------------------------------------------------
+# defs
+# ---------------------------------------------------------------------------
+def _norm_def(d):
+    return ParamDef((d,), (None,), "ones")
+
+
+def _one_layer_defs(cfg: ModelConfig, acfg: AdapterConfig, qcfg: QuantConfig,
+                    idx: int, ms: int, ep: bool):
+    d = cfg.d_model
+    kind = layer_kind(cfg, idx)
+    has_mlp = cfg.is_moe_layer(idx) or cfg.d_ff > 0
+    base: Dict[str, Any] = {"ln1": _norm_def(d)}
+    if has_mlp:
+        base["ln2"] = _norm_def(d)
+    adapt: Dict[str, Any] = {}
+    if kind == "attn":
+        b, a = attn_mod.attention_defs(cfg, acfg, qcfg, ms)
+        base["attn"], adapt["attn"] = b, a
+    else:
+        b, a = mamba_mod.mamba_defs(cfg, acfg, qcfg, ms)
+        base["mamba"], adapt["mamba"] = b, a
+    if cfg.is_moe_layer(idx):
+        b, a = moe_mod.moe_defs(cfg, acfg, qcfg, ms, ep)
+        base["moe"], adapt["moe"] = b, a
+        if cfg.dense_residual:
+            b2, a2 = mlp_mod.mlp_defs(cfg, acfg, qcfg, ms)
+            base["mlp"], adapt["mlp"] = b2, a2
+    elif cfg.d_ff > 0:
+        b, a = mlp_mod.mlp_defs(cfg, acfg, qcfg, ms)
+        base["mlp"], adapt["mlp"] = b, a
+    adapt = {k: v for k, v in adapt.items() if v}
+    return base, adapt
+
+
+def build_defs(cfg: ModelConfig, acfg: AdapterConfig, qcfg: QuantConfig,
+               pcfg: Optional[ParallelConfig] = None, ep: bool = False):
+    """Returns (base_defs, adapter_defs)."""
+    ms = pcfg.model_axis_size if pcfg else 1
+    d, v = cfg.d_model, cfg.padded_vocab
+    g, n = group_structure(cfg)
+
+    base: Dict[str, Any] = {}
+    adapt: Dict[str, Any] = {}
+    if cfg.frontend == "none" or cfg.family == "vlm":
+        base["embed"] = {"w": ParamDef((v, d), ("vocab", "embed"), "embed",
+                                       scale=0.02)}
+    if cfg.frontend != "none":
+        base["frontend_proj"] = linear_defs(cfg.frontend_dim, d, None,
+                                            "embed", QuantConfig())
+    groups_base: Dict[str, Any] = {}
+    groups_adapt: Dict[str, Any] = {}
+    for p in range(g):
+        lb, la = _one_layer_defs(cfg, acfg, qcfg, p, ms, ep)
+        groups_base[f"pos_{p}"] = stack_defs(lb, n)
+        if la:
+            groups_adapt[f"pos_{p}"] = stack_defs(la, n)
+    base["groups"] = groups_base
+    if groups_adapt:
+        adapt["groups"] = groups_adapt
+    base["final_norm"] = _norm_def(d)
+    out_dim = cfg.padded_vocab
+    if not cfg.tie_embeddings:
+        base["head"] = linear_defs(d, out_dim, "embed", "vocab", QuantConfig())
+    return base, adapt
+
+
+# ---------------------------------------------------------------------------
+# apply
+# ---------------------------------------------------------------------------
+def _rmsnorm(x, w, eps):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps).astype(x.dtype)) * w.astype(x.dtype)
+
+
+def _apply_layer(st: Statics, idx_in_group: int, base, adapt, x, positions,
+                 cache=None, cache_index=None):
+    """One transformer layer. Returns (x, aux, new_cache)."""
+    cfg = st.cfg
+    kind = layer_kind(cfg, idx_in_group)
+    aux = jnp.zeros((), jnp.float32)
+    h = _rmsnorm(x, base["ln1"], cfg.norm_eps)
+    new_cache = None
+    if kind == "attn":
+        out, new_cache = attn_mod.attention_apply(
+            base["attn"], adapt.get("attn", {}), h, positions, cfg, st.acfg,
+            st.qcfg, cache=cache, cache_index=cache_index,
+            collect_cache=(st.mode == "prefill"), constrain=st.constrain)
+    else:
+        out, new_cache = mamba_mod.mamba_apply(
+            base["mamba"], adapt.get("mamba", {}), h, cfg, st.acfg, st.qcfg,
+            state=cache, collect_state=(st.mode == "prefill"))
+    x = x + out
+    if "moe" in base or "mlp" in base:
+        h = _rmsnorm(x, base["ln2"], cfg.norm_eps)
+        if "moe" in base:
+            out, aux = moe_mod.moe_apply(base["moe"], adapt.get("moe", {}),
+                                         h, cfg, st.acfg, st.qcfg,
+                                         constrain=st.constrain, ep=st.ep)
+            if cfg.dense_residual:
+                out = out + mlp_mod.mlp_apply(base["mlp"],
+                                              adapt.get("mlp", {}), h, cfg,
+                                              st.acfg, st.qcfg,
+                                              constrain=st.constrain)
+        else:
+            out = mlp_mod.mlp_apply(base["mlp"], adapt.get("mlp", {}), h,
+                                    cfg, st.acfg, st.qcfg,
+                                    constrain=st.constrain)
+        x = x + out
+    return x, aux, new_cache
+
+
+def _constrain_residual(st: Statics, x):
+    # batch over (pod, data); seq over model (SP) when shapes allow
+    return st.constrain(x, "batch", "seq", None)
+
+
+def _run_stack(st: Statics, params, x, positions, caches=None,
+               cache_index=None):
+    """Scan the layer groups. caches: {"pos_i": stacked-cache} or None.
+    Returns (x, total_aux, new_caches)."""
+    cfg = st.cfg
+    g, n = group_structure(cfg)
+    base_groups = params["base"]["groups"]
+    adapt_groups = params.get("adapter", {}).get("groups", {})
+
+    def body(carry, xs):
+        x, aux = carry
+        layer_params, layer_caches = xs
+        new_caches = {}
+        for p in range(g):
+            pb = layer_params[f"pos_{p}"]
+            pa = adapt_groups_get(layer_params, p)
+            cache_p = layer_caches.get(f"pos_{p}") if layer_caches else None
+            x = _constrain_residual(st, x)
+            x, aux_p, nc = _apply_layer(st, p, pb, pa, x, positions,
+                                        cache=cache_p,
+                                        cache_index=cache_index)
+            aux = aux + aux_p
+            if nc is not None:
+                new_caches[f"pos_{p}"] = nc
+        x = _constrain_residual(st, x)
+        return (x, aux), (new_caches if new_caches else None)
+
+    # adapter params for position p live in a parallel tree; we zip them into
+    # the scanned xs so the scan sees both
+    def adapt_groups_get(layer_params, p):
+        return layer_params.get(f"__adapt_pos_{p}", {})
+
+    scanned = dict(params["base"]["groups"])
+    for p in range(g):
+        if f"pos_{p}" in adapt_groups:
+            scanned[f"__adapt_pos_{p}"] = adapt_groups[f"pos_{p}"]
+
+    body_fn = body
+    if st.remat:
+        body_fn = jax.checkpoint(body,
+                                 policy=jax.checkpoint_policies.nothing_saveable)
+
+    if not cfg.scan_layers:
+        # unrolled path (also the cost-calibration probe: scan bodies are
+        # counted once by HLO cost analysis, unrolled layers are not)
+        carry = (x, jnp.zeros((), jnp.float32))
+        ys = []
+        for i in range(n):
+            xs_i = jax.tree_util.tree_map(lambda a: a[i], (scanned, caches))
+            carry, y = body_fn(carry, xs_i)
+            ys.append(y)
+        (x, aux) = carry
+        if ys and ys[0] is not None:
+            new_caches = jax.tree_util.tree_map(
+                lambda *a: jnp.stack(a, axis=0), *ys)
+        else:
+            new_caches = None
+        return x, aux, new_caches
+
+    (x, aux), new_caches = jax.lax.scan(body_fn, (x, jnp.zeros((), jnp.float32)),
+                                        (scanned, caches))
+    return x, aux, new_caches
+
+
+# ---------------------------------------------------------------------------
+# embeddings / head / losses
+# ---------------------------------------------------------------------------
+def embed_tokens(st: Statics, params, tokens):
+    table = params["base"]["embed"]["w"]
+    x = jnp.take(table, tokens, axis=0).astype(jnp.dtype(st.cfg.dtype))
+    return x
+
+
+def project_frontend(st: Statics, params, feats):
+    w = params["base"]["frontend_proj"]["w"]
+    return (feats.astype(jnp.dtype(st.cfg.dtype)) @ w.astype(
+        jnp.dtype(st.cfg.dtype)))
+
+
+def logits_head(st: Statics, params, x):
+    cfg = st.cfg
+    x = _rmsnorm(x, params["base"]["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        w = params["base"]["embed"]["w"].astype(x.dtype)
+        logits = x @ w.T
+    else:
+        logits = x @ params["base"]["head"]["w"].astype(x.dtype)
+    if cfg.padded_vocab > cfg.vocab_size:
+        mask = (jnp.arange(cfg.padded_vocab) < cfg.vocab_size)
+        logits = jnp.where(mask[None, None, :], logits, -1e30)
+    return logits

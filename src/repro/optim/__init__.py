@@ -1,0 +1,6 @@
+from repro.optim.adamw import AdamWState, init, update
+from repro.optim.clipping import clip_by_global_norm, global_norm
+from repro.optim.schedule import learning_rate
+
+__all__ = ["AdamWState", "init", "update", "clip_by_global_norm",
+           "global_norm", "learning_rate"]

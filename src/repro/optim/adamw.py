@@ -1,0 +1,56 @@
+"""AdamW in pure JAX (no optax in this container). State is a pytree
+mirroring the trainable params -- for PEFT that is the adapter tree only,
+which is the whole memory story of the paper: optimizer state is O(adapter),
+not O(model)."""
+from __future__ import annotations
+
+from typing import Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import TrainConfig
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray        # ()
+    mu: dict                 # first moment
+    nu: dict                 # second moment
+
+
+def init(params: dict) -> AdamWState:
+    z = jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, jnp.float32),
+                               params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=z,
+                      nu=jax.tree_util.tree_map(jnp.copy, z))
+
+
+def update(grads: dict, state: AdamWState, params: dict, lr: jnp.ndarray,
+           tc: TrainConfig) -> Tuple[dict, AdamWState]:
+    """Returns (new_params, new_state). lr is a traced scalar (schedule)."""
+    step = state.step + 1
+    b1, b2, eps = tc.b1, tc.b2, tc.eps
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m / c1
+        vhat = v / c2
+        delta = mhat / (jnp.sqrt(vhat) + eps)
+        if tc.weight_decay > 0:
+            delta = delta + tc.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    flat_p = treedef.flatten_up_to(params)
+    new = [upd(g, m, v, p) for g, m, v, p in
+           zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = treedef.unflatten([n[0] for n in new])
+    new_m = treedef.unflatten([n[1] for n in new])
+    new_v = treedef.unflatten([n[2] for n in new])
+    return new_p, AdamWState(step=step, mu=new_m, nu=new_v)

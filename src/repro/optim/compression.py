@@ -1,0 +1,54 @@
+"""Gradient compression for the cross-pod data-parallel all-reduce.
+
+int8 symmetric quantization with error feedback (residual accumulation):
+each step the (adapter) gradient is quantized to int8 + per-leaf fp32
+scale before the collective, and the quantization error is carried into the
+next step's gradient. For PEFT the gradient volume is tiny, but across
+slow inter-pod links (DCI) this 4x cut keeps the pod axis latency-bound
+rather than bandwidth-bound -- and the machinery generalizes to full
+finetuning.
+
+Inside jit we expose `compress_decompress` (quantize -> dequantize with
+error feedback) applied *before* the mean-reduction; under GSPMD the
+collective itself stays a dense all-reduce of the dequantized values unless
+the shard_map DP driver (repro.distributed.pipeline) is used, where the
+int8 payload crosses the wire for real.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error_state(params: dict) -> dict:
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def quantize_leaf(g: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    absmax = jnp.max(jnp.abs(g))
+    scale = jnp.where(absmax == 0, 1.0, absmax) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_leaf(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_decompress(grads: dict, err: dict) -> Tuple[dict, dict]:
+    """Error-feedback int8 round-trip. Returns (usable_grads, new_err)."""
+
+    def leaf(g, e):
+        gf = g.astype(jnp.float32) + e
+        q, s = quantize_leaf(gf)
+        dq = dequantize_leaf(q, s)
+        return dq.astype(g.dtype), gf - dq
+
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_e = tdef.flatten_up_to(err)
+    pairs = [leaf(g, e) for g, e in zip(flat_g, flat_e)]
+    return (tdef.unflatten([p[0] for p in pairs]),
+            tdef.unflatten([p[1] for p in pairs]))

@@ -1,0 +1,23 @@
+"""LR schedules (cosine/linear/constant with warmup), pure functions of the
+step so they live inside the jitted train step."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.config.base import TrainConfig
+
+
+def learning_rate(step: jnp.ndarray, tc: TrainConfig) -> jnp.ndarray:
+    s = step.astype(jnp.float32)
+    warm = jnp.maximum(tc.warmup_steps, 1)
+    warmup = s / warm
+    total = jnp.maximum(tc.steps - tc.warmup_steps, 1)
+    prog = jnp.clip((s - tc.warmup_steps) / total, 0.0, 1.0)
+    floor = tc.min_lr_ratio
+    if tc.schedule == "cosine":
+        decay = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    elif tc.schedule == "linear":
+        decay = floor + (1 - floor) * (1 - prog)
+    else:
+        decay = jnp.ones_like(prog)
+    return tc.learning_rate * jnp.where(s < tc.warmup_steps, warmup, decay)

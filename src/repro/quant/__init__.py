@@ -1,0 +1,3 @@
+from repro.quant.common import dequantize_linear, quantize_linear, storage_bytes
+
+__all__ = ["quantize_linear", "dequantize_linear", "storage_bytes"]

@@ -1,0 +1,55 @@
+"""Frozen-weight quantization dispatch.
+
+A quantized linear is a dict pytree (jit-traversable); which keys exist is
+static per QuantConfig, so jit caching is stable. ``quantize_linear`` /
+``dequantize_linear`` are the only entry points the model layers use -- this
+is what makes OFTv2 "quantization-agnostic" (paper §4): the adapter never
+looks inside the quant state.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.config.base import QuantConfig
+
+
+def quantize_linear(w, qcfg: QuantConfig, act_scales=None) -> dict:
+    if qcfg.kind == "none":
+        return {"w": w}
+    if qcfg.kind == "nf4":
+        from repro.quant import nf4
+        return nf4.quantize(w, qcfg)
+    if qcfg.kind == "awq":
+        from repro.quant import awq
+        return awq.quantize(w, qcfg, act_scales=act_scales)
+    if qcfg.kind == "int8":
+        from repro.quant import int8
+        return int8.quantize(w, qcfg)
+    raise ValueError(f"unknown quant kind {qcfg.kind}")
+
+
+def dequantize_linear(qstate: dict, qcfg: QuantConfig, dtype) -> jnp.ndarray:
+    if "w" in qstate:
+        return qstate["w"].astype(dtype)
+    if qcfg.kind == "nf4":
+        from repro.quant import nf4
+        return nf4.dequantize(qstate, qcfg, dtype)
+    if qcfg.kind == "awq":
+        from repro.quant import awq
+        return awq.dequantize(qstate, qcfg, dtype)
+    if qcfg.kind == "int8":
+        from repro.quant import int8
+        return int8.dequantize(qstate, qcfg, dtype)
+    raise ValueError(f"unknown quant kind {qcfg.kind}")
+
+
+def storage_bytes(qstate: dict) -> int:
+    """Actual bytes held by a (possibly quantized) linear -- memory accounting
+    for the Fig-4 benchmark."""
+    total = 0
+    for leaf in qstate.values():
+        if hasattr(leaf, "nbytes"):
+            total += leaf.nbytes
+        elif isinstance(leaf, dict):
+            total += storage_bytes(leaf)
+    return total

@@ -1,0 +1,20 @@
+"""Per-output-channel symmetric int8 weight quantization (used for gradient
+compression ablations and as the cheapest quant tier in Fig-4)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.config.base import QuantConfig
+
+
+def quantize(w: jnp.ndarray, qcfg: QuantConfig) -> dict:
+    absmax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=0)    # (d_out,)
+    scale = jnp.where(absmax == 0, 1.0, absmax) / 127.0
+    q = jnp.clip(jnp.round(w.astype(jnp.float32) / scale[None, :]), -127, 127)
+    return {"int8_codes": q.astype(jnp.int8),
+            "int8_scale": scale.astype(jnp.float32)}
+
+
+def dequantize(qstate: dict, qcfg: QuantConfig, dtype) -> jnp.ndarray:
+    return (qstate["int8_codes"].astype(jnp.float32)
+            * qstate["int8_scale"][None, :]).astype(dtype)

@@ -1,0 +1,98 @@
+"""NormalFloat4 quantization with double quantization (QLoRA, Dettmers et al.
+2023) -- reimplemented in pure JAX (the paper uses bitsandbytes CUDA).
+
+Layout decisions (TPU/sharding-aware, see DESIGN.md §3):
+  * absmax blocks run along the *in-features* axis per output column:
+    codes (d_in//2, d_out) uint8 (two 4-bit codes per byte, in-dim pairs),
+    absmax (d_in//block, d_out). Both shard exactly like the bf16 weight
+    (in -> data/FSDP, out -> model/TP) with no extra resharding.
+  * double quantization compresses absmax to int8 with per-group fp32 scales
+    and a global fp32 offset (QLoRA's scheme), applied when the absmax count
+    divides the group size; otherwise absmax stays fp32 (same numerics).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.base import QuantConfig
+
+# Canonical NF4 code values (quantiles of N(0,1), normalized; QLoRA Appx E).
+NF4_TABLE = np.array([
+    -1.0, -0.6961928009986877, -0.5250730514526367, -0.39491748809814453,
+    -0.28444138169288635, -0.18477343022823334, -0.09105003625154495, 0.0,
+    0.07958029955625534, 0.16093020141124725, 0.24611230194568634,
+    0.33791524171829224, 0.44070982933044434, 0.5626170039176941,
+    0.7229568362236023, 1.0,
+], dtype=np.float32)
+
+
+def _nearest_code(x: jnp.ndarray) -> jnp.ndarray:
+    """Map values in [-1, 1] to nearest NF4 code index (uint8 in [0, 15])."""
+    table = jnp.asarray(NF4_TABLE)
+    # boundaries are midpoints between adjacent code values
+    bounds = (table[1:] + table[:-1]) / 2.0
+    return jnp.searchsorted(bounds, x, side="left").astype(jnp.uint8)
+
+
+def quantize(w: jnp.ndarray, qcfg: QuantConfig) -> dict:
+    """w (d_in, d_out) float -> NF4 qstate dict."""
+    d_in, d_out = w.shape
+    bs = qcfg.block_size
+    if d_in % (2 * bs) and d_in % bs:
+        raise ValueError(f"d_in={d_in} not divisible by nf4 block {bs}")
+    wf = w.astype(jnp.float32).reshape(d_in // bs, bs, d_out)
+    absmax = jnp.max(jnp.abs(wf), axis=1)                       # (nb, d_out)
+    safe = jnp.where(absmax == 0, 1.0, absmax)
+    normed = wf / safe[:, None, :]
+    idx = _nearest_code(normed).reshape(d_in, d_out)
+    packed = (idx[0::2, :] << 4) | idx[1::2, :]                 # (d_in//2, d_out)
+
+    out = {"nf4_codes": packed}
+    nb = absmax.shape[0]
+    db = qcfg.double_block
+    if qcfg.double_quant and d_out % db == 0:
+        # second-level quantization: int8 absmax with per-(row, out-group)
+        # fp32 scales + one global offset. Grouping runs along d_out so both
+        # tensors shard exactly like the weight (DESIGN.md §3).
+        offset = jnp.mean(absmax)
+        centered = (absmax - offset).reshape(nb, d_out // db, db)
+        gmax = jnp.max(jnp.abs(centered), axis=2)
+        gsafe = jnp.where(gmax == 0, 1.0, gmax)
+        q8 = jnp.clip(jnp.round(centered / gsafe[:, :, None] * 127.0),
+                      -127, 127)
+        out["absmax_q8"] = q8.reshape(nb, d_out).astype(jnp.int8)
+        out["absmax_scale"] = (gsafe / 127.0).astype(jnp.float32)  # (nb, groups)
+        out["absmax_offset"] = offset.astype(jnp.float32)
+    else:
+        out["absmax"] = absmax.astype(jnp.float32)
+    return out
+
+
+def _absmax(qstate: dict, nb: int, d_out: int) -> jnp.ndarray:
+    if "absmax" in qstate:
+        return qstate["absmax"]
+    scale = qstate["absmax_scale"]
+    db = d_out // scale.shape[1]
+    q8 = qstate["absmax_q8"].astype(jnp.float32).reshape(nb, d_out // db, db)
+    return (q8 * scale[:, :, None] + qstate["absmax_offset"]).reshape(nb, d_out)
+
+
+def dequantize(qstate: dict, qcfg: QuantConfig, dtype) -> jnp.ndarray:
+    packed = qstate["nf4_codes"]
+    d_in2, d_out = packed.shape
+    d_in = d_in2 * 2
+    bs = qcfg.block_size
+    hi = (packed >> 4).astype(jnp.int32)
+    lo = (packed & 0xF).astype(jnp.int32)
+    idx = jnp.stack([hi, lo], axis=1).reshape(d_in, d_out)
+    vals = jnp.take(jnp.asarray(NF4_TABLE), idx, axis=0)        # fp32
+    absmax = _absmax(qstate, d_in // bs, d_out)
+    w = vals.reshape(d_in // bs, bs, d_out) * absmax[:, None, :]
+    return w.reshape(d_in, d_out).astype(dtype)
+
+
+def roundtrip_error(w: jnp.ndarray, qcfg: QuantConfig) -> jnp.ndarray:
+    """max |w - dq(q(w))| -- used by tests and the requant-error benchmark."""
+    q = quantize(w, qcfg)
+    return jnp.max(jnp.abs(w - dequantize(q, qcfg, w.dtype)))

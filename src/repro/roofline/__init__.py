@@ -1,0 +1,6 @@
+from repro.roofline.analysis import (model_flops, parse_collectives,
+                                     roofline_terms, shape_bytes)
+from repro.roofline.hw import V5E, Chip
+
+__all__ = ["model_flops", "parse_collectives", "roofline_terms",
+           "shape_bytes", "V5E", "Chip"]

@@ -1,0 +1,177 @@
+"""Roofline analysis from the compiled dry-run artifact.
+
+Three terms per (arch x shape x mesh), all in seconds-per-step on the
+per-device partitioned program (XLA compiles the per-device module, so
+cost_analysis is already chips-normalized):
+
+  compute    = device_FLOPs / peak_FLOP/s
+  memory     = device_HBM_bytes / HBM_bw
+  collective = device_wire_bytes / (links x link_bw)
+
+Collective bytes are NOT in cost_analysis: we parse the post-SPMD optimized
+HLO and apply a ring-traffic model per op kind (G = replica-group size):
+
+  all-gather          B_out * (G-1)/G
+  reduce-scatter      B_out * (G-1)          (operand = B_out * G)
+  all-reduce          2 * B * (G-1)/G        (RS + AG phases)
+  all-to-all          B * (G-1)/G
+  collective-permute  B
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+from repro.roofline.hw import V5E, Chip
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s+(?P<result>[^=]*?)\s+"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(")
+_GROUPS_EXPLICIT_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def shape_bytes(text: str) -> int:
+    """Sum bytes of every `dtype[shape]` pattern in `text`."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_EXPLICIT_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        a, b = int(m.group(1)), int(m.group(2))
+        # iota [n_groups, group_size]
+        return b
+    return default
+
+
+def _wire_bytes(op: str, b: int, g: int) -> float:
+    if g <= 1:
+        return 0.0
+    if op == "all-gather":
+        return b * (g - 1) / g
+    if op == "reduce-scatter":
+        return b * (g - 1)
+    if op == "all-reduce":
+        return 2 * b * (g - 1) / g
+    if op == "all-to-all":
+        return b * (g - 1) / g
+    if op == "collective-permute":
+        return float(b)
+    return float(b)
+
+
+def parse_collectives(hlo_text: str, total_devices: int
+                      ) -> Tuple[float, Dict[str, dict]]:
+    """Returns (total_wire_bytes_per_device, per-op-kind breakdown)."""
+    per_kind: Dict[str, dict] = defaultdict(
+        lambda: {"count": 0, "bytes": 0.0, "wire_bytes": 0.0})
+    total = 0.0
+    for line in hlo_text.splitlines():
+        if "-done" in line:
+            continue
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        b = shape_bytes(m.group("result"))
+        g = _group_size(line, total_devices)
+        wb = _wire_bytes(op, b, g)
+        d = per_kind[op]
+        d["count"] += 1
+        d["bytes"] += b
+        d["wire_bytes"] += wb
+        total += wb
+    return total, dict(per_kind)
+
+
+def roofline_terms(device_flops: float, device_bytes: float,
+                   wire_bytes: float, chip: Chip = V5E) -> Dict[str, float]:
+    compute = device_flops / chip.peak_flops_bf16
+    memory = device_bytes / chip.hbm_bw
+    collective = wire_bytes / (chip.ici_links * chip.ici_link_bw)
+    terms = {"compute_s": compute, "memory_s": memory,
+             "collective_s": collective}
+    dom = max(terms, key=terms.get)
+    terms["bottleneck"] = dom.replace("_s", "")
+    bound = max(compute, memory, collective)
+    terms["roofline_fraction_compute"] = compute / bound if bound else 0.0
+    return terms
+
+
+def attention_correction(cfg, seq_len: int, global_batch: int, mode: str,
+                         data_shards: int, model_shards: int,
+                         microbatches: int = 1) -> Dict[str, float]:
+    """Analytic per-device flops/bytes of chunked (flash-style) attention at
+    full sequence length.
+
+    Needed because the online-softmax q/kv chunk loops are lax.scans whose
+    bodies HLO cost analysis counts once; the probe extrapolation recovers
+    the *layer* scan but not the *chunk* scans, so the attention core is
+    added analytically (exact pair counts; SWA windows honored). Applied to
+    train/prefill cells only -- decode attention takes the dense (scan-free)
+    path and is already counted.
+
+    Returns per-LAYER per-device {"flops": f, "bytes": b} (caller multiplies
+    by the number of attention layers).
+    """
+    if cfg.num_heads == 0:
+        return {"flops": 0.0, "bytes": 0.0}
+    s = seq_len
+    w = cfg.sliding_window
+    if cfg.is_encoder or not cfg.causal:
+        pairs = float(s) * s
+    elif w and w < s:
+        pairs = float(s) * w - 0.5 * w * w
+    else:
+        pairs = 0.5 * float(s) * s
+    b_loc = max(global_batch // (data_shards * microbatches), 1)
+    h_dev = max(cfg.padded_heads // model_shards, 1)
+    hd = cfg.head_dim
+    kvh = cfg.num_kv_heads
+    dbytes = 2  # bf16
+    qc = min(cfg.attn_chunk, s)
+
+    flops_fwd = 4.0 * b_loc * pairs * h_dev * hd
+    # kv re-reads: each q-chunk reads its kv span once
+    kv_reads = pairs / qc
+    bytes_fwd = b_loc * (kv_reads * kvh * hd * 2 * dbytes
+                         + s * h_dev * hd * 2 * dbytes)
+    if mode == "train":
+        # bwd ~= 2x fwd; full remat recomputes fwd once more
+        mult = 4.0
+    else:
+        mult = 1.0
+    return {"flops": flops_fwd * mult * microbatches,
+            "bytes": bytes_fwd * mult * microbatches}
+
+
+def model_flops(cfg, tokens: int, mode: str) -> float:
+    """MODEL_FLOPS = 6*N*D (train) or 2*N*D (inference fwd), N = active
+    non-embedding params (MoE: top-k experts only)."""
+    n_active = cfg.param_count(active_only=True)
+    embed = cfg.vocab_size * cfg.d_model
+    n_eff = n_active - embed   # lm head kept (it is a real matmul)
+    mult = 6 if mode == "train" else 2
+    return float(mult) * n_eff * tokens

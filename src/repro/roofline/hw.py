@@ -1,0 +1,22 @@
+"""TPU v5e hardware model (per chip), per the assignment constants."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class Chip:
+    name: str = "tpu-v5e"
+    peak_flops_bf16: float = 197e12     # FLOP/s
+    hbm_bw: float = 819e9               # B/s
+    ici_link_bw: float = 50e9           # B/s per link (assignment constant)
+    ici_links: int = 1                  # conservative: 1 effective link
+    hbm_bytes: float = 16e9             # 16 GB HBM per v5e chip
+
+
+V5E = Chip()
+
+
+def meshes():
+    return {"single": {"chips": 256, "shape": (16, 16)},
+            "multi": {"chips": 512, "shape": (2, 16, 16)}}

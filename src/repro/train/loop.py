@@ -1,0 +1,92 @@
+"""Fault-tolerant training loop.
+
+  * auto-resume from the latest checkpoint (params + optimizer + data cursor
+    + RNG + step)
+  * periodic async checkpoints (atomic keep-k)
+  * SIGTERM preemption -> final checkpoint flush + clean exit
+  * straggler monitor on step wall-times
+  * works off-mesh (CPU tests/examples) or on-mesh (jit with shardings)
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.config.base import RunConfig
+from repro.data.loader import ShardedLoader
+from repro.distributed.fault import PreemptionGuard, StragglerMonitor
+from repro.models.model import Model
+from repro.train import state as state_lib
+from repro.train.step import make_train_step
+
+
+def run_training(model: Model, run: RunConfig, loader: ShardedLoader,
+                 train_step: Optional[Callable] = None,
+                 manager: Optional[CheckpointManager] = None,
+                 guard: Optional[PreemptionGuard] = None,
+                 log: Callable[[str], None] = print,
+                 init_key=None,
+                 stop_after: Optional[int] = None) -> Dict[str, Any]:
+    tc = run.train
+    manager = manager or CheckpointManager(tc.ckpt_dir, keep=tc.ckpt_keep)
+    guard = guard or PreemptionGuard(install=False)
+    monitor = StragglerMonitor()
+    step_fn = train_step or jax.jit(make_train_step(model, run))
+
+    # ---- init or resume -------------------------------------------------
+    key = init_key if init_key is not None else jax.random.PRNGKey(tc.seed)
+    params = model.init(key)
+    state = state_lib.create(
+        params, use_compression=(run.parallel.gradient_compression == "int8"))
+    start_step = 0
+    latest = manager.latest_step()
+    if latest is not None:
+        restored, meta = manager.restore(latest, like=state)
+        state = jax.tree_util.tree_map(jax.numpy.asarray, restored)
+        loader.restore({"cursor": meta["data_cursor"]})
+        start_step = int(meta["step"])
+        log(f"[loop] resumed from step {start_step} "
+            f"(data cursor {meta['data_cursor']})")
+
+    losses = []
+    stragglers = 0
+    t_loop = time.time()
+    for step in range(start_step, tc.steps):
+        batch = loader.next_batch()
+        batch = jax.tree_util.tree_map(jax.numpy.asarray, batch)
+        t0 = time.time()
+        state, metrics = step_fn(state, batch)
+        loss = float(metrics["loss"])
+        dt = time.time() - t0
+        if monitor.record(step, dt):
+            stragglers += 1
+            log(f"[loop] straggler step {step}: {dt:.3f}s "
+                f"(ewma {monitor.ewma:.3f}s)")
+        losses.append(loss)
+        if tc.log_every and step % tc.log_every == 0:
+            log(f"[loop] step {step} loss {loss:.4f} "
+                f"lr {float(metrics['lr']):.2e} {dt * 1e3:.0f}ms")
+        must_ckpt = (tc.ckpt_every and (step + 1) % tc.ckpt_every == 0)
+        if must_ckpt or guard.requested:
+            manager.save(step + 1, state,
+                         metadata={"data_cursor": loader.checkpoint()["cursor"],
+                                   "step": step + 1})
+            if guard.requested:
+                manager.wait()
+                log(f"[loop] preempted at step {step + 1}; checkpoint "
+                    f"flushed, exiting")
+                return {"state": state, "losses": losses,
+                        "preempted": True, "last_step": step + 1,
+                        "stragglers": stragglers}
+        if stop_after is not None and step + 1 >= stop_after:
+            manager.wait()
+            return {"state": state, "losses": losses, "preempted": False,
+                    "last_step": step + 1, "stragglers": stragglers}
+    manager.wait()
+    return {"state": state, "losses": losses, "preempted": False,
+            "last_step": tc.steps, "stragglers": stragglers,
+            "wall_time": time.time() - t_loop}

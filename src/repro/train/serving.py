@@ -1,0 +1,74 @@
+"""Serving utilities: prefill -> decode continuation, cache padding, and a
+batched greedy/sampling generation loop (the paper's "inference" side --
+adapters stay unmerged, exactly how the paper evaluates QOFT/QLoRA)."""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tfm
+from repro.models.model import Model
+
+
+def pad_caches(model: Model, caches: dict, s_max: int) -> dict:
+    """Grow prefill caches (seq dim == prompt length) to s_max decode slots.
+
+    Attention caches get zero-padded k/v and pos=-1 (invalid) tail; SSM
+    states are seq-free and pass through. SWA ring caches (already capped at
+    the window) pass through too."""
+    cfg = model.cfg
+
+    def pad_entry(p, entry):
+        if tfm.layer_kind(cfg, p) != "attn":
+            return entry
+        cur = entry["k"].shape[2]          # (n_groups, B, S, KV, hd)
+        if cur >= s_max or (0 < cfg.sliding_window <= cur):
+            return entry
+        padn = s_max - cur
+        k = jnp.pad(entry["k"], ((0, 0), (0, 0), (0, padn), (0, 0), (0, 0)))
+        v = jnp.pad(entry["v"], ((0, 0), (0, 0), (0, padn), (0, 0), (0, 0)))
+        pos = jnp.pad(entry["pos"], ((0, 0), (0, 0), (0, padn)),
+                      constant_values=-1)
+        return {"k": k, "v": v, "pos": pos}
+
+    return {key: pad_entry(int(key.split("_")[1]), val)
+            for key, val in caches.items()}
+
+
+def generate(model: Model, params: dict, prompt: jnp.ndarray, steps: int,
+             temperature: float = 0.0, key=None,
+             s_max: Optional[int] = None) -> jnp.ndarray:
+    """Batched generation: prefill the prompt, then decode `steps` tokens.
+
+    prompt: (B, S) int32. Returns (B, S + steps)."""
+    b, s = prompt.shape
+    s_max = s_max or (s + steps)
+    _, caches = model.prefill(params, {"tokens": prompt})
+    caches = pad_caches(model, caches, s_max)
+    last = prompt[:, -1:]
+
+    # next-token from prefill logits
+    def sample(logits, k):
+        if temperature <= 0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(k, logits / temperature, axis=-1
+                                      ).astype(jnp.int32)
+
+    logits_p, _, _ = model.forward(params, {"tokens": prompt})
+    key = key if key is not None else jax.random.PRNGKey(0)
+    tok = sample(logits_p[:, -1], key)[:, None]
+    out = [prompt, tok]
+
+    for t in range(steps - 1):
+        idx = s + t
+        batch = {"tokens": tok,
+                 "positions": jnp.full((b, 1), idx, jnp.int32),
+                 "cache_index": jnp.full((b,), idx, jnp.int32),
+                 "caches": caches}
+        logits, caches = model.decode_step(params, batch)
+        key = jax.random.fold_in(key, t)
+        tok = sample(logits[:, 0], key)[:, None]
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

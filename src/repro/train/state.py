@@ -1,0 +1,34 @@
+"""TrainState: base (frozen) + adapter (trainable) params, AdamW state over
+the adapter tree only, optional compression error-feedback state."""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import adamw
+
+
+class TrainState(NamedTuple):
+    step: jnp.ndarray            # () int32 (global step)
+    base: Any                    # frozen (possibly quantized) params
+    adapter: Any                 # trainable adapter params
+    opt: adamw.AdamWState        # over adapter only
+    comp_err: Any                # int8-compression error feedback (or None)
+
+
+def create(params: Dict[str, Any], use_compression: bool = False
+           ) -> TrainState:
+    adapter = params["adapter"]
+    comp_err = None
+    if use_compression:
+        from repro.optim import compression
+        comp_err = compression.init_error_state(adapter)
+    return TrainState(step=jnp.zeros((), jnp.int32), base=params["base"],
+                      adapter=adapter, opt=adamw.init(adapter),
+                      comp_err=comp_err)
+
+
+def params_of(state: TrainState) -> Dict[str, Any]:
+    return {"base": state.base, "adapter": state.adapter}

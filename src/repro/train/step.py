@@ -1,0 +1,94 @@
+"""Train/serve step factories.
+
+train_step: microbatched (scan) grad accumulation -> optional int8
+compression w/ error feedback -> global-norm clip -> AdamW on the adapter
+tree only. Base weights are never differentiated: the PEFT memory story
+(grads + optimizer state are O(adapter)) is structural, not an
+afterthought -- it is what lets a 405B frozen model train on v5e-256.
+
+serve_step_prefill / serve_step_decode: the two inference shapes the
+dry-run lowers.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import RunConfig
+from repro.models.model import Model
+from repro.optim import adamw, clipping, schedule
+from repro.train import state as state_lib
+
+
+def _split_microbatches(batch: Dict[str, jnp.ndarray], m: int):
+    return jax.tree_util.tree_map(
+        lambda a: a.reshape((m, a.shape[0] // m) + a.shape[1:]), batch)
+
+
+def make_train_step(model: Model, run: RunConfig) -> Callable:
+    tc = run.train
+    pcfg = run.parallel
+    m = max(pcfg.microbatches, 1)
+    use_remat = pcfg.remat != "none"
+    use_comp = pcfg.gradient_compression == "int8"
+
+    def loss_fn(adapter, base, mb):
+        loss, metrics = model.loss({"base": base, "adapter": adapter}, mb,
+                                   remat=use_remat)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state: state_lib.TrainState, batch) -> Tuple:
+        if m > 1:
+            mbs = _split_microbatches(batch, m)
+
+            def acc_step(carry, mb):
+                gsum, lsum = carry
+                (loss, _), g = grad_fn(state.adapter, state.base, mb)
+                gsum = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), gsum, g)
+                return (gsum, lsum + loss), None
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.adapter)
+            (gsum, lsum), _ = jax.lax.scan(acc_step, (g0, 0.0), mbs)
+            grads = jax.tree_util.tree_map(lambda g: g / m, gsum)
+            loss = lsum / m
+        else:
+            (loss, _), grads = grad_fn(state.adapter, state.base, batch)
+
+        comp_err = state.comp_err
+        if use_comp:
+            from repro.optim import compression
+            grads, comp_err = compression.compress_decompress(grads,
+                                                              comp_err)
+
+        grads, gnorm = clipping.clip_by_global_norm(grads, tc.grad_clip)
+        lr = schedule.learning_rate(state.step, tc)
+        new_adapter, new_opt = adamw.update(grads, state.opt, state.adapter,
+                                            lr, tc)
+        new_state = state_lib.TrainState(
+            step=state.step + 1, base=state.base, adapter=new_adapter,
+            opt=new_opt, comp_err=comp_err)
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
+        return new_state, metrics
+
+    return train_step
+
+
+def make_serve_prefill(model: Model) -> Callable:
+    def serve_step(params, batch):
+        logits, caches = model.prefill(params, batch)
+        return logits, caches
+    return serve_step
+
+
+def make_serve_decode(model: Model) -> Callable:
+    def serve_step(params, batch):
+        logits, caches = model.decode_step(params, batch)
+        return logits, caches
+    return serve_step

@@ -1,0 +1,196 @@
+"""Multi-device tests, run in subprocesses so the 8 fake host devices never
+leak into the rest of the suite (jax locks device count at first init)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_py(code: str, devices: int = 8) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={devices} "
+                        + env.get("XLA_FLAGS", "").replace(
+                            "--xla_force_host_platform_device_count=512", ""))
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=900)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout
+
+
+def test_pipeline_matches_sequential():
+    run_py("""
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import Mesh
+    from repro.distributed.pipeline import gpipe, split_stages
+
+    S, L, D, M, MB = 4, 8, 16, 6, 4
+    mesh = jax.make_mesh((S,), ("stage",))
+    key = jax.random.PRNGKey(0)
+    ws = 0.3 * jax.random.normal(key, (L, D, D)) / np.sqrt(D)
+
+    def layer(w, x):
+        return jnp.tanh(x @ w)
+
+    def seq_apply(ws, x):
+        for i in range(L):
+            x = layer(ws[i], x)
+        return x
+
+    def stage_fn(wchunk, x):
+        def body(c, w):
+            return layer(w, c), None
+        y, _ = jax.lax.scan(body, x, wchunk)
+        return y
+
+    x = jax.random.normal(jax.random.fold_in(key, 1), (M, MB, D))
+    want = jax.vmap(lambda xx: seq_apply(ws, xx))(x)
+    staged = split_stages(ws, S)
+    with mesh:
+        got = gpipe(stage_fn, mesh)(staged, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-5)
+
+    # gradients flow through the pipeline
+    def loss_pipe(staged):
+        with mesh:
+            return jnp.sum(gpipe(stage_fn, mesh)(staged, x) ** 2)
+    def loss_seq(ws):
+        return jnp.sum(jax.vmap(lambda xx: seq_apply(ws, xx))(x) ** 2)
+    g_pipe = jax.grad(loss_pipe)(staged).reshape(L, D, D)
+    g_seq = jax.grad(loss_seq)(ws)
+    np.testing.assert_allclose(np.asarray(g_pipe), np.asarray(g_seq),
+                               rtol=2e-3, atol=2e-4)
+    print("PIPELINE-OK")
+    """)
+
+
+def test_sharded_train_step_matches_single_device():
+    run_py("""
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.config.base import *
+    from repro.models import build
+    from repro.models.spec import default_rules
+    from repro.distributed.sharding import (make_constrain,
+                                            named_sharding_tree, batch_spec)
+    from repro.train.step import make_train_step
+    from repro.train import state as state_lib
+
+    pcfg = ParallelConfig(mesh_shape=(2, 4), mesh_axes=("data", "model"))
+    cfg = ModelConfig(name="tp-test", num_layers=2, d_model=64, num_heads=8,
+                      num_kv_heads=2, d_ff=256, vocab_size=256,
+                      rope_theta=1e4).with_mesh_padding(4)
+    run = RunConfig(model=cfg,
+                    adapter=AdapterConfig(kind="oftv2", block_size=16,
+                                          neumann_terms=4),
+                    parallel=pcfg,
+                    train=TrainConfig(global_batch=8, seq_len=32,
+                                      learning_rate=1e-3, steps=10,
+                                      warmup_steps=0))
+    mesh = jax.make_mesh(pcfg.mesh_shape, pcfg.mesh_axes)
+    rules = default_rules(pcfg)
+
+    # single-device reference
+    model_ref = build(run)
+    params = model_ref.init(jax.random.PRNGKey(0))
+    st_ref = state_lib.create(params)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (8, 32),
+                                          0, cfg.vocab_size)}
+    _, m_ref = make_train_step(model_ref, run)(st_ref, batch)
+
+    # sharded
+    model = build(run, constrain=make_constrain(rules, mesh))
+    specs = model.param_specs(rules)
+    pshard = named_sharding_tree(specs, mesh)
+    params_sh = jax.tree_util.tree_map(
+        lambda a, s: jax.device_put(a, s), params, pshard)
+    st = state_lib.create(params_sh)
+    bshard = NamedSharding(mesh, batch_spec(pcfg, 2))
+    batch_sh = {"tokens": jax.device_put(batch["tokens"], bshard)}
+    with mesh:
+        step = jax.jit(make_train_step(model, run))
+        st2, m = step(st, batch_sh)
+    np.testing.assert_allclose(float(m["loss"]), float(m_ref["loss"]),
+                               rtol=2e-4)
+    print("TP-OK", float(m["loss"]))
+    """)
+
+
+def test_elastic_reshard_1_to_4_devices():
+    run_py("""
+    import jax, jax.numpy as jnp, numpy as np, tempfile
+    from repro.config.base import *
+    from repro.models import build
+    from repro.models.spec import default_rules
+    from repro.distributed.sharding import named_sharding_tree
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.checkpoint.elastic import reshard_tree
+
+    cfg = ModelConfig(name="el", num_layers=2, d_model=64, num_heads=4,
+                      num_kv_heads=2, d_ff=128, vocab_size=256,
+                      rope_theta=1e4).with_mesh_padding(2)
+    pcfg = ParallelConfig(mesh_shape=(2, 2), mesh_axes=("data", "model"))
+    run = RunConfig(model=cfg, adapter=AdapterConfig(kind="oftv2",
+                    block_size=16, neumann_terms=4), parallel=pcfg)
+    model = build(run)
+    params = model.init(jax.random.PRNGKey(0))
+
+    # save on "one topology" (host arrays)
+    d = tempfile.mkdtemp()
+    mgr = CheckpointManager(d, keep=1, async_save=False)
+    mgr.save(5, params, metadata={"data_cursor": 0})
+
+    # restore onto a 2x2 mesh with full shardings
+    restored, _ = mgr.restore(like=params)
+    mesh = jax.make_mesh((2, 2), ("data", "model"))
+    specs = model.param_specs(default_rules(pcfg))
+    placed = reshard_tree(restored, specs, mesh)
+    # values identical, shardings applied
+    l0 = jax.tree_util.tree_leaves(params)
+    l1 = jax.tree_util.tree_leaves(placed)
+    for a, b in zip(l0, l1):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=0)
+    sh = jax.tree_util.tree_leaves(placed)[0].sharding
+    assert sh.mesh.shape == {"data": 2, "model": 2}
+    print("ELASTIC-OK")
+    """)
+
+
+def test_dp_loss_invariant_to_mesh_shape():
+    run_py("""
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.config.base import *
+    from repro.models import build
+    from repro.models.spec import default_rules
+    from repro.distributed.sharding import make_constrain, batch_spec
+
+    cfg = ModelConfig(name="dp", num_layers=2, d_model=64, num_heads=4,
+                      num_kv_heads=2, d_ff=128, vocab_size=128,
+                      rope_theta=1e4)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (8, 16),
+                                          0, 128)}
+    losses = []
+    for shape, axes in [((8,), ("data",)), ((2, 4), ("pod", "data"))]:
+        pcfg = ParallelConfig(mesh_shape=shape, mesh_axes=axes)
+        run = RunConfig(model=cfg, adapter=AdapterConfig(kind="oftv2",
+                        block_size=16, neumann_terms=4), parallel=pcfg)
+        mesh = jax.make_mesh(shape, axes)
+        rules = default_rules(pcfg)
+        model = build(run, constrain=make_constrain(rules, mesh))
+        params = model.init(jax.random.PRNGKey(0))
+        bsh = NamedSharding(mesh, batch_spec(pcfg, 2))
+        bt = {"tokens": jax.device_put(batch["tokens"], bsh)}
+        with mesh:
+            loss, _ = jax.jit(lambda p, b: model.loss(p, b))(params, bt)
+        losses.append(float(loss))
+    assert abs(losses[0] - losses[1]) < 1e-4, losses
+    print("DP-OK", losses)
+    """)

@@ -1,0 +1,130 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode on CPU) vs the
+pure-jnp oracles in repro.kernels.ref."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config.base import QuantConfig
+from repro.core import skew
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+from repro.quant import nf4
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-6)
+
+
+# ------------------------------------------------------ block_oft_apply ----
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape,b", [
+    ((4, 64), 16), ((3, 7, 128), 32), ((512, 256), 32), ((2, 5, 96), 8),
+    ((1, 64), 64), ((260, 64), 16),
+])
+def test_block_oft_apply_matches_ref(shape, b, dtype):
+    key = jax.random.PRNGKey(0)
+    d = shape[-1]
+    x = jax.random.normal(key, shape, dtype=jnp.float32).astype(dtype)
+    from repro.core.cayley import build_rotation
+    qp = skew.random_skew(key, (d // b,), b, scale=0.1)
+    r = build_rotation(qp, b, 5).astype(dtype)
+    got = kops.block_oft_apply(x, r)
+    want = kref.block_oft_apply_ref(x, r)
+    assert got.shape == want.shape and got.dtype == want.dtype
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_block_oft_apply_grads_match_ref():
+    key = jax.random.PRNGKey(1)
+    b, d = 16, 64
+    x = jax.random.normal(key, (32, d))
+    from repro.core.cayley import build_rotation
+    qp = skew.random_skew(key, (d // b,), b, scale=0.1)
+    r = build_rotation(qp, b, 5)
+
+    def f_kernel(x, r):
+        return jnp.sum(jnp.sin(kops.block_oft_apply(x, r)))
+
+    def f_ref(x, r):
+        return jnp.sum(jnp.sin(kref.block_oft_apply_ref(x, r)))
+
+    gx_k, gr_k = jax.grad(f_kernel, argnums=(0, 1))(x, r)
+    gx_r, gr_r = jax.grad(f_ref, argnums=(0, 1))(x, r)
+    np.testing.assert_allclose(np.asarray(gx_k), np.asarray(gx_r), rtol=1e-4,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(gr_k), np.asarray(gr_r), rtol=1e-4,
+                               atol=1e-5)
+
+
+# ------------------------------------------------------- cayley_neumann ----
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("r,b,k", [(4, 16, 5), (8, 32, 5), (16, 8, 3),
+                                   (2, 64, 6), (3, 16, 1)])
+def test_cayley_neumann_kernel_matches_ref(r, b, k, dtype):
+    key = jax.random.PRNGKey(2)
+    qp = skew.random_skew(key, (r,), b, scale=0.05).astype(dtype)
+    got = kops.cayley_neumann(qp, b, k)
+    want = kref.cayley_neumann_ref(qp, b, k)
+    assert got.shape == (r, b, b)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_cayley_neumann_kernel_grad_matches_ref():
+    key = jax.random.PRNGKey(3)
+    qp = skew.random_skew(key, (4,), 16, scale=0.05)
+
+    g_k = jax.grad(lambda q: jnp.sum(jnp.square(kops.cayley_neumann(q, 16, 5))))(qp)
+    g_r = jax.grad(lambda q: jnp.sum(jnp.square(
+        kref.cayley_neumann_ref(q, 16, 5))))(qp)
+    np.testing.assert_allclose(np.asarray(g_k), np.asarray(g_r), rtol=1e-4,
+                               atol=1e-6)
+
+
+def test_cayley_neumann_exact_fallback():
+    qp = skew.random_skew(jax.random.PRNGKey(4), (4,), 16, scale=0.05)
+    got = kops.cayley_neumann(qp, 16, 0)   # exact Cayley -> oracle path
+    want = kref.cayley_neumann_ref(qp, 16, 0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=0)
+
+
+# ---------------------------------------------------------- nf4_dequant ----
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("d_in,d_out,bs", [(128, 64, 64), (256, 128, 64),
+                                           (512, 96, 32), (64, 256, 16),
+                                           (128, 33, 64)])
+def test_nf4_dequant_kernel_matches_ref(d_in, d_out, bs, dtype):
+    qcfg = QuantConfig(kind="nf4", block_size=bs, double_quant=False)
+    key = jax.random.PRNGKey(5)
+    w = 0.1 * jax.random.normal(key, (d_in, d_out))
+    q = nf4.quantize(w, qcfg)
+    got = kops.nf4_dequant(q["nf4_codes"], q["absmax"], bs, dtype=dtype)
+    want = kref.nf4_dequant_ref(q["nf4_codes"], q["absmax"], bs, dtype=dtype)
+    assert got.shape == (d_in, d_out) and got.dtype == want.dtype
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+    # and the oracle itself matches the quant library
+    lib = nf4.dequantize(q, qcfg, dtype)
+    np.testing.assert_allclose(np.asarray(want, np.float32),
+                               np.asarray(lib, np.float32), rtol=1e-5,
+                               atol=1e-6)
+
+
+def test_oftv2_with_pallas_flag_end_to_end():
+    """core.oft routes through the kernels when use_pallas=True."""
+    from repro.config.base import AdapterConfig
+    from repro.core import oft
+    acfg_np = AdapterConfig(kind="oftv2", block_size=16, neumann_terms=5,
+                            use_pallas=False)
+    acfg_pl = AdapterConfig(kind="oftv2", block_size=16, neumann_terms=5,
+                            use_pallas=True)
+    key = jax.random.PRNGKey(6)
+    x = jax.random.normal(key, (8, 9, 64))
+    params = {"q_packed": skew.random_skew(key, (4,), 16, scale=0.1)}
+    y_np = oft.oftv2_transform_input(x, params, acfg_np)
+    y_pl = oft.oftv2_transform_input(x, params, acfg_pl)
+    np.testing.assert_allclose(np.asarray(y_pl), np.asarray(y_np), rtol=1e-5,
+                               atol=1e-6)

@@ -1,0 +1,289 @@
+"""Model-zoo correctness: decode-with-cache == full forward, chunked SSD ==
+naive recurrence, chunked attention == dense attention, MoE routing, every
+family's forward/loss."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config.base import AdapterConfig, ModelConfig, QuantConfig, RunConfig
+from repro.models import build
+from repro.models import mamba2 as mamba_mod
+from repro.models.attention import attention_core
+
+KEY = jax.random.PRNGKey(0)
+
+
+def tiny_dense(**kw):
+    base = dict(name="tiny", num_layers=2, d_model=64, num_heads=4,
+                num_kv_heads=2, d_ff=128, vocab_size=128, rope_theta=1e4)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def run_cfg(cfg, adapter="oftv2", quant="none"):
+    return RunConfig(model=cfg,
+                     adapter=AdapterConfig(kind=adapter, block_size=16,
+                                           neumann_terms=4, rank=4),
+                     quant=QuantConfig(kind=quant, block_size=32))
+
+
+def _decode_all(m, params, tokens, s_max):
+    b, s = tokens.shape
+    caches = m.make_caches(b, s_max)
+    outs = []
+    for t in range(s):
+        batch = {"tokens": tokens[:, t:t + 1],
+                 "positions": jnp.full((b, 1), t, jnp.int32),
+                 "cache_index": jnp.full((b,), t, jnp.int32),
+                 "caches": caches}
+        logits, caches = m.decode_step(params, batch)
+        outs.append(logits[:, 0])
+    return jnp.stack(outs, axis=1)
+
+
+# ------------------------------------------------- attention core ----------
+def test_chunked_attention_equals_dense():
+    b, s, h, kv, hd = 2, 64, 4, 2, 16
+    q = jax.random.normal(KEY, (b, s, h, hd))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (b, s, kv, hd))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (b, s, kv, hd))
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s)).astype(jnp.int32)
+    dense = attention_core(q, k, v, pos, pos, causal=True, window=0,
+                           chunk=4096)
+    chunked = attention_core(q, k, v, pos, pos, causal=True, window=0,
+                             chunk=16)
+    np.testing.assert_allclose(np.asarray(chunked), np.asarray(dense),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_chunked_attention_sliding_window():
+    b, s, h, kv, hd = 1, 64, 2, 1, 8
+    q = jax.random.normal(KEY, (b, s, h, hd))
+    k = jax.random.normal(jax.random.fold_in(KEY, 3), (b, s, kv, hd))
+    v = jax.random.normal(jax.random.fold_in(KEY, 4), (b, s, kv, hd))
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s)).astype(jnp.int32)
+    dense = attention_core(q, k, v, pos, pos, causal=True, window=16,
+                           chunk=4096)
+    chunked = attention_core(q, k, v, pos, pos, causal=True, window=16,
+                             chunk=8)
+    np.testing.assert_allclose(np.asarray(chunked), np.asarray(dense),
+                               rtol=1e-4, atol=1e-5)
+
+
+# ------------------------------------------------- dense decode == fwd -----
+@pytest.mark.parametrize("adapter", ["none", "oftv2", "lora"])
+def test_decode_matches_forward_dense(adapter):
+    cfg = tiny_dense()
+    m = build(run_cfg(cfg, adapter=adapter))
+    params = m.init(KEY)
+    if adapter != "none":   # give adapters non-trivial values
+        params["adapter"] = jax.tree_util.tree_map(
+            lambda x: x + 0.05 * jax.random.normal(KEY, x.shape, x.dtype),
+            params["adapter"])
+    tokens = jax.random.randint(KEY, (2, 12), 0, cfg.vocab_size)
+    full_logits, _, _ = m.forward(params, {"tokens": tokens})
+    dec_logits = _decode_all(m, params, tokens, s_max=16)
+    np.testing.assert_allclose(np.asarray(dec_logits),
+                               np.asarray(full_logits), rtol=2e-3, atol=2e-3)
+
+
+def test_decode_matches_forward_swa():
+    cfg = tiny_dense(sliding_window=4)
+    m = build(run_cfg(cfg, adapter="none"))
+    params = m.init(KEY)
+    tokens = jax.random.randint(KEY, (1, 12), 0, cfg.vocab_size)
+    full_logits, _, _ = m.forward(params, {"tokens": tokens})
+    dec_logits = _decode_all(m, params, tokens, s_max=16)  # ring cache = 4
+    np.testing.assert_allclose(np.asarray(dec_logits),
+                               np.asarray(full_logits), rtol=2e-3, atol=2e-3)
+
+
+def test_prefill_then_decode_continues_forward():
+    cfg = tiny_dense()
+    m = build(run_cfg(cfg, adapter="oftv2"))
+    params = m.init(KEY)
+    tokens = jax.random.randint(KEY, (2, 10), 0, cfg.vocab_size)
+    # full forward over 10 tokens gives the reference logits at position 9
+    full_logits, _, _ = m.forward(params, {"tokens": tokens})
+    # prefill on first 9, then decode token 9
+    logits_p, caches = m.prefill(params, {"tokens": tokens[:, :9]})
+    from repro.train.serving import pad_caches
+    caches = pad_caches(m, caches, s_max=16)
+    batch = {"tokens": tokens[:, 9:10],
+             "positions": jnp.full((2, 1), 9, jnp.int32),
+             "cache_index": jnp.full((2,), 9, jnp.int32),
+             "caches": caches}
+    logits_d, _ = m.decode_step(params, batch)
+    np.testing.assert_allclose(np.asarray(logits_d[:, 0]),
+                               np.asarray(full_logits[:, 9]), rtol=2e-3,
+                               atol=2e-3)
+    np.testing.assert_allclose(np.asarray(logits_p),
+                               np.asarray(full_logits[:, :9]), rtol=2e-3,
+                               atol=2e-3)
+
+
+# --------------------------------------------------------- mamba2 ----------
+def test_ssd_chunked_equals_naive():
+    b, s, h, p, g, n = 2, 32, 4, 8, 2, 16
+    k1, k2, k3, k4 = jax.random.split(KEY, 4)
+    x = jax.random.normal(k1, (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(k2, (b, s, h)))
+    a = -jnp.exp(0.1 * jax.random.normal(k3, (h,)))
+    bm = jax.random.normal(k4, (b, s, g, n)) * 0.5
+    cm = jax.random.normal(jax.random.fold_in(KEY, 9), (b, s, g, n)) * 0.5
+    d = jnp.ones((h,))
+    y_naive, h_naive = mamba_mod.ssd_naive(x, dt, a, bm, cm, d)
+    y_chunk, h_chunk = mamba_mod.ssd_chunked(x, dt, a, bm, cm, d, chunk=8)
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_naive),
+                               rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h_chunk), np.asarray(h_naive),
+                               rtol=1e-3, atol=1e-4)
+
+
+def tiny_ssm(**kw):
+    base = dict(name="tiny-ssm", family="ssm", num_layers=2, d_model=64,
+                num_heads=0, num_kv_heads=0, head_dim=0, d_ff=128,
+                vocab_size=128, ssm_state=16, ssm_headdim=16, ssm_expand=2,
+                ssm_chunk=8, use_rope=False)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def test_decode_matches_forward_ssm():
+    cfg = tiny_ssm()
+    m = build(run_cfg(cfg, adapter="oftv2"))
+    params = m.init(KEY)
+    tokens = jax.random.randint(KEY, (2, 16), 0, cfg.vocab_size)
+    full_logits, _, _ = m.forward(params, {"tokens": tokens})
+    dec_logits = _decode_all(m, params, tokens, s_max=16)
+    np.testing.assert_allclose(np.asarray(dec_logits),
+                               np.asarray(full_logits), rtol=3e-3, atol=3e-3)
+
+
+def test_prefill_then_decode_ssm():
+    cfg = tiny_ssm()
+    m = build(run_cfg(cfg, adapter="none"))
+    params = m.init(KEY)
+    tokens = jax.random.randint(KEY, (1, 17), 0, cfg.vocab_size)
+    full_logits, _, _ = m.forward(params, {"tokens": tokens})
+    _, caches = m.prefill(params, {"tokens": tokens[:, :16]})
+    batch = {"tokens": tokens[:, 16:17],
+             "positions": jnp.full((1, 1), 16, jnp.int32),
+             "cache_index": jnp.full((1,), 16, jnp.int32),
+             "caches": caches}
+    logits_d, _ = m.decode_step(params, batch)
+    np.testing.assert_allclose(np.asarray(logits_d[:, 0]),
+                               np.asarray(full_logits[:, 16]), rtol=3e-3,
+                               atol=3e-3)
+
+
+# --------------------------------------------------------- hybrid ----------
+def tiny_hybrid():
+    # capacity_factor 4.0: no capacity drops, so teacher-forced forward ==
+    # step-by-step decode exactly (capacity-dropped tokens are a train-time
+    # regularizer that decode, one token at a time, never experiences)
+    return ModelConfig(name="tiny-jamba", family="hybrid", num_layers=4,
+                       d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                       vocab_size=128, ssm_state=16, ssm_headdim=16,
+                       ssm_expand=2, ssm_chunk=8, attn_period=4,
+                       attn_offset=1, scan_block=4, num_experts=4, top_k=2,
+                       moe_period=2, moe_offset=1, rope_theta=1e4,
+                       capacity_factor=4.0)
+
+
+def test_hybrid_forward_and_decode():
+    cfg = tiny_hybrid()
+    m = build(run_cfg(cfg, adapter="oftv2"))
+    params = m.init(KEY)
+    tokens = jax.random.randint(KEY, (2, 16), 0, cfg.vocab_size)
+    full_logits, aux, _ = m.forward(params, {"tokens": tokens})
+    assert np.all(np.isfinite(np.asarray(full_logits)))
+    dec_logits = _decode_all(m, params, tokens, s_max=16)
+    np.testing.assert_allclose(np.asarray(dec_logits),
+                               np.asarray(full_logits), rtol=5e-3, atol=5e-3)
+
+
+# ------------------------------------------------------------ moe ----------
+def test_moe_forward_loss_and_aux():
+    cfg = tiny_dense(num_experts=4, top_k=2, moe_period=1, name="tiny-moe",
+                     family="moe")
+    m = build(run_cfg(cfg))
+    params = m.init(KEY)
+    tokens = jax.random.randint(KEY, (2, 32), 0, cfg.vocab_size)
+    loss, metrics = m.loss(params, {"tokens": tokens})
+    assert np.isfinite(float(loss))
+    # balanced-ish at init: aux ~= num_layers (E * sum f*p ~ 1 per layer)
+    assert 0.5 * cfg.num_layers < float(metrics["aux"]) < 3 * cfg.num_layers
+
+
+def test_moe_dense_residual():
+    cfg = tiny_dense(num_experts=4, top_k=1, moe_period=1,
+                     dense_residual=True, name="tiny-arctic", family="moe")
+    m = build(run_cfg(cfg))
+    params = m.init(KEY)
+    tokens = jax.random.randint(KEY, (1, 16), 0, cfg.vocab_size)
+    logits, _, _ = m.forward(params, {"tokens": tokens})
+    assert np.all(np.isfinite(np.asarray(logits)))
+
+
+# -------------------------------------------------------- encoder ----------
+def test_encoder_hubert_like():
+    cfg = ModelConfig(name="tiny-hubert", family="encoder", num_layers=2,
+                      d_model=64, num_heads=4, num_kv_heads=4, d_ff=128,
+                      vocab_size=32, is_encoder=True, causal=False,
+                      frontend="audio_frames", frontend_dim=24,
+                      use_rope=True, rope_theta=1e4, act="gelu", glu=False)
+    m = build(run_cfg(cfg))
+    params = m.init(KEY)
+    frames = jax.random.normal(KEY, (2, 16, 24))
+    labels = jax.random.randint(KEY, (2, 16), 0, 32)
+    loss, _ = m.loss(params, {"frames": frames, "labels": labels})
+    assert np.isfinite(float(loss))
+    # bidirectional: flipping future frames must change position-0 logits
+    logits, _, _ = m.forward(params, {"frames": frames, "labels": labels})
+    frames2 = frames.at[:, -1].set(0.0)
+    logits2, _, _ = m.forward(params, {"frames": frames2, "labels": labels})
+    assert float(jnp.max(jnp.abs(logits[:, 0] - logits2[:, 0]))) > 1e-6
+
+
+# ------------------------------------------------------------ vlm ----------
+def test_vlm_forward_loss_decode():
+    cfg = ModelConfig(name="tiny-vlm", family="vlm", num_layers=2,
+                      d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                      vocab_size=128, frontend="vision_patches",
+                      frontend_dim=24, num_frontend_tokens=4, rope_theta=1e4)
+    m = build(run_cfg(cfg))
+    params = m.init(KEY)
+    tokens = jax.random.randint(KEY, (2, 12), 0, cfg.vocab_size)
+    patches = jax.random.normal(KEY, (2, 4, 24))
+    loss, _ = m.loss(params, {"tokens": tokens, "patches": patches})
+    assert np.isfinite(float(loss))
+    logits, _, _ = m.forward(params, {"tokens": tokens, "patches": patches})
+    assert logits.shape == (2, 16, cfg.padded_vocab)
+
+
+# --------------------------------------------- quantized (QOFT) model ------
+@pytest.mark.parametrize("quant", ["nf4", "int8"])
+def test_quantized_model_forward(quant):
+    cfg = tiny_dense()
+    m = build(run_cfg(cfg, adapter="oftv2", quant=quant))
+    params = m.init(KEY)
+    tokens = jax.random.randint(KEY, (2, 16), 0, cfg.vocab_size)
+    loss, _ = m.loss(params, {"tokens": tokens})
+    assert np.isfinite(float(loss))
+    # adapter grads exist and are finite
+    g = jax.grad(lambda a: m.loss({"base": params["base"], "adapter": a},
+                                  {"tokens": tokens})[0])(params["adapter"])
+    leaves = jax.tree_util.tree_leaves(g)
+    assert leaves and all(np.all(np.isfinite(np.asarray(l))) for l in leaves)
+
+
+def test_remat_matches_no_remat():
+    cfg = tiny_dense()
+    m = build(run_cfg(cfg))
+    params = m.init(KEY)
+    tokens = jax.random.randint(KEY, (2, 16), 0, cfg.vocab_size)
+    l1, _ = m.loss(params, {"tokens": tokens}, remat=False)
+    l2, _ = m.loss(params, {"tokens": tokens}, remat=True)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-6)

@@ -1,0 +1,142 @@
+"""NF4 / AWQ / int8 quantization tests + QOFT forward integration."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.config.base import AdapterConfig, QuantConfig
+from repro.core import adapter as ad
+from repro.core import skew
+from repro.quant import awq, int8, nf4
+from repro.quant.common import dequantize_linear, quantize_linear, storage_bytes
+
+
+def _w(key, d_in=128, d_out=64, scale=0.05):
+    return scale * jax.random.normal(key, (d_in, d_out))
+
+
+# ------------------------------------------------------------------ NF4 ----
+@pytest.mark.parametrize("double", [True, False])
+def test_nf4_roundtrip_error_bounded(double):
+    qcfg = QuantConfig(kind="nf4", block_size=64, double_quant=double)
+    w = _w(jax.random.PRNGKey(0))
+    q = nf4.quantize(w, qcfg)
+    back = nf4.dequantize(q, qcfg, jnp.float32)
+    assert back.shape == w.shape
+    # NF4 max relative error within a block is bounded by half the largest
+    # code gap (0.304/2 = 0.152) x absmax (+ small double-quant noise)
+    blocks = np.asarray(w).reshape(-1, 64, w.shape[1])
+    absmax = np.abs(blocks).max(axis=1)
+    err = np.abs(np.asarray(back - w)).reshape(-1, 64, w.shape[1])
+    tol = 0.153 * absmax[:, None, :] + (0.02 * absmax[:, None, :] if double else 0) + 1e-6
+    assert np.all(err <= tol)
+
+
+def test_nf4_codebook_values_exact():
+    """Weights exactly on the NF4 grid quantize losslessly."""
+    qcfg = QuantConfig(kind="nf4", block_size=16, double_quant=False)
+    vals = jnp.asarray(nf4.NF4_TABLE)
+    w = jnp.tile(vals[:, None], (4, 8)) * 0.3   # absmax=0.3 per block
+    q = nf4.quantize(w, qcfg)
+    back = nf4.dequantize(q, qcfg, jnp.float32)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(w), atol=1e-6)
+
+
+def test_nf4_zero_block_safe():
+    qcfg = QuantConfig(kind="nf4", block_size=32, double_quant=False)
+    w = jnp.zeros((64, 8))
+    back = nf4.dequantize(nf4.quantize(w, qcfg), qcfg, jnp.float32)
+    np.testing.assert_allclose(np.asarray(back), 0.0, atol=0)
+
+
+def test_nf4_compression_ratio():
+    qcfg = QuantConfig(kind="nf4", block_size=64, double_quant=True)
+    w = _w(jax.random.PRNGKey(1), 1024, 1024)
+    q = quantize_linear(w, qcfg)
+    ratio = w.size * 4 / storage_bytes(q)
+    assert ratio > 7.0  # ~8x vs fp32 (0.5 byte/param + scales)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 1000), scale=st.floats(1e-3, 10.0))
+def test_property_nf4_scale_equivariance(seed, scale):
+    """NF4 is absmax-normalized per block => quantization commutes with
+    positive per-tensor scaling."""
+    qcfg = QuantConfig(kind="nf4", block_size=32, double_quant=False)
+    w = _w(jax.random.PRNGKey(seed), 64, 16, 1.0)
+    b1 = nf4.dequantize(nf4.quantize(w, qcfg), qcfg, jnp.float32)
+    b2 = nf4.dequantize(nf4.quantize(w * scale, qcfg), qcfg, jnp.float32)
+    np.testing.assert_allclose(np.asarray(b2), np.asarray(b1) * scale,
+                               rtol=1e-4, atol=1e-6)
+
+
+# ------------------------------------------------------------------ AWQ ----
+def test_awq_roundtrip():
+    qcfg = QuantConfig(kind="awq", group_size=32)
+    w = _w(jax.random.PRNGKey(2), 128, 32)
+    q = awq.quantize(w, qcfg)
+    back = awq.dequantize(q, qcfg, jnp.float32)
+    # int4 asymmetric: error <= scale/2 per element
+    scales = np.asarray(q["awq_scale"])
+    err = np.abs(np.asarray(back - w)).reshape(-1, 32, 32)
+    assert np.all(err <= 0.51 * scales[:, None, :] + 1e-6)
+
+
+def test_awq_activation_aware_reduces_salient_error():
+    """Salient channels (big act scale) should see smaller weight error."""
+    qcfg = QuantConfig(kind="awq", group_size=64)
+    key = jax.random.PRNGKey(3)
+    w = _w(key, 128, 64, scale=0.1)
+    s = jnp.ones((128,)).at[:8].set(4.0)   # first 8 channels salient
+    q_plain = awq.quantize(w, qcfg)
+    q_aware = awq.quantize(w, qcfg, act_scales=s)
+    e_plain = np.abs(np.asarray(awq.dequantize(q_plain, qcfg, jnp.float32) - w))
+    e_aware = np.abs(np.asarray(awq.dequantize(q_aware, qcfg, jnp.float32) - w))
+    assert e_aware[:8].mean() < e_plain[:8].mean() * 1.05
+
+
+# ----------------------------------------------------------------- int8 ----
+def test_int8_roundtrip():
+    qcfg = QuantConfig(kind="int8")
+    w = _w(jax.random.PRNGKey(4), 64, 32)
+    back = int8.dequantize(int8.quantize(w, qcfg), qcfg, jnp.float32)
+    scales = np.abs(np.asarray(w)).max(axis=0) / 127.0
+    assert np.all(np.abs(np.asarray(back - w)) <= 0.51 * scales[None, :] + 1e-8)
+
+
+# ------------------------------------------------------- QOFT / QLoRA ------
+@pytest.mark.parametrize("qkind", ["nf4", "awq", "int8"])
+@pytest.mark.parametrize("akind", ["oftv2", "lora"])
+def test_quantized_adapted_linear(qkind, akind):
+    """QOFT (and QLoRA) forward: adapter on top of any quant scheme --
+    the paper's quantization-agnostic claim, exercised for 3 formats."""
+    acfg = AdapterConfig(kind=akind, block_size=16, neumann_terms=4, rank=4)
+    qcfg = QuantConfig(kind=qkind, block_size=32, group_size=32)
+    key = jax.random.PRNGKey(5)
+    x = jax.random.normal(key, (4, 128))
+    w = _w(key, 128, 64)
+    qstate = quantize_linear(w, qcfg)
+    adp = ad.adapter_init(key, "q", 128, 64, acfg)
+    y = ad.adapted_linear(x, qstate, adp, acfg, qcfg)
+    # fresh adapter == identity => equals plain quantized linear
+    y_ref = x @ dequantize_linear(qstate, qcfg, x.dtype)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_qoft_grads_only_touch_adapter():
+    acfg = AdapterConfig(kind="oftv2", block_size=16, neumann_terms=4)
+    qcfg = QuantConfig(kind="nf4", block_size=32, double_quant=False)
+    key = jax.random.PRNGKey(6)
+    x = jax.random.normal(key, (4, 64))
+    qstate = quantize_linear(_w(key, 64, 32), qcfg)
+    adp = {"q_packed": skew.random_skew(key, (4,), 16, scale=0.05)}
+
+    def loss(a):
+        return jnp.sum(jnp.square(ad.adapted_linear(x, qstate, a, acfg, qcfg)))
+
+    g = jax.grad(loss)(adp)
+    assert g["q_packed"].shape == adp["q_packed"].shape
+    assert float(jnp.max(jnp.abs(g["q_packed"]))) > 0

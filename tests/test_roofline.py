@@ -1,0 +1,97 @@
+"""Roofline machinery tests: HLO shape/byte parsing, collective wire-traffic
+model, term computation, analytic corrections."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config.base import ModelConfig
+from repro.roofline import analysis as ra
+from repro.roofline.hw import V5E
+
+HLO_SAMPLE = """
+HloModule jit_step
+%fused (x: bf16[128,4096]) -> bf16[128,4096] { ... }
+%ag = bf16[16,4096,128]{2,1,0} all-gather(%p0), replica_groups=[32,16]<=[512], dimensions={0}
+%ar.1 = f32[1024]{0} all-reduce(%p1), replica_groups={{0,1,2,3},{4,5,6,7}}, to_apply=%add
+%rs = bf16[2048]{0} reduce-scatter(%p2), replica_groups=[4,8]<=[32], dimensions={0}
+%a2a = bf16[64,64]{1,0} all-to-all(%p3), replica_groups=[2,16]<=[32]
+%cp = bf16[8,8]{1,0} collective-permute(%p4), source_target_pairs={{0,1}}
+%agd = bf16[4,4]{1,0} all-gather-done(%x)
+"""
+
+
+def test_shape_bytes():
+    assert ra.shape_bytes("bf16[128,4096]") == 128 * 4096 * 2
+    assert ra.shape_bytes("f32[10]") == 40
+    assert ra.shape_bytes("(bf16[2,2], f32[4])") == 8 + 16
+    assert ra.shape_bytes("pred[]") == 0 or ra.shape_bytes("pred[1]") == 1
+
+
+def test_parse_collectives_kinds_and_groups():
+    total, per_kind = ra.parse_collectives(HLO_SAMPLE, total_devices=512)
+    assert set(per_kind) == {"all-gather", "all-reduce", "reduce-scatter",
+                             "all-to-all", "collective-permute"}
+    # all-gather: result 16*4096*128*2 bytes, group 16 -> B*(15/16)
+    b_ag = 16 * 4096 * 128 * 2
+    np.testing.assert_allclose(per_kind["all-gather"]["wire_bytes"],
+                               b_ag * 15 / 16)
+    # all-reduce: explicit groups of 4 -> 2*B*(3/4)
+    np.testing.assert_allclose(per_kind["all-reduce"]["wire_bytes"],
+                               2 * 4096 * 3 / 4)
+    # reduce-scatter: result B, group 8 -> B*(8-1)
+    np.testing.assert_allclose(per_kind["reduce-scatter"]["wire_bytes"],
+                               2048 * 2 * 7)
+    # -done ops are not double counted
+    assert per_kind["all-gather"]["count"] == 1
+
+
+def test_wire_model_group1_is_free():
+    assert ra._wire_bytes("all-reduce", 100, 1) == 0.0
+
+
+def test_roofline_terms_bottleneck():
+    t = ra.roofline_terms(197e12, 819e7, 50e7)   # 1s compute, 0.01s others
+    assert t["bottleneck"] == "compute"
+    assert abs(t["compute_s"] - 1.0) < 1e-6
+    t2 = ra.roofline_terms(1.0, 819e9, 1.0)
+    assert t2["bottleneck"] == "memory"
+
+
+def test_model_flops_moe_active_only():
+    dense = ModelConfig(name="d", num_layers=4, d_model=256, num_heads=4,
+                        num_kv_heads=4, d_ff=1024, vocab_size=1000)
+    moe = ModelConfig(name="m", family="moe", num_layers=4, d_model=256,
+                      num_heads=4, num_kv_heads=4, d_ff=1024,
+                      vocab_size=1000, num_experts=8, top_k=2)
+    f_dense = ra.model_flops(dense, 1000, "train")
+    f_moe_active = ra.model_flops(moe, 1000, "train")
+    moe_all = moe.param_count(active_only=False)
+    moe_act = moe.param_count(active_only=True)
+    assert moe_all > moe_act                 # 8 experts vs 2 active
+    assert f_moe_active < 6 * moe_all * 1000
+    assert ra.model_flops(dense, 1000, "decode") == pytest.approx(
+        f_dense / 3)
+
+
+def test_attention_correction_scaling():
+    cfg = ModelConfig(name="a", num_layers=2, d_model=512, num_heads=8,
+                      num_kv_heads=2, d_ff=1024, vocab_size=1000,
+                      attn_chunk=128)
+    c1 = ra.attention_correction(cfg, 1024, 32, "prefill", 4, 2)
+    c2 = ra.attention_correction(cfg, 2048, 32, "prefill", 4, 2)
+    # causal attention: flops ~ S^2
+    assert c2["flops"] == pytest.approx(4 * c1["flops"], rel=1e-6)
+    # train multiplies by remat factor 4
+    ct = ra.attention_correction(cfg, 1024, 32, "train", 4, 2)
+    assert ct["flops"] == pytest.approx(4 * c1["flops"], rel=1e-6)
+    # SWA caps the pair count
+    import dataclasses
+    cfg_w = dataclasses.replace(cfg, sliding_window=128)
+    cw = ra.attention_correction(cfg_w, 2048, 32, "prefill", 4, 2)
+    assert cw["flops"] < c2["flops"] / 3
+    # ssm has no attention
+    cfg_s = ModelConfig(name="s", family="ssm", num_layers=2, d_model=64,
+                        num_heads=0, num_kv_heads=0, d_ff=0,
+                        vocab_size=100, ssm_state=16)
+    assert ra.attention_correction(cfg_s, 1024, 8, "train", 2, 2)["flops"] \
+        == 0.0
