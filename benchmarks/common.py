@@ -9,9 +9,16 @@ import jax
 
 Row = Tuple[str, float, str]
 
+# Flipped by ``benchmarks/run.py --smoke``: every benchmark executes exactly
+# one timed step (no warmup beyond the compile call) so CI can catch
+# benchmark bit-rot in minutes without caring about the numbers.
+SMOKE = False
+
 
 def time_jit(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
     """Median wall time (us) of fn(*args) after jit warmup."""
+    if SMOKE:
+        iters, warmup = 1, 0
     for _ in range(warmup):
         out = fn(*args)
         jax.block_until_ready(out)

@@ -29,6 +29,11 @@ def measured_rows(d=1024, n=1024, tokens=2048):
                                         neumann_terms=5),
         "fig1/oftv2_cnp": AdapterConfig(kind="oftv2", block_size=32,
                                         neumann_terms=5),
+        # one-kernel rotate+matmul (interpret-mode Pallas on CPU: validates
+        # the trajectory; the HBM win shows in the analytic rows below)
+        "fig1/oftv2_cnp_fused": AdapterConfig(kind="oftv2", block_size=32,
+                                              neumann_terms=5,
+                                              fuse_linear=True),
     }
     for name, acfg in variants.items():
         def step(p, x, w, acfg=acfg):
@@ -66,6 +71,15 @@ def analytic_rows():
                  f"{v2_bytes:.3e}"))
     rows.append(("fig1/analytic_memory_ratio", 0.0,
                  f"{v1_bytes / v2_bytes:.1f}x"))
+    # fused-vs-unfused HBM traffic for one adapted linear at the same scale
+    # (the kernel-fusion contribution on top of the paper's v1->v2 win)
+    from benchmarks.kernels_bench import linear_hbm_bytes
+    for tag, qbs in [("oftv2", 0), ("qoft_nf4", 64)]:
+        hbm_u = linear_hbm_bytes(tokens, d, n, b, fused=False, quant_bs=qbs)
+        hbm_f = linear_hbm_bytes(tokens, d, n, b, fused=True, quant_bs=qbs)
+        rows.append((f"fig1/analytic_{tag}_fused_hbm_traffic", 0.0,
+                     f"unfused={hbm_u:.3e};fused={hbm_f:.3e};"
+                     f"ratio={hbm_u / hbm_f:.2f}x"))
     return rows
 
 

@@ -1,6 +1,11 @@
 """Pallas kernel benchmarks: jnp reference path vs the kernel in interpret
 mode (CPU container: interpret mode validates semantics; wall-clock wins
-require real TPU -- the XLA path below is what production uses on CPU)."""
+require real TPU -- the XLA path below is what production uses on CPU).
+
+Fused-linear rows: measured XLA-unfused baselines + interpret-mode fused
+correctness + an analytic HBM-traffic comparison (the quantity the fusion
+actually buys; both paths are HBM-bound at these arithmetic intensities, so
+traffic ratio ~= TPU speedup ceiling)."""
 from __future__ import annotations
 
 import jax
@@ -11,6 +16,98 @@ from repro.core import skew
 from repro.core.cayley import build_rotation
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
+from repro.roofline.hw import V5E
+
+
+def linear_hbm_bytes(t: int, k: int, n: int, b: int, fused: bool,
+                     quant_bs: int = 0, dt: int = 4) -> int:
+    """HBM bytes per fused-vs-unfused OFTv2/QOFT linear forward.
+
+    Unfused launches each stage as its own kernel, so every intermediate
+    (rotated activations; dequantized W in the QOFT path) round-trips
+    through HBM.  Fused reads x, R, W(/codes+absmax) once and writes y."""
+    r_bytes = (k // b) * b * b * dt
+    x_in, y_out = t * k * dt, t * n * dt
+    if quant_bs:
+        w_read = (k // 2) * n + (k // quant_bs) * n * 4   # codes + absmax
+        w_roundtrip = 2 * k * n * dt                      # dense W out + in
+    else:
+        w_read = k * n * dt
+        w_roundtrip = 0
+    fused_total = x_in + r_bytes + w_read + y_out
+    if fused:
+        return fused_total
+    return fused_total + w_roundtrip + 2 * t * k * dt     # + xr out + in
+
+
+def fused_rows():
+    """Fused-vs-unfused comparison entries (BENCH_* trajectory metric)."""
+    rows = []
+    key = jax.random.PRNGKey(1)
+    b, bs = 32, 64
+
+    for t, d, n in [(2048, 1024, 1024), (8192, 4096, 4096)]:
+        x = jax.random.normal(key, (t, d), jnp.float32)
+        w = 0.02 * jax.random.normal(key, (d, n), jnp.float32)
+        qp = skew.random_skew(key, (d // b,), b, scale=0.05)
+        r = build_rotation(qp, b, 5)
+
+        unfused = jax.jit(kref.oftv2_linear_ref)
+        us = time_jit(unfused, x, r, w)
+        rows.append((f"kernel/oftv2_linear/unfused_xla/{t}x{d}x{n}", us,
+                     f"b={b}"))
+
+        hbm_u = linear_hbm_bytes(t, d, n, b, fused=False)
+        hbm_f = linear_hbm_bytes(t, d, n, b, fused=True)
+        rows.append((
+            f"kernel/oftv2_linear/fused_vs_unfused/{t}x{d}x{n}", 0.0,
+            f"hbm_unfused={hbm_u:.3e};hbm_fused={hbm_f:.3e};"
+            f"traffic_ratio={hbm_u / hbm_f:.2f}x;"
+            f"hbm_bound_us_saved={(hbm_u - hbm_f) / V5E.hbm_bw * 1e6:.1f}"))
+
+        from repro.config.base import QuantConfig
+        from repro.quant import nf4
+        q = nf4.quantize(w, QuantConfig(kind="nf4", block_size=bs,
+                                        double_quant=False))
+        unfused_q = jax.jit(lambda x, r, c, a: kref.qoft_linear_ref(
+            x, r, c, a, bs))
+        us = time_jit(unfused_q, x, r, q["nf4_codes"], q["absmax"])
+        rows.append((f"kernel/qoft_linear/unfused_xla/{t}x{d}x{n}", us,
+                     f"b={b};bs={bs}"))
+
+        hbm_u = linear_hbm_bytes(t, d, n, b, fused=False, quant_bs=bs)
+        hbm_f = linear_hbm_bytes(t, d, n, b, fused=True, quant_bs=bs)
+        rows.append((
+            f"kernel/qoft_linear/fused_vs_unfused/{t}x{d}x{n}", 0.0,
+            f"hbm_unfused={hbm_u:.3e};hbm_fused={hbm_f:.3e};"
+            f"traffic_ratio={hbm_u / hbm_f:.2f}x;"
+            f"hbm_bound_us_saved={(hbm_u - hbm_f) / V5E.hbm_bw * 1e6:.1f}"))
+
+    # interpret-mode correctness + one measured fused call (small size; CPU
+    # interpret timing is a semantics check, not a perf claim)
+    t, d, n = 256, 512, 256
+    x = jax.random.normal(key, (t, d), jnp.float32)
+    w = 0.02 * jax.random.normal(key, (d, n), jnp.float32)
+    qp = skew.random_skew(key, (d // b,), b, scale=0.05)
+    r = build_rotation(qp, b, 5)
+    us = time_jit(kops.oftv2_linear_fused, x, r, w)
+    err = float(jnp.max(jnp.abs(kops.oftv2_linear_fused(x, r, w)
+                                - kref.oftv2_linear_ref(x, r, w))))
+    rows.append((f"kernel/oftv2_linear/fused_interpret/{t}x{d}x{n}", us,
+                 f"max_err={err:.2e}"))
+    from repro.config.base import QuantConfig
+    from repro.quant import nf4
+    q = nf4.quantize(w, QuantConfig(kind="nf4", block_size=bs,
+                                    double_quant=False))
+    fused_q = jax.jit(lambda x, r, c, a: kops.qoft_linear_fused(x, r, c, a,
+                                                                bs))
+    us = time_jit(fused_q, x, r, q["nf4_codes"], q["absmax"])
+    err = float(jnp.max(jnp.abs(
+        fused_q(x, r, q["nf4_codes"], q["absmax"])
+        - kref.qoft_linear_ref(x, r, q["nf4_codes"], q["absmax"], bs))))
+    rows.append((f"kernel/qoft_linear/fused_interpret/{t}x{d}x{n}", us,
+                 f"max_err={err:.2e}"))
+    return rows
 
 
 def run():
@@ -54,7 +151,7 @@ def run():
                                 - kref.block_oft_apply_ref(x, r))))
     rows.append(("kernel/block_oft_apply/interpret_max_err", 0.0,
                  f"{err:.2e}"))
-    return rows
+    return rows + fused_rows()
 
 
 if __name__ == "__main__":

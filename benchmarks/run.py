@@ -1,5 +1,9 @@
 """Benchmark driver: one module per paper table/figure. Prints
-``name,us_per_call,derived`` CSV rows (benchmarks/README convention)."""
+``name,us_per_call,derived`` CSV rows (benchmarks/README convention).
+
+``--smoke``: execute every benchmark for exactly one step (interpret-mode
+Pallas on CPU) -- numbers are meaningless but bit-rot (import errors, shape
+breaks, renamed APIs) is caught in CI in minutes."""
 from __future__ import annotations
 
 import sys
@@ -7,6 +11,16 @@ import traceback
 
 
 def main() -> None:
+    from benchmarks import common
+    unknown = [a for a in sys.argv[1:] if a != "--smoke"]
+    if unknown:
+        # a typo'd --smoke silently running the full multi-minute suite is
+        # exactly the kind of CI bit-rot this driver exists to catch
+        print(f"unknown argument(s): {unknown}; usage: run.py [--smoke]",
+              file=sys.stderr)
+        sys.exit(2)
+    if "--smoke" in sys.argv:
+        common.SMOKE = True
     from benchmarks import (fig1_oft_vs_oftv2, fig4_memory, kernels_bench,
                             requant_error, roofline_report, table12_speed,
                             table345_quality)

@@ -1,0 +1,23 @@
+"""Repo-level pytest configuration.
+
+* Puts ``src`` on the path so the tier-1 command works without installing.
+* Installs a minimal ``hypothesis`` fallback when the real package is not
+  importable (hermetic containers without network); CI installs the real
+  one from requirements-dev.txt.
+
+Markers (``slow``, ``kernels``) are registered in pyproject.toml
+[tool.pytest.ini_options] -- the single source of truth.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "src"))
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "tests"))
+    from _hypothesis_fallback import install as _install_hypothesis_fallback
+    _install_hypothesis_fallback()

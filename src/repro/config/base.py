@@ -191,6 +191,11 @@ class AdapterConfig:
                                 "in_proj", "out_proj")
     adapt_experts: bool = False
     use_pallas: bool = False   # route adapter math through Pallas kernels
+    # Fused OFTv2 forward: one Pallas kernel does rotate+matmul (and NF4
+    # dequant in the QOFT path) so rotated activations / dequantized weights
+    # never round-trip through HBM. Only meaningful for kind == "oftv2";
+    # implies the Pallas path for the adapted linear itself.
+    fuse_linear: bool = False
 
     @property
     def is_oft(self) -> bool:

@@ -47,6 +47,18 @@ def adapter_param_count(name: str, d_in: int, d_out: int,
     return lora_lib.lora_param_count(d_in, d_out, acfg.rank)
 
 
+def fusion_mode(acfg: AdapterConfig, qcfg: QuantConfig,
+                qstate_keys=()) -> str:
+    """Which forward an adapted linear will take: 'qoft_fused' (NF4 dequant +
+    rotate + matmul, one kernel), 'oftv2_fused' (rotate + matmul, one
+    kernel), or 'unfused'."""
+    if acfg.kind != "oftv2" or not acfg.fuse_linear:
+        return "unfused"
+    if qcfg.kind == "nf4" and (not qstate_keys or "nf4_codes" in qstate_keys):
+        return "qoft_fused"
+    return "oftv2_fused"
+
+
 def adapted_linear(x: jnp.ndarray, qstate: dict, adapter: Optional[dict],
                    acfg: AdapterConfig, qcfg: QuantConfig,
                    constrain=None) -> jnp.ndarray:
@@ -54,6 +66,10 @@ def adapted_linear(x: jnp.ndarray, qstate: dict, adapter: Optional[dict],
 
     OFTv2/QOFT path never touches the quant state before the matmul --
     quantization-agnostic by construction (paper §4, eq. 3).
+
+    With acfg.fuse_linear, the OFTv2 forward is ONE Pallas kernel
+    (rotate+matmul; plus in-kernel NF4 dequant for QOFT, so a dense W never
+    exists in HBM). See repro.core.oft.oftv2_linear / repro.kernels.
 
     constrain (optional, on-mesh only): gather-codes optimization -- the
     ZeRO-3 all-gather is forced onto the uint8 quant state (replicate it,
@@ -63,12 +79,19 @@ def adapted_linear(x: jnp.ndarray, qstate: dict, adapter: Optional[dict],
     if (constrain is not None and qcfg.gather_codes and qcfg.enabled
             and "w" not in qstate):
         qstate = {k: constrain(v) for k, v in qstate.items()}
+    if (adapter is not None
+            and fusion_mode(acfg, qcfg, qstate.keys()) == "qoft_fused"):
+        from repro.kernels import ops as kops
+        from repro.quant import nf4
+        r_blocks = oft_lib.build_r(adapter, acfg)
+        return kops.qoft_linear_fused(x, r_blocks, qstate["nf4_codes"],
+                                      nf4.absmax_fp32(qstate, qcfg),
+                                      qcfg.block_size)
     w = dequantize_linear(qstate, qcfg, x.dtype)
     if adapter is None or acfg.kind == "none":
         return x @ w
     if acfg.kind == "oftv2":
-        xr = oft_lib.oftv2_transform_input(x, adapter, acfg)
-        return xr @ w
+        return oft_lib.oftv2_linear(x, adapter, acfg, w)
     if acfg.kind == "oftv1":
         # Weight-centric baseline: materializes (and backprops through) the
         # transformed d_in x d_out weight every call -- the paper's bottleneck.

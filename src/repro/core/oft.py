@@ -72,6 +72,20 @@ def oftv2_transform_input(x: jnp.ndarray, params: dict,
     return apply_blockdiag(x, r_blocks)
 
 
+def oftv2_linear(x: jnp.ndarray, params: dict, cfg: AdapterConfig,
+                 w: jnp.ndarray) -> jnp.ndarray:
+    """Full input-centric adapted linear: y = (x @ R_bd) @ W.
+
+    With cfg.fuse_linear the rotation and matmul run as ONE Pallas kernel
+    (rotated activations never hit HBM); otherwise rotate-then-matmul as two
+    ops. Numerics are identical -- tests/test_kernels.py asserts it."""
+    if cfg.fuse_linear:
+        from repro.kernels import ops as kops
+        r_blocks = build_r(params, cfg)
+        return kops.oftv2_linear_fused(x, r_blocks, w)
+    return oftv2_transform_input(x, params, cfg) @ w
+
+
 def oftv1_transform_weight(w: jnp.ndarray, params: dict,
                            cfg: AdapterConfig) -> jnp.ndarray:
     """Weight-centric OFT baseline: W' = R_bd @ W (matrix-matrix, cubic).

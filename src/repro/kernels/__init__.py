@@ -1,11 +1,17 @@
 """Pallas TPU kernels for the paper's compute hot-spots (validated in
 interpret mode on CPU; compiled path on real TPUs):
 
-  block_oft_apply -- OFTv2's input-centric block-diagonal transform
-  cayley_neumann  -- packed-skew -> rotation builder (the paper's CUDA
-                     kernel, TPU-adapted)
-  nf4_dequant     -- QOFT/QLoRA frozen-weight LUT dequantization
+  block_oft_apply    -- OFTv2's input-centric block-diagonal transform
+  cayley_neumann     -- packed-skew -> rotation builder (the paper's CUDA
+                        kernel, TPU-adapted)
+  nf4_dequant        -- QOFT/QLoRA frozen-weight LUT dequantization
+  oftv2_linear_fused -- rotation + matmul in one kernel (no HBM round-trip
+                        for the rotated activations)
+  qoft_linear_fused  -- NF4 dequant + rotation + matmul in one kernel (no
+                        full-precision W ever materialized in HBM)
 """
-from repro.kernels.ops import block_oft_apply, cayley_neumann, nf4_dequant
+from repro.kernels.ops import (block_oft_apply, cayley_neumann, nf4_dequant,
+                               oftv2_linear_fused, qoft_linear_fused)
 
-__all__ = ["block_oft_apply", "cayley_neumann", "nf4_dequant"]
+__all__ = ["block_oft_apply", "cayley_neumann", "nf4_dequant",
+           "oftv2_linear_fused", "qoft_linear_fused"]

@@ -1,0 +1,89 @@
+"""Pallas TPU kernel: fused OFTv2 linear -- block-diagonal rotation of the
+input tile feeding straight into the x @ W matmul accumulator.
+
+Unfused, the OFTv2 hot path is two kernels with an HBM round-trip between
+them: block_oft_apply writes the rotated activations (T x K) to HBM, then
+the frozen matmul reads them back.  Fused, each program rotates its
+(TOKEN_TILE, K_TILE) activation tile in VMEM/registers and immediately
+contracts it with the matching (K_TILE, N_TILE) weight tile:
+
+  * grid = (token tiles, out tiles, k tiles); k is innermost so the fp32
+    output tile accumulates across k without leaving VMEM.
+  * the rotation is a batched small-matmul on the MXU (block index as the
+    dot_general batch dim, exactly as in block_oft_apply); its result is
+    reshaped in-register into the (TOKEN_TILE, K_TILE) matmul operand.
+  * HBM traffic per step: x + W + y once each.  The rotated activations
+    never exist in HBM -- the paper's "matrix-free" input-centric transform
+    taken to its logical endpoint (DESIGN.md section 4).
+
+K_TILE must be a multiple of the OFT block size b so rotation blocks never
+straddle a k tile (ops.py picks tiles accordingly).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TOKEN_TILE = 256
+DEFAULT_N_TILE = 256
+DEFAULT_K_TILE = 512
+
+
+def _rotate_tile(x: jnp.ndarray, r: jnp.ndarray) -> jnp.ndarray:
+    """(TT, KT) x tile, (KT//b, b, b) rotations -> (TT, KT) rotated tile."""
+    tt, kt = x.shape
+    kb, b, _ = r.shape
+    xr = jax.lax.dot_general(
+        x.reshape(tt, kb, b),
+        r,
+        # contract x's per-block feature dim with r's input dim; batch over
+        # the OFT block index
+        dimension_numbers=(((2,), (1,)), ((1,), (0,))),
+        preferred_element_type=jnp.float32,
+    )                                    # (kb, tt, b)
+    return xr.transpose(1, 0, 2).reshape(tt, kt)
+
+
+def _kernel(x_ref, r_ref, w_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)   # (TT, KT)
+    r = r_ref[...].astype(jnp.float32)   # (KT//b, b, b)
+    w = w_ref[...].astype(jnp.float32)   # (KT, NT)
+    acc = jnp.dot(_rotate_tile(x, r), w, preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += acc
+
+
+@functools.partial(jax.jit, static_argnames=("token_tile", "n_tile", "k_tile",
+                                             "interpret"))
+def oftv2_linear_fused_kernel(x2: jnp.ndarray, r_blocks: jnp.ndarray,
+                              w: jnp.ndarray,
+                              token_tile: int = DEFAULT_TOKEN_TILE,
+                              n_tile: int = DEFAULT_N_TILE,
+                              k_tile: int = DEFAULT_K_TILE,
+                              interpret: bool = True) -> jnp.ndarray:
+    """x2: (T, K) activations, r_blocks: (K//b, b, b), w: (K, N) -> (T, N)
+    fp32 (callers cast).  T % token_tile == N % n_tile == K % k_tile == 0 and
+    k_tile % b == 0 (ops.py pads/picks)."""
+    t, k_dim = x2.shape
+    n = w.shape[1]
+    rb, b, _ = r_blocks.shape
+    grid = (t // token_tile, n // n_tile, k_dim // k_tile)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((token_tile, k_tile), lambda i, j, k: (i, k)),
+            pl.BlockSpec((k_tile // b, b, b), lambda i, j, k: (k, 0, 0)),
+            pl.BlockSpec((k_tile, n_tile), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((token_tile, n_tile), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((t, n), jnp.float32),
+        interpret=interpret,
+    )(x2, r_blocks, w)

@@ -9,6 +9,12 @@ Backward rules:
   * cayley_neumann: forward via kernel, backward via jax.vjp of the jnp
     oracle (identical math, so gradients are exact).
   * nf4_dequant: non-differentiable by design (frozen quantized weights).
+  * oftv2_linear_fused: with gW = g @ W^T, dx is the block-diagonal apply of
+    gW with R^T (the transpose trick), dR the token-contraction of x with
+    gW, dW the matmul of the (recomputed, never-stored) rotated activations
+    with g.
+  * qoft_linear_fused: same as oftv2_linear_fused after one in-backward
+    dequant of W; codes/absmax are frozen (zero cotangent).
 """
 from __future__ import annotations
 
@@ -16,11 +22,14 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import ref as kref
 from repro.kernels.block_oft_apply import block_oft_apply_kernel
 from repro.kernels.cayley_neumann import cayley_neumann_kernel
 from repro.kernels.nf4_dequant import nf4_dequant_kernel
+from repro.kernels.oftv2_linear_fused import oftv2_linear_fused_kernel
+from repro.kernels.qoft_linear_fused import qoft_linear_fused_kernel
 
 
 def _interpret() -> bool:
@@ -32,6 +41,10 @@ def _pick_tile(n: int, candidates) -> int:
         if n % c == 0:
             return c
     return n
+
+
+def _round_up(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m
 
 
 # ------------------------------------------------------ block_oft_apply ----
@@ -110,6 +123,133 @@ def _cn_bwd(block_size, neumann_terms, q_packed, g):
 
 
 cayley_neumann.defvjp(_cn_fwd, _cn_bwd)
+
+
+# --------------------------------------------------- fused OFTv2 linears ----
+def _flatten_tokens(x: jnp.ndarray):
+    lead = x.shape[:-1]
+    t = 1
+    for s in lead:
+        t *= s
+    return x.reshape(t, x.shape[-1]), lead, t
+
+
+def _fused_tiles(t: int, k_dim: int, n: int, k_align: int):
+    """(token_tile, t_padded, n_tile, k_tile) for the fused linear kernels.
+
+    Tokens are zero-padded up to the next sublane multiple (8) -- never a
+    full token tile, which could nearly double the work for t just past a
+    tile boundary -- and the token tile is then picked among divisors of the
+    padded count; n/k tiles must divide exactly, falling back to the full
+    dim, with k_tile constrained to multiples of k_align (OFT block size,
+    lcm'd with the quant block in the QOFT path) so no structure straddles
+    a tile."""
+    t_pad = _round_up(max(t, 1), 8)
+    token_tile = _pick_tile(t_pad, [256, 128, 64, 32, 16, 8])
+    n_tile = _pick_tile(n, [256, 128, 64, 32, 16, 8, 4, 2, 1])
+    k_tile = _pick_tile(k_dim, [c for c in (512, 256, 128, 64, 32, 16, 8)
+                                if c % k_align == 0])
+    return token_tile, t_pad, n_tile, k_tile
+
+
+def _oftv2_fused_raw(x: jnp.ndarray, r_blocks: jnp.ndarray,
+                     w: jnp.ndarray) -> jnp.ndarray:
+    rb, b, _ = r_blocks.shape
+    x2, lead, t = _flatten_tokens(x)
+    k_dim, n = w.shape
+    token_tile, t_pad, n_tile, k_tile = _fused_tiles(t, k_dim, n, b)
+    if t_pad != t:
+        x2 = jnp.pad(x2, ((0, t_pad - t), (0, 0)))
+    y2 = oftv2_linear_fused_kernel(x2, r_blocks, w, token_tile=token_tile,
+                                   n_tile=n_tile, k_tile=k_tile,
+                                   interpret=_interpret())
+    return y2[:t].astype(x.dtype).reshape(lead + (n,))
+
+
+def _fused_bwd_core(x, r_blocks, w, g):
+    """Shared backward math for both fused linears (w already dense)."""
+    gw = jnp.einsum("...n,kn->...k", g.astype(jnp.float32),
+                    w.astype(jnp.float32)).astype(g.dtype)
+    dx = _block_apply_raw(gw, jnp.swapaxes(r_blocks, -1, -2))
+    rb, b, _ = r_blocks.shape
+    x3, _, t = _flatten_tokens(x)
+    g3, _, _ = _flatten_tokens(gw)
+    dr = jnp.einsum("trb,trc->rbc",
+                    x3.reshape(t, rb, b).astype(jnp.float32),
+                    g3.reshape(t, rb, b).astype(jnp.float32)
+                    ).astype(r_blocks.dtype)
+    xr = _block_apply_raw(x, r_blocks)
+    xr2, _, _ = _flatten_tokens(xr)
+    g2, _, _ = _flatten_tokens(g)
+    dw = jnp.einsum("tk,tn->kn", xr2.astype(jnp.float32),
+                    g2.astype(jnp.float32)).astype(w.dtype)
+    return dx, dr, dw
+
+
+@jax.custom_vjp
+def oftv2_linear_fused(x: jnp.ndarray, r_blocks: jnp.ndarray,
+                       w: jnp.ndarray) -> jnp.ndarray:
+    """y = (x @ blockdiag(R)) @ W in one Pallas kernel: the rotated
+    activations never touch HBM.  x: (..., K), r_blocks: (K//b, b, b),
+    w: (K, N) -> (..., N)."""
+    return _oftv2_fused_raw(x, r_blocks, w)
+
+
+def _olf_fwd(x, r_blocks, w):
+    return _oftv2_fused_raw(x, r_blocks, w), (x, r_blocks, w)
+
+
+def _olf_bwd(res, g):
+    x, r_blocks, w = res
+    return _fused_bwd_core(x, r_blocks, w, g)
+
+
+oftv2_linear_fused.defvjp(_olf_fwd, _olf_bwd)
+
+
+def _qoft_fused_raw(x, r_blocks, codes, absmax, block_size):
+    rb, b, _ = r_blocks.shape
+    x2, lead, t = _flatten_tokens(x)
+    k_dim = codes.shape[0] * 2
+    n = codes.shape[1]
+    # code pairs (2), absmax blocks and rotation blocks must all tile evenly
+    align = int(np.lcm(np.lcm(2, block_size), b))
+    token_tile, t_pad, n_tile, k_tile = _fused_tiles(t, k_dim, n, align)
+    if t_pad != t:
+        x2 = jnp.pad(x2, ((0, t_pad - t), (0, 0)))
+    y2 = qoft_linear_fused_kernel(x2, r_blocks, codes, absmax, block_size,
+                                  token_tile=token_tile, n_tile=n_tile,
+                                  k_tile=k_tile, interpret=_interpret())
+    return y2[:t].astype(x.dtype).reshape(lead + (n,))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def qoft_linear_fused(x: jnp.ndarray, r_blocks: jnp.ndarray,
+                      codes: jnp.ndarray, absmax: jnp.ndarray,
+                      block_size: int) -> jnp.ndarray:
+    """y = (x @ blockdiag(R)) @ dequant_nf4(codes, absmax) in one Pallas
+    kernel: neither the rotated activations nor a full-precision W ever
+    touch HBM.  x: (..., K), r_blocks: (K//b, b, b), codes: (K//2, N) uint8,
+    absmax: (K//block_size, N) f32 -> (..., N)."""
+    return _qoft_fused_raw(x, r_blocks, codes, absmax, block_size)
+
+
+def _qlf_fwd(x, r_blocks, codes, absmax, block_size):
+    out = _qoft_fused_raw(x, r_blocks, codes, absmax, block_size)
+    return out, (x, r_blocks, codes, absmax)
+
+
+def _qlf_bwd(block_size, res, g):
+    x, r_blocks, codes, absmax = res
+    # one dequant in the backward (the backward's g @ W^T needs dense W
+    # regardless); frozen quant state gets zero cotangent.
+    w = nf4_dequant(codes, absmax, block_size, dtype=jnp.float32)
+    dx, dr, _ = _fused_bwd_core(x, r_blocks, w, g)
+    d_codes = np.zeros(codes.shape, dtype=jax.dtypes.float0)
+    return dx, dr, d_codes, jnp.zeros_like(absmax)
+
+
+qoft_linear_fused.defvjp(_qlf_fwd, _qlf_bwd)
 
 
 # ---------------------------------------------------------- nf4_dequant ----

@@ -1,0 +1,100 @@
+"""Pallas TPU kernel: fused QOFT linear -- NF4 dequant + block-diagonal
+rotation + matmul in one pass.
+
+The QOFT (quantized OFTv2) forward unfused is three kernels with two HBM
+round-trips: nf4_dequant materializes the full-precision W (the single
+largest HBM write in the step), block_oft_apply writes rotated activations,
+then the matmul reads both back.  Fused, each program
+
+  1. dequantizes one (K_TILE, N_TILE) weight tile from packed codes +
+     absmax in VMEM (LUT gather on the VPU, shift/mask unpack, per-block
+     absmax broadcast -- same math as nf4_dequant),
+  2. rotates its (TOKEN_TILE, K_TILE) activation tile (batched small-matmul
+     on the MXU, as in oftv2_linear_fused),
+  3. feeds both straight into the fp32 matmul accumulator.
+
+A full-precision W never exists in HBM -- the quantized path's memory story
+(paper section 4: QOFT beats QLoRA on memory) holds on the wire, not just in
+parameter storage.
+
+K_TILE must be a multiple of lcm(2, absmax block, OFT block) so code pairs,
+absmax blocks and rotation blocks never straddle a k tile (ops.py picks
+tiles accordingly).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.oftv2_linear_fused import _rotate_tile
+from repro.quant.nf4 import NF4_TABLE
+
+DEFAULT_TOKEN_TILE = 256
+DEFAULT_N_TILE = 128
+DEFAULT_K_TILE = 512
+
+
+def _make_kernel(block_size: int, k_tile: int):
+    def kernel(x_ref, r_ref, codes_ref, absmax_ref, table_ref, o_ref):
+        x = x_ref[...].astype(jnp.float32)       # (TT, KT)
+        r = r_ref[...].astype(jnp.float32)       # (KT//b, b, b)
+        codes = codes_ref[...]                   # (KT//2, NT) uint8
+        absmax = absmax_ref[...]                 # (KT//bs, NT) f32
+        table = table_ref[...]                   # (16,) f32
+        nt = codes.shape[1]
+
+        hi = (codes >> 4).astype(jnp.int32)
+        lo = (codes & 0xF).astype(jnp.int32)
+        idx = jnp.stack([hi, lo], axis=1).reshape(k_tile, nt)  # interleave
+        vals = jnp.take(table, idx.reshape(-1), axis=0).reshape(k_tile, nt)
+        w = (vals.reshape(k_tile // block_size, block_size, nt)
+             * absmax[:, None, :]).reshape(k_tile, nt)
+
+        acc = jnp.dot(_rotate_tile(x, r), w,
+                      preferred_element_type=jnp.float32)
+
+        @pl.when(pl.program_id(2) == 0)
+        def _init():
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        o_ref[...] += acc
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("block_size", "token_tile",
+                                             "n_tile", "k_tile", "interpret"))
+def qoft_linear_fused_kernel(x2: jnp.ndarray, r_blocks: jnp.ndarray,
+                             codes: jnp.ndarray, absmax: jnp.ndarray,
+                             block_size: int,
+                             token_tile: int = DEFAULT_TOKEN_TILE,
+                             n_tile: int = DEFAULT_N_TILE,
+                             k_tile: int = DEFAULT_K_TILE,
+                             interpret: bool = True) -> jnp.ndarray:
+    """x2: (T, K), r_blocks: (K//b, b, b), codes: (K//2, N) uint8,
+    absmax: (K//block_size, N) f32 -> (T, N) fp32 (callers cast).
+
+    T % token_tile == N % n_tile == K % k_tile == 0 and
+    k_tile % lcm(2, block_size, b) == 0 (ops.py pads/picks)."""
+    t, k_dim = x2.shape
+    n = codes.shape[1]
+    rb, b, _ = r_blocks.shape
+    table = jnp.asarray(NF4_TABLE)
+    grid = (t // token_tile, n // n_tile, k_dim // k_tile)
+    return pl.pallas_call(
+        _make_kernel(block_size, k_tile),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((token_tile, k_tile), lambda i, j, k: (i, k)),
+            pl.BlockSpec((k_tile // b, b, b), lambda i, j, k: (k, 0, 0)),
+            pl.BlockSpec((k_tile // 2, n_tile), lambda i, j, k: (k, j)),
+            pl.BlockSpec((k_tile // block_size, n_tile),
+                         lambda i, j, k: (k, j)),
+            pl.BlockSpec((16,), lambda i, j, k: (0,)),
+        ],
+        out_specs=pl.BlockSpec((token_tile, n_tile), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((t, n), jnp.float32),
+        interpret=interpret,
+    )(x2, r_blocks, codes, absmax, table)

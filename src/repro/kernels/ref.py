@@ -29,6 +29,22 @@ def cayley_neumann_ref(q_packed: jnp.ndarray, block_size: int,
     return _cayley.build_rotation(q_packed, block_size, neumann_terms)
 
 
+def oftv2_linear_ref(x: jnp.ndarray, r_blocks: jnp.ndarray,
+                     w: jnp.ndarray) -> jnp.ndarray:
+    """Fused OFTv2 linear oracle: (x @ blockdiag(R)) @ W, fp32 accumulate."""
+    xr = block_oft_apply_ref(x.astype(jnp.float32),
+                             r_blocks.astype(jnp.float32))
+    return (xr @ w.astype(jnp.float32)).astype(x.dtype)
+
+
+def qoft_linear_ref(x: jnp.ndarray, r_blocks: jnp.ndarray,
+                    codes: jnp.ndarray, absmax: jnp.ndarray,
+                    block_size: int) -> jnp.ndarray:
+    """Fused QOFT linear oracle: dequant NF4 W, rotate x, matmul."""
+    w = nf4_dequant_ref(codes, absmax, block_size, dtype=jnp.float32)
+    return oftv2_linear_ref(x, r_blocks, w)
+
+
 def nf4_dequant_ref(codes: jnp.ndarray, absmax: jnp.ndarray,
                     block_size: int, dtype=jnp.float32) -> jnp.ndarray:
     """codes: (d_in//2, d_out) uint8 packed NF4, absmax: (d_in//bs, d_out)."""

@@ -3,7 +3,9 @@
 ``linear_defs`` gives the base (frozen) parameter layout for one linear --
 raw bf16 or NF4/AWQ/int8 quantized -- and ``adapter_defs`` the trainable
 adapter layout (OFT packed-skew or LoRA A/B). The apply path is
-``repro.core.adapter.adapted_linear``.
+``repro.core.adapter.adapted_linear``; with ``AdapterConfig.fuse_linear``
+that path collapses to one Pallas kernel per linear
+(``linear_fusion_mode`` reports which variant a given linear gets).
 """
 from __future__ import annotations
 
@@ -94,6 +96,27 @@ def linear_defs(d_in: int, d_out: int, in_axis: Optional[str],
         return {"w": ParamDef((d_in, d_out), (in_axis, out_axis), "normal",
                               scale=scale)}
     return QuantLinearDef(d_in, d_out, in_axis, out_axis, qcfg, scale=scale)
+
+
+def _is_quantized(defs) -> bool:
+    return isinstance(defs, QuantLinearDef)
+
+
+def linear_fusion_mode(name: str, d_in: int, d_out: int, acfg: AdapterConfig,
+                       qcfg: QuantConfig, scale: float = 1.0) -> str:
+    """Which fused forward THIS linear takes under the given configs:
+    'qoft_fused' | 'oftv2_fused' | 'unfused'.  Resolves the same
+    quantizability rules linear_defs applies (a layer too small/misaligned
+    to quantize falls back to the dense fused path), so benchmarks and the
+    launch dry-run can report the per-layer fusion plan without building
+    params."""
+    if not ad.wants_adapter(name, acfg):
+        return "unfused"
+    defs = linear_defs(d_in, d_out, in_axis=None, out_axis=None, qcfg=qcfg,
+                       scale=scale)
+    keys = (defs.expand_defs().keys() if _is_quantized(defs)
+            else defs.keys())
+    return ad.fusion_mode(acfg, qcfg, keys)
 
 
 def adapter_defs(name: str, d_in: int, d_out: int, acfg: AdapterConfig,

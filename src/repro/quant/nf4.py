@@ -78,6 +78,17 @@ def _absmax(qstate: dict, nb: int, d_out: int) -> jnp.ndarray:
     return (q8 * scale[:, :, None] + qstate["absmax_offset"]).reshape(nb, d_out)
 
 
+def absmax_fp32(qstate: dict, qcfg: QuantConfig) -> jnp.ndarray:
+    """fp32 absmax (nb, d_out) from a (possibly double-quantized) NF4 state.
+
+    The fused QOFT kernel (repro.kernels.qoft_linear_fused) consumes codes +
+    fp32 absmax directly; decoding the (tiny) double-quantized absmax happens
+    here, outside the kernel, so the kernel sees one layout."""
+    d_in = qstate["nf4_codes"].shape[0] * 2
+    d_out = qstate["nf4_codes"].shape[1]
+    return _absmax(qstate, d_in // qcfg.block_size, d_out)
+
+
 def dequantize(qstate: dict, qcfg: QuantConfig, dtype) -> jnp.ndarray:
     packed = qstate["nf4_codes"]
     d_in2, d_out = packed.shape

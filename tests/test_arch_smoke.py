@@ -29,7 +29,14 @@ def _batch_for(cfg: ModelConfig, b=2, s=16, key=KEY):
     return {"tokens": jax.random.randint(key, (b, s), 0, cfg.vocab_size)}
 
 
-@pytest.mark.parametrize("arch", list(REGISTRY))
+# the heavy smoke configs (hybrid scan / big MoE) dominate suite runtime;
+# the fast CI tier keeps the cheap archs for coverage
+_SLOW_ARCHS = {"jamba-v0.1-52b", "granite-8b", "yi-34b"}
+
+
+@pytest.mark.parametrize(
+    "arch", [pytest.param(a, marks=pytest.mark.slow) if a in _SLOW_ARCHS
+             else a for a in REGISTRY])
 def test_smoke_forward_and_train_step(arch):
     cfg = get_smoke(arch)
     run = RunConfig(model=cfg,

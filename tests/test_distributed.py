@@ -24,6 +24,7 @@ def run_py(code: str, devices: int = 8) -> str:
     return out.stdout
 
 
+@pytest.mark.slow
 def test_pipeline_matches_sequential():
     run_py("""
     import jax, jax.numpy as jnp, numpy as np
@@ -71,6 +72,7 @@ def test_pipeline_matches_sequential():
     """)
 
 
+@pytest.mark.slow
 def test_sharded_train_step_matches_single_device():
     run_py("""
     import jax, jax.numpy as jnp, numpy as np
@@ -163,6 +165,7 @@ def test_elastic_reshard_1_to_4_devices():
     """)
 
 
+@pytest.mark.slow
 def test_dp_loss_invariant_to_mesh_shape():
     run_py("""
     import jax, jax.numpy as jnp, numpy as np

@@ -11,6 +11,8 @@ from repro.kernels import ops as kops
 from repro.kernels import ref as kref
 from repro.quant import nf4
 
+pytestmark = pytest.mark.kernels
+
 
 def _tol(dtype):
     return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
@@ -111,6 +113,143 @@ def test_nf4_dequant_kernel_matches_ref(d_in, d_out, bs, dtype):
     np.testing.assert_allclose(np.asarray(want, np.float32),
                                np.asarray(lib, np.float32), rtol=1e-5,
                                atol=1e-6)
+
+
+# ------------------------------------------ fused oftv2 / qoft linears ----
+FUSED_SHAPES = [
+    # (lead shape, d_in, d_out, b): odd token counts / narrow d_out exercise
+    # token padding and the n/k tile fallbacks
+    ((37,), 64, 48, 16), ((3, 7), 128, 96, 32), ((260,), 96, 33, 8),
+    ((1,), 64, 64, 64), ((512,), 256, 128, 32),
+]
+
+
+def _fused_inputs(lead, d, n, b, dtype=jnp.float32, seed=0):
+    from repro.core.cayley import build_rotation
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, lead + (d,), jnp.float32).astype(dtype)
+    w = (jax.random.normal(key, (d, n), jnp.float32) / np.sqrt(d)).astype(dtype)
+    qp = skew.random_skew(key, (d // b,), b, scale=0.1)
+    r = build_rotation(qp, b, 5).astype(dtype)
+    return x, r, w
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("lead,d,n,b", FUSED_SHAPES)
+def test_oftv2_linear_fused_matches_ref_and_unfused(lead, d, n, b, dtype):
+    x, r, w = _fused_inputs(lead, d, n, b, dtype)
+    got = kops.oftv2_linear_fused(x, r, w)
+    want = kref.oftv2_linear_ref(x, r, w)
+    unfused = kref.block_oft_apply_ref(x, r) @ w
+    assert got.shape == want.shape and got.dtype == want.dtype
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(unfused, np.float32), **_tol(dtype))
+
+
+def test_oftv2_linear_fused_grads_match_ref():
+    x, r, w = _fused_inputs((21,), 64, 40, 16)
+
+    def f_kernel(x, r, w):
+        return jnp.sum(jnp.sin(kops.oftv2_linear_fused(x, r, w)))
+
+    def f_ref(x, r, w):
+        return jnp.sum(jnp.sin(kref.oftv2_linear_ref(x, r, w)))
+
+    gk = jax.grad(f_kernel, argnums=(0, 1, 2))(x, r, w)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(x, r, w)
+    for a, b_ in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_), rtol=1e-4,
+                                   atol=1e-4)
+
+
+@pytest.mark.parametrize("d_in,d_out,b,bs", [
+    (128, 64, 16, 64), (256, 96, 32, 32), (64, 33, 16, 16), (512, 128, 32, 64),
+])
+def test_qoft_linear_fused_matches_ref_and_unfused(d_in, d_out, b, bs):
+    x, r, w = _fused_inputs((29,), d_in, d_out, b, seed=1)
+    qcfg = QuantConfig(kind="nf4", block_size=bs, double_quant=False)
+    q = nf4.quantize(0.1 * w, qcfg)
+    got = kops.qoft_linear_fused(x, r, q["nf4_codes"], q["absmax"], bs)
+    want = kref.qoft_linear_ref(x, r, q["nf4_codes"], q["absmax"], bs)
+    w_dq = nf4.dequantize(q, qcfg, jnp.float32)
+    unfused = kref.block_oft_apply_ref(x, r) @ w_dq
+    assert got.shape == want.shape
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(unfused),
+                               rtol=2e-5, atol=1e-5)
+
+
+def test_qoft_linear_fused_grads_match_ref():
+    d, n, b, bs = 128, 40, 16, 64
+    x, r, w = _fused_inputs((21,), d, n, b, seed=2)
+    q = nf4.quantize(0.1 * w, QuantConfig(kind="nf4", block_size=bs,
+                                          double_quant=False))
+
+    def f_kernel(x, r):
+        return jnp.sum(jnp.sin(
+            kops.qoft_linear_fused(x, r, q["nf4_codes"], q["absmax"], bs)))
+
+    def f_ref(x, r):
+        return jnp.sum(jnp.sin(
+            kref.qoft_linear_ref(x, r, q["nf4_codes"], q["absmax"], bs)))
+
+    gk = jax.grad(f_kernel, argnums=(0, 1))(x, r)
+    gr = jax.grad(f_ref, argnums=(0, 1))(x, r)
+    for a, b_ in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_), rtol=1e-4,
+                                   atol=1e-4)
+
+
+def test_fused_flag_end_to_end_adapted_linear():
+    """adapted_linear(fuse_linear=True) == unfused, for dense + NF4 +
+    double-quant NF4 bases, fwd and adapter grads."""
+    from repro.config.base import AdapterConfig
+    from repro.core import adapter as ad
+    from repro.quant.common import quantize_linear
+    key = jax.random.PRNGKey(8)
+    x = jax.random.normal(key, (2, 9, 128))
+    w = 0.05 * jax.random.normal(key, (128, 96))
+    adp = {"q_packed": skew.random_skew(key, (8,), 16, scale=0.1)}
+    for qcfg in [QuantConfig(kind="none"),
+                 QuantConfig(kind="nf4", block_size=32, double_quant=False),
+                 QuantConfig(kind="nf4", block_size=32, double_quant=True,
+                             double_block=32)]:
+        qstate = quantize_linear(w, qcfg)
+        acfg_u = AdapterConfig(kind="oftv2", block_size=16, neumann_terms=5)
+        acfg_f = AdapterConfig(kind="oftv2", block_size=16, neumann_terms=5,
+                               fuse_linear=True)
+        y_u = ad.adapted_linear(x, qstate, adp, acfg_u, qcfg)
+        y_f = ad.adapted_linear(x, qstate, adp, acfg_f, qcfg)
+        np.testing.assert_allclose(np.asarray(y_f), np.asarray(y_u),
+                                   rtol=1e-5, atol=1e-5)
+
+        def loss(p, acfg):
+            return jnp.sum(jnp.square(
+                ad.adapted_linear(x, qstate, p, acfg, qcfg)))
+
+        g_u = jax.grad(loss)(adp, acfg_u)["q_packed"]
+        g_f = jax.grad(loss)(adp, acfg_f)["q_packed"]
+        np.testing.assert_allclose(np.asarray(g_f), np.asarray(g_u),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_linear_fusion_mode_plan():
+    from repro.config.base import AdapterConfig
+    from repro.models.linears import linear_fusion_mode
+    acfg = AdapterConfig(kind="oftv2", block_size=16, fuse_linear=True)
+    nf4_q = QuantConfig(kind="nf4", block_size=32)
+    assert linear_fusion_mode("q", 128, 96, acfg, nf4_q) == "qoft_fused"
+    # too small to quantize -> dense base, still fused
+    assert linear_fusion_mode("q", 30, 96, acfg, nf4_q) == "oftv2_fused"
+    assert linear_fusion_mode("q", 128, 96, acfg,
+                              QuantConfig(kind="none")) == "oftv2_fused"
+    # untargeted linear or fusion off -> unfused
+    assert linear_fusion_mode("router", 128, 96, acfg, nf4_q) == "unfused"
+    acfg_off = AdapterConfig(kind="oftv2", block_size=16)
+    assert linear_fusion_mode("q", 128, 96, acfg_off, nf4_q) == "unfused"
 
 
 def test_oftv2_with_pallas_flag_end_to_end():

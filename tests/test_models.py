@@ -72,6 +72,7 @@ def test_chunked_attention_sliding_window():
 
 
 # ------------------------------------------------- dense decode == fwd -----
+@pytest.mark.slow
 @pytest.mark.parametrize("adapter", ["none", "oftv2", "lora"])
 def test_decode_matches_forward_dense(adapter):
     cfg = tiny_dense()
@@ -88,6 +89,7 @@ def test_decode_matches_forward_dense(adapter):
                                np.asarray(full_logits), rtol=2e-3, atol=2e-3)
 
 
+@pytest.mark.slow
 def test_decode_matches_forward_swa():
     cfg = tiny_dense(sliding_window=4)
     m = build(run_cfg(cfg, adapter="none"))
@@ -150,6 +152,7 @@ def tiny_ssm(**kw):
     return ModelConfig(**base)
 
 
+@pytest.mark.slow
 def test_decode_matches_forward_ssm():
     cfg = tiny_ssm()
     m = build(run_cfg(cfg, adapter="oftv2"))
@@ -192,6 +195,7 @@ def tiny_hybrid():
                        capacity_factor=4.0)
 
 
+@pytest.mark.slow
 def test_hybrid_forward_and_decode():
     cfg = tiny_hybrid()
     m = build(run_cfg(cfg, adapter="oftv2"))
@@ -264,6 +268,7 @@ def test_vlm_forward_loss_decode():
 
 
 # --------------------------------------------- quantized (QOFT) model ------
+@pytest.mark.slow
 @pytest.mark.parametrize("quant", ["nf4", "int8"])
 def test_quantized_model_forward(quant):
     cfg = tiny_dense()

@@ -8,6 +8,10 @@ import os
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+# every test here trains/serves a real (tiny) model end-to-end
+pytestmark = pytest.mark.slow
 
 from repro.config.base import (AdapterConfig, ModelConfig, QuantConfig,
                                RunConfig, TrainConfig)

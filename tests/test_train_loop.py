@@ -54,6 +54,7 @@ def test_loss_decreases_oftv2(tmp_path):
     assert last < first - 0.1, (first, last)
 
 
+@pytest.mark.slow
 def test_resume_is_exact(tmp_path):
     run = small_run(tmp_path / "b", steps=20)
     model = build(run)
@@ -82,6 +83,7 @@ def test_preemption_flushes_checkpoint(tmp_path):
     assert out["preempted"] and mgr.latest_step() == 1
 
 
+@pytest.mark.slow
 def test_microbatched_step_matches_single(tmp_path):
     run1 = small_run(tmp_path / "e", steps=1, micro=1)
     run4 = small_run(tmp_path / "f", steps=1, micro=4)
@@ -116,6 +118,7 @@ def test_qoft_training_decreases_loss(tmp_path):
     assert np.mean(out["losses"][-5:]) < np.mean(out["losses"][:5]) - 0.1
 
 
+@pytest.mark.slow
 def test_oftv2_matches_lora_quality_band(tmp_path):
     """Paper's Table 3/4 proxy: at matched budget OFTv2 lands in the same
     loss band as LoRA on the synthetic task."""
