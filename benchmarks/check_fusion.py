@@ -1,0 +1,48 @@
+"""CI gate on the emitted fusion-plan report.
+
+``kernels_bench.fusion_plan_rows`` emits one ``fusion_plan/.../expect_X``
+row per adapted linear per representative config, with the mode the
+dispatcher ACTUALLY picked in the derived column (``got=Y``).  This script
+reads the benchmark JSON artifact (``run.py --json``) and fails if any
+expected-fused path silently fell back to the unfused oracle -- a perf
+regression the test suite can't see, since unfused is numerically
+identical.
+
+Usage: python -m benchmarks.check_fusion bench-smoke.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def check(rows) -> int:
+    plan = [r for r in rows if r["name"].startswith("fusion_plan/")]
+    if not plan:
+        print("check_fusion: no fusion_plan/* rows in the report -- the "
+              "benchmark no longer emits the plan", file=sys.stderr)
+        return 1
+    bad = []
+    for r in plan:
+        expect = r["name"].rsplit("/expect_", 1)[-1]
+        got = dict(kv.split("=", 1) for kv in r["derived"].split(";"))["got"]
+        if got != expect:
+            bad.append((r["name"], got))
+    for name, got in bad:
+        print(f"check_fusion: {name} fell back to '{got}'", file=sys.stderr)
+    print(f"check_fusion: {len(plan)} fusion-plan rows checked, "
+          f"{len(bad)} unexpected fallbacks")
+    return 1 if bad else 0
+
+
+def main() -> None:
+    if len(sys.argv) != 2:
+        print("usage: check_fusion.py <bench.json>", file=sys.stderr)
+        sys.exit(2)
+    with open(sys.argv[1]) as f:
+        rows = json.load(f)
+    sys.exit(check(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -40,6 +40,32 @@ def linear_hbm_bytes(t: int, k: int, n: int, b: int, fused: bool,
     return fused_total + w_roundtrip + 2 * t * k * dt     # + xr out + in
 
 
+def linear_bwd_hbm_bytes(t: int, k: int, n: int, b: int, fused: bool,
+                         quant_bs: int = 0, dt: int = 4) -> int:
+    """HBM bytes per fused-vs-unfused OFTv2/QOFT linear BACKWARD (frozen
+    base: dx + dR only, no dW).
+
+    Unfused is three kernels: gW = g @ Wᵀ writes the (T, K) intermediate to
+    HBM and both the dx rotation and the dR token-contraction read it back;
+    the QOFT path additionally re-materializes the dense W first (write +
+    read).  Fused reads g, x, R, W(/codes+absmax) once and writes dx + dR:
+    neither gW nor a dense W ever exists in HBM."""
+    r_bytes = (k // b) * b * b * dt
+    g_in, x_in = t * n * dt, t * k * dt
+    dx_out, dr_out = t * k * dt, r_bytes
+    if quant_bs:
+        w_read = (k // 2) * n + (k // quant_bs) * n * 4   # codes + absmax
+        w_roundtrip = 2 * k * n * dt                      # dense W out + in
+    else:
+        w_read = k * n * dt
+        w_roundtrip = 0
+    fused_total = g_in + x_in + r_bytes + w_read + dx_out + dr_out
+    if fused:
+        return fused_total
+    # + gW out once, read twice (dx stage, dR stage); + dense W roundtrip
+    return fused_total + w_roundtrip + 3 * t * k * dt
+
+
 def fused_rows():
     """Fused-vs-unfused comparison entries (BENCH_* trajectory metric)."""
     rows = []
@@ -110,6 +136,149 @@ def fused_rows():
     return rows
 
 
+def bwd_rows():
+    """Backward fused-vs-unfused entries, mirroring the forward rows: the
+    unfused baseline is jax.vjp through the jnp oracle (what XLA runs
+    without the fused bwd kernels), the fused numbers are the analytic HBM
+    traffic of oftv2/qoft_linear_bwd plus an interpret-mode correctness
+    check."""
+    from repro.config.base import QuantConfig
+    from repro.quant import nf4
+    rows = []
+    key = jax.random.PRNGKey(2)
+    b, bs = 32, 64
+
+    for t, d, n in [(2048, 1024, 1024), (8192, 4096, 4096)]:
+        x = jax.random.normal(key, (t, d), jnp.float32)
+        w = 0.02 * jax.random.normal(key, (d, n), jnp.float32)
+        qp = skew.random_skew(key, (d // b,), b, scale=0.05)
+        r = build_rotation(qp, b, 5)
+        g = jax.random.normal(key, (t, n), jnp.float32)
+
+        unfused = jax.jit(lambda x, r, w, g: jax.vjp(
+            kref.oftv2_linear_ref, x, r, w)[1](g)[:2])
+        us = time_jit(unfused, x, r, w, g)
+        rows.append((f"kernel/oftv2_linear/bwd_unfused_xla/{t}x{d}x{n}", us,
+                     f"b={b}"))
+        hbm_u = linear_bwd_hbm_bytes(t, d, n, b, fused=False)
+        hbm_f = linear_bwd_hbm_bytes(t, d, n, b, fused=True)
+        rows.append((
+            f"kernel/oftv2_linear/bwd_fused_vs_unfused/{t}x{d}x{n}", 0.0,
+            f"hbm_unfused={hbm_u:.3e};hbm_fused={hbm_f:.3e};"
+            f"traffic_ratio={hbm_u / hbm_f:.2f}x;"
+            f"hbm_bound_us_saved={(hbm_u - hbm_f) / V5E.hbm_bw * 1e6:.1f}"))
+
+        q = nf4.quantize(w, QuantConfig(kind="nf4", block_size=bs,
+                                        double_quant=False))
+        # codes/absmax as jit ARGUMENTS (not closure constants): closed-over
+        # quant state makes XLA constant-fold the dequant jvp for ~40s at
+        # the big shape, pure compile-time waste in the smoke run
+        unfused_q = jax.jit(lambda x, r, c, a, g: jax.vjp(
+            lambda x, r: kref.qoft_linear_ref(x, r, c, a, bs), x, r)[1](g))
+        us = time_jit(unfused_q, x, r, q["nf4_codes"], q["absmax"], g)
+        rows.append((f"kernel/qoft_linear/bwd_unfused_xla/{t}x{d}x{n}", us,
+                     f"b={b};bs={bs}"))
+        hbm_u = linear_bwd_hbm_bytes(t, d, n, b, fused=False, quant_bs=bs)
+        hbm_f = linear_bwd_hbm_bytes(t, d, n, b, fused=True, quant_bs=bs)
+        rows.append((
+            f"kernel/qoft_linear/bwd_fused_vs_unfused/{t}x{d}x{n}", 0.0,
+            f"hbm_unfused={hbm_u:.3e};hbm_fused={hbm_f:.3e};"
+            f"traffic_ratio={hbm_u / hbm_f:.2f}x;"
+            f"hbm_bound_us_saved={(hbm_u - hbm_f) / V5E.hbm_bw * 1e6:.1f}"))
+
+    # interpret-mode correctness + one measured fused bwd call
+    t, d, n = 256, 512, 256
+    x = jax.random.normal(key, (t, d), jnp.float32)
+    w = 0.02 * jax.random.normal(key, (d, n), jnp.float32)
+    qp = skew.random_skew(key, (d // b,), b, scale=0.05)
+    r = build_rotation(qp, b, 5)
+    g = jax.random.normal(key, (t, n), jnp.float32)
+    fused = jax.jit(lambda g, x, r, w: kops._oftv2_bwd_raw(g, x, r, w))
+    us = time_jit(fused, g, x, r, w)
+    dx, dr = fused(g, x, r, w)
+    dx_r, dr_r = kref.oftv2_linear_bwd_ref(g, x, r, w)
+    err = max(float(jnp.max(jnp.abs(dx - dx_r))),
+              float(jnp.max(jnp.abs(dr - dr_r))))
+    rows.append((f"kernel/oftv2_linear/bwd_fused_interpret/{t}x{d}x{n}", us,
+                 f"max_err={err:.2e}"))
+    q = nf4.quantize(w, QuantConfig(kind="nf4", block_size=bs,
+                                    double_quant=False))
+    fused_q = jax.jit(lambda g, x, r: kops._qoft_bwd_raw(
+        g, x, r, q["nf4_codes"], q["absmax"], bs))
+    us = time_jit(fused_q, g, x, r)
+    dx, dr = fused_q(g, x, r)
+    dx_r, dr_r = kref.qoft_linear_bwd_ref(g, x, r, q["nf4_codes"],
+                                          q["absmax"], bs)
+    err = max(float(jnp.max(jnp.abs(dx - dx_r))),
+              float(jnp.max(jnp.abs(dr - dr_r))))
+    rows.append((f"kernel/qoft_linear/bwd_fused_interpret/{t}x{d}x{n}", us,
+                 f"max_err={err:.2e}"))
+    return rows
+
+
+def train_step_rows():
+    """Whole-train-step effect of building R once per step vs once per
+    linear per microbatch (microbatches=4, tiny model, CPU-XLA wall clock:
+    directionally meaningful since both paths run the same XLA backend)."""
+    from repro.config.base import (AdapterConfig, ModelConfig,
+                                   ParallelConfig, QuantConfig, RunConfig,
+                                   TrainConfig)
+    from repro.data.loader import ShardedLoader
+    from repro.data.synthetic import SyntheticSpec
+    from repro.models import build
+    from repro.train import state as state_lib
+    from repro.train.step import make_train_step
+
+    run = RunConfig(
+        model=ModelConfig(name="bench", num_layers=2, d_model=128,
+                          num_heads=4, num_kv_heads=2, d_ff=256,
+                          vocab_size=128, rope_theta=1e4),
+        adapter=AdapterConfig(kind="oftv2", block_size=32, neumann_terms=5),
+        quant=QuantConfig(kind="none"),
+        parallel=ParallelConfig(microbatches=4),
+        train=TrainConfig(global_batch=8, seq_len=64))
+    model = build(run)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = ShardedLoader(SyntheticSpec(vocab_size=128, seq_len=64,
+                                        noise=0.05),
+                          global_batch=8, seed=0).next_batch()
+    batch = jax.tree_util.tree_map(jnp.asarray, batch)
+
+    rows = []
+    out = {}
+    for label, hoist in [("r_once_per_step", True),
+                         ("r_per_microbatch", False)]:
+        step = jax.jit(make_train_step(model, run, hoist_rotations=hoist))
+        st = state_lib.create(params)
+        us = time_jit(step, st, batch)
+        out[label] = us
+        rows.append((f"train_step/{label}/microbatches=4", us,
+                     "d=128;layers=2;b=32"))
+    rows.append(("train_step/r_reuse_speedup/microbatches=4", 0.0,
+                 f"x{out['r_per_microbatch'] / max(out['r_once_per_step'], 1e-9):.2f};"
+                 "builds_per_step:1_vs_per_linear_per_microbatch"))
+    return rows
+
+
+def fusion_plan_rows():
+    """Emit the per-linear fusion plan for representative configs; CI's
+    check_fusion gate fails the smoke run if a path expected to fuse
+    reports 'unfused' (benchmarks/check_fusion.py)."""
+    from repro.config.base import AdapterConfig, ModelConfig, QuantConfig
+    from repro.models.linears import model_fusion_plan
+    cfg = ModelConfig(name="plan", num_layers=2, d_model=1024, num_heads=8,
+                      num_kv_heads=8, d_ff=4096)
+    acfg = AdapterConfig(kind="oftv2", block_size=32, fuse_linear=True)
+    rows = []
+    for qname, qcfg, expect in [
+            ("nf4", QuantConfig(kind="nf4", block_size=64), "qoft_fused"),
+            ("dense", QuantConfig(kind="none"), "oftv2_fused")]:
+        for name, got in sorted(model_fusion_plan(cfg, acfg, qcfg).items()):
+            rows.append((f"fusion_plan/{qname}/{name}/expect_{expect}", 0.0,
+                         f"got={got}"))
+    return rows
+
+
 def run():
     rows = []
     key = jax.random.PRNGKey(0)
@@ -151,7 +320,8 @@ def run():
                                 - kref.block_oft_apply_ref(x, r))))
     rows.append(("kernel/block_oft_apply/interpret_max_err", 0.0,
                  f"{err:.2e}"))
-    return rows + fused_rows()
+    return (rows + fused_rows() + bwd_rows() + train_step_rows()
+            + fusion_plan_rows())
 
 
 if __name__ == "__main__":

@@ -3,23 +3,48 @@
 
 ``--smoke``: execute every benchmark for exactly one step (interpret-mode
 Pallas on CPU) -- numbers are meaningless but bit-rot (import errors, shape
-breaks, renamed APIs) is caught in CI in minutes."""
+breaks, renamed APIs) is caught in CI in minutes.
+
+``--json PATH``: additionally dump all rows as a JSON list of
+``{"name", "us_per_call", "derived"}`` objects -- CI uploads this as a
+workflow artifact and gates on it (benchmarks/check_fusion.py)."""
 from __future__ import annotations
 
+import json
 import sys
 import traceback
 
 
-def main() -> None:
-    from benchmarks import common
-    unknown = [a for a in sys.argv[1:] if a != "--smoke"]
+def _parse_args(argv):
+    smoke = False
+    json_path = None
+    unknown = []
+    it = iter(argv)
+    for a in it:
+        if a == "--smoke":
+            smoke = True
+        elif a == "--json":
+            json_path = next(it, None)
+            if json_path is None or json_path.startswith("-"):
+                # a flag in path position means the path was omitted --
+                # don't eat e.g. --smoke and run the full suite in CI
+                print("--json requires a path", file=sys.stderr)
+                sys.exit(2)
+        else:
+            unknown.append(a)
     if unknown:
         # a typo'd --smoke silently running the full multi-minute suite is
         # exactly the kind of CI bit-rot this driver exists to catch
-        print(f"unknown argument(s): {unknown}; usage: run.py [--smoke]",
-              file=sys.stderr)
+        print(f"unknown argument(s): {unknown}; "
+              "usage: run.py [--smoke] [--json PATH]", file=sys.stderr)
         sys.exit(2)
-    if "--smoke" in sys.argv:
+    return smoke, json_path
+
+
+def main() -> None:
+    from benchmarks import common
+    smoke, json_path = _parse_args(sys.argv[1:])
+    if smoke:
         common.SMOKE = True
     from benchmarks import (fig1_oft_vs_oftv2, fig4_memory, kernels_bench,
                             requant_error, roofline_report, table12_speed,
@@ -37,13 +62,21 @@ def main() -> None:
     ]
     print("name,us_per_call,derived")
     failures = 0
+    all_rows = []
     for title, mod in modules:
         print(f"# --- {title} ---")
         try:
-            emit(mod.run())
+            rows = mod.run()
+            emit(rows)
+            all_rows.extend(rows)
         except Exception:                                   # noqa: BLE001
             failures += 1
             traceback.print_exc()
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump([{"name": n, "us_per_call": us, "derived": d}
+                       for n, us, d in all_rows], f, indent=1)
+        print(f"# wrote {len(all_rows)} rows to {json_path}")
     if failures:
         sys.exit(1)
 

@@ -83,7 +83,9 @@ def adapted_linear(x: jnp.ndarray, qstate: dict, adapter: Optional[dict],
             and fusion_mode(acfg, qcfg, qstate.keys()) == "qoft_fused"):
         from repro.kernels import ops as kops
         from repro.quant import nf4
-        r_blocks = oft_lib.build_r(adapter, acfg)
+        # hoisted per-step rotations when present (core/rotations.py),
+        # built on the spot otherwise
+        r_blocks = oft_lib.get_r(adapter, acfg)
         return kops.qoft_linear_fused(x, r_blocks, qstate["nf4_codes"],
                                       nf4.absmax_fp32(qstate, qcfg),
                                       qcfg.block_size)

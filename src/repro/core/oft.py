@@ -53,6 +53,16 @@ def build_r(params: dict, cfg: AdapterConfig) -> jnp.ndarray:
                                  cfg.neumann_terms)
 
 
+def get_r(params: dict, cfg: AdapterConfig) -> jnp.ndarray:
+    """Rotations for one adapted linear: the hoisted per-train-step
+    ``r_blocks`` when present (repro.core.rotations built them once for the
+    whole step), else built from the packed skew params on the spot."""
+    r_blocks = params.get("r_blocks")
+    if r_blocks is not None:
+        return r_blocks
+    return build_r(params, cfg)
+
+
 def apply_blockdiag(x: jnp.ndarray, r_blocks: jnp.ndarray) -> jnp.ndarray:
     """y = x @ Diag(R_1..R_r) for x: (..., d), r_blocks: (r, b, b)."""
     rb, b, _ = r_blocks.shape
@@ -65,7 +75,7 @@ def apply_blockdiag(x: jnp.ndarray, r_blocks: jnp.ndarray) -> jnp.ndarray:
 def oftv2_transform_input(x: jnp.ndarray, params: dict,
                           cfg: AdapterConfig) -> jnp.ndarray:
     """Input-centric OFT (the paper's contribution): x' = x @ R_bd."""
-    r_blocks = build_r(params, cfg)
+    r_blocks = get_r(params, cfg)
     if cfg.use_pallas:
         from repro.kernels import ops as kops
         return kops.block_oft_apply(x, r_blocks)
@@ -77,12 +87,15 @@ def oftv2_linear(x: jnp.ndarray, params: dict, cfg: AdapterConfig,
     """Full input-centric adapted linear: y = (x @ R_bd) @ W.
 
     With cfg.fuse_linear the rotation and matmul run as ONE Pallas kernel
-    (rotated activations never hit HBM); otherwise rotate-then-matmul as two
-    ops. Numerics are identical -- tests/test_kernels.py asserts it."""
+    (rotated activations never hit HBM) whose backward is also one fused
+    kernel; the base W is frozen by the parameter-layout contract, so the
+    dW matmul is skipped structurally (train_w=False).  Otherwise
+    rotate-then-matmul as two ops. Numerics are identical --
+    tests/test_kernels.py asserts it."""
     if cfg.fuse_linear:
         from repro.kernels import ops as kops
-        r_blocks = build_r(params, cfg)
-        return kops.oftv2_linear_fused(x, r_blocks, w)
+        return kops.oftv2_linear_fused(x, get_r(params, cfg), w,
+                                       train_w=False)
     return oftv2_transform_input(x, params, cfg) @ w
 
 

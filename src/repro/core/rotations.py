@@ -1,0 +1,91 @@
+"""Per-train-step rotation hoisting: build every OFT block rotation ONCE,
+outside the grad-accumulation scan, and reuse it across all microbatches
+and all fused-linear calls.
+
+Before this module, ``build_r`` ran inside ``adapted_linear`` -- once per
+adapted linear, per microbatch, per direction (the remat'd scan body also
+re-ran it in the backward).  The Cayley--Neumann build is cheap per block
+but it multiplies: layers x linears x microbatches x fwd/bwd kernel
+launches of a tiny (r, b, b) op.
+
+``with_rotations`` walks the adapter tree, stacks EVERY ``q_packed`` leaf
+(any leading dims -- scan groups, experts) into one (R_total, pack_dim)
+matrix, runs ``build_r`` exactly once, and splits the result back as an
+``r_blocks`` entry next to each ``q_packed``.  Because ``r_blocks`` rides
+in the same tree, the scan-over-layers zips it into the per-layer params
+with no plumbing changes, and ``oftv2_linear`` / the QOFT path simply pick
+it up when present.
+
+Gradients: ``train_step`` takes ``jax.vjp`` of ``with_rotations`` once per
+step, differentiates the loss w.r.t. the *augmented* tree (accumulating
+dR across the microbatch scan), and pulls the summed dR back through the
+Cayley--Neumann VJP once.  The chain rule is linear in the cotangent, so
+this is exact -- and the rotation build + its backward trace once per
+train step instead of once per microbatch per linear
+(tests/test_fused_bwd.py counts the calls through the scan).
+"""
+from __future__ import annotations
+
+from typing import Iterator, Tuple
+
+import jax.numpy as jnp
+
+from repro.config.base import AdapterConfig
+from repro.core import oft as oft_lib
+
+
+def should_hoist(adapter_tree, acfg: AdapterConfig) -> bool:
+    """Hoisting applies to input-centric OFT only: v1 rebuilds R as part of
+    its weight transform baseline, LoRA has no rotations."""
+    return (acfg.kind == "oftv2"
+            and any(True for _ in _oft_leaves(adapter_tree)))
+
+
+def _oft_leaves(tree, path=()) -> Iterator[Tuple[tuple, dict]]:
+    """Yield (path, leaf_dict) for every {"q_packed": ...} adapter leaf, in
+    deterministic (sorted-key) order."""
+    if isinstance(tree, dict):
+        if "q_packed" in tree:
+            yield path, tree
+        else:
+            for k in sorted(tree):
+                yield from _oft_leaves(tree[k], path + (k,))
+
+
+def with_rotations(adapter_tree, acfg: AdapterConfig):
+    """Adapter tree -> same tree with an ``r_blocks`` (lead + (r, b, b))
+    entry alongside every ``q_packed`` leaf, built by ONE ``build_r`` call
+    over all leaves concatenated.  Differentiable w.r.t. the tree."""
+    leaves = list(_oft_leaves(adapter_tree))
+    if not leaves:
+        return adapter_tree
+    b = acfg.block_size
+    packed = [leaf["q_packed"] for _, leaf in leaves]
+    flat = [q.reshape(-1, q.shape[-1]) for q in packed]
+    sizes = [f.shape[0] for f in flat]
+    r_all = oft_lib.build_r({"q_packed": jnp.concatenate(flat, axis=0)}, acfg)
+
+    out = _copy_tree(adapter_tree)
+    start = 0
+    for (path, _), q, nrows in zip(leaves, packed, sizes):
+        r = r_all[start:start + nrows].reshape(q.shape[:-1] + (b, b))
+        start += nrows
+        node = out
+        for k in path:
+            node = node[k]
+        node["r_blocks"] = r
+    return out
+
+
+def strip_rotations(tree):
+    """Drop ``r_blocks`` entries (inverse of the tree shape change)."""
+    if isinstance(tree, dict):
+        return {k: strip_rotations(v) for k, v in tree.items()
+                if k != "r_blocks"}
+    return tree
+
+
+def _copy_tree(tree):
+    if isinstance(tree, dict):
+        return {k: _copy_tree(v) for k, v in tree.items()}
+    return tree

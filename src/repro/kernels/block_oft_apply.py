@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.runtime import resolve_interpret
+
 DEFAULT_TOKEN_TILE = 256
 DEFAULT_BLOCK_TILE = 8
 
@@ -41,11 +43,13 @@ def _kernel(x_ref, r_ref, o_ref):
 def block_oft_apply_kernel(x3: jnp.ndarray, r_blocks: jnp.ndarray,
                            token_tile: int = DEFAULT_TOKEN_TILE,
                            block_tile: int = DEFAULT_BLOCK_TILE,
-                           interpret: bool = True) -> jnp.ndarray:
+                           interpret: bool = None) -> jnp.ndarray:
     """x3: (T, r, b) activations, r_blocks: (r, b, b) -> (T, r, b).
 
     T must be a multiple of token_tile and r of block_tile (ops.py pads).
+    interpret=None auto-detects: compiled on TPU, interpreted elsewhere.
     """
+    interpret = resolve_interpret(interpret)
     t, rb, b = x3.shape
     grid = (t // token_tile, rb // block_tile)
     return pl.pallas_call(

@@ -22,6 +22,7 @@ import numpy as np
 from jax.experimental import pallas as pl
 
 from repro.core.skew import _unpack_gather_index, _unpack_sign, pack_dim
+from repro.kernels.runtime import resolve_interpret
 
 DEFAULT_BLOCK_TILE = 8
 
@@ -59,8 +60,11 @@ def _make_kernel(neumann_terms: int, b: int):
 def cayley_neumann_kernel(q_packed: jnp.ndarray, block_size: int,
                           neumann_terms: int,
                           block_tile: int = DEFAULT_BLOCK_TILE,
-                          interpret: bool = True) -> jnp.ndarray:
-    """q_packed: (r, pack_dim(b)) -> (r, b, b). r % block_tile == 0 (ops pads)."""
+                          interpret: bool = None) -> jnp.ndarray:
+    """q_packed: (r, pack_dim(b)) -> (r, b, b). r % block_tile == 0 (ops pads).
+
+    interpret=None auto-detects: compiled on TPU, interpreted elsewhere."""
+    interpret = resolve_interpret(interpret)
     rb, p = q_packed.shape
     b = block_size
     assert p == pack_dim(b)

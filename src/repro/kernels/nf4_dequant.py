@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.runtime import resolve_interpret
 from repro.quant.nf4 import NF4_TABLE
 
 DEFAULT_IN_TILE = 256    # rows of the dequantized weight per program
@@ -45,10 +46,12 @@ def nf4_dequant_kernel(codes: jnp.ndarray, absmax: jnp.ndarray,
                        block_size: int, out_dtype=jnp.float32,
                        in_tile: int = DEFAULT_IN_TILE,
                        out_tile: int = DEFAULT_OUT_TILE,
-                       interpret: bool = True) -> jnp.ndarray:
+                       interpret: bool = None) -> jnp.ndarray:
     """codes: (d_in//2, d_out) uint8, absmax: (d_in//bs, d_out) f32
     -> (d_in, d_out) out_dtype.  d_in % in_tile == 0, d_out % out_tile == 0,
-    in_tile % (2*block_size) == 0 (ops.py pads/validates)."""
+    in_tile % (2*block_size) == 0 (ops.py pads/validates).
+    interpret=None auto-detects: compiled on TPU, interpreted elsewhere."""
+    interpret = resolve_interpret(interpret)
     d_in = codes.shape[0] * 2
     d_out = codes.shape[1]
     table = jnp.asarray(NF4_TABLE)

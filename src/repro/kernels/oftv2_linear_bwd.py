@@ -1,0 +1,132 @@
+"""Pallas TPU kernel: fused OFTv2 linear backward -- g @ Wᵀ, the transposed
+block-diagonal rotation, and the dR token-contraction in one pass.
+
+With forward y = (x @ R_bd) @ W and cotangent g = dL/dy, the backward needs
+
+    gW = g @ Wᵀ                       (cotangent of the rotated activations)
+    dx = gW @ R_bdᵀ                   (blockwise: dx_i = gW_i @ R_iᵀ)
+    dR_i = Σ_t x[t,i,:]ᵀ gW[t,i,:]    (token-contraction per OFT block)
+
+Unfused (PR-1's `_fused_bwd_core`) that is three kernels with gW -- a full
+(T, K) activation-sized tensor -- written to HBM once and read back twice.
+Fused, each program accumulates its (TOKEN_TILE, K_TILE) gW tile in a VMEM
+scratch across the n grid dim, and on the last n step applies Rᵀ (batched
+small-matmul on the MXU, block index as the batch dim) to emit the dx tile
+and contracts it with the matching x tile into the dR accumulator.  gW never
+exists in HBM.
+
+Grid = (k tiles, token tiles, n tiles), n innermost so the gW scratch
+accumulates over the g @ Wᵀ contraction, k OUTERMOST so the dR output tile
+(indexed by k alone) stays VMEM-resident across every (token, n) step that
+feeds it -- dR is accumulated in-place with zero extra HBM traffic.
+
+K_TILE must be a multiple of the OFT block size b so rotation blocks never
+straddle a k tile (ops.py picks tiles accordingly).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.oftv2_linear_fused import _rotate_tile
+from repro.kernels.runtime import resolve_interpret
+
+DEFAULT_TOKEN_TILE = 256
+DEFAULT_N_TILE = 256
+DEFAULT_K_TILE = 512
+
+
+def _gw_partial(g: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """(TT, NT) cotangent tile @ (KT, NT) weight tileᵀ -> (TT, KT)."""
+    return jax.lax.dot_general(
+        g, w, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def _dr_partial(x: jnp.ndarray, gw: jnp.ndarray, b: int) -> jnp.ndarray:
+    """Token-contraction dR_i = x_iᵀ @ gW_i per OFT block.
+
+    x, gw: (TT, KT) -> (KT//b, b, b), contracting tokens with the block
+    index as the dot_general batch dim."""
+    tt, kt = x.shape
+    return jax.lax.dot_general(
+        x.reshape(tt, kt // b, b), gw.reshape(tt, kt // b, b),
+        dimension_numbers=(((0,), (0,)), ((1,), (1,))),
+        preferred_element_type=jnp.float32)
+
+
+def _kernel(g_ref, x_ref, r_ref, w_ref, dx_ref, dr_ref, gw_ref):
+    # grid queries stay at the top level: inside a pl.when body they would
+    # be baked into the cond branch jaxpr, outside the interpreter's reach
+    n_id = pl.program_id(2)
+    last_n = n_id == pl.num_programs(2) - 1
+    first_token_tile = pl.program_id(1) == 0
+
+    @pl.when(n_id == 0)
+    def _init_gw():
+        gw_ref[...] = jnp.zeros_like(gw_ref)
+
+    g = g_ref[...].astype(jnp.float32)       # (TT, NT)
+    w = w_ref[...].astype(jnp.float32)       # (KT, NT)
+    gw_ref[...] += _gw_partial(g, w)
+
+    @pl.when(last_n)
+    def _finish():
+        gw = gw_ref[...]                     # (TT, KT), complete
+        r = r_ref[...].astype(jnp.float32)   # (KT//b, b, b)
+        rt = jnp.swapaxes(r, -1, -2)
+        dx_ref[...] = _rotate_tile(gw, rt)
+        x = x_ref[...].astype(jnp.float32)   # (TT, KT)
+
+        @pl.when(first_token_tile)
+        def _init_dr():
+            dr_ref[...] = jnp.zeros_like(dr_ref)
+
+        dr_ref[...] += _dr_partial(x, gw, r.shape[1])
+
+
+@functools.partial(jax.jit, static_argnames=("token_tile", "n_tile", "k_tile",
+                                             "interpret"))
+def oftv2_linear_bwd_kernel(g2: jnp.ndarray, x2: jnp.ndarray,
+                            r_blocks: jnp.ndarray, w: jnp.ndarray,
+                            token_tile: int = DEFAULT_TOKEN_TILE,
+                            n_tile: int = DEFAULT_N_TILE,
+                            k_tile: int = DEFAULT_K_TILE,
+                            interpret: bool = None):
+    """g2: (T, N) cotangent, x2: (T, K), r_blocks: (K//b, b, b), w: (K, N)
+    -> (dx (T, K) f32, dr (K//b, b, b) f32); callers cast/slice.
+
+    T % token_tile == N % n_tile == K % k_tile == 0 and k_tile % b == 0
+    (ops.py pads/picks).  interpret=None auto-detects (runtime.py)."""
+    interpret = resolve_interpret(interpret)
+    t, k_dim = x2.shape
+    n = g2.shape[1]
+    rb, b, _ = r_blocks.shape
+    grid = (k_dim // k_tile, t // token_tile, n // n_tile)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((token_tile, n_tile), lambda k, i, j: (i, j)),
+            pl.BlockSpec((token_tile, k_tile), lambda k, i, j: (i, k)),
+            pl.BlockSpec((k_tile // b, b, b), lambda k, i, j: (k, 0, 0)),
+            pl.BlockSpec((k_tile, n_tile), lambda k, i, j: (k, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((token_tile, k_tile), lambda k, i, j: (i, k)),
+            pl.BlockSpec((k_tile // b, b, b), lambda k, i, j: (k, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t, k_dim), jnp.float32),
+            jax.ShapeDtypeStruct((rb, b, b), jnp.float32),
+        ],
+        scratch_shapes=[
+            # gW accumulator: the (TT, KT) intermediate that never hits HBM
+            pltpu.VMEM((token_tile, k_tile), jnp.float32),
+        ],
+        interpret=interpret,
+    )(g2, x2, r_blocks, w)

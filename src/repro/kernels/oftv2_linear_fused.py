@@ -27,6 +27,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.runtime import resolve_interpret
+
 DEFAULT_TOKEN_TILE = 256
 DEFAULT_N_TILE = 256
 DEFAULT_K_TILE = 512
@@ -67,10 +69,12 @@ def oftv2_linear_fused_kernel(x2: jnp.ndarray, r_blocks: jnp.ndarray,
                               token_tile: int = DEFAULT_TOKEN_TILE,
                               n_tile: int = DEFAULT_N_TILE,
                               k_tile: int = DEFAULT_K_TILE,
-                              interpret: bool = True) -> jnp.ndarray:
+                              interpret: bool = None) -> jnp.ndarray:
     """x2: (T, K) activations, r_blocks: (K//b, b, b), w: (K, N) -> (T, N)
     fp32 (callers cast).  T % token_tile == N % n_tile == K % k_tile == 0 and
-    k_tile % b == 0 (ops.py pads/picks)."""
+    k_tile % b == 0 (ops.py pads/picks).
+    interpret=None auto-detects: compiled on TPU, interpreted elsewhere."""
+    interpret = resolve_interpret(interpret)
     t, k_dim = x2.shape
     n = w.shape[1]
     rb, b, _ = r_blocks.shape

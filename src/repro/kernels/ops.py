@@ -6,15 +6,19 @@ drop-in replacements for the jnp paths in repro.core / repro.quant.
 Backward rules:
   * block_oft_apply: dx is another block-diagonal apply with R transposed
     (the same kernel, R^T); dR is a token-contraction einsum.
-  * cayley_neumann: forward via kernel, backward via jax.vjp of the jnp
-    oracle (identical math, so gradients are exact).
+  * cayley_neumann: forward via kernel; backward reuses the forward's
+    unpacked skew tiles (saved as residuals) -- the VJP differentiates the
+    Neumann recurrence on Q directly and packs the cotangent with one
+    triu extraction, never re-running the unpack gather or its transpose.
   * nf4_dequant: non-differentiable by design (frozen quantized weights).
-  * oftv2_linear_fused: with gW = g @ W^T, dx is the block-diagonal apply of
-    gW with R^T (the transpose trick), dR the token-contraction of x with
-    gW, dW the matmul of the (recomputed, never-stored) rotated activations
-    with g.
-  * qoft_linear_fused: same as oftv2_linear_fused after one in-backward
-    dequant of W; codes/absmax are frozen (zero cotangent).
+  * oftv2_linear_fused: ONE fused bwd kernel (oftv2_linear_bwd) computes
+    gW = g @ W^T, dx = gW rotated by R^T, and the dR token-contraction --
+    gW never exists in HBM.  dW is only computed when the caller marks the
+    base weight trainable (train_w); the frozen-base default skips the
+    rotated-activation recompute and the dW matmul structurally.
+  * qoft_linear_fused: same fused bwd with in-kernel NF4 dequant of each
+    weight tile (qoft_linear_bwd) -- a dense W never exists in HBM in
+    either direction; codes/absmax are frozen (zero cotangent).
 """
 from __future__ import annotations
 
@@ -24,16 +28,24 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import cayley as _cayley
+from repro.core import skew as _skew
 from repro.kernels import ref as kref
+from repro.kernels import runtime as _runtime
 from repro.kernels.block_oft_apply import block_oft_apply_kernel
 from repro.kernels.cayley_neumann import cayley_neumann_kernel
 from repro.kernels.nf4_dequant import nf4_dequant_kernel
+from repro.kernels.oftv2_linear_bwd import oftv2_linear_bwd_kernel
 from repro.kernels.oftv2_linear_fused import oftv2_linear_fused_kernel
+from repro.kernels.qoft_linear_bwd import qoft_linear_bwd_kernel
 from repro.kernels.qoft_linear_fused import qoft_linear_fused_kernel
 
 
 def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
+    """Single source of truth for the kernels' execution mode; the kernel
+    entry points resolve their interpret=None defaults through the same
+    policy (repro.kernels.runtime)."""
+    return _runtime.default_interpret()
 
 
 def _pick_tile(n: int, candidates) -> int:
@@ -112,14 +124,22 @@ def cayley_neumann(q_packed: jnp.ndarray, block_size: int,
 
 
 def _cn_fwd(q_packed, block_size, neumann_terms):
-    return _cn_raw(q_packed, block_size, neumann_terms), q_packed
+    out = _cn_raw(q_packed, block_size, neumann_terms)
+    # residual = the unpacked skew tiles, so the backward never redoes the
+    # pack->square gather (or differentiates through it)
+    return out, _skew.unpack_skew(q_packed, block_size)
 
 
-def _cn_bwd(block_size, neumann_terms, q_packed, g):
-    _, vjp = jax.vjp(
-        lambda q: kref.cayley_neumann_ref(q, block_size, neumann_terms),
-        q_packed)
-    return vjp(g)
+def _cn_bwd(block_size, neumann_terms, q, g):
+    if neumann_terms <= 0:
+        rot = _cayley.cayley_exact
+    else:
+        def rot(qq):
+            return _cayley.cayley_neumann(qq, neumann_terms)
+    _, vjp = jax.vjp(rot, q)
+    dq = vjp(g.astype(q.dtype))[0]
+    # Q[i,j] = qp[k], Q[j,i] = -qp[k]  =>  dqp = triu(dQ - dQ^T)
+    return (_skew.pack_skew(dq - jnp.swapaxes(dq, -1, -2)),)
 
 
 cayley_neumann.defvjp(_cn_fwd, _cn_bwd)
@@ -166,42 +186,80 @@ def _oftv2_fused_raw(x: jnp.ndarray, r_blocks: jnp.ndarray,
     return y2[:t].astype(x.dtype).reshape(lead + (n,))
 
 
-def _fused_bwd_core(x, r_blocks, w, g):
-    """Shared backward math for both fused linears (w already dense)."""
-    gw = jnp.einsum("...n,kn->...k", g.astype(jnp.float32),
-                    w.astype(jnp.float32)).astype(g.dtype)
-    dx = _block_apply_raw(gw, jnp.swapaxes(r_blocks, -1, -2))
+def _bwd_flatten_pad(g, x, t_pad):
+    """Flatten lead dims of (g, x) and zero-pad tokens to t_pad.  Zero rows
+    contribute nothing to dR and their dx rows are sliced off."""
+    g2, _, t = _flatten_tokens(g)
+    x2, lead, _ = _flatten_tokens(x)
+    if t_pad != t:
+        g2 = jnp.pad(g2, ((0, t_pad - t), (0, 0)))
+        x2 = jnp.pad(x2, ((0, t_pad - t), (0, 0)))
+    return g2, x2, lead, t
+
+
+def _oftv2_bwd_raw(g, x, r_blocks, w):
+    """Fused backward: (dx, dr) in one kernel -- the (T, K) gW intermediate
+    never hits HBM (dW is the caller's concern, see _olf_bwd)."""
     rb, b, _ = r_blocks.shape
-    x3, _, t = _flatten_tokens(x)
-    g3, _, _ = _flatten_tokens(gw)
-    dr = jnp.einsum("trb,trc->rbc",
-                    x3.reshape(t, rb, b).astype(jnp.float32),
-                    g3.reshape(t, rb, b).astype(jnp.float32)
-                    ).astype(r_blocks.dtype)
-    xr = _block_apply_raw(x, r_blocks)
-    xr2, _, _ = _flatten_tokens(xr)
-    g2, _, _ = _flatten_tokens(g)
-    dw = jnp.einsum("tk,tn->kn", xr2.astype(jnp.float32),
-                    g2.astype(jnp.float32)).astype(w.dtype)
-    return dx, dr, dw
+    k_dim, n = w.shape
+    _, _, t = _flatten_tokens(x)
+    token_tile, t_pad, n_tile, k_tile = _fused_tiles(t, k_dim, n, b)
+    g2, x2, lead, t = _bwd_flatten_pad(g, x, t_pad)
+    dx2, dr = oftv2_linear_bwd_kernel(g2, x2, r_blocks, w,
+                                      token_tile=token_tile, n_tile=n_tile,
+                                      k_tile=k_tile, interpret=_interpret())
+    dx = dx2[:t].astype(x.dtype).reshape(lead + (k_dim,))
+    return dx, dr.astype(r_blocks.dtype)
 
 
-@jax.custom_vjp
+def _qoft_bwd_raw(g, x, r_blocks, codes, absmax, block_size):
+    """Fused quantized backward: NF4 tiles dequantized in VMEM only -- a
+    dense W never exists in HBM in the backward either."""
+    rb, b, _ = r_blocks.shape
+    k_dim = codes.shape[0] * 2
+    n = codes.shape[1]
+    align = int(np.lcm(np.lcm(2, block_size), b))
+    _, _, t = _flatten_tokens(x)
+    token_tile, t_pad, n_tile, k_tile = _fused_tiles(t, k_dim, n, align)
+    g2, x2, lead, t = _bwd_flatten_pad(g, x, t_pad)
+    dx2, dr = qoft_linear_bwd_kernel(g2, x2, r_blocks, codes, absmax,
+                                     block_size, token_tile=token_tile,
+                                     n_tile=n_tile, k_tile=k_tile,
+                                     interpret=_interpret())
+    dx = dx2[:t].astype(x.dtype).reshape(lead + (k_dim,))
+    return dx, dr.astype(r_blocks.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
 def oftv2_linear_fused(x: jnp.ndarray, r_blocks: jnp.ndarray,
-                       w: jnp.ndarray) -> jnp.ndarray:
+                       w: jnp.ndarray, train_w: bool = True) -> jnp.ndarray:
     """y = (x @ blockdiag(R)) @ W in one Pallas kernel: the rotated
     activations never touch HBM.  x: (..., K), r_blocks: (K//b, b, b),
-    w: (K, N) -> (..., N)."""
+    w: (K, N) -> (..., N).
+
+    train_w=False (the adapted-linear path: base weights are frozen by the
+    parameter-layout contract) skips the dW matmul AND the rotated-
+    activation recompute in the backward structurally, rather than relying
+    on XLA DCE to remove an einsum whose output is never consumed."""
     return _oftv2_fused_raw(x, r_blocks, w)
 
 
-def _olf_fwd(x, r_blocks, w):
+def _olf_fwd(x, r_blocks, w, train_w):
     return _oftv2_fused_raw(x, r_blocks, w), (x, r_blocks, w)
 
 
-def _olf_bwd(res, g):
+def _olf_bwd(train_w, res, g):
     x, r_blocks, w = res
-    return _fused_bwd_core(x, r_blocks, w, g)
+    dx, dr = _oftv2_bwd_raw(g, x, r_blocks, w)
+    if train_w:
+        xr = _block_apply_raw(x, r_blocks)
+        xr2, _, _ = _flatten_tokens(xr)
+        g2, _, _ = _flatten_tokens(g)
+        dw = jnp.einsum("tk,tn->kn", xr2.astype(jnp.float32),
+                        g2.astype(jnp.float32)).astype(w.dtype)
+    else:
+        dw = jnp.zeros_like(w)   # frozen base: trivially DCE'd broadcast
+    return dx, dr, dw
 
 
 oftv2_linear_fused.defvjp(_olf_fwd, _olf_bwd)
@@ -241,10 +299,9 @@ def _qlf_fwd(x, r_blocks, codes, absmax, block_size):
 
 def _qlf_bwd(block_size, res, g):
     x, r_blocks, codes, absmax = res
-    # one dequant in the backward (the backward's g @ W^T needs dense W
-    # regardless); frozen quant state gets zero cotangent.
-    w = nf4_dequant(codes, absmax, block_size, dtype=jnp.float32)
-    dx, dr, _ = _fused_bwd_core(x, r_blocks, w, g)
+    # fused bwd kernel dequantizes NF4 tiles in VMEM: no full-weight
+    # dequant to HBM, ever; frozen quant state gets zero cotangent.
+    dx, dr = _qoft_bwd_raw(g, x, r_blocks, codes, absmax, block_size)
     d_codes = np.zeros(codes.shape, dtype=jax.dtypes.float0)
     return dx, dr, d_codes, jnp.zeros_like(absmax)
 

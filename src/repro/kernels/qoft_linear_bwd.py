@@ -1,0 +1,125 @@
+"""Pallas TPU kernel: fused QOFT linear backward -- in-kernel NF4 dequant
+feeding g @ Wᵀ, the transposed rotation, and the dR token-contraction.
+
+PR-1's QOFT backward (`ops._qlf_bwd`) re-materialized the FULL dense NF4
+weight in HBM every microbatch before running the three unfused backward
+stages -- the single weight-sized HBM write the forward fusion exists to
+avoid, paid again on every grad-accum step.  Fused, each program
+
+  1. dequantizes one (K_TILE, N_TILE) weight tile from packed codes +
+     absmax in VMEM (LUT gather, shift/mask unpack, per-block absmax
+     broadcast -- same math as qoft_linear_fused's forward),
+  2. contracts it with the (TOKEN_TILE, N_TILE) cotangent tile into the
+     VMEM gW accumulator (across the n grid dim),
+  3. on the last n step applies Rᵀ for the dx tile and contracts gW with x
+     into the in-place dR accumulator.
+
+Neither a dense W nor the (T, K) gW intermediate ever exists in HBM, in
+either direction -- the matrix-free property now holds for the full train
+step, not just the forward.
+
+Grid/accumulator layout matches oftv2_linear_bwd (k outermost so the dR
+output tile stays VMEM-resident).  K_TILE must be a multiple of
+lcm(2, absmax block, OFT block) so code pairs, absmax blocks and rotation
+blocks never straddle a k tile (ops.py picks tiles accordingly).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.oftv2_linear_bwd import _dr_partial, _gw_partial
+from repro.kernels.oftv2_linear_fused import _rotate_tile
+from repro.kernels.qoft_linear_fused import _dequant_tile
+from repro.kernels.runtime import resolve_interpret
+from repro.quant.nf4 import NF4_TABLE
+
+DEFAULT_TOKEN_TILE = 256
+DEFAULT_N_TILE = 128
+DEFAULT_K_TILE = 512
+
+
+def _make_kernel(block_size: int, k_tile: int):
+    def kernel(g_ref, x_ref, r_ref, codes_ref, absmax_ref, table_ref,
+               dx_ref, dr_ref, gw_ref):
+        # grid queries at top level (see oftv2_linear_bwd._kernel)
+        n_id = pl.program_id(2)
+        last_n = n_id == pl.num_programs(2) - 1
+        first_token_tile = pl.program_id(1) == 0
+
+        @pl.when(n_id == 0)
+        def _init_gw():
+            gw_ref[...] = jnp.zeros_like(gw_ref)
+
+        g = g_ref[...].astype(jnp.float32)           # (TT, NT)
+        w = _dequant_tile(codes_ref[...], absmax_ref[...], table_ref[...],
+                          block_size, k_tile)        # (KT, NT), VMEM only
+        gw_ref[...] += _gw_partial(g, w)
+
+        @pl.when(last_n)
+        def _finish():
+            gw = gw_ref[...]                         # (TT, KT), complete
+            r = r_ref[...].astype(jnp.float32)       # (KT//b, b, b)
+            rt = jnp.swapaxes(r, -1, -2)
+            dx_ref[...] = _rotate_tile(gw, rt)
+            x = x_ref[...].astype(jnp.float32)       # (TT, KT)
+
+            @pl.when(first_token_tile)
+            def _init_dr():
+                dr_ref[...] = jnp.zeros_like(dr_ref)
+
+            dr_ref[...] += _dr_partial(x, gw, r.shape[1])
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("block_size", "token_tile",
+                                             "n_tile", "k_tile", "interpret"))
+def qoft_linear_bwd_kernel(g2: jnp.ndarray, x2: jnp.ndarray,
+                           r_blocks: jnp.ndarray, codes: jnp.ndarray,
+                           absmax: jnp.ndarray, block_size: int,
+                           token_tile: int = DEFAULT_TOKEN_TILE,
+                           n_tile: int = DEFAULT_N_TILE,
+                           k_tile: int = DEFAULT_K_TILE,
+                           interpret: bool = None):
+    """g2: (T, N) cotangent, x2: (T, K), r_blocks: (K//b, b, b),
+    codes: (K//2, N) uint8, absmax: (K//block_size, N) f32
+    -> (dx (T, K) f32, dr (K//b, b, b) f32); callers cast/slice.
+
+    T % token_tile == N % n_tile == K % k_tile == 0 and
+    k_tile % lcm(2, block_size, b) == 0 (ops.py pads/picks).
+    interpret=None auto-detects (runtime.py)."""
+    interpret = resolve_interpret(interpret)
+    t, k_dim = x2.shape
+    n = codes.shape[1]
+    rb, b, _ = r_blocks.shape
+    table = jnp.asarray(NF4_TABLE)
+    grid = (k_dim // k_tile, t // token_tile, n // n_tile)
+    return pl.pallas_call(
+        _make_kernel(block_size, k_tile),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((token_tile, n_tile), lambda k, i, j: (i, j)),
+            pl.BlockSpec((token_tile, k_tile), lambda k, i, j: (i, k)),
+            pl.BlockSpec((k_tile // b, b, b), lambda k, i, j: (k, 0, 0)),
+            pl.BlockSpec((k_tile // 2, n_tile), lambda k, i, j: (k, j)),
+            pl.BlockSpec((k_tile // block_size, n_tile),
+                         lambda k, i, j: (k, j)),
+            pl.BlockSpec((16,), lambda k, i, j: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((token_tile, k_tile), lambda k, i, j: (i, k)),
+            pl.BlockSpec((k_tile // b, b, b), lambda k, i, j: (k, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t, k_dim), jnp.float32),
+            jax.ShapeDtypeStruct((rb, b, b), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((token_tile, k_tile), jnp.float32),
+        ],
+        interpret=interpret,
+    )(g2, x2, r_blocks, codes, absmax, table)

@@ -30,6 +30,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels.oftv2_linear_fused import _rotate_tile
+from repro.kernels.runtime import resolve_interpret
 from repro.quant.nf4 import NF4_TABLE
 
 DEFAULT_TOKEN_TILE = 256
@@ -37,21 +38,27 @@ DEFAULT_N_TILE = 128
 DEFAULT_K_TILE = 512
 
 
+def _dequant_tile(codes, absmax, table, block_size: int,
+                  k_tile: int) -> jnp.ndarray:
+    """(KT//2, NT) packed codes + (KT//bs, NT) absmax -> (KT, NT) f32 in
+    VMEM: LUT gather, shift/mask unpack (row-interleaved code pairs),
+    per-block absmax broadcast.  Shared by the fwd and bwd QOFT kernels so
+    their numerics can't diverge."""
+    nt = codes.shape[1]
+    hi = (codes >> 4).astype(jnp.int32)
+    lo = (codes & 0xF).astype(jnp.int32)
+    idx = jnp.stack([hi, lo], axis=1).reshape(k_tile, nt)
+    vals = jnp.take(table, idx.reshape(-1), axis=0).reshape(k_tile, nt)
+    return (vals.reshape(k_tile // block_size, block_size, nt)
+            * absmax[:, None, :]).reshape(k_tile, nt)
+
+
 def _make_kernel(block_size: int, k_tile: int):
     def kernel(x_ref, r_ref, codes_ref, absmax_ref, table_ref, o_ref):
         x = x_ref[...].astype(jnp.float32)       # (TT, KT)
         r = r_ref[...].astype(jnp.float32)       # (KT//b, b, b)
-        codes = codes_ref[...]                   # (KT//2, NT) uint8
-        absmax = absmax_ref[...]                 # (KT//bs, NT) f32
-        table = table_ref[...]                   # (16,) f32
-        nt = codes.shape[1]
-
-        hi = (codes >> 4).astype(jnp.int32)
-        lo = (codes & 0xF).astype(jnp.int32)
-        idx = jnp.stack([hi, lo], axis=1).reshape(k_tile, nt)  # interleave
-        vals = jnp.take(table, idx.reshape(-1), axis=0).reshape(k_tile, nt)
-        w = (vals.reshape(k_tile // block_size, block_size, nt)
-             * absmax[:, None, :]).reshape(k_tile, nt)
+        w = _dequant_tile(codes_ref[...], absmax_ref[...], table_ref[...],
+                          block_size, k_tile)    # (KT, NT), VMEM only
 
         acc = jnp.dot(_rotate_tile(x, r), w,
                       preferred_element_type=jnp.float32)
@@ -72,12 +79,14 @@ def qoft_linear_fused_kernel(x2: jnp.ndarray, r_blocks: jnp.ndarray,
                              token_tile: int = DEFAULT_TOKEN_TILE,
                              n_tile: int = DEFAULT_N_TILE,
                              k_tile: int = DEFAULT_K_TILE,
-                             interpret: bool = True) -> jnp.ndarray:
+                             interpret: bool = None) -> jnp.ndarray:
     """x2: (T, K), r_blocks: (K//b, b, b), codes: (K//2, N) uint8,
     absmax: (K//block_size, N) f32 -> (T, N) fp32 (callers cast).
 
     T % token_tile == N % n_tile == K % k_tile == 0 and
-    k_tile % lcm(2, block_size, b) == 0 (ops.py pads/picks)."""
+    k_tile % lcm(2, block_size, b) == 0 (ops.py pads/picks).
+    interpret=None auto-detects: compiled on TPU, interpreted elsewhere."""
+    interpret = resolve_interpret(interpret)
     t, k_dim = x2.shape
     n = codes.shape[1]
     rb, b, _ = r_blocks.shape

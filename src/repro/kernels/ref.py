@@ -45,6 +45,36 @@ def qoft_linear_ref(x: jnp.ndarray, r_blocks: jnp.ndarray,
     return oftv2_linear_ref(x, r_blocks, w)
 
 
+def oftv2_linear_bwd_ref(g: jnp.ndarray, x: jnp.ndarray,
+                         r_blocks: jnp.ndarray, w: jnp.ndarray):
+    """Fused OFTv2 linear backward oracle: (dx, dr) from cotangent g.
+
+    gW = g @ Wᵀ; dx = gW @ R_bdᵀ blockwise; dR the token-contraction of x
+    with gW.  Matches the unfused three-stage math the bwd kernel fuses."""
+    rb, b, _ = r_blocks.shape
+    gw = jnp.einsum("...n,kn->...k", g.astype(jnp.float32),
+                    w.astype(jnp.float32))
+    dx = block_oft_apply_ref(gw, jnp.swapaxes(
+        r_blocks.astype(jnp.float32), -1, -2)).astype(x.dtype)
+    lead = x.shape[:-1]
+    t = 1
+    for s in lead:
+        t *= s
+    x3 = x.reshape(t, rb, b).astype(jnp.float32)
+    g3 = gw.reshape(t, rb, b)
+    dr = jnp.einsum("trb,trc->rbc", x3, g3).astype(r_blocks.dtype)
+    return dx, dr
+
+
+def qoft_linear_bwd_ref(g: jnp.ndarray, x: jnp.ndarray,
+                        r_blocks: jnp.ndarray, codes: jnp.ndarray,
+                        absmax: jnp.ndarray, block_size: int):
+    """Fused QOFT linear backward oracle: dequant NF4 W, then the OFTv2
+    backward (codes/absmax are frozen -- no cotangent)."""
+    w = nf4_dequant_ref(codes, absmax, block_size, dtype=jnp.float32)
+    return oftv2_linear_bwd_ref(g, x, r_blocks, w)
+
+
 def nf4_dequant_ref(codes: jnp.ndarray, absmax: jnp.ndarray,
                     block_size: int, dtype=jnp.float32) -> jnp.ndarray:
     """codes: (d_in//2, d_out) uint8 packed NF4, absmax: (d_in//bs, d_out)."""

@@ -1,0 +1,26 @@
+"""Kernel execution-mode policy, shared by every Pallas entry point.
+
+A kernel called with ``interpret=None`` (the default everywhere) resolves
+the mode here: compiled on real TPU, interpreted elsewhere (CPU containers,
+CI). Direct kernel callers therefore get the same auto-detection as the
+jit'd wrappers in ``repro.kernels.ops`` -- previously the raw kernels
+defaulted to ``interpret=True`` and silently ran interpreted on TPU.
+
+This module must stay import-light (no ops/kernel imports) so the kernel
+modules can use it without cycles.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+
+def default_interpret() -> bool:
+    """True when Pallas should run in interpret mode (no TPU present)."""
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """None -> backend auto-detection; explicit bools pass through."""
+    return default_interpret() if interpret is None else bool(interpret)

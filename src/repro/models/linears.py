@@ -119,6 +119,25 @@ def linear_fusion_mode(name: str, d_in: int, d_out: int, acfg: AdapterConfig,
     return ad.fusion_mode(acfg, qcfg, keys)
 
 
+def model_fusion_plan(cfg, acfg: AdapterConfig, qcfg: QuantConfig) -> dict:
+    """Per-linear fusion plan for a transformer layer of ``cfg``
+    (ModelConfig): {name: 'qoft_fused' | 'oftv2_fused' | 'unfused'}.
+
+    The benchmark smoke run emits these as ``fusion_plan/*`` rows and CI
+    fails if a path expected to fuse reports 'unfused' -- a silent fallback
+    to the oracle is a perf regression, not a correctness one, so tests
+    alone don't catch it."""
+    d = cfg.d_model
+    h, kv, hd = cfg.padded_heads, cfg.num_kv_heads, cfg.head_dim
+    shapes = {"q": (d, h * hd), "k": (d, kv * hd), "v": (d, kv * hd),
+              "o": (h * hd, d)}
+    if cfg.d_ff > 0:
+        shapes.update({"gate": (d, cfg.d_ff), "up": (d, cfg.d_ff),
+                       "down": (cfg.d_ff, d)})
+    return {name: linear_fusion_mode(name, di, do, acfg, qcfg)
+            for name, (di, do) in shapes.items()}
+
+
 def adapter_defs(name: str, d_in: int, d_out: int, acfg: AdapterConfig,
                  model_axis_size: int = 1):
     """Trainable adapter defs for one linear (None if not targeted).

@@ -1,10 +1,22 @@
 """Train/serve step factories.
 
-train_step: microbatched (scan) grad accumulation -> optional int8
-compression w/ error feedback -> global-norm clip -> AdamW on the adapter
-tree only. Base weights are never differentiated: the PEFT memory story
-(grads + optimizer state are O(adapter)) is structural, not an
-afterthought -- it is what lets a 405B frozen model train on v5e-256.
+train_step: per-step OFT rotation build (hoisted, see below) -> microbatched
+(scan) grad accumulation -> optional int8 compression w/ error feedback ->
+global-norm clip -> AdamW on the adapter tree only. Base weights are never
+differentiated: the PEFT memory story (grads + optimizer state are
+O(adapter)) is structural, not an afterthought -- it is what lets a 405B
+frozen model train on v5e-256.  The frozen-base assumption also reaches the
+kernels: the fused OFTv2/QOFT backward never computes dW (or the rotated-
+activation recompute feeding it) -- `core/oft.oftv2_linear` passes
+train_w=False so the skip is structural, not an XLA-DCE hope.
+
+Rotation hoisting (core/rotations.py): for OFTv2 the block rotations are
+built from the packed skew params ONCE per train step -- one concatenated
+Cayley-Neumann build before the microbatch scan -- and threaded to every
+adapted linear as `r_blocks` riding in the adapter tree.  Gradients
+accumulate w.r.t. the rotations across the scan and are pulled back through
+the build's VJP once per step, which is exact (the VJP is linear in the
+cotangent).
 
 serve_step_prefill / serve_step_decode: the two inference shapes the
 dry-run lowers.
@@ -18,6 +30,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.config.base import RunConfig
+from repro.core import rotations as rot_lib
 from repro.models.model import Model
 from repro.optim import adamw, clipping, schedule
 from repro.train import state as state_lib
@@ -28,12 +41,14 @@ def _split_microbatches(batch: Dict[str, jnp.ndarray], m: int):
         lambda a: a.reshape((m, a.shape[0] // m) + a.shape[1:]), batch)
 
 
-def make_train_step(model: Model, run: RunConfig) -> Callable:
+def make_train_step(model: Model, run: RunConfig,
+                    hoist_rotations: Optional[bool] = None) -> Callable:
     tc = run.train
     pcfg = run.parallel
     m = max(pcfg.microbatches, 1)
     use_remat = pcfg.remat != "none"
     use_comp = pcfg.gradient_compression == "int8"
+    acfg = run.adapter
 
     def loss_fn(adapter, base, mb):
         loss, metrics = model.loss({"base": base, "adapter": adapter}, mb,
@@ -43,23 +58,39 @@ def make_train_step(model: Model, run: RunConfig) -> Callable:
     grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
 
     def train_step(state: state_lib.TrainState, batch) -> Tuple:
+        # Hoisted rotations: ONE Cayley-Neumann build (and, via the vjp,
+        # ONE backward through it) per train step, shared by every adapted
+        # linear and every microbatch.  `adapter` below is the augmented
+        # tree; its grads are pulled back to packed-skew space after the
+        # scan, which is exact -- the build's VJP is linear in dR.
+        hoist = rot_lib.should_hoist(state.adapter, acfg) \
+            if hoist_rotations is None else hoist_rotations
+        if hoist:
+            adapter, pullback = jax.vjp(
+                lambda a: rot_lib.with_rotations(a, acfg), state.adapter)
+        else:
+            adapter, pullback = state.adapter, None
+
         if m > 1:
             mbs = _split_microbatches(batch, m)
 
             def acc_step(carry, mb):
                 gsum, lsum = carry
-                (loss, _), g = grad_fn(state.adapter, state.base, mb)
+                (loss, _), g = grad_fn(adapter, state.base, mb)
                 gsum = jax.tree_util.tree_map(
                     lambda a, b: a + b.astype(jnp.float32), gsum, g)
                 return (gsum, lsum + loss), None
 
             g0 = jax.tree_util.tree_map(
-                lambda p: jnp.zeros(p.shape, jnp.float32), state.adapter)
+                lambda p: jnp.zeros(p.shape, jnp.float32), adapter)
             (gsum, lsum), _ = jax.lax.scan(acc_step, (g0, 0.0), mbs)
             grads = jax.tree_util.tree_map(lambda g: g / m, gsum)
             loss = lsum / m
         else:
-            (loss, _), grads = grad_fn(state.adapter, state.base, batch)
+            (loss, _), grads = grad_fn(adapter, state.base, batch)
+
+        if pullback is not None:
+            grads = pullback(grads)[0]
 
         comp_err = state.comp_err
         if use_comp:

@@ -1,0 +1,297 @@
+"""Fused backward subsystem: the oftv2/qoft_linear_bwd Pallas kernels vs
+the jnp oracles, the no-dense-W guarantee of the quantized backward, and
+the once-per-train-step rotation hoisting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config.base import (AdapterConfig, ModelConfig, ParallelConfig,
+                               QuantConfig, RunConfig, TrainConfig)
+from repro.core import skew
+from repro.core.cayley import build_rotation
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+from repro.quant import nf4
+
+pytestmark = pytest.mark.kernels
+
+
+# ---------------------------------------------------- kernel vs oracle ----
+BWD_SHAPES = [
+    # (lead, d_in, d_out, b): odd token counts exercise the zero-padding,
+    # d_out=33 / d_in=96 force the n/k full-dim tile fallbacks
+    ((37,), 64, 48, 16), ((3, 7), 128, 96, 32), ((260,), 96, 33, 8),
+    ((1,), 64, 64, 64), ((512,), 256, 128, 32),
+]
+
+
+def _inputs(lead, d, n, b, seed=0):
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, lead + (d,), jnp.float32)
+    w = (jax.random.normal(key, (d, n), jnp.float32) / np.sqrt(d))
+    qp = skew.random_skew(key, (d // b,), b, scale=0.1)
+    r = build_rotation(qp, b, 5)
+    g = jax.random.normal(jax.random.fold_in(key, 1), lead + (n,),
+                          jnp.float32)
+    return x, r, w, g
+
+
+@pytest.mark.parametrize("lead,d,n,b", BWD_SHAPES)
+def test_oftv2_bwd_kernel_matches_ref(lead, d, n, b):
+    x, r, w, g = _inputs(lead, d, n, b)
+    dx, dr = kops._oftv2_bwd_raw(g, x, r, w)
+    dx_r, dr_r = kref.oftv2_linear_bwd_ref(g, x, r, w)
+    assert dx.shape == x.shape and dr.shape == r.shape
+    np.testing.assert_allclose(np.asarray(dx), np.asarray(dx_r), rtol=2e-5,
+                               atol=2e-5)
+    np.testing.assert_allclose(np.asarray(dr), np.asarray(dr_r), rtol=2e-5,
+                               atol=2e-5)
+
+
+@pytest.mark.parametrize("lead,d,n,b", BWD_SHAPES)
+def test_oftv2_fused_grads_match_oracle(lead, d, n, b):
+    x, r, w, _ = _inputs(lead, d, n, b)
+
+    def f_k(x, r, w):
+        return jnp.sum(jnp.sin(kops.oftv2_linear_fused(x, r, w)))
+
+    def f_r(x, r, w):
+        return jnp.sum(jnp.sin(kref.oftv2_linear_ref(x, r, w)))
+
+    gk = jax.grad(f_k, argnums=(0, 1, 2))(x, r, w)
+    gr = jax.grad(f_r, argnums=(0, 1, 2))(x, r, w)
+    for a, b_ in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_), rtol=1e-4,
+                                   atol=1e-4)
+
+
+@pytest.mark.parametrize("lead,d,n,b,bs", [
+    ((29,), 128, 64, 16, 64), ((3, 11), 256, 96, 32, 32),
+    ((41,), 64, 33, 16, 16), ((7,), 512, 128, 32, 64),
+])
+def test_qoft_bwd_kernel_matches_ref(lead, d, n, b, bs):
+    x, r, w, g = _inputs(lead, d, n, b, seed=1)
+    q = nf4.quantize(0.1 * w, QuantConfig(kind="nf4", block_size=bs,
+                                          double_quant=False))
+    dx, dr = kops._qoft_bwd_raw(g, x, r, q["nf4_codes"], q["absmax"], bs)
+    dx_r, dr_r = kref.qoft_linear_bwd_ref(g, x, r, q["nf4_codes"],
+                                          q["absmax"], bs)
+    np.testing.assert_allclose(np.asarray(dx), np.asarray(dx_r), rtol=2e-5,
+                               atol=2e-5)
+    np.testing.assert_allclose(np.asarray(dr), np.asarray(dr_r), rtol=2e-5,
+                               atol=2e-5)
+
+    def f_k(x, r):
+        return jnp.sum(jnp.sin(kops.qoft_linear_fused(
+            x, r, q["nf4_codes"], q["absmax"], bs)))
+
+    def f_r(x, r):
+        return jnp.sum(jnp.sin(kref.qoft_linear_ref(
+            x, r, q["nf4_codes"], q["absmax"], bs)))
+
+    gk = jax.grad(f_k, argnums=(0, 1))(x, r)
+    gr = jax.grad(f_r, argnums=(0, 1))(x, r)
+    for a, b_ in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_), rtol=1e-4,
+                                   atol=1e-4)
+
+
+def test_frozen_base_dw_is_structurally_zero():
+    """train_w=False (the adapted-linear path): dW is exactly zero and the
+    backward jaxpr contains no (T, K) x (T, N) contraction feeding it."""
+    x, r, w, _ = _inputs((21,), 64, 40, 16)
+    dw = jax.grad(lambda w_: jnp.sum(
+        kops.oftv2_linear_fused(x, r, w_, False)))(w)
+    assert float(jnp.max(jnp.abs(dw))) == 0.0
+    # and the dx/dr grads are unaffected by the skip
+    g_frozen = jax.grad(lambda x_, r_: jnp.sum(
+        kops.oftv2_linear_fused(x_, r_, w, False)), argnums=(0, 1))(x, r)
+    g_train = jax.grad(lambda x_, r_: jnp.sum(
+        kops.oftv2_linear_fused(x_, r_, w, True)), argnums=(0, 1))(x, r)
+    for a, b_ in zip(g_frozen, g_train):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_), rtol=1e-6)
+
+
+def test_fused_bwd_neumann0_exact_cayley_fallback():
+    """Fused fwd+bwd grads vs unfused, with the exact-Cayley (solve) R
+    build: the kernel path composes with the neumann_terms=0 oracle
+    fallback of cayley_neumann."""
+    from repro.core import adapter as ad
+    from repro.quant.common import quantize_linear
+    key = jax.random.PRNGKey(3)
+    x = jax.random.normal(key, (2, 9, 128))
+    w = 0.05 * jax.random.normal(key, (128, 96))
+    adp = {"q_packed": skew.random_skew(key, (8,), 16, scale=0.1)}
+    qcfg = QuantConfig(kind="nf4", block_size=32, double_quant=False)
+    qstate = quantize_linear(w, qcfg)
+    acfg_u = AdapterConfig(kind="oftv2", block_size=16, neumann_terms=0)
+    acfg_f = AdapterConfig(kind="oftv2", block_size=16, neumann_terms=0,
+                           fuse_linear=True)
+
+    def loss(p, acfg):
+        return jnp.sum(jnp.square(ad.adapted_linear(x, qstate, p, acfg,
+                                                    qcfg)))
+
+    g_u = jax.grad(loss)(adp, acfg_u)["q_packed"]
+    g_f = jax.grad(loss)(adp, acfg_f)["q_packed"]
+    np.testing.assert_allclose(np.asarray(g_f), np.asarray(g_u), rtol=1e-4,
+                               atol=1e-4)
+
+
+# ------------------------------------------------- no dense W in the bwd ----
+def _float_shapes(jaxpr, out):
+    """All float outvar shapes in a jaxpr, recursing into sub-jaxprs but NOT
+    into Pallas kernel bodies: a pallas_call's inner tiles live in VMEM.
+    The pallas_call eqn's own outvars ARE recorded, so a kernel that
+    materializes a dense W to HBM (e.g. nf4_dequant) is still caught."""
+    for eqn in jaxpr.eqns:
+        for v in eqn.outvars:
+            aval = v.aval
+            if (hasattr(aval, "shape") and hasattr(aval, "dtype")
+                    and jnp.issubdtype(aval.dtype, jnp.floating)):
+                out.append(tuple(aval.shape))
+        if eqn.primitive.name == "pallas_call":
+            continue
+        for val in eqn.params.values():
+            for sub in _subjaxprs(val):
+                _float_shapes(sub, out)
+    return out
+
+
+def _subjaxprs(val):
+    from jax._src import core as jcore
+    if isinstance(val, jcore.Jaxpr):
+        yield val
+    elif isinstance(val, jcore.ClosedJaxpr):
+        yield val.jaxpr
+    elif isinstance(val, (list, tuple)):
+        for v in val:
+            yield from _subjaxprs(v)
+
+
+def test_qoft_bwd_never_materializes_dense_weight():
+    """Acceptance: the QOFT backward performs zero full-weight dequants to
+    HBM -- no (d_in, d_out) float array exists anywhere in the fwd+bwd
+    jaxpr outside kernel-internal VMEM tiles."""
+    d, n, b, bs = 128, 96, 16, 32
+    x, r, w, _ = _inputs((16,), d, n, b, seed=2)
+    q = nf4.quantize(0.1 * w, QuantConfig(kind="nf4", block_size=bs,
+                                          double_quant=False))
+
+    def loss(x, r):
+        return jnp.sum(kops.qoft_linear_fused(x, r, q["nf4_codes"],
+                                              q["absmax"], bs))
+
+    jaxpr = jax.make_jaxpr(jax.grad(loss, argnums=(0, 1)))(x, r)
+    shapes = _float_shapes(jaxpr.jaxpr, [])
+    assert shapes, "detector saw no float intermediates at all"
+    assert (d, n) not in shapes, \
+        f"dense ({d}, {n}) weight materialized in the QOFT bwd"
+
+    # detector sanity: an explicit full dequant IS caught
+    dq_jaxpr = jax.make_jaxpr(
+        lambda c, a: kops.nf4_dequant(c, a, bs))(q["nf4_codes"], q["absmax"])
+    assert (d, n) in _float_shapes(dq_jaxpr.jaxpr, [])
+
+
+# ------------------------------------------ rotation hoisting / reuse ----
+def _tiny_run(micro, quant="none", fuse=False, adapter="oftv2"):
+    cfg = ModelConfig(name="bwd", num_layers=2, d_model=64, num_heads=4,
+                      num_kv_heads=2, d_ff=128, vocab_size=64,
+                      rope_theta=1e4)
+    return RunConfig(
+        model=cfg,
+        adapter=AdapterConfig(kind=adapter, block_size=16, neumann_terms=4,
+                              fuse_linear=fuse),
+        quant=QuantConfig(kind=quant, block_size=32),
+        parallel=ParallelConfig(microbatches=micro),
+        train=TrainConfig(global_batch=8, seq_len=32))
+
+
+def _batch(run):
+    from repro.data.loader import ShardedLoader
+    from repro.data.synthetic import SyntheticSpec
+    b = ShardedLoader(SyntheticSpec(vocab_size=run.model.vocab_size,
+                                    seq_len=run.train.seq_len, noise=0.05),
+                      global_batch=run.train.global_batch,
+                      seed=0).next_batch()
+    return jax.tree_util.tree_map(jnp.asarray, b)
+
+
+@pytest.mark.parametrize("micro", [1, 4])
+def test_build_r_traces_once_per_train_step(micro, monkeypatch):
+    """Acceptance: regardless of microbatch count, the rotation build runs
+    ONCE per train step -- hoisted out of the grad-accum scan."""
+    from repro.models import build
+    from repro.train import state as state_lib
+    from repro.train.step import make_train_step
+    from repro.core import oft
+
+    run = _tiny_run(micro)
+    model = build(run)
+    st = state_lib.create(model.init(jax.random.PRNGKey(0)))
+    batch = _batch(run)
+
+    calls = []
+    orig = oft.build_r
+    monkeypatch.setattr(oft, "build_r",
+                        lambda *a, **k: (calls.append(1), orig(*a, **k))[1])
+    jax.make_jaxpr(make_train_step(model, run))(st, batch)
+    assert len(calls) == 1, f"build_r traced {len(calls)}x (micro={micro})"
+
+
+@pytest.mark.parametrize("quant,fuse", [("none", False), ("none", True),
+                                        ("nf4", True)])
+def test_hoisted_step_matches_unhoisted(quant, fuse):
+    """R-built-once-per-step is a pure reassociation: loss and updated
+    adapter params match the per-linear-build path."""
+    from repro.models import build
+    from repro.train import state as state_lib
+    from repro.train.step import make_train_step
+
+    run = _tiny_run(4, quant=quant, fuse=fuse)
+    model = build(run)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(run)
+    s_h, m_h = make_train_step(model, run, hoist_rotations=True)(
+        state_lib.create(params), batch)
+    s_u, m_u = make_train_step(model, run, hoist_rotations=False)(
+        state_lib.create(params), batch)
+    np.testing.assert_allclose(float(m_h["loss"]), float(m_u["loss"]),
+                               rtol=1e-6)
+    for a, b in zip(jax.tree_util.tree_leaves(s_h.adapter),
+                    jax.tree_util.tree_leaves(s_u.adapter)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4,
+                                   atol=1e-6)
+
+
+def test_with_rotations_matches_per_leaf_build():
+    """The concatenated single-call build == per-leaf build_r."""
+    from repro.core import oft, rotations
+    acfg = AdapterConfig(kind="oftv2", block_size=16, neumann_terms=4)
+    key = jax.random.PRNGKey(7)
+    tree = {
+        "attn": {"q": {"q_packed": skew.random_skew(key, (2, 4), 16,
+                                                    scale=0.1)},
+                 "o": {"q_packed": skew.random_skew(key, (2, 8), 16,
+                                                    scale=0.1)}},
+        "mlp": {"up": {"q_packed": skew.random_skew(key, (3,), 16,
+                                                    scale=0.1)}},
+    }
+    assert rotations.should_hoist(tree, acfg)
+    aug = rotations.with_rotations(tree, acfg)
+    for path, leaf in rotations._oft_leaves(aug):
+        want = oft.build_r({"q_packed": leaf["q_packed"].reshape(
+            -1, leaf["q_packed"].shape[-1])}, acfg)
+        got = leaf["r_blocks"].reshape(want.shape)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-6, atol=1e-7)
+    stripped = rotations.strip_rotations(aug)
+    assert (jax.tree_util.tree_structure(stripped)
+            == jax.tree_util.tree_structure(tree))
+    for a, b in zip(jax.tree_util.tree_leaves(stripped),
+                    jax.tree_util.tree_leaves(tree)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert not rotations.should_hoist({}, acfg)
+    assert not rotations.should_hoist(tree, AdapterConfig(kind="lora"))

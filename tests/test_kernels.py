@@ -252,6 +252,41 @@ def test_linear_fusion_mode_plan():
     assert linear_fusion_mode("q", 128, 96, acfg_off, nf4_q) == "unfused"
 
 
+def test_direct_kernel_calls_resolve_interpret_default():
+    """Kernel entry points called WITHOUT interpret= auto-detect the
+    backend (runtime.resolve_interpret) instead of a hardcoded True --
+    direct callers on TPU get compiled kernels, and on CPU these still run
+    (interpret) rather than failing to lower."""
+    from repro.core.cayley import build_rotation
+    from repro.kernels.block_oft_apply import block_oft_apply_kernel
+    from repro.kernels.cayley_neumann import cayley_neumann_kernel
+    from repro.kernels.nf4_dequant import nf4_dequant_kernel
+    from repro.kernels.oftv2_linear_bwd import oftv2_linear_bwd_kernel
+    from repro.kernels.oftv2_linear_fused import oftv2_linear_fused_kernel
+    key = jax.random.PRNGKey(9)
+    qp = skew.random_skew(key, (8,), 16, scale=0.05)
+    r = cayley_neumann_kernel(qp, 16, 5, block_tile=8)
+    np.testing.assert_allclose(np.asarray(r),
+                               np.asarray(kref.cayley_neumann_ref(qp, 16, 5)),
+                               rtol=1e-5, atol=1e-6)
+    x3 = jax.random.normal(key, (8, 8, 16))
+    y3 = block_oft_apply_kernel(x3, r, token_tile=8, block_tile=8)
+    assert y3.shape == x3.shape
+    x = jax.random.normal(key, (8, 128))
+    w = 0.05 * jax.random.normal(key, (128, 64))
+    rr = build_rotation(skew.random_skew(key, (8,), 16, scale=0.05), 16, 5)
+    y = oftv2_linear_fused_kernel(x, rr, w, token_tile=8, n_tile=64,
+                                  k_tile=128)
+    dx, dr = oftv2_linear_bwd_kernel(jnp.ones_like(y), x, rr, w,
+                                     token_tile=8, n_tile=64, k_tile=128)
+    assert dx.shape == x.shape and dr.shape == rr.shape
+    q = nf4.quantize(w, QuantConfig(kind="nf4", block_size=32,
+                                    double_quant=False))
+    wd = nf4_dequant_kernel(q["nf4_codes"], q["absmax"], 32, in_tile=128,
+                            out_tile=64)
+    assert wd.shape == w.shape
+
+
 def test_oftv2_with_pallas_flag_end_to_end():
     """core.oft routes through the kernels when use_pallas=True."""
     from repro.config.base import AdapterConfig
