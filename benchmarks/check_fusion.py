@@ -1,12 +1,18 @@
-"""CI gate on the emitted fusion-plan report.
+"""CI gate on the emitted fusion-plan + serving-speedup report.
 
-``kernels_bench.fusion_plan_rows`` emits one ``fusion_plan/.../expect_X``
-row per adapted linear per representative config, with the mode the
-dispatcher ACTUALLY picked in the derived column (``got=Y``).  This script
-reads the benchmark JSON artifact (``run.py --json``) and fails if any
+``kernels_bench.fusion_plan_rows`` (and ``serving_bench`` for the
+multi-adapter kernels) emit one ``fusion_plan/.../expect_X`` row per
+adapted linear per representative config, with the mode the dispatcher
+ACTUALLY picked in the derived column (``got=Y``).  This script reads the
+benchmark JSON artifact (``run.py --json``) and fails if any
 expected-fused path silently fell back to the unfused oracle -- a perf
 regression the test suite can't see, since unfused is numerically
 identical.
+
+It also enforces ``serving/speedup/.../expect_ge_T`` rows: the
+multi-adapter batched decode must stay >= T times the N-sequential-batches
+baseline (the ISSUE-3 acceptance number; measured ~3x on the CI smoke, so
+T=2.0 has headroom against runner noise).
 
 Usage: python -m benchmarks.check_fusion bench-smoke.json
 """
@@ -30,9 +36,24 @@ def check(rows) -> int:
             bad.append((r["name"], got))
     for name, got in bad:
         print(f"check_fusion: {name} fell back to '{got}'", file=sys.stderr)
+
+    speedups = [r for r in rows
+                if r["name"].startswith("serving/speedup/")
+                and "/expect_ge_" in r["name"]]
+    slow = []
+    for r in speedups:
+        threshold = float(r["name"].rsplit("/expect_ge_", 1)[-1])
+        ratio = float(dict(kv.split("=", 1) for kv in
+                           r["derived"].split(";"))["multi_over_seq"])
+        if ratio < threshold:
+            slow.append((r["name"], ratio, threshold))
+    for name, ratio, threshold in slow:
+        print(f"check_fusion: {name} measured {ratio:.2f}x "
+              f"(< {threshold}x)", file=sys.stderr)
     print(f"check_fusion: {len(plan)} fusion-plan rows checked, "
-          f"{len(bad)} unexpected fallbacks")
-    return 1 if bad else 0
+          f"{len(bad)} unexpected fallbacks; {len(speedups)} serving "
+          f"speedup rows checked, {len(slow)} below threshold")
+    return 1 if (bad or slow) else 0
 
 
 def main() -> None:

@@ -1,0 +1,184 @@
+"""Multi-tenant serving: mixed-adapter batched decode vs the N-sequential-
+batches baseline, plus the serving fusion plan.
+
+The claim being benchmarked (README "Multi-tenant serving"): with the
+multi-adapter kernels, a batch mixing requests for N different adapters
+decodes in ONE pass -- tok/s stays near-flat as N grows at fixed batch --
+whereas without per-row routing the same traffic needs N sequential
+single-adapter batches, each paying the full per-step launch cost.
+
+Rows:
+  serving/multi_adapter_decode/N{n}_B{b}  -- engine run, mixed adapters
+  serving/sequential_baseline/N{n}_B{b}   -- N sequential generate() calls
+  serving/speedup/N{n}_B{b}/expect_ge_2.0 -- multi_over_seq ratio; the
+     check_fusion CI gate fails the run if it drops below the threshold
+  fusion_plan/serving/{dense,nf4}/...     -- expected multi-kernel per
+     linear; the same gate fails on any silent 'unfused' fallback.
+
+Both paths are explicitly warmed up (compile excluded) even under --smoke:
+the speedup row is a CI-checked acceptance number, not a vibe.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+
+PROMPT_LEN = 8
+GEN = 16
+BATCH = 4
+
+
+def _build_model(qkind: str):
+    from repro.config.base import (AdapterConfig, ModelConfig, QuantConfig,
+                                   RunConfig)
+    from repro.models import build
+    cfg = ModelConfig(name="serve-bench", family="dense", num_layers=2,
+                      d_model=64, num_heads=2, num_kv_heads=1, head_dim=32,
+                      d_ff=128, vocab_size=256, rope_theta=1e4)
+    run = RunConfig(model=cfg,
+                    adapter=AdapterConfig(kind="oftv2", block_size=16,
+                                          neumann_terms=5, fuse_linear=True),
+                    quant=QuantConfig(kind="nf4", block_size=32)
+                    if qkind == "nf4" else QuantConfig(kind="none"))
+    model = build(run)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params, cfg
+
+
+def _requests(cfg, n_adapters: int, batch: int):
+    from repro.serving import Request
+    key = jax.random.PRNGKey(1)
+    reqs = []
+    for i in range(batch):
+        prompt = np.asarray(jax.random.randint(
+            jax.random.fold_in(key, i), (PROMPT_LEN,), 0, cfg.vocab_size))
+        reqs.append(Request(f"req-{i}", prompt, adapter_id=i % n_adapters,
+                            max_new_tokens=GEN))
+    return reqs
+
+
+def _timed(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def _time_pair(fn_a, fn_b, iters: int = 5):
+    """(best_a, best_b, median pairwise b/a ratio) after one warmup each.
+
+    The warmups carry the jit compiles.  The two sides are timed
+    INTERLEAVED (a, b, a, b, ...) and the gated speedup is the median of
+    the per-pair ratios: a CPU-scheduler spike that lands in one phase
+    hits both sides of that pair, not five iterations of one side -- this
+    is what keeps the CI-gated ratio out of noise territory (the runs are
+    tens of ms each, so iters=5 costs CI nothing)."""
+    fn_a()
+    fn_b()
+    ta, tb = [], []
+    for _ in range(iters):
+        ta.append(_timed(fn_a))
+        tb.append(_timed(fn_b))
+    ratios = sorted(b / a for a, b in zip(ta, tb))
+    return min(ta), min(tb), ratios[len(ratios) // 2]
+
+
+def _time(fn) -> float:
+    """Best-of-5 wall seconds of fn() after one warmup call (ungated
+    scaling rows)."""
+    fn()
+    return min(_timed(fn) for _ in range(5))
+
+
+def decode_rows(n_adapters: int = 4, batch: int = BATCH):
+    from repro.serving import AdapterPool, ServingEngine, init_adapters
+    from repro.train.serving import generate
+
+    model, params, cfg = _build_model("none")
+    adapters = init_adapters(model, n_adapters, jax.random.PRNGKey(7))
+    pool = AdapterPool(model)
+    for i, tree in enumerate(adapters):
+        pool.register(f"tenant-{i}", tree)
+    reqs = _requests(cfg, n_adapters, batch)
+    total_tokens = sum(r.max_new_tokens for r in reqs)
+    tag = f"N{n_adapters}_B{batch}"
+
+    engine = ServingEngine(model, params, pool, n_slots=batch)
+
+    # N-sequential-batches baseline: the same traffic without per-row
+    # routing -- one single-adapter generate() per adapter, back to back.
+    by_adapter = {}
+    for r in reqs:
+        by_adapter.setdefault(r.adapter_id, []).append(r)
+
+    def sequential():
+        for aid, rs in sorted(by_adapter.items()):
+            p = {"base": params["base"], "adapter": adapters[aid]}
+            prompts = jnp.asarray(np.stack([r.prompt for r in rs]))
+            generate(model, p, prompts, steps=rs[0].max_new_tokens
+                     ).block_until_ready()
+
+    dt_multi, dt_seq, ratio = _time_pair(lambda: engine.run(reqs),
+                                         sequential)
+
+    return [
+        (f"serving/multi_adapter_decode/{tag}", dt_multi * 1e6,
+         f"tok_s={total_tokens / dt_multi:.1f}"),
+        (f"serving/sequential_baseline/{tag}", dt_seq * 1e6,
+         f"tok_s={total_tokens / dt_seq:.1f}"),
+        # the expect_ge threshold is parsed and enforced by
+        # benchmarks/check_fusion.py in CI (measured ~3-4x on the CI smoke)
+        (f"serving/speedup/{tag}/expect_ge_2.0", 0.0,
+         f"multi_over_seq={ratio:.2f}"),
+    ]
+
+
+def scaling_rows():
+    """tok/s of the mixed-adapter engine as the pool grows at fixed batch
+    (the near-flat curve the adapter-pool design buys). Full runs only --
+    the smoke tier keeps to the gated N=4 comparison."""
+    from repro.serving import AdapterPool, ServingEngine, init_adapters
+    model, params, cfg = _build_model("none")
+    rows = []
+    for n in (1, 2, 4, 8):
+        adapters = init_adapters(model, n, jax.random.PRNGKey(7))
+        pool = AdapterPool(model)
+        for i, tree in enumerate(adapters):
+            pool.register(f"tenant-{i}", tree)
+        reqs = _requests(cfg, n, BATCH)
+        engine = ServingEngine(model, params, pool, n_slots=BATCH)
+        dt = _time(lambda: engine.run(reqs))
+        total = sum(r.max_new_tokens for r in reqs)
+        rows.append((f"serving/pool_scaling/N{n}_B{BATCH}", dt * 1e6,
+                     f"tok_s={total / dt:.1f}"))
+    return rows
+
+
+def fusion_plan_rows():
+    """Per-linear serving plan; check_fusion fails the CI smoke run if any
+    expected multi path reports 'unfused'."""
+    from repro.config.base import AdapterConfig, ModelConfig, QuantConfig
+    from repro.models.linears import model_multi_fusion_plan
+    cfg = ModelConfig(name="plan", num_layers=2, d_model=1024, num_heads=8,
+                      num_kv_heads=8, d_ff=4096)
+    acfg = AdapterConfig(kind="oftv2", block_size=32, fuse_linear=True)
+    rows = []
+    for qname, qcfg, expect in [
+            ("nf4", QuantConfig(kind="nf4", block_size=64), "qoft_multi"),
+            ("dense", QuantConfig(kind="none"), "oftv2_multi")]:
+        for name, got in sorted(model_multi_fusion_plan(cfg, acfg,
+                                                        qcfg).items()):
+            rows.append((f"fusion_plan/serving/{qname}/{name}/"
+                         f"expect_{expect}", 0.0, f"got={got}"))
+    return rows
+
+
+def run():
+    rows = decode_rows(n_adapters=4, batch=BATCH)
+    if not common.SMOKE:
+        rows += scaling_rows()
+    return rows + fusion_plan_rows()

@@ -61,7 +61,7 @@ def fusion_mode(acfg: AdapterConfig, qcfg: QuantConfig,
 
 def adapted_linear(x: jnp.ndarray, qstate: dict, adapter: Optional[dict],
                    acfg: AdapterConfig, qcfg: QuantConfig,
-                   constrain=None) -> jnp.ndarray:
+                   constrain=None, adapter_id=None) -> jnp.ndarray:
     """y = adapted forward of one frozen linear.
 
     OFTv2/QOFT path never touches the quant state before the matmul --
@@ -71,6 +71,13 @@ def adapted_linear(x: jnp.ndarray, qstate: dict, adapter: Optional[dict],
     (rotate+matmul; plus in-kernel NF4 dequant for QOFT, so a dense W never
     exists in HBM). See repro.core.oft.oftv2_linear / repro.kernels.
 
+    Multi-tenant serving (repro.serving): when the adapter leaf carries an
+    ``r_stack`` -- the pool's per-layer (A, K//b, b, b) rotation stack --
+    each batch row is routed to ITS adapter's blocks by ``adapter_id``
+    ((B,) int32, threaded from the decode batch) inside the fused kernel.
+    A Python-int adapter_id is the all-rows-same-adapter fast path and
+    lowers to the single-adapter kernels.
+
     constrain (optional, on-mesh only): gather-codes optimization -- the
     ZeRO-3 all-gather is forced onto the uint8 quant state (replicate it,
     dequantize locally) instead of the dequantized bf16 weight, cutting
@@ -79,6 +86,25 @@ def adapted_linear(x: jnp.ndarray, qstate: dict, adapter: Optional[dict],
     if (constrain is not None and qcfg.gather_codes and qcfg.enabled
             and "w" not in qstate):
         qstate = {k: constrain(v) for k, v in qstate.items()}
+    if adapter is not None and "r_stack" in adapter:
+        if adapter_id is None:
+            raise ValueError(
+                "pooled multi-adapter params (r_stack) need a per-row "
+                "adapter_id -- pass batch['adapter_id'] (repro.serving)")
+        from repro.kernels import ops as kops
+        mode = fusion_mode(acfg, qcfg, qstate.keys())
+        if mode == "unfused":
+            raise ValueError(
+                "multi-adapter serving requires the fused OFTv2 path "
+                "(AdapterConfig(kind='oftv2', fuse_linear=True))")
+        if mode == "qoft_fused":
+            from repro.quant import nf4
+            return kops.qoft_linear_multi(x, adapter["r_stack"], adapter_id,
+                                          qstate["nf4_codes"],
+                                          nf4.absmax_fp32(qstate, qcfg),
+                                          qcfg.block_size)
+        w = dequantize_linear(qstate, qcfg, x.dtype)
+        return kops.oftv2_linear_multi(x, adapter["r_stack"], adapter_id, w)
     if (adapter is not None
             and fusion_mode(acfg, qcfg, qstate.keys()) == "qoft_fused"):
         from repro.kernels import ops as kops

@@ -9,9 +9,15 @@ interpret mode on CPU; compiled path on real TPUs):
                         for the rotated activations)
   qoft_linear_fused  -- NF4 dequant + rotation + matmul in one kernel (no
                         full-precision W ever materialized in HBM)
+  oftv2_linear_multi -- multi-adapter serving variant: per-row adapter_id
+                        routes each token to its adapter's rotation blocks
+  qoft_linear_multi  -- the same with in-kernel NF4 dequant of the shared
+                        frozen base
 """
 from repro.kernels.ops import (block_oft_apply, cayley_neumann, nf4_dequant,
-                               oftv2_linear_fused, qoft_linear_fused)
+                               oftv2_linear_fused, oftv2_linear_multi,
+                               qoft_linear_fused, qoft_linear_multi)
 
 __all__ = ["block_oft_apply", "cayley_neumann", "nf4_dequant",
-           "oftv2_linear_fused", "qoft_linear_fused"]
+           "oftv2_linear_fused", "oftv2_linear_multi", "qoft_linear_fused",
+           "qoft_linear_multi"]

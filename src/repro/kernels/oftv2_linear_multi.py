@@ -1,0 +1,101 @@
+"""Pallas TPU kernel: multi-adapter fused OFTv2 linear -- per-row rotation
+routing inside the rotate+matmul kernel.
+
+The multi-tenant serving regime (repro.serving): N finetuned adapters share
+ONE frozen base, and a single decode batch mixes requests for different
+adapters.  An adapter is just a stack of tiny rotation blocks, so the whole
+pool rides into the kernel as ``r_stack: (A, K//b, b, b)`` and each token
+row picks its adapter's blocks by a per-row ``adapter_id``:
+
+  * grid = (token tiles, out tiles, k tiles), k innermost, exactly as in
+    oftv2_linear_fused -- the fp32 output tile accumulates in VMEM.
+  * routing is a masked select over the (static, small) adapter axis: for
+    each adapter a, the tile is rotated with R_a via the SAME ``_rotate_tile``
+    the single-adapter kernel uses, and rows with ``adapter_id == a`` keep
+    that result.  Per-row numerics are therefore bitwise-identical to a
+    single-adapter kernel call with ``r_stack[a]`` -- the property the
+    serving engine's "batched multi-adapter decode == N single-adapter
+    runs" guarantee rests on (tests/test_serving_multi.py).
+  * cost: the rotation (a b-wide batched small-matmul) runs A times per
+    tile; the dominant x @ W contraction still runs once.  For serving pool
+    sizes (A << N_TILE / b) the overhead is noise next to the matmul, and
+    HBM traffic is unchanged: x + W + y once each, plus the tiny r_stack.
+
+``adapter_id`` rides as a (T, 1) int32 array so the mask stays 2-D (TPU
+lowering has no 1-D iota/compare).  K_TILE must be a multiple of the OFT
+block size b (ops.py picks tiles accordingly).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.oftv2_linear_fused import _rotate_tile
+from repro.kernels.runtime import resolve_interpret
+
+DEFAULT_TOKEN_TILE = 256
+DEFAULT_N_TILE = 256
+DEFAULT_K_TILE = 512
+
+
+def _route_rotate(x, ids, r_ref):
+    """Rotate each row of the (TT, KT) tile with its adapter's blocks.
+
+    x: (TT, KT) fp32, ids: (TT, 1) int32, r_ref: (A, KT//b, b, b) ref.
+    Masked select over the static adapter axis -- each branch reuses the
+    single-adapter ``_rotate_tile`` so per-row results match it bitwise."""
+    n_adapters = r_ref.shape[0]
+    xr = jnp.zeros_like(x)
+    for a in range(n_adapters):
+        ra = r_ref[a].astype(jnp.float32)        # (KT//b, b, b)
+        xr = jnp.where(ids == a, _rotate_tile(x, ra), xr)
+    return xr
+
+
+def _kernel(x_ref, ids_ref, r_ref, w_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)           # (TT, KT)
+    ids = ids_ref[...]                           # (TT, 1) int32
+    w = w_ref[...].astype(jnp.float32)           # (KT, NT)
+    acc = jnp.dot(_route_rotate(x, ids, r_ref), w,
+                  preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += acc
+
+
+@functools.partial(jax.jit, static_argnames=("token_tile", "n_tile", "k_tile",
+                                             "interpret"))
+def oftv2_linear_multi_kernel(x2: jnp.ndarray, ids2: jnp.ndarray,
+                              r_stack: jnp.ndarray, w: jnp.ndarray,
+                              token_tile: int = DEFAULT_TOKEN_TILE,
+                              n_tile: int = DEFAULT_N_TILE,
+                              k_tile: int = DEFAULT_K_TILE,
+                              interpret: bool = None) -> jnp.ndarray:
+    """x2: (T, K) activations, ids2: (T, 1) int32 adapter ids in [0, A),
+    r_stack: (A, K//b, b, b), w: (K, N) -> (T, N) fp32 (callers cast).
+    T % token_tile == N % n_tile == K % k_tile == 0 and k_tile % b == 0
+    (ops.py pads/picks).  interpret=None auto-detects the backend."""
+    interpret = resolve_interpret(interpret)
+    t, k_dim = x2.shape
+    n = w.shape[1]
+    a, rb, b, _ = r_stack.shape
+    grid = (t // token_tile, n // n_tile, k_dim // k_tile)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((token_tile, k_tile), lambda i, j, k: (i, k)),
+            pl.BlockSpec((token_tile, 1), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((a, k_tile // b, b, b), lambda i, j, k: (0, k, 0, 0)),
+            pl.BlockSpec((k_tile, n_tile), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((token_tile, n_tile), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((t, n), jnp.float32),
+        interpret=interpret,
+    )(x2, ids2, r_stack, w)

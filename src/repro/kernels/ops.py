@@ -37,8 +37,10 @@ from repro.kernels.cayley_neumann import cayley_neumann_kernel
 from repro.kernels.nf4_dequant import nf4_dequant_kernel
 from repro.kernels.oftv2_linear_bwd import oftv2_linear_bwd_kernel
 from repro.kernels.oftv2_linear_fused import oftv2_linear_fused_kernel
+from repro.kernels.oftv2_linear_multi import oftv2_linear_multi_kernel
 from repro.kernels.qoft_linear_bwd import qoft_linear_bwd_kernel
 from repro.kernels.qoft_linear_fused import qoft_linear_fused_kernel
+from repro.kernels.qoft_linear_multi import qoft_linear_multi_kernel
 
 
 def _interpret() -> bool:
@@ -307,6 +309,72 @@ def _qlf_bwd(block_size, res, g):
 
 
 qoft_linear_fused.defvjp(_qlf_fwd, _qlf_bwd)
+
+
+# ------------------------------------------- multi-adapter fused linears ----
+def _flat_row_ids(adapter_id, lead, t: int) -> jnp.ndarray:
+    """(B,)/scalar/lead-shaped adapter ids -> (t, 1) int32 per-token column
+    (2-D so the kernel's routing mask has a TPU-lowerable shape)."""
+    return kref._row_adapter_ids(adapter_id, lead).reshape(t, 1)
+
+
+def oftv2_linear_multi(x: jnp.ndarray, r_stack: jnp.ndarray, adapter_id,
+                       w: jnp.ndarray) -> jnp.ndarray:
+    """Multi-adapter fused OFTv2 linear: y[row] = (x[row] @
+    blockdiag(r_stack[adapter_id[row]])) @ W in one Pallas kernel.
+
+    x: (B, ..., K), r_stack: (A, K//b, b, b), adapter_id: (B,) int32 (or
+    scalar / full-lead-shaped), w: (K, N) -> (B, ..., N).
+
+    A Python-int ``adapter_id`` is the all-rows-same-adapter fast path: it
+    lowers to the single-adapter ``oftv2_linear_fused`` (no routing work at
+    all).  Serving is inference-only, so there is no custom VJP -- the train
+    path keeps the single-adapter fused kernels."""
+    if isinstance(adapter_id, int):
+        return oftv2_linear_fused(x, r_stack[adapter_id], w, train_w=False)
+    a, rb, b, _ = r_stack.shape
+    x2, lead, t = _flatten_tokens(x)
+    k_dim, n = w.shape
+    token_tile, t_pad, n_tile, k_tile = _fused_tiles(t, k_dim, n, b)
+    ids2 = _flat_row_ids(adapter_id, lead, t)
+    if t_pad != t:
+        x2 = jnp.pad(x2, ((0, t_pad - t), (0, 0)))
+        ids2 = jnp.pad(ids2, ((0, t_pad - t), (0, 0)))
+    y2 = oftv2_linear_multi_kernel(x2, ids2, r_stack, w,
+                                   token_tile=token_tile, n_tile=n_tile,
+                                   k_tile=k_tile, interpret=_interpret())
+    return y2[:t].astype(x.dtype).reshape(lead + (n,))
+
+
+def qoft_linear_multi(x: jnp.ndarray, r_stack: jnp.ndarray, adapter_id,
+                      codes: jnp.ndarray, absmax: jnp.ndarray,
+                      block_size: int) -> jnp.ndarray:
+    """Multi-adapter fused QOFT linear: per-row rotation routing + in-kernel
+    NF4 dequant + matmul in one Pallas kernel (neither per-row rotated
+    activations nor a dense W ever exist in HBM).
+
+    x: (B, ..., K), r_stack: (A, K//b, b, b), adapter_id: (B,) int32 (or
+    scalar / full-lead-shaped), codes: (K//2, N) uint8,
+    absmax: (K//block_size, N) f32 -> (B, ..., N).  A Python-int
+    ``adapter_id`` lowers to the single-adapter ``qoft_linear_fused``."""
+    if isinstance(adapter_id, int):
+        return qoft_linear_fused(x, r_stack[adapter_id], codes, absmax,
+                                 block_size)
+    a, rb, b, _ = r_stack.shape
+    x2, lead, t = _flatten_tokens(x)
+    k_dim = codes.shape[0] * 2
+    n = codes.shape[1]
+    align = int(np.lcm(np.lcm(2, block_size), b))
+    token_tile, t_pad, n_tile, k_tile = _fused_tiles(t, k_dim, n, align)
+    ids2 = _flat_row_ids(adapter_id, lead, t)
+    if t_pad != t:
+        x2 = jnp.pad(x2, ((0, t_pad - t), (0, 0)))
+        ids2 = jnp.pad(ids2, ((0, t_pad - t), (0, 0)))
+    y2 = qoft_linear_multi_kernel(x2, ids2, r_stack, codes, absmax,
+                                  block_size, token_tile=token_tile,
+                                  n_tile=n_tile, k_tile=k_tile,
+                                  interpret=_interpret())
+    return y2[:t].astype(x.dtype).reshape(lead + (n,))
 
 
 # ---------------------------------------------------------- nf4_dequant ----

@@ -1,0 +1,93 @@
+"""Pallas TPU kernel: multi-adapter fused QOFT linear -- NF4 dequant +
+per-row rotation routing + matmul in one pass.
+
+The quantized twin of ``oftv2_linear_multi``: the frozen base stays packed
+NF4 in HBM and each program dequantizes its (K_TILE, N_TILE) weight tile in
+VMEM (same ``_dequant_tile`` as the single-adapter QOFT kernels, so the
+numerics cannot diverge), while each token row is rotated with the blocks
+of ITS adapter, selected from ``r_stack: (A, K//b, b, b)`` by a per-row
+``adapter_id``.  This is the paper's serving economics taken literally: one
+NF4 base + hundreds of block-diagonal adapters fit where a single merged
+bf16 weight would not, and a mixed-adapter batch needs neither a dense W
+nor per-adapter weight copies in HBM -- ever.
+
+Routing is the masked select over the static adapter axis described in
+oftv2_linear_multi.py; per-row results are bitwise-identical to a
+single-adapter ``qoft_linear_fused`` call with ``r_stack[a]``.
+
+K_TILE must be a multiple of lcm(2, absmax block, OFT block) so code pairs,
+absmax blocks and rotation blocks never straddle a k tile (ops.py picks
+tiles accordingly).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.oftv2_linear_multi import _route_rotate
+from repro.kernels.qoft_linear_fused import _dequant_tile
+from repro.kernels.runtime import resolve_interpret
+from repro.quant.nf4 import NF4_TABLE
+
+DEFAULT_TOKEN_TILE = 256
+DEFAULT_N_TILE = 128
+DEFAULT_K_TILE = 512
+
+
+def _make_kernel(block_size: int, k_tile: int):
+    def kernel(x_ref, ids_ref, r_ref, codes_ref, absmax_ref, table_ref,
+               o_ref):
+        x = x_ref[...].astype(jnp.float32)       # (TT, KT)
+        ids = ids_ref[...]                       # (TT, 1) int32
+        w = _dequant_tile(codes_ref[...], absmax_ref[...], table_ref[...],
+                          block_size, k_tile)    # (KT, NT), VMEM only
+        acc = jnp.dot(_route_rotate(x, ids, r_ref), w,
+                      preferred_element_type=jnp.float32)
+
+        @pl.when(pl.program_id(2) == 0)
+        def _init():
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        o_ref[...] += acc
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("block_size", "token_tile",
+                                             "n_tile", "k_tile", "interpret"))
+def qoft_linear_multi_kernel(x2: jnp.ndarray, ids2: jnp.ndarray,
+                             r_stack: jnp.ndarray, codes: jnp.ndarray,
+                             absmax: jnp.ndarray, block_size: int,
+                             token_tile: int = DEFAULT_TOKEN_TILE,
+                             n_tile: int = DEFAULT_N_TILE,
+                             k_tile: int = DEFAULT_K_TILE,
+                             interpret: bool = None) -> jnp.ndarray:
+    """x2: (T, K), ids2: (T, 1) int32 in [0, A), r_stack: (A, K//b, b, b),
+    codes: (K//2, N) uint8, absmax: (K//block_size, N) f32 -> (T, N) fp32
+    (callers cast).  T % token_tile == N % n_tile == K % k_tile == 0 and
+    k_tile % lcm(2, block_size, b) == 0 (ops.py pads/picks).
+    interpret=None auto-detects the backend."""
+    interpret = resolve_interpret(interpret)
+    t, k_dim = x2.shape
+    n = codes.shape[1]
+    a, rb, b, _ = r_stack.shape
+    table = jnp.asarray(NF4_TABLE)
+    grid = (t // token_tile, n // n_tile, k_dim // k_tile)
+    return pl.pallas_call(
+        _make_kernel(block_size, k_tile),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((token_tile, k_tile), lambda i, j, k: (i, k)),
+            pl.BlockSpec((token_tile, 1), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((a, k_tile // b, b, b), lambda i, j, k: (0, k, 0, 0)),
+            pl.BlockSpec((k_tile // 2, n_tile), lambda i, j, k: (k, j)),
+            pl.BlockSpec((k_tile // block_size, n_tile),
+                         lambda i, j, k: (k, j)),
+            pl.BlockSpec((16,), lambda i, j, k: (0,)),
+        ],
+        out_specs=pl.BlockSpec((token_tile, n_tile), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((t, n), jnp.float32),
+        interpret=interpret,
+    )(x2, ids2, r_stack, codes, absmax, table)

@@ -45,6 +45,47 @@ def qoft_linear_ref(x: jnp.ndarray, r_blocks: jnp.ndarray,
     return oftv2_linear_ref(x, r_blocks, w)
 
 
+def _row_adapter_ids(adapter_id: jnp.ndarray, lead) -> jnp.ndarray:
+    """Per-batch-row adapter ids -> per-token ids over the lead dims.
+
+    adapter_id: scalar, (B,) (broadcast over trailing lead dims, e.g. seq),
+    or already the full lead shape."""
+    aid = jnp.asarray(adapter_id, jnp.int32)
+    if aid.ndim == 0:
+        return jnp.broadcast_to(aid, lead)
+    if aid.shape != tuple(lead):
+        aid = aid.reshape((-1,) + (1,) * (len(lead) - 1))
+        aid = jnp.broadcast_to(aid, lead)
+    return aid
+
+
+def oftv2_linear_multi_ref(x: jnp.ndarray, r_stack: jnp.ndarray,
+                           adapter_id: jnp.ndarray,
+                           w: jnp.ndarray) -> jnp.ndarray:
+    """Multi-adapter fused linear oracle: each token row is rotated with
+    the blocks of ITS adapter (gathered from r_stack by adapter_id), then
+    the shared frozen matmul.  x: (..., K), r_stack: (A, K//b, b, b),
+    adapter_id: (B,) (or lead-shaped / scalar), w: (K, N)."""
+    a, rb, b, _ = r_stack.shape
+    lead = x.shape[:-1]
+    ids = _row_adapter_ids(adapter_id, lead)
+    r_rows = jnp.take(r_stack.astype(jnp.float32), ids, axis=0)
+    x3 = x.astype(jnp.float32).reshape(lead + (rb, b))
+    xr = jnp.einsum("...rb,...rbc->...rc", x3, r_rows)
+    xr = xr.reshape(lead + (rb * b,))
+    return (xr @ w.astype(jnp.float32)).astype(x.dtype)
+
+
+def qoft_linear_multi_ref(x: jnp.ndarray, r_stack: jnp.ndarray,
+                          adapter_id: jnp.ndarray, codes: jnp.ndarray,
+                          absmax: jnp.ndarray,
+                          block_size: int) -> jnp.ndarray:
+    """Multi-adapter fused QOFT oracle: dequant NF4 W, per-row rotate,
+    matmul."""
+    w = nf4_dequant_ref(codes, absmax, block_size, dtype=jnp.float32)
+    return oftv2_linear_multi_ref(x, r_stack, adapter_id, w)
+
+
 def oftv2_linear_bwd_ref(g: jnp.ndarray, x: jnp.ndarray,
                          r_blocks: jnp.ndarray, w: jnp.ndarray):
     """Fused OFTv2 linear backward oracle: (dx, dr) from cotangent g.

@@ -1,8 +1,17 @@
 """Serving entrypoint: batched generation with (optionally quantized) frozen
 base + unmerged OFTv2/LoRA adapters.
 
+Single-adapter:
+
     PYTHONPATH=src python -m repro.launch.serve --arch granite-8b --smoke \
         --quant nf4 --batch 4 --prompt-len 16 --gen 16
+
+Multi-tenant (--adapters N > 1): N adapters are registered against the one
+frozen base in an AdapterPool and a continuous-batching ServingEngine
+decodes a mixed-adapter batch -- every request row routed to its adapter's
+rotation blocks inside the fused Pallas kernels:
+
+    PYTHONPATH=src python -m repro.launch.serve --smoke --adapters 3
 """
 from __future__ import annotations
 
@@ -10,11 +19,65 @@ import argparse
 import time
 
 import jax
+import numpy as np
 
 from repro.config.base import AdapterConfig, QuantConfig, RunConfig
 from repro.configs import REGISTRY, get_config, get_smoke
 from repro.models import build
+from repro.models.linears import model_multi_fusion_plan
 from repro.train.serving import generate
+
+
+def _serve_single(model, params, args, cfg):
+    prompts = jax.random.randint(jax.random.PRNGKey(1),
+                                 (args.batch, args.prompt_len), 0,
+                                 cfg.vocab_size)
+    t0 = time.time()
+    out = generate(model, params, prompts, steps=args.gen,
+                   temperature=args.temperature, jit=not args.no_jit)
+    dt = time.time() - t0
+    tok_s = args.batch * args.gen / dt
+    print(f"[serve] {cfg.name} {args.adapter}/{args.quant}: generated "
+          f"{out.shape} in {dt:.1f}s ({tok_s:.1f} tok/s batched)")
+    print(out[:, args.prompt_len:])
+
+
+def _serve_multi(model, params, args, cfg):
+    from repro.serving import AdapterPool, Request, ServingEngine, \
+        init_adapters
+
+    pool = AdapterPool(model)
+    for i, tree in enumerate(init_adapters(model, args.adapters,
+                                           jax.random.PRNGKey(2))):
+        pool.register(f"tenant-{i}", tree)
+    counts = pool.param_counts()
+    plan = model_multi_fusion_plan(cfg, model.run.adapter, model.run.quant)
+    print(f"[serve] pool: {pool.n_adapters} adapters x "
+          f"{counts['adapter_each']:,} params on one "
+          f"{counts['base']:,}-param frozen base; "
+          f"plan={{{', '.join(f'{k}:{v}' for k, v in sorted(plan.items()))}}}")
+
+    key = jax.random.PRNGKey(1)
+    requests = []
+    for i in range(args.batch):
+        prompt = np.asarray(jax.random.randint(
+            jax.random.fold_in(key, i), (args.prompt_len,), 0,
+            cfg.vocab_size))
+        requests.append(Request(f"req-{i}", prompt,
+                                adapter_id=i % args.adapters,
+                                max_new_tokens=args.gen))
+    engine = ServingEngine(model, params, pool, n_slots=args.slots
+                           or args.batch, temperature=args.temperature,
+                           jit=not args.no_jit)
+    t0 = time.time()
+    out = engine.run(requests)
+    dt = time.time() - t0
+    total = sum(len(v) for v in out.values())
+    print(f"[serve] {cfg.name} multi-tenant {args.adapter}/{args.quant}: "
+          f"{len(requests)} requests over {args.adapters} adapters, "
+          f"{total} tokens in {dt:.1f}s ({total / dt:.1f} tok/s batched)")
+    for req in requests:
+        print(f"  {req.rid} (adapter {req.adapter_id}): {out[req.rid]}")
 
 
 def main(argv=None):
@@ -23,8 +86,18 @@ def main(argv=None):
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--adapter", default="oftv2",
                     choices=["oftv2", "lora", "none"])
+    ap.add_argument("--adapters", type=int, default=1,
+                    help="serve N adapters against the one frozen base "
+                         "(multi-tenant engine; implies --fuse)")
+    ap.add_argument("--slots", type=int, default=0,
+                    help="decode batch slots for the multi-tenant engine "
+                         "(0 = one per request)")
     ap.add_argument("--quant", default="none",
                     choices=["none", "nf4", "awq", "int8"])
+    ap.add_argument("--fuse", action="store_true",
+                    help="fused Pallas linears for the OFTv2 path")
+    ap.add_argument("--no-jit", action="store_true",
+                    help="eager decode (debugging escape hatch)")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=16)
@@ -34,23 +107,21 @@ def main(argv=None):
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     if cfg.is_encoder:
         raise SystemExit("encoder-only architectures have no decode step")
+    multi = args.adapters > 1
+    if multi and args.adapter != "oftv2":
+        raise SystemExit("--adapters N>1 serves pooled OFTv2 rotations; "
+                         "use --adapter oftv2")
     run = RunConfig(model=cfg,
                     adapter=AdapterConfig(kind=args.adapter, block_size=32,
-                                          neumann_terms=5),
+                                          neumann_terms=5,
+                                          fuse_linear=args.fuse or multi),
                     quant=QuantConfig(kind=args.quant))
     model = build(run)
     params = model.init(jax.random.PRNGKey(0))
-    prompts = jax.random.randint(jax.random.PRNGKey(1),
-                                 (args.batch, args.prompt_len), 0,
-                                 cfg.vocab_size)
-    t0 = time.time()
-    out = generate(model, params, prompts, steps=args.gen,
-                   temperature=args.temperature)
-    dt = time.time() - t0
-    tok_s = args.batch * args.gen / dt
-    print(f"[serve] {cfg.name} {args.adapter}/{args.quant}: generated "
-          f"{out.shape} in {dt:.1f}s ({tok_s:.1f} tok/s batched)")
-    print(out[:, args.prompt_len:])
+    if multi:
+        _serve_multi(model, params, args, cfg)
+    else:
+        _serve_single(model, params, args, cfg)
 
 
 if __name__ == "__main__":

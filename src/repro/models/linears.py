@@ -119,6 +119,35 @@ def linear_fusion_mode(name: str, d_in: int, d_out: int, acfg: AdapterConfig,
     return ad.fusion_mode(acfg, qcfg, keys)
 
 
+def multi_fusion_mode(name: str, d_in: int, d_out: int, acfg: AdapterConfig,
+                      qcfg: QuantConfig, scale: float = 1.0) -> str:
+    """Which multi-adapter serving kernel THIS linear takes when its params
+    come from an adapter pool (repro.serving.pool): 'qoft_multi' |
+    'oftv2_multi' | 'unfused'.  Mirrors linear_fusion_mode so serving
+    benchmarks can emit a check_fusion-gated plan for the multi kernels."""
+    mode = linear_fusion_mode(name, d_in, d_out, acfg, qcfg, scale=scale)
+    return {"qoft_fused": "qoft_multi", "oftv2_fused": "oftv2_multi",
+            "unfused": "unfused"}[mode]
+
+
+def model_multi_fusion_plan(cfg, acfg: AdapterConfig,
+                            qcfg: QuantConfig) -> dict:
+    """Per-linear multi-adapter serving plan for a transformer layer of
+    ``cfg``: {name: 'qoft_multi' | 'oftv2_multi' | 'unfused'}.  Emitted by
+    benchmarks/serving_bench.py as ``fusion_plan/serving/*`` rows so the
+    existing check_fusion CI gate also fails on a silent fallback of the
+    serving path."""
+    d = cfg.d_model
+    h, kv, hd = cfg.padded_heads, cfg.num_kv_heads, cfg.head_dim
+    shapes = {"q": (d, h * hd), "k": (d, kv * hd), "v": (d, kv * hd),
+              "o": (h * hd, d)}
+    if cfg.d_ff > 0:
+        shapes.update({"gate": (d, cfg.d_ff), "up": (d, cfg.d_ff),
+                       "down": (cfg.d_ff, d)})
+    return {name: multi_fusion_mode(name, di, do, acfg, qcfg)
+            for name, (di, do) in shapes.items()}
+
+
 def model_fusion_plan(cfg, acfg: AdapterConfig, qcfg: QuantConfig) -> dict:
     """Per-linear fusion plan for a transformer layer of ``cfg``
     (ModelConfig): {name: 'qoft_fused' | 'oftv2_fused' | 'unfused'}.

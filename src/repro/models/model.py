@@ -56,10 +56,12 @@ class Model:
     constrain: Callable = tfm._noop_constrain
 
     # ------------------------------------------------------------ params --
-    def statics(self, mode: str, remat: bool = False) -> Statics:
+    def statics(self, mode: str, remat: bool = False,
+                adapter_id=None) -> Statics:
         return Statics(cfg=self.cfg, acfg=self.run.adapter,
                        qcfg=self.run.quant, ep=self.ep,
-                       constrain=self.constrain, remat=remat, mode=mode)
+                       constrain=self.constrain, remat=remat, mode=mode,
+                       adapter_id=adapter_id)
 
     def init(self, key) -> dict:
         pd = jnp.dtype(self.cfg.param_dtype)
@@ -109,8 +111,12 @@ class Model:
 
     def forward(self, params, batch, mode: str = "train",
                 remat: bool = False):
-        """Full-sequence forward. Returns (logits, aux, caches)."""
-        st = self.statics(mode, remat=remat)
+        """Full-sequence forward. Returns (logits, aux, caches).
+
+        batch may carry "adapter_id" ((B,) int32): multi-tenant serving
+        routing for pooled adapter params (repro.serving)."""
+        st = self.statics(mode, remat=remat,
+                          adapter_id=batch.get("adapter_id"))
         x, positions = self._embed(st, params, batch)
         x = st.constrain(x, "batch", "seq", None)
         x, aux, caches = tfm._run_stack(st, params, x, positions)
@@ -150,8 +156,9 @@ class Model:
 
     def decode_step(self, params, batch):
         """batch: {"tokens": (B,1), "positions": (B,1), "cache_index": (B,),
-        "caches": {...}}. Returns (logits (B,1,V), new_caches)."""
-        st = self.statics("decode")
+        "caches": {...}, optional "adapter_id": (B,)}.
+        Returns (logits (B,1,V), new_caches)."""
+        st = self.statics("decode", adapter_id=batch.get("adapter_id"))
         cfg = self.cfg
         if cfg.frontend == "audio_frames":
             raise ValueError("encoder-only model has no decode step")

@@ -33,7 +33,12 @@ def _noop_constrain(x, *axes):
 
 @dataclass(frozen=True)
 class Statics:
-    """Static context threaded through every apply function."""
+    """Static context threaded through every apply function.
+
+    ``adapter_id`` is the one traced member: the per-batch-row adapter ids
+    ((B,) int32) of a multi-tenant serving batch, present only when the
+    params carry a pooled ``r_stack`` (repro.serving).  It rides here so
+    every adapted linear sees it without new plumbing per layer type."""
     cfg: ModelConfig
     acfg: AdapterConfig
     qcfg: QuantConfig
@@ -41,6 +46,7 @@ class Statics:
     constrain: Callable = _noop_constrain  # sharding-constraint hook
     remat: bool = False
     mode: str = "train"                    # train | prefill | decode
+    adapter_id: Optional[Any] = None       # (B,) int32 multi-adapter routing
 
 
 # ---------------------------------------------------------------------------
@@ -150,7 +156,8 @@ def _apply_layer(st: Statics, idx_in_group: int, base, adapt, x, positions,
         out, new_cache = attn_mod.attention_apply(
             base["attn"], adapt.get("attn", {}), h, positions, cfg, st.acfg,
             st.qcfg, cache=cache, cache_index=cache_index,
-            collect_cache=(st.mode == "prefill"), constrain=st.constrain)
+            collect_cache=(st.mode == "prefill"), constrain=st.constrain,
+            adapter_id=st.adapter_id)
     else:
         out, new_cache = mamba_mod.mamba_apply(
             base["mamba"], adapt.get("mamba", {}), h, cfg, st.acfg, st.qcfg,
@@ -166,11 +173,13 @@ def _apply_layer(st: Statics, idx_in_group: int, base, adapt, x, positions,
                 out = out + mlp_mod.mlp_apply(base["mlp"],
                                               adapt.get("mlp", {}), h, cfg,
                                               st.acfg, st.qcfg,
-                                              constrain=st.constrain)
+                                              constrain=st.constrain,
+                                              adapter_id=st.adapter_id)
         else:
             out = mlp_mod.mlp_apply(base["mlp"], adapt.get("mlp", {}), h,
                                     cfg, st.acfg, st.qcfg,
-                                    constrain=st.constrain)
+                                    constrain=st.constrain,
+                                    adapter_id=st.adapter_id)
         x = x + out
     return x, aux, new_cache
 

@@ -1,0 +1,17 @@
+"""Multi-tenant OFT serving: one frozen (possibly NF4) base, N adapters,
+mixed-adapter batches.
+
+  pool      -- AdapterPool: register N adapters, stack their rotations into
+               per-layer r_stack arrays (one Cayley--Neumann build total)
+  scheduler -- Request + slot-based continuous-batching control plane
+  engine    -- ServingEngine: jitted batched decode with per-row adapter
+               routing inside the fused Pallas kernels
+
+See README "Multi-tenant serving" for the data-flow map.
+"""
+from repro.serving.engine import ServingEngine
+from repro.serving.pool import AdapterPool, init_adapters
+from repro.serving.scheduler import Request, Scheduler
+
+__all__ = ["AdapterPool", "ServingEngine", "Request", "Scheduler",
+           "init_adapters"]

@@ -1,0 +1,214 @@
+"""Multi-tenant serving engine: continuous batching over one frozen base
+and an adapter pool, with per-request rotation routing in the fused Pallas
+kernels.
+
+Data plane per tick:
+
+  admit   -- free slots take pending requests; each new request is
+             prefilled (batch-1 forward through the SAME multi-routing
+             kernels, adapter_id = its tenant) and its caches scattered
+             into the slot's region of the batched decode cache.  The
+             prefill logits directly yield the first generated token -- the
+             prompt is never forwarded twice.
+  decode  -- ONE jitted decode step advances every active slot: tokens
+             (n_slots, 1), per-slot positions/cache_index, and the per-slot
+             adapter_id vector that the multi kernels use to gather each
+             row's rotation blocks.  Rows of free slots compute garbage and
+             are ignored (row independence is what the kernel tests pin
+             down, bitwise).
+  evict   -- finished requests free their slot; the next pending request
+             takes it on the following tick.
+
+Greedy decoding is the bit-exactness contract: a mixed-adapter batch
+produces token-for-token what N separate single-adapter runs produce
+(tests/test_serving_multi.py asserts it).  temperature > 0 samples on the
+host from the returned logits (per-request fold of the engine key).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+from repro.serving.pool import AdapterPool
+from repro.serving.scheduler import Request, Scheduler
+from repro.train import serving as base_serving
+
+
+def _invalidate_tail(model: Model, caches: dict, true_len: int) -> dict:
+    """Mark attention cache entries at positions >= true_len invalid
+    (pos=-1): the k/v written there by a length-bucketed prefill's padding
+    rows must never be attended (decode overwrites slot true_len first)."""
+    from repro.models import transformer as tfm
+
+    def fix(p, entry):
+        if tfm.layer_kind(model.cfg, p) != "attn":
+            return entry
+        s = entry["pos"].shape[-1]
+        tail = jnp.arange(s, dtype=jnp.int32)[None, None, :] >= true_len
+        return {"k": entry["k"], "v": entry["v"],
+                "pos": jnp.where(tail, -1, entry["pos"])}
+
+    return {key: fix(int(key.split("_")[1]), val)
+            for key, val in caches.items()}
+
+
+def _scatter_slot(caches: dict, slot_caches: dict, slot: int) -> dict:
+    """Write a batch-1 cache tree into row `slot` of the batched cache.
+    Every cache leaf is (n_groups, B, ...): batch is axis 1 across
+    attention k/v/pos AND SSM states by construction (Model._stack_cache)."""
+    return jax.tree_util.tree_map(
+        lambda big, one: jax.lax.dynamic_update_index_in_dim(
+            big, one[:, 0].astype(big.dtype), slot, axis=1),
+        caches, slot_caches)
+
+
+class ServingEngine:
+    """Slot-batched decode over a pooled multi-adapter model.
+
+    engine = ServingEngine(model, params, pool, n_slots=8)
+    outputs = engine.run([Request("r0", prompt, adapter_id=2, ...), ...])
+    # outputs: {rid: np.ndarray of generated token ids}
+    """
+
+    def __init__(self, model: Model, params: dict, pool: AdapterPool,
+                 n_slots: int = 4, s_max: Optional[int] = None,
+                 temperature: float = 0.0, jit: bool = True,
+                 key=None):
+        self.model = model
+        self.pool = pool
+        self._base_params = params
+        self.n_slots = n_slots
+        self.s_max = s_max
+        self.temperature = temperature
+        self.jit = jit
+        self.key = key if key is not None else jax.random.PRNGKey(0)
+        self._decode = self._make_decode()
+
+    @property
+    def params(self) -> dict:
+        """Serving tree resolved against the pool's CURRENT stack, so
+        tenants registered after engine construction are served (the pool
+        caches the built stack; registration invalidates it)."""
+        return self.pool.serving_params(self._base_params)
+
+    # ------------------------------------------------------------- decode --
+    def _make_decode(self):
+        model = self.model
+
+        def step(params, caches, tok, pos, aid):
+            batch = {"tokens": tok,
+                     "positions": pos[:, None],
+                     "cache_index": pos,
+                     "caches": caches,
+                     "adapter_id": aid}
+            logits, caches = model.decode_step(params, batch)
+            logits = logits[:, 0]                       # (n_slots, V)
+            greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return greedy, logits, caches
+
+        return base_serving.model_jit_fn(model, "serving_decode", step,
+                                         jit=self.jit)
+
+    def _prefill(self, req: Request, s_max: int, params: dict):
+        """Batch-1 prefill through the multi kernels (adapter_id routes the
+        single row); returns (last-real-token logits, slot caches at s_max).
+
+        The prompt is zero-padded to a multiple of 8 before the jitted
+        prefill so heterogeneous traffic compiles O(s_max/8) prefill
+        variants, not one per distinct prompt length.  Causality keeps the
+        real rows' logits exact; the padded tail's cache entries are
+        invalidated (pos=-1, same convention as pad_caches) so decode
+        attention never sees them."""
+        true_len = len(req.prompt)
+        pad_to = min(s_max, -(-true_len // 8) * 8)
+        prompt = jnp.asarray(req.prompt, jnp.int32)
+        if pad_to > true_len:
+            prompt = jnp.pad(prompt, (0, pad_to - true_len))
+        aid = jnp.full((1,), req.adapter_id, jnp.int32)
+        logits, caches = base_serving.prefill_fn(self.model, jit=self.jit)(
+            params, {"tokens": prompt[None, :], "adapter_id": aid})
+        caches = base_serving.pad_caches(self.model, caches, s_max)
+        if pad_to > true_len:
+            caches = _invalidate_tail(self.model, caches, true_len)
+        return logits[0, true_len - 1], caches
+
+    def _sample(self, logits, rid: str, step: int) -> int:
+        if self.temperature <= 0:
+            return int(jnp.argmax(logits, axis=-1))
+        import zlib
+        k = jax.random.fold_in(jax.random.fold_in(
+            self.key, zlib.crc32(rid.encode()) % (2 ** 31)), step)
+        return int(jax.random.categorical(
+            k, logits.astype(jnp.float32) / self.temperature, axis=-1))
+
+    # ---------------------------------------------------------------- run --
+    def run(self, requests: Sequence[Request]) -> Dict[str, np.ndarray]:
+        """Serve all requests to completion with continuous batching;
+        returns {rid: generated token ids} (prompt excluded)."""
+        if not requests:
+            return {}
+        rids = [r.rid for r in requests]
+        if len(set(rids)) != len(rids):
+            dup = sorted({r for r in rids if rids.count(r) > 1})
+            raise ValueError(f"duplicate request ids: {dup}")
+        n_pool = self.pool.n_adapters
+        for r in requests:
+            if not 0 <= r.adapter_id < n_pool:
+                raise ValueError(
+                    f"request {r.rid!r}: adapter_id {r.adapter_id} outside "
+                    f"the pool (n_adapters={n_pool}) -- the kernels would "
+                    f"silently rotate its rows to zero")
+        sched = Scheduler(self.n_slots)
+        sched.submit_all(requests)
+        s_max = self.s_max or max(len(r.prompt) + r.max_new_tokens
+                                  for r in requests)
+        params = self.params      # resolve the pool stack once per run
+
+        caches = self.model.make_caches(self.n_slots, s_max)
+        tok = np.zeros((self.n_slots, 1), np.int32)
+        pos = np.zeros((self.n_slots,), np.int32)
+        aid = np.zeros((self.n_slots,), np.int32)
+        out: Dict[str, List[int]] = {r.rid: [] for r in requests}
+
+        while sched.has_work():
+            # ---- admission: prefill into free slots -----------------------
+            for slot, req in sched.admit():
+                logits_last, slot_caches = self._prefill(req, s_max, params)
+                caches = _scatter_slot(caches, slot_caches, slot)
+                first = self._sample(logits_last, req.rid, 0)
+                out[req.rid].append(first)
+                tok[slot, 0] = first
+                pos[slot] = len(req.prompt)
+                aid[slot] = req.adapter_id
+                if sched.record_token(slot, first):
+                    sched.evict(slot)
+
+            active = sched.active_slots()
+            if not active:
+                continue     # everything admitted this tick already finished
+
+            # ---- one batched decode tick for every active slot ------------
+            greedy, logits, caches = self._decode(
+                params, caches, jnp.asarray(tok), jnp.asarray(pos),
+                jnp.asarray(aid))
+            greedy_np = np.asarray(greedy)
+            logits_np = None if self.temperature <= 0 else np.asarray(logits)
+            for slot in active:
+                req = sched.slot_request(slot)
+                step_i = len(out[req.rid])
+                if self.temperature <= 0:
+                    token = int(greedy_np[slot])
+                else:
+                    token = self._sample(jnp.asarray(logits_np[slot]),
+                                         req.rid, step_i)
+                out[req.rid].append(token)
+                tok[slot, 0] = token
+                pos[slot] += 1
+                if sched.record_token(slot, token):
+                    sched.evict(slot)
+
+        return {rid: np.asarray(toks, np.int32) for rid, toks in out.items()}

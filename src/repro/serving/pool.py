@@ -1,0 +1,174 @@
+"""Adapter pool: N finetuned OFTv2/QOFT adapters registered against ONE
+frozen (possibly NF4-quantized) base.
+
+This is the paper's serving economics made concrete: an adapter is a stack
+of tiny block rotations (b x b, b ~ 32), so hundreds of tenants fit in the
+memory ONE merged weight copy would take.  The pool
+
+  1. validates every registered adapter tree against the model's adapter
+     layout (same treedef -- they were all finetuned from the same base),
+  2. stacks the packed-skew leaves along a new adapter axis, and
+  3. builds every Cayley--Neumann rotation of every adapter of every layer
+     in ONE ``build_r`` call via the PR-2 hoisted path
+     (``core.rotations.with_rotations`` over the stacked tree),
+
+yielding per-layer ``r_stack: (A, blocks, b, b)`` arrays that ride the
+adapter tree through the layer scan exactly like the train-time hoisted
+``r_blocks`` -- the multi-adapter Pallas kernels pick them up via the
+per-row ``adapter_id`` the engine threads through the decode batch.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import AdapterConfig
+from repro.core import rotations as rot_lib
+from repro.models.model import Model
+
+
+def _check_multi_servable(model: Model) -> None:
+    cfg, acfg = model.cfg, model.run.adapter
+    if acfg.kind != "oftv2" or not acfg.fuse_linear:
+        raise ValueError(
+            "multi-tenant serving routes rotations inside the fused Pallas "
+            "kernels: AdapterConfig(kind='oftv2', fuse_linear=True) required "
+            f"(got kind={acfg.kind!r}, fuse_linear={acfg.fuse_linear})")
+    if cfg.is_encoder:
+        raise ValueError("encoder-only architectures have no decode step")
+    if cfg.num_experts > 0 or any(cfg.is_ssm_layer(i)
+                                  for i in range(cfg.num_layers)):
+        raise NotImplementedError(
+            "multi-adapter routing is wired through the dense "
+            "attention+MLP path; MoE/SSM layers are not served yet")
+
+
+def _stack_oft_leaves(trees: List[dict]):
+    """Mirror the adapter-tree structure; stack each ``q_packed`` leaf along
+    a new adapter axis inserted just before the block dim -- AFTER any scan
+    lead dims, so the layer scan still slices layers on axis 0 and each
+    scanned layer sees (A, blocks, pack_dim)."""
+    head = trees[0]
+    if isinstance(head, dict):
+        if "q_packed" in head:
+            qs = [t["q_packed"] for t in trees]
+            return {"q_packed": jnp.stack(qs, axis=qs[0].ndim - 2)}
+        if any(k in head for k in ("lora_a", "lora_b")):
+            raise ValueError("adapter pool is OFT-only: LoRA adapters have "
+                             "no rotation stack to route")
+        return {k: _stack_oft_leaves([t[k] for t in trees]) for k in head}
+    raise ValueError(f"unexpected adapter-tree node: {type(head)!r}")
+
+
+def _to_r_stack(tree):
+    """Rename the hoisted ``r_blocks`` entries (built by with_rotations over
+    the stacked tree) to ``r_stack`` -- the explicit multi-adapter marker
+    ``adapted_linear`` dispatches on, so a pooled tree can never be
+    mistaken for single-adapter hoisted params."""
+    if isinstance(tree, dict):
+        return {("r_stack" if k == "r_blocks" else k): _to_r_stack(v)
+                for k, v in tree.items()}
+    return tree
+
+
+class AdapterPool:
+    """Registry of N adapters sharing one frozen base.
+
+    Usage:
+        pool = AdapterPool(model)
+        pool.register("tenant-a", params_a["adapter"])
+        pool.register("tenant-b", params_b["adapter"])
+        serving_params = pool.serving_params(base_params)
+        # -> decode batches carry "adapter_id" rows indexing the pool
+    """
+
+    def __init__(self, model: Model):
+        _check_multi_servable(model)
+        self.model = model
+        self.acfg: AdapterConfig = model.run.adapter
+        self._names: List[str] = []
+        self._trees: List[dict] = []
+        self._pooled: Optional[dict] = None
+
+    # ------------------------------------------------------------ registry --
+    def register(self, name: str, adapter_tree: dict) -> int:
+        """Add one finetuned adapter; returns its adapter_id (row index in
+        every r_stack).  Invalidates any previously built stack."""
+        if name in self._names:
+            raise ValueError(f"adapter {name!r} already registered")
+        if not adapter_tree:
+            raise ValueError("empty adapter tree (was the model built with "
+                             "an adapter config?)")
+        if self._trees:
+            want = jax.tree_util.tree_structure(self._trees[0])
+            got = jax.tree_util.tree_structure(adapter_tree)
+            if want != got:
+                raise ValueError(
+                    f"adapter {name!r} layout does not match the pool "
+                    f"(all adapters must come from the same base/config)")
+        self._trees.append(adapter_tree)
+        self._names.append(name)
+        self._pooled = None
+        return len(self._names) - 1
+
+    @property
+    def n_adapters(self) -> int:
+        return len(self._names)
+
+    @property
+    def names(self) -> List[str]:
+        return list(self._names)
+
+    def adapter_id(self, name: str) -> int:
+        return self._names.index(name)
+
+    # --------------------------------------------------------------- build --
+    def build(self) -> dict:
+        """Stack all registered adapters and build EVERY rotation block of
+        every adapter in one Cayley--Neumann call (the PR-2 hoisted path).
+        Returns (and caches) the pooled adapter tree with per-layer
+        ``r_stack`` leaves."""
+        if not self._trees:
+            raise ValueError("no adapters registered")
+        stacked = _stack_oft_leaves(self._trees)
+        augmented = rot_lib.with_rotations(stacked, self.acfg)
+        self._pooled = _to_r_stack(augmented)
+        return self._pooled
+
+    @property
+    def pooled_adapter(self) -> dict:
+        if self._pooled is None:
+            self.build()
+        return self._pooled
+
+    def serving_params(self, params: dict) -> dict:
+        """Full serving param tree: the shared frozen base + the pooled
+        adapter stack.  ``params`` is any {"base": ...} tree (the adapter
+        entry, if present, is replaced by the pool)."""
+        return {"base": params["base"], "adapter": self.pooled_adapter}
+
+    # --------------------------------------------------------------- stats --
+    def param_counts(self) -> Dict[str, int]:
+        """{"base": shared frozen params, "adapter_each": per-tenant
+        trainable params} -- the multi-tenant memory story in two numbers."""
+        counts = self.model.param_counts()
+        return {"base": counts["base"], "adapter_each": counts["adapter"]}
+
+
+def init_adapters(model: Model, n: int, key=None, scale: float = 0.05):
+    """N distinct randomly-perturbed adapter trees for demos/benchmarks
+    (real deployments register finetuned checkpoints).  scale=0 gives
+    identity rotations (the OFT zero init)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    template = model.init(key)["adapter"]
+    flat, treedef = jax.tree_util.tree_flatten(template)
+    out = []
+    for i in range(n):
+        ki = jax.random.fold_in(key, i)
+        perturbed = [q + scale * jax.random.normal(jax.random.fold_in(ki, j),
+                                                   q.shape, q.dtype)
+                     for j, q in enumerate(flat)]
+        out.append(jax.tree_util.tree_unflatten(treedef, perturbed))
+    return out

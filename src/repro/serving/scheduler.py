@@ -1,0 +1,109 @@
+"""Continuous-batching scheduler: slot-based KV-cache admission/eviction.
+
+The engine's decode state is a fixed-size batch of ``n_slots`` cache
+regions.  Requests (each tagged with the adapter_id of its tenant) queue
+here; a free slot admits the next pending request, a finished request
+evicts its slot immediately, and the next pending request takes it on the
+following tick -- so a long request never stalls the batch behind it, and
+requests for DIFFERENT adapters interleave freely in one batch (the multi
+kernels route each row to its adapter's rotations).
+
+Pure Python, no jax: this is the control plane.  The data plane (caches,
+decode step) lives in repro.serving.engine.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, List, Optional, Sequence, Tuple
+
+
+@dataclass
+class Request:
+    """One generation request against one pooled adapter."""
+    rid: str
+    prompt: Sequence[int]          # prompt token ids
+    adapter_id: int                # row index into the pool's r_stack
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None   # stop early on this token (None = never)
+
+    def __post_init__(self):
+        if len(self.prompt) == 0:
+            raise ValueError(f"request {self.rid!r}: empty prompt")
+        if self.max_new_tokens < 1:
+            raise ValueError(f"request {self.rid!r}: max_new_tokens < 1")
+
+
+@dataclass
+class _Slot:
+    request: Optional[Request] = None
+    generated: int = 0             # tokens produced so far
+
+
+class Scheduler:
+    """Slot admission/eviction bookkeeping for continuous batching."""
+
+    def __init__(self, n_slots: int):
+        if n_slots < 1:
+            raise ValueError("need at least one slot")
+        self.n_slots = n_slots
+        self._slots: List[_Slot] = [_Slot() for _ in range(n_slots)]
+        self._pending: Deque[Request] = deque()
+
+    # ------------------------------------------------------------- intake --
+    def submit(self, request: Request) -> None:
+        self._pending.append(request)
+
+    def submit_all(self, requests) -> None:
+        for r in requests:
+            self.submit(r)
+
+    # ------------------------------------------------------------- queries --
+    def has_work(self) -> bool:
+        return bool(self._pending) or any(s.request for s in self._slots)
+
+    def active_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self._slots) if s.request]
+
+    def free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self._slots) if s.request is None]
+
+    def slot_request(self, slot: int) -> Request:
+        req = self._slots[slot].request
+        assert req is not None, f"slot {slot} is free"
+        return req
+
+    @property
+    def pending_count(self) -> int:
+        return len(self._pending)
+
+    # ------------------------------------------------------ admit / evict --
+    def admit(self) -> List[Tuple[int, Request]]:
+        """Fill free slots from the pending queue (FIFO).  Returns the
+        (slot, request) pairs admitted this tick; the engine prefills each
+        and scatters its caches into the slot."""
+        admitted = []
+        for slot in self.free_slots():
+            if not self._pending:
+                break
+            req = self._pending.popleft()
+            self._slots[slot] = _Slot(request=req)
+            admitted.append((slot, req))
+        return admitted
+
+    def record_token(self, slot: int, token: int) -> bool:
+        """Count one generated token for `slot`; returns True when the
+        request just finished (budget exhausted or EOS) -- the caller then
+        evicts."""
+        s = self._slots[slot]
+        assert s.request is not None
+        s.generated += 1
+        done = s.generated >= s.request.max_new_tokens
+        if s.request.eos_id is not None and token == s.request.eos_id:
+            done = True
+        return done
+
+    def evict(self, slot: int) -> None:
+        """Free the slot's cache region for the next admission (the KV cache
+        itself is overwritten wholesale by the next prefill scatter)."""
+        self._slots[slot] = _Slot()

@@ -1,6 +1,10 @@
 """Serving utilities: prefill -> decode continuation, cache padding, and a
 batched greedy/sampling generation loop (the paper's "inference" side --
-adapters stay unmerged, exactly how the paper evaluates QOFT/QLoRA)."""
+adapters stay unmerged, exactly how the paper evaluates QOFT/QLoRA).
+
+Multi-tenant serving (many adapters, one frozen base, mixed batches) lives
+in ``repro.serving``; it builds on the same primitives here (``pad_caches``,
+the per-model jit cache)."""
 from __future__ import annotations
 
 from typing import Dict, Optional, Tuple
@@ -37,37 +41,73 @@ def pad_caches(model: Model, caches: dict, s_max: int) -> dict:
             for key, val in caches.items()}
 
 
+def model_jit_fn(model: Model, name: str, fn, jit: bool = True):
+    """Per-model-instance jit cache: the compiled fn survives across
+    ``generate`` calls (and across the N sequential runs of the serving
+    benchmark's baseline) instead of retracing per call.  ``jit=False`` is
+    the debugging escape hatch -- the raw fn, eager, with real stack
+    traces."""
+    if not jit:
+        return fn
+    cache = getattr(model, "_jit_cache", None)
+    if cache is None:
+        cache = {}
+        model._jit_cache = cache
+    if name not in cache:
+        cache[name] = jax.jit(fn)
+    return cache[name]
+
+
+def prefill_fn(model: Model, jit: bool = True):
+    """(params, batch) -> (logits, caches), jitted per model instance."""
+    return model_jit_fn(model, "prefill",
+                        lambda p, b: model.prefill(p, b), jit=jit)
+
+
+def decode_fn(model: Model, jit: bool = True):
+    """(params, batch) -> (logits, new_caches), jitted per model instance.
+    Per-token dispatch overhead -- not math -- dominates small-model
+    decode, so the step is compiled once and reused across all steps,
+    generate() calls, and serving-engine ticks."""
+    return model_jit_fn(model, "decode",
+                        lambda p, b: model.decode_step(p, b), jit=jit)
+
+
 def generate(model: Model, params: dict, prompt: jnp.ndarray, steps: int,
              temperature: float = 0.0, key=None,
-             s_max: Optional[int] = None) -> jnp.ndarray:
+             s_max: Optional[int] = None, jit: bool = True) -> jnp.ndarray:
     """Batched generation: prefill the prompt, then decode `steps` tokens.
+
+    The prompt is forwarded ONCE: the prefill that builds the caches also
+    yields the last-token logits the first sampled token needs (a second
+    full forward over the prompt would double prefill compute for nothing).
+    The decode step is jitted (``jit=False`` to debug eagerly).
 
     prompt: (B, S) int32. Returns (B, S + steps)."""
     b, s = prompt.shape
     s_max = s_max or (s + steps)
-    _, caches = model.prefill(params, {"tokens": prompt})
+    logits_p, caches = prefill_fn(model, jit=jit)(params,
+                                                  {"tokens": prompt})
     caches = pad_caches(model, caches, s_max)
-    last = prompt[:, -1:]
 
-    # next-token from prefill logits
     def sample(logits, k):
         if temperature <= 0:
             return jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return jax.random.categorical(k, logits / temperature, axis=-1
                                       ).astype(jnp.int32)
 
-    logits_p, _, _ = model.forward(params, {"tokens": prompt})
     key = key if key is not None else jax.random.PRNGKey(0)
     tok = sample(logits_p[:, -1], key)[:, None]
     out = [prompt, tok]
 
+    step = decode_fn(model, jit=jit)
     for t in range(steps - 1):
         idx = s + t
         batch = {"tokens": tok,
                  "positions": jnp.full((b, 1), idx, jnp.int32),
                  "cache_index": jnp.full((b,), idx, jnp.int32),
                  "caches": caches}
-        logits, caches = model.decode_step(params, batch)
+        logits, caches = step(params, batch)
         key = jax.random.fold_in(key, t)
         tok = sample(logits[:, 0], key)[:, None]
         out.append(tok)

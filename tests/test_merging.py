@@ -1,0 +1,88 @@
+"""Merge-back properties (paper §4, "QOFT vs QLoRA"): orthogonal merges
+preserve per-column norms exactly, LoRA's range shift obeys its worst-case
+bound, and the merged R@W forward equals the unmerged fused forward --
+the claims repro.core.merging quantifies."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config.base import AdapterConfig, QuantConfig
+from repro.core import adapter as ad
+from repro.core import merging, skew
+from repro.core.adapter import merge_adapter
+from repro.core.lora import lora_init
+
+
+def _oft_setup(d_in=64, d_out=48, b=16, neumann_terms=0, seed=0,
+               scale=0.1):
+    key = jax.random.PRNGKey(seed)
+    w = jax.random.normal(key, (d_in, d_out)) / np.sqrt(d_in)
+    adp = {"q_packed": skew.random_skew(key, (d_in // b,), b, scale=scale)}
+    acfg = AdapterConfig(kind="oftv2", block_size=b,
+                         neumann_terms=neumann_terms)
+    return w, adp, acfg
+
+
+def test_oft_merge_column_norm_drift_is_zero():
+    """Exact Cayley (neumann_terms=0) gives a truly orthogonal R, so the
+    merged R@W preserves every column l2 norm to float precision."""
+    w, adp, acfg = _oft_setup(neumann_terms=0)
+    merged = merge_adapter(w, adp, acfg)
+    assert float(merging.column_norm_drift(w, merged)) < 1e-5
+    # truncated Neumann: approximately orthogonal, drift O(||Q||^{k+1})
+    # (small skew so the k=5 truncation term is below the assertion)
+    w5, adp5, acfg5 = _oft_setup(neumann_terms=5, scale=0.02)
+    assert float(merging.column_norm_drift(w5, merge_adapter(w5, adp5,
+                                                             acfg5))) < 1e-3
+
+
+def test_lora_worstcase_range_shift_bound_holds():
+    """|max|W+AB| - max|W|| <= ||(alpha/r) A@B||_inf (triangle inequality) --
+    the paper's requantization argument against merged LoRA."""
+    key = jax.random.PRNGKey(1)
+    d_in, d_out, rank = 64, 48, 8
+    w = jax.random.normal(key, (d_in, d_out)) / np.sqrt(d_in)
+    acfg = AdapterConfig(kind="lora", rank=rank, alpha=16.0)
+    adp = lora_init(jax.random.fold_in(key, 1), d_in, d_out, rank)
+    # zero-init B gives a zero delta; perturb so the bound is non-trivial
+    adp["lora_b"] = 0.1 * jax.random.normal(jax.random.fold_in(key, 2),
+                                            adp["lora_b"].shape)
+    merged = merge_adapter(w, adp, acfg)
+    shift = float(merging.dynamic_range_shift(w, merged))
+    bound = float(merging.lora_worstcase_range_shift(adp, acfg))
+    assert bound > 0
+    assert shift <= bound + 1e-6
+    # and OFT's shift is small where LoRA's bound is the worst case
+    wo, adpo, acfgo = _oft_setup(neumann_terms=0, seed=2)
+    assert float(merging.dynamic_range_shift(
+        wo, merge_adapter(wo, adpo, acfgo))) <= bound + 1e-6
+
+
+@pytest.mark.parametrize("fuse", [False, True])
+def test_merged_forward_equals_unmerged_fused_forward(fuse):
+    """x @ (R_bd @ W) == fused (x @ R_bd) @ W: deployment-time merge and
+    serving-time unmerged kernels are the same function."""
+    w, adp, acfg = _oft_setup(neumann_terms=5)
+    acfg = AdapterConfig(kind="oftv2", block_size=acfg.block_size,
+                         neumann_terms=5, fuse_linear=fuse)
+    x = jax.random.normal(jax.random.PRNGKey(3), (5, 7, 64))
+    merged = merge_adapter(w, adp, acfg)
+    y_merged = x @ merged
+    y_unmerged = ad.adapted_linear(x, {"w": w}, adp, acfg,
+                                   QuantConfig(kind="none"))
+    np.testing.assert_allclose(np.asarray(y_unmerged), np.asarray(y_merged),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_requantization_report_sane():
+    """End-to-end report: merge -> NF4 requantize -> measure. OFT keeps the
+    column norms; the requant error is bounded by the quant step."""
+    w, adp, acfg = _oft_setup(d_in=128, d_out=64, b=16, neumann_terms=0)
+    qcfg = QuantConfig(kind="nf4", block_size=32, double_quant=False)
+    rep = merging.requantization_report(w, adp, acfg, qcfg)
+    assert set(rep) == {"column_norm_drift", "dynamic_range_shift",
+                       "requant_max_err", "requant_rel_fro"}
+    assert rep["column_norm_drift"] < 1e-5
+    assert np.isfinite(rep["requant_max_err"])
+    assert 0 < rep["requant_rel_fro"] < 0.2

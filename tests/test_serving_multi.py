@@ -1,0 +1,316 @@
+"""Multi-tenant serving: the multi-adapter kernels against per-adapter
+single-kernel runs (row-for-row, bitwise), the adapter pool's stacked
+rotation build, the continuous-batching scheduler, and the engine's
+end-to-end guarantee -- a mixed-adapter batched decode produces exactly
+the tokens of N separate single-adapter runs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config.base import (AdapterConfig, ModelConfig, QuantConfig,
+                               RunConfig)
+from repro.core import skew
+from repro.core.cayley import build_rotation
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+from repro.quant import nf4
+
+pytestmark = pytest.mark.kernels
+
+
+def _multi_inputs(n_adapters, lead, d, n, b, seed=0):
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, lead + (d,), jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (d, n),
+                          jnp.float32) / np.sqrt(d)
+    qp = skew.random_skew(key, (n_adapters, d // b), b, scale=0.1)
+    r_stack = build_rotation(qp, b, 5)
+    ids = jax.random.randint(jax.random.fold_in(key, 2), lead[:1], 0,
+                             n_adapters)
+    return x, r_stack, ids, w
+
+
+# ------------------------------------------------- oftv2_linear_multi -----
+MULTI_SHAPES = [
+    # odd token counts / narrow d_out exercise token padding and the n/k
+    # tile fallbacks, exactly like the single-kernel sweeps
+    (3, (37,), 64, 48, 16), (4, (3, 7), 128, 96, 32), (2, (260,), 96, 33, 8),
+    (5, (1,), 64, 64, 64), (2, (512,), 256, 128, 32),
+]
+
+
+@pytest.mark.parametrize("a,lead,d,n,b", MULTI_SHAPES)
+def test_oftv2_linear_multi_matches_ref(a, lead, d, n, b):
+    x, r_stack, ids, w = _multi_inputs(a, lead, d, n, b)
+    got = kops.oftv2_linear_multi(x, r_stack, ids, w)
+    want = kref.oftv2_linear_multi_ref(x, r_stack, ids, w)
+    assert got.shape == want.shape and got.dtype == want.dtype
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-6)
+
+
+@pytest.mark.parametrize("a,lead,d,n,b", MULTI_SHAPES[:3])
+def test_oftv2_linear_multi_rowwise_bitwise_vs_single(a, lead, d, n, b):
+    """Each row of the multi kernel's output is BITWISE the single-adapter
+    kernel's row for that row's adapter -- the property the engine's
+    batched-equals-sequential guarantee rests on."""
+    x, r_stack, ids, w = _multi_inputs(a, lead, d, n, b)
+    got = np.asarray(kops.oftv2_linear_multi(x, r_stack, ids, w))
+    ids_np = np.asarray(jnp.broadcast_to(
+        ids.reshape((-1,) + (1,) * (len(lead) - 1)), lead))
+    for adapter in range(a):
+        single = np.asarray(kops.oftv2_linear_fused(x, r_stack[adapter], w,
+                                                    train_w=False))
+        rows = ids_np == adapter
+        np.testing.assert_array_equal(got[rows], single[rows])
+
+
+def test_oftv2_linear_multi_id_permutations():
+    """Permuting which row gets which adapter permutes (only) the rows."""
+    a, d, n, b, t = 3, 64, 48, 16, 12
+    x, r_stack, _, w = _multi_inputs(a, (t,), d, n, b)
+    ids = jnp.arange(t, dtype=jnp.int32) % a
+    perm = jax.random.permutation(jax.random.PRNGKey(9), t)
+    got_perm = kops.oftv2_linear_multi(x[perm], r_stack, ids[perm], w)
+    got = kops.oftv2_linear_multi(x, r_stack, ids, w)
+    np.testing.assert_array_equal(np.asarray(got_perm),
+                                  np.asarray(got)[np.asarray(perm)])
+
+
+def test_oftv2_linear_multi_const_id_fast_path():
+    """Python-int adapter_id lowers to the single-adapter fused kernel; an
+    all-rows-same traced id vector matches it bitwise."""
+    a, d, n, b = 4, 64, 48, 16
+    x, r_stack, _, w = _multi_inputs(a, (21,), d, n, b)
+    single = np.asarray(kops.oftv2_linear_fused(x, r_stack[2], w,
+                                                train_w=False))
+    fast = np.asarray(kops.oftv2_linear_multi(x, r_stack, 2, w))
+    np.testing.assert_array_equal(fast, single)
+    traced = np.asarray(kops.oftv2_linear_multi(
+        x, r_stack, jnp.full((21,), 2, jnp.int32), w))
+    np.testing.assert_array_equal(traced, single)
+
+
+# -------------------------------------------------- qoft_linear_multi -----
+@pytest.mark.parametrize("a,d,n,b,bs", [
+    (3, 128, 64, 16, 64), (4, 256, 96, 32, 32), (2, 64, 33, 16, 16),
+])
+def test_qoft_linear_multi_matches_ref_and_single(a, d, n, b, bs):
+    x, r_stack, ids, w = _multi_inputs(a, (29,), d, n, b, seed=1)
+    qcfg = QuantConfig(kind="nf4", block_size=bs, double_quant=False)
+    q = nf4.quantize(0.1 * w, qcfg)
+    got = kops.qoft_linear_multi(x, r_stack, ids, q["nf4_codes"],
+                                 q["absmax"], bs)
+    want = kref.qoft_linear_multi_ref(x, r_stack, ids, q["nf4_codes"],
+                                      q["absmax"], bs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=1e-5)
+    ids_np = np.asarray(ids)
+    for adapter in range(a):
+        single = np.asarray(kops.qoft_linear_fused(
+            x, r_stack[adapter], q["nf4_codes"], q["absmax"], bs))
+        rows = ids_np == adapter
+        # ULP-level tolerance: on some odd n the interpret-mode XLA:CPU
+        # executor fuses the routing `where` into the dequant+dot chain and
+        # reassociates one SIMD reduction; greedy tokens are still exact
+        # (test_engine_multi_decode_bitwise_equals_single_runs).
+        np.testing.assert_allclose(np.asarray(got)[rows], single[rows],
+                                   rtol=1e-6, atol=3e-7)
+    fast = np.asarray(kops.qoft_linear_multi(x, r_stack, 1, q["nf4_codes"],
+                                             q["absmax"], bs))
+    np.testing.assert_array_equal(
+        fast, np.asarray(kops.qoft_linear_fused(x, r_stack[1],
+                                                q["nf4_codes"], q["absmax"],
+                                                bs)))
+
+
+# ------------------------------------------------------------ scheduler ---
+def test_scheduler_admission_eviction():
+    from repro.serving import Request, Scheduler
+    sched = Scheduler(2)
+    sched.submit_all([Request(f"r{i}", [1, 2], adapter_id=0,
+                              max_new_tokens=2) for i in range(3)])
+    admitted = sched.admit()
+    assert [slot for slot, _ in admitted] == [0, 1]
+    assert sched.pending_count == 1 and sched.admit() == []
+    # r0 finishes (2 tokens) -> slot 0 frees -> r2 takes it
+    assert not sched.record_token(0, 5)
+    assert sched.record_token(0, 5)
+    sched.evict(0)
+    assert [r.rid for _, r in sched.admit()] == ["r2"]
+    # eos stops early
+    sched2 = Scheduler(1)
+    sched2.submit(Request("e", [1], adapter_id=0, max_new_tokens=99,
+                          eos_id=7))
+    sched2.admit()
+    assert not sched2.record_token(0, 3)
+    assert sched2.record_token(0, 7)
+
+
+# ----------------------------------------------------- pool + engine ------
+def _tiny_serving_model(qkind="none"):
+    from repro.models import build
+    cfg = ModelConfig(name="tiny-serve", family="dense", num_layers=2,
+                      d_model=64, num_heads=2, num_kv_heads=1, head_dim=32,
+                      d_ff=128, vocab_size=128, rope_theta=1e4)
+    run = RunConfig(model=cfg,
+                    adapter=AdapterConfig(kind="oftv2", block_size=16,
+                                          neumann_terms=5,
+                                          fuse_linear=True),
+                    quant=QuantConfig(kind="nf4", block_size=32)
+                    if qkind == "nf4" else QuantConfig(kind="none"))
+    model = build(run)
+    return model, model.init(jax.random.PRNGKey(0)), cfg
+
+
+def test_pool_stacks_rotations_once():
+    """r_stack leaves have shape (scan, A, blocks, b, b) and row a equals
+    the single-adapter hoisted rotations of adapter a."""
+    from repro.core import rotations as rot_lib
+    from repro.serving import AdapterPool, init_adapters
+    model, params, cfg = _tiny_serving_model()
+    adapters = init_adapters(model, 3, jax.random.PRNGKey(5))
+    pool = AdapterPool(model)
+    for i, tree in enumerate(adapters):
+        pool.register(f"t{i}", tree)
+    pooled = pool.build()
+    leaf = pooled["groups"]["pos_0"]["attn"]["q"]
+    assert leaf["r_stack"].shape[1] == 3          # (scan, A, blocks, b, b)
+    acfg = model.run.adapter
+    for a in range(3):
+        single = rot_lib.with_rotations(adapters[a], acfg)
+        want = single["groups"]["pos_0"]["attn"]["q"]["r_blocks"]
+        np.testing.assert_array_equal(
+            np.asarray(leaf["r_stack"][:, a]), np.asarray(want))
+
+
+def test_pool_rejects_mismatched_and_lora():
+    from repro.models import build
+    from repro.serving import AdapterPool, init_adapters
+    model, params, cfg = _tiny_serving_model()
+    pool = AdapterPool(model)
+    pool.register("a", init_adapters(model, 1)[0])
+    with pytest.raises(ValueError, match="already registered"):
+        pool.register("a", init_adapters(model, 1)[0])
+    run_lora = model.run.replace(adapter=AdapterConfig(kind="lora", rank=4))
+    with pytest.raises(ValueError, match="fuse_linear"):
+        AdapterPool(build(run_lora))
+    run_unfused = model.run.replace(
+        adapter=AdapterConfig(kind="oftv2", block_size=16))
+    with pytest.raises(ValueError, match="fuse_linear"):
+        AdapterPool(build(run_unfused))
+
+
+@pytest.mark.parametrize("qkind", ["none", "nf4"])
+def test_engine_multi_decode_bitwise_equals_single_runs(qkind):
+    """THE acceptance property: a mixed-adapter batch (N=4 adapters) decodes
+    greedily to exactly the tokens of 4 single-adapter generate() runs --
+    dense and NF4-quantized frozen base."""
+    from repro.serving import (AdapterPool, Request, ServingEngine,
+                               init_adapters)
+    from repro.train.serving import generate
+    model, params, cfg = _tiny_serving_model(qkind)
+    n_adapters, prompt_len, gen = 4, 6, 5
+    adapters = init_adapters(model, n_adapters, jax.random.PRNGKey(7))
+    pool = AdapterPool(model)
+    for i, tree in enumerate(adapters):
+        pool.register(f"t{i}", tree)
+    prompts = [np.asarray(jax.random.randint(
+        jax.random.fold_in(jax.random.PRNGKey(3), i), (prompt_len,), 0,
+        cfg.vocab_size)) for i in range(n_adapters)]
+
+    engine = ServingEngine(model, params, pool, n_slots=n_adapters)
+    out = engine.run([Request(f"r{i}", prompts[i], adapter_id=i,
+                              max_new_tokens=gen)
+                      for i in range(n_adapters)])
+    for i in range(n_adapters):
+        single = {"base": params["base"], "adapter": adapters[i]}
+        full = generate(model, single, jnp.asarray(prompts[i])[None],
+                        steps=gen)
+        np.testing.assert_array_equal(out[f"r{i}"],
+                                      np.asarray(full)[0, prompt_len:])
+
+
+def test_engine_continuous_batching_fewer_slots():
+    """More requests than slots: admission/eviction interleaves them and
+    every request still gets its exact single-run tokens."""
+    from repro.serving import (AdapterPool, Request, ServingEngine,
+                               init_adapters)
+    model, params, cfg = _tiny_serving_model()
+    adapters = init_adapters(model, 2, jax.random.PRNGKey(7))
+    pool = AdapterPool(model)
+    for i, tree in enumerate(adapters):
+        pool.register(f"t{i}", tree)
+    prompts = [np.asarray(jax.random.randint(
+        jax.random.fold_in(jax.random.PRNGKey(3), i), (4,), 0,
+        cfg.vocab_size)) for i in range(5)]
+    # varying lengths exercise staggered eviction
+    reqs = [Request(f"r{i}", prompts[i], adapter_id=i % 2,
+                    max_new_tokens=2 + (i % 3)) for i in range(5)]
+    big = ServingEngine(model, params, pool, n_slots=5,
+                        s_max=4 + 4).run(reqs)
+    small = ServingEngine(model, params, pool, n_slots=2,
+                          s_max=4 + 4).run(reqs)
+    assert set(big) == set(small)
+    for rid in big:
+        np.testing.assert_array_equal(big[rid], small[rid])
+
+
+def test_engine_heterogeneous_prompt_lengths_bitwise():
+    """Prompt lengths off the 8-bucket (prefill pads to a multiple of 8 and
+    invalidates the padded tail's cache entries): every request still gets
+    exactly its single-run tokens."""
+    from repro.serving import (AdapterPool, Request, ServingEngine,
+                               init_adapters)
+    from repro.train.serving import generate
+    model, params, cfg = _tiny_serving_model()
+    adapters = init_adapters(model, 2, jax.random.PRNGKey(7))
+    pool = AdapterPool(model)
+    for i, tree in enumerate(adapters):
+        pool.register(f"t{i}", tree)
+    lengths, gen = [3, 6, 11], 4
+    prompts = [np.asarray(jax.random.randint(
+        jax.random.fold_in(jax.random.PRNGKey(3), i), (n,), 0,
+        cfg.vocab_size)) for i, n in enumerate(lengths)]
+    engine = ServingEngine(model, params, pool, n_slots=3)
+    out = engine.run([Request(f"r{i}", prompts[i], adapter_id=i % 2,
+                              max_new_tokens=gen) for i in range(3)])
+    for i in range(3):
+        single = {"base": params["base"], "adapter": adapters[i % 2]}
+        full = generate(model, single, jnp.asarray(prompts[i])[None],
+                        steps=gen)
+        np.testing.assert_array_equal(out[f"r{i}"],
+                                      np.asarray(full)[0, lengths[i]:])
+
+
+def test_engine_rejects_bad_requests():
+    """Out-of-pool adapter_id and duplicate rids fail loudly instead of
+    silently decoding zero-rotated garbage / interleaving outputs."""
+    from repro.serving import (AdapterPool, Request, ServingEngine,
+                               init_adapters)
+    model, params, cfg = _tiny_serving_model()
+    pool = AdapterPool(model)
+    for i, tree in enumerate(init_adapters(model, 2)):
+        pool.register(f"t{i}", tree)
+    engine = ServingEngine(model, params, pool, n_slots=2)
+    with pytest.raises(ValueError, match="adapter_id 5 outside"):
+        engine.run([Request("r0", [1, 2], adapter_id=5)])
+    with pytest.raises(ValueError, match="duplicate request ids"):
+        engine.run([Request("r0", [1, 2], adapter_id=0),
+                    Request("r0", [3, 4], adapter_id=1)])
+
+
+def test_model_multi_fusion_plan():
+    from repro.models.linears import model_multi_fusion_plan, \
+        multi_fusion_mode
+    acfg = AdapterConfig(kind="oftv2", block_size=16, fuse_linear=True)
+    nf4_q = QuantConfig(kind="nf4", block_size=32)
+    assert multi_fusion_mode("q", 128, 96, acfg, nf4_q) == "qoft_multi"
+    assert multi_fusion_mode("q", 128, 96, acfg,
+                             QuantConfig(kind="none")) == "oftv2_multi"
+    assert multi_fusion_mode("router", 128, 96, acfg, nf4_q) == "unfused"
+    cfg = ModelConfig(num_layers=2, d_model=128, num_heads=4,
+                      num_kv_heads=2, d_ff=256)
+    plan = model_multi_fusion_plan(cfg, acfg, QuantConfig(kind="none"))
+    assert set(plan.values()) == {"oftv2_multi"}
