@@ -1,0 +1,59 @@
+"""CI gate: adapter-method string dispatch is allowed ONLY inside
+``src/repro/methods/``.
+
+PR 4 retired the ~52 ``acfg.kind == "..."`` / ``acfg.is_oft`` dispatch
+sites scattered across the framework in favor of the ``repro.methods``
+registry.  This gate greps the source tree and fails the build if any of
+them grow back -- the registry is worthless the day one branch bypasses
+it.  (Quant-kind dispatch, ``qcfg.kind == "nf4"`` etc., is a different
+axis and stays where it is.)
+
+Usage: python -m benchmarks.check_dispatch   (no arguments; exits 1 on hits)
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+SRC = Path(__file__).resolve().parents[1] / "src" / "repro"
+ALLOWED = SRC / "methods"
+
+# (pattern, why it is banned)
+PATTERNS = [
+    (re.compile(r"\bacfg\.kind\s*(?:==|!=)"),
+     "adapter-kind comparison -- query repro.methods instead"),
+    (re.compile(r"\.is_oft\b"),
+     "is_oft predicate -- retired; use the method's capability flags"),
+    (re.compile(r"\badapter\s*(?:==|!=)\s*[\"']"),
+     "adapter-kind literal comparison -- query repro.methods instead"),
+    (re.compile(r"\bkind\s*(?:==|!=)\s*[\"'](?:oftv1|oftv2|lora|hoft)[\"']"),
+     "adapter-kind literal comparison -- query repro.methods instead"),
+    (re.compile(r"\b(?:acfg|adapter)\.kind\s+(?:not\s+)?in\s"),
+     "adapter-kind membership test (the old is_oft shape) -- use the "
+     "method's capability flags"),
+    (re.compile(r"\b(?:acfg|adapter)\.kind\.startswith\b"),
+     "adapter-kind prefix test -- use the method's capability flags"),
+]
+
+
+def check(root: Path = SRC) -> int:
+    hits = []
+    for path in sorted(root.rglob("*.py")):
+        if ALLOWED in path.parents:
+            continue
+        for lineno, line in enumerate(path.read_text().splitlines(), 1):
+            for pat, why in PATTERNS:
+                if pat.search(line):
+                    hits.append((path.relative_to(root.parents[1]),
+                                 lineno, line.strip(), why))
+    for path, lineno, line, why in hits:
+        print(f"check_dispatch: {path}:{lineno}: {line}\n    ^ {why}",
+              file=sys.stderr)
+    print(f"check_dispatch: scanned {root} (allowing {ALLOWED.name}/), "
+          f"{len(hits)} banned dispatch site(s)")
+    return 1 if hits else 0
+
+
+if __name__ == "__main__":
+    sys.exit(check())

@@ -1,0 +1,70 @@
+"""Per-method forward-cost comparison at one fixed model shape -- the
+paper's Table 1/2 cost story tracked across every REGISTERED adapter
+method, not just the two the paper plots.
+
+Emits, for each method with params (oftv2 / oftv1 / lora / hoft / ...):
+
+  method/<kind>/fwd          median us/call of the adapted linear forward
+                             (derived: trainable params + fusion mode)
+  fusion_plan/method/<kind>/<mode>/expect_<mode>
+                             the mode the dispatcher ACTUALLY picked for
+                             methods declaring fused kernels -- gated by
+                             benchmarks/check_fusion.py like every other
+                             fusion-plan row, so a silent fallback of e.g.
+                             the HOFT fused path fails CI.
+
+The method list comes from the registry, so a newly registered method
+shows up in the bench (and the CI smoke) for free.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import time_jit
+from repro import methods
+from repro.config.base import AdapterConfig, QuantConfig
+from repro.core import adapter as ad
+
+D_IN, D_OUT, TOKENS = 512, 512, 2048
+
+
+def _acfg(kind: str, fused: bool) -> AdapterConfig:
+    return AdapterConfig(kind=kind, block_size=32, neumann_terms=5, rank=16,
+                         reflections=8, fuse_linear=fused)
+
+
+def run():
+    rows = []
+    qcfg = QuantConfig(kind="none")
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (TOKENS, D_IN))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (D_IN, D_OUT)) / 22.6
+
+    for kind in methods.available():
+        method = methods.get(kind)
+        if not method.has_params:
+            continue
+        fused = method.supports_fused_forward
+        acfg = _acfg(kind, fused)
+        adp = ad.adapter_init(jax.random.fold_in(key, 2), "q", D_IN, D_OUT,
+                              acfg)
+        fn = jax.jit(lambda xx, ww, aa, _acfg=acfg: ad.adapted_linear(
+            xx, {"w": ww}, aa, _acfg, qcfg))
+        us = time_jit(fn, x, w, adp)
+        mode = ad.fusion_mode(acfg, qcfg, ("w",))
+        rows.append((f"method/{kind}/fwd", us,
+                     f"params={ad.adapter_param_count('q', D_IN, D_OUT, acfg)};"
+                     f"mode={mode};tokens={TOKENS};d={D_IN}x{D_OUT}"))
+        if fused:
+            # check_fusion-gated: a method declaring supports_fused_forward
+            # must actually get a fused mode from the dispatcher
+            got = "fused" if mode != "unfused" else "unfused"
+            rows.append((f"fusion_plan/method/{kind}/expect_fused", 0.0,
+                         f"got={got};mode={mode}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

@@ -47,8 +47,8 @@ def main() -> None:
     if smoke:
         common.SMOKE = True
     from benchmarks import (fig1_oft_vs_oftv2, fig4_memory, kernels_bench,
-                            requant_error, roofline_report, serving_bench,
-                            table12_speed, table345_quality)
+                            methods_bench, requant_error, roofline_report,
+                            serving_bench, table12_speed, table345_quality)
     from benchmarks.common import emit
 
     modules = [
@@ -58,6 +58,7 @@ def main() -> None:
         ("table3/4/5 (quality proxy at matched budget)", table345_quality),
         ("§4 requantization error", requant_error),
         ("kernels", kernels_bench),
+        ("adapter methods (registry sweep)", methods_bench),
         ("multi-tenant serving", serving_bench),
         ("roofline artifacts", roofline_report),
     ]

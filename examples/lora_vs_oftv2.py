@@ -2,8 +2,9 @@
 frozen base + data stream (paper Tables 1/3 in miniature): final loss,
 trainable params, step time.
 
-    PYTHONPATH=src python examples/lora_vs_oftv2.py
+    PYTHONPATH=src python examples/lora_vs_oftv2.py [--steps N]
 """
+import argparse
 import time
 
 import numpy as np
@@ -39,8 +40,12 @@ def run_one(kind: str, steps=60):
             "s_per_step": dt / steps}
 
 
-def main():
-    rows = [run_one(k) for k in ("lora", "oftv2", "oftv1")]
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60,
+                    help="training steps per method (CI smoke uses fewer)")
+    args = ap.parse_args(argv)
+    rows = [run_one(k, steps=args.steps) for k in ("lora", "oftv2", "oftv1")]
     print(f"{'adapter':8} {'trainable':>10} {'final loss':>11} "
           f"{'s/step':>8}")
     for r in rows:

@@ -2,8 +2,10 @@
 LM task, then merge the adapter and verify the merged model matches the
 runtime adapter forward.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [--steps N]
 """
+import argparse
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -17,14 +19,18 @@ from repro.models import build
 from repro.train.loop import run_training
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60,
+                    help="training steps (CI smoke passes a smaller count)")
+    args = ap.parse_args(argv)
     cfg = ModelConfig(name="quickstart", num_layers=2, d_model=128,
                       num_heads=4, num_kv_heads=2, d_ff=256, vocab_size=256,
                       rope_theta=1e4)
     run = RunConfig(
         model=cfg,
         adapter=AdapterConfig(kind="oftv2", block_size=32, neumann_terms=5),
-        train=TrainConfig(global_batch=8, seq_len=64, steps=60,
+        train=TrainConfig(global_batch=8, seq_len=64, steps=args.steps,
                           learning_rate=8e-3, warmup_steps=5,
                           ckpt_every=0, log_every=10,
                           ckpt_dir="/tmp/repro_quickstart"))

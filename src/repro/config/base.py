@@ -180,26 +180,29 @@ class ModelConfig:
 
 @dataclass(frozen=True)
 class AdapterConfig:
-    """The paper's technique + baselines."""
+    """The paper's technique + baselines + registry methods.
 
-    kind: str = "oftv2"        # none | oftv1 | oftv2 | lora
+    ``kind`` names an ``AdapterMethod`` registered in ``repro.methods``
+    (built-ins: none | oftv1 | oftv2 | lora | hoft); everything the
+    framework does with it is a registry query, never string dispatch."""
+
+    kind: str = "oftv2"        # an adapter method registered in repro.methods
     block_size: int = 32       # OFT block size b
     neumann_terms: int = 5     # k; 0 = exact Cayley (matrix solve)
     rank: int = 16             # LoRA rank r
     alpha: float = 16.0        # LoRA scaling
+    reflections: int = 8       # HOFT Householder count m (even: paired
+                               # vectors make the init-time chain identity)
     targets: Tuple[str, ...] = ("q", "k", "v", "o", "gate", "up", "down",
                                 "in_proj", "out_proj")
     adapt_experts: bool = False
     use_pallas: bool = False   # route adapter math through Pallas kernels
-    # Fused OFTv2 forward: one Pallas kernel does rotate+matmul (and NF4
-    # dequant in the QOFT path) so rotated activations / dequantized weights
-    # never round-trip through HBM. Only meaningful for kind == "oftv2";
+    # Fused forward: one Pallas kernel does transform+matmul (and NF4
+    # dequant in the QOFT path) so transformed activations / dequantized
+    # weights never round-trip through HBM. Honored by methods whose
+    # registry entry declares supports_fused_forward (oftv2, hoft);
     # implies the Pallas path for the adapted linear itself.
     fuse_linear: bool = False
-
-    @property
-    def is_oft(self) -> bool:
-        return self.kind in ("oftv1", "oftv2")
 
 
 @dataclass(frozen=True)

@@ -1,8 +1,11 @@
 """Uniform adapter API: every linear layer in the model zoo goes through
 ``adapted_linear``.  This is the single integration point of the paper's
-technique with the framework -- OFTv2/QOFT (sequential, input-centric),
-OFTv1 (sequential, weight-centric baseline), LoRA/QLoRA (parallel, low-rank
-baseline), or no adapter.
+technique with the framework -- which technique is a pure registry lookup
+(``repro.methods``): OFTv2/QOFT (sequential, input-centric), OFTv1
+(sequential, weight-centric baseline), LoRA/QLoRA (parallel, low-rank
+baseline), HOFT (Householder-product chain), or no adapter.  There is no
+adapter-kind string dispatch here or anywhere else outside
+``src/repro/methods/`` -- CI greps for it (benchmarks/check_dispatch.py).
 
 Parameter layout contract (enforced by repro.train.state):
   base params  (frozen, possibly quantized)  live under  tree["base"]
@@ -16,67 +19,64 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro import methods
 from repro.config.base import AdapterConfig, QuantConfig
-from repro.core import lora as lora_lib
-from repro.core import oft as oft_lib
 from repro.quant.common import dequantize_linear
 
 
 def wants_adapter(name: str, acfg: AdapterConfig) -> bool:
-    return acfg.kind != "none" and name in acfg.targets
+    return methods.get(acfg.kind).has_params and name in acfg.targets
 
 
 def adapter_init(key, name: str, d_in: int, d_out: int, acfg: AdapterConfig,
                  dtype=jnp.float32) -> Optional[dict]:
-    """Adapter params for one linear (or None when not targeted)."""
+    """Adapter params for one linear (or None when not targeted).
+
+    ``key`` is threaded to EVERY method uniformly -- stochastic inits
+    (LoRA A, HOFT reflection vectors) consume it, deterministic ones (OFT
+    zero-init) ignore it -- so seed sensitivity is a per-method property,
+    not a signature difference."""
     if not wants_adapter(name, acfg):
         return None
-    if acfg.is_oft:
-        return oft_lib.oft_init(d_in, acfg.block_size, dtype=dtype)
-    if acfg.kind == "lora":
-        return lora_lib.lora_init(key, d_in, d_out, acfg.rank, dtype=dtype)
-    raise ValueError(f"unknown adapter kind {acfg.kind}")
+    return methods.get(acfg.kind).init(key, name, d_in, d_out, acfg,
+                                       dtype=dtype)
 
 
 def adapter_param_count(name: str, d_in: int, d_out: int,
                         acfg: AdapterConfig) -> int:
     if not wants_adapter(name, acfg):
         return 0
-    if acfg.is_oft:
-        return oft_lib.oft_param_count(d_in, acfg.block_size)
-    return lora_lib.lora_param_count(d_in, d_out, acfg.rank)
+    return methods.get(acfg.kind).param_count(name, d_in, d_out, acfg)
 
 
 def fusion_mode(acfg: AdapterConfig, qcfg: QuantConfig,
                 qstate_keys=()) -> str:
-    """Which forward an adapted linear will take: 'qoft_fused' (NF4 dequant +
-    rotate + matmul, one kernel), 'oftv2_fused' (rotate + matmul, one
-    kernel), or 'unfused'."""
-    if acfg.kind != "oftv2" or not acfg.fuse_linear:
-        return "unfused"
-    if qcfg.kind == "nf4" and (not qstate_keys or "nf4_codes" in qstate_keys):
-        return "qoft_fused"
-    return "oftv2_fused"
+    """Which forward an adapted linear will take, per the method's registry
+    entry: e.g. 'qoft_fused' (NF4 dequant + rotate + matmul, one kernel),
+    'oftv2_fused' / 'hoft_fused' (transform + matmul, one kernel), or
+    'unfused'.  ``qstate_keys`` are the ACTUAL keys of the linear's frozen
+    state: a quantized mode is only reported when the matching quant state
+    is really there (an empty/raw-``w`` qstate never routes quantized)."""
+    return methods.get(acfg.kind).fusion_mode(acfg, qcfg, qstate_keys)
 
 
 def adapted_linear(x: jnp.ndarray, qstate: dict, adapter: Optional[dict],
                    acfg: AdapterConfig, qcfg: QuantConfig,
                    constrain=None, adapter_id=None) -> jnp.ndarray:
-    """y = adapted forward of one frozen linear.
+    """y = adapted forward of one frozen linear, via the method registry.
 
     OFTv2/QOFT path never touches the quant state before the matmul --
-    quantization-agnostic by construction (paper §4, eq. 3).
-
-    With acfg.fuse_linear, the OFTv2 forward is ONE Pallas kernel
-    (rotate+matmul; plus in-kernel NF4 dequant for QOFT, so a dense W never
-    exists in HBM). See repro.core.oft.oftv2_linear / repro.kernels.
+    quantization-agnostic by construction (paper §4, eq. 3).  With
+    acfg.fuse_linear, methods that declare fused kernels collapse the
+    forward to ONE Pallas kernel (see repro.kernels).
 
     Multi-tenant serving (repro.serving): when the adapter leaf carries an
     ``r_stack`` -- the pool's per-layer (A, K//b, b, b) rotation stack --
     each batch row is routed to ITS adapter's blocks by ``adapter_id``
-    ((B,) int32, threaded from the decode batch) inside the fused kernel.
-    A Python-int adapter_id is the all-rows-same-adapter fast path and
-    lowers to the single-adapter kernels.
+    ((B,) int32, threaded from the decode batch) via the method's
+    ``route_multi`` hook.  A Python-int adapter_id is the
+    all-rows-same-adapter fast path and lowers to the single-adapter
+    kernels.  Methods without the capability raise NotImplementedError.
 
     constrain (optional, on-mesh only): gather-codes optimization -- the
     ZeRO-3 all-gather is forced onto the uint8 quant state (replicate it,
@@ -86,57 +86,23 @@ def adapted_linear(x: jnp.ndarray, qstate: dict, adapter: Optional[dict],
     if (constrain is not None and qcfg.gather_codes and qcfg.enabled
             and "w" not in qstate):
         qstate = {k: constrain(v) for k, v in qstate.items()}
+    method = methods.get(acfg.kind)
     if adapter is not None and "r_stack" in adapter:
         if adapter_id is None:
             raise ValueError(
                 "pooled multi-adapter params (r_stack) need a per-row "
                 "adapter_id -- pass batch['adapter_id'] (repro.serving)")
-        from repro.kernels import ops as kops
-        mode = fusion_mode(acfg, qcfg, qstate.keys())
-        if mode == "unfused":
-            raise ValueError(
-                "multi-adapter serving requires the fused OFTv2 path "
-                "(AdapterConfig(kind='oftv2', fuse_linear=True))")
-        if mode == "qoft_fused":
-            from repro.quant import nf4
-            return kops.qoft_linear_multi(x, adapter["r_stack"], adapter_id,
-                                          qstate["nf4_codes"],
-                                          nf4.absmax_fp32(qstate, qcfg),
-                                          qcfg.block_size)
-        w = dequantize_linear(qstate, qcfg, x.dtype)
-        return kops.oftv2_linear_multi(x, adapter["r_stack"], adapter_id, w)
-    if (adapter is not None
-            and fusion_mode(acfg, qcfg, qstate.keys()) == "qoft_fused"):
-        from repro.kernels import ops as kops
-        from repro.quant import nf4
-        # hoisted per-step rotations when present (core/rotations.py),
-        # built on the spot otherwise
-        r_blocks = oft_lib.get_r(adapter, acfg)
-        return kops.qoft_linear_fused(x, r_blocks, qstate["nf4_codes"],
-                                      nf4.absmax_fp32(qstate, qcfg),
-                                      qcfg.block_size)
-    w = dequantize_linear(qstate, qcfg, x.dtype)
-    if adapter is None or acfg.kind == "none":
-        return x @ w
-    if acfg.kind == "oftv2":
-        return oft_lib.oftv2_linear(x, adapter, acfg, w)
-    if acfg.kind == "oftv1":
-        # Weight-centric baseline: materializes (and backprops through) the
-        # transformed d_in x d_out weight every call -- the paper's bottleneck.
-        wt = oft_lib.oftv1_transform_weight(w, adapter, acfg)
-        return x @ wt
-    if acfg.kind == "lora":
-        return x @ w + lora_lib.lora_delta(x, adapter, acfg)
-    raise ValueError(f"unknown adapter kind {acfg.kind}")
+        return method.route_multi(x, qstate, adapter, adapter_id, acfg,
+                                  qcfg)
+    if adapter is None or not method.has_params:
+        return x @ dequantize_linear(qstate, qcfg, x.dtype)
+    return method.forward(x, qstate, adapter, acfg, qcfg)
 
 
 def merge_adapter(w: jnp.ndarray, adapter: Optional[dict],
                   acfg: AdapterConfig) -> jnp.ndarray:
     """Fold the adapter into a (dequantized) weight for deployment."""
-    if adapter is None or acfg.kind == "none":
+    method = methods.get(acfg.kind)
+    if adapter is None or not method.has_params:
         return w
-    if acfg.is_oft:
-        return oft_lib.oft_merge(w, adapter, acfg)
-    if acfg.kind == "lora":
-        return lora_lib.lora_merge(w, adapter, acfg)
-    raise ValueError(f"unknown adapter kind {acfg.kind}")
+    return method.merge(w, adapter, acfg)

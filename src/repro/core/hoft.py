@@ -1,0 +1,107 @@
+"""HOFT: compact Householder-product orthogonal finetuning (HOFT,
+arXiv:2505.16531 / HRA, arXiv:2405.17484 family), input-centric.
+
+The learned orthogonal transform is a chain of m Householder reflections
+
+    H = H_1 H_2 ... H_m,    H_i = I - 2 v_i v_iᵀ / ||v_i||²
+
+applied to the INPUT features in row-vector convention exactly like OFTv2:
+y = (x @ H) @ W.  Each reflection is matrix-vector work on the activations
+-- x @ H_i = x - c_i (x·v_i) v_iᵀ, c_i = 2/||v_i||² -- so the per-token
+cost is O(m d), the same quadratic-cost story as OFTv2 §3 (vs the cubic
+weight-transform of weight-centric OFT), with a different parameterization:
+m full-width reflection vectors (m·d params) instead of d/b packed b x b
+skew blocks.
+
+Identity at init (finetuning starts at the pretrained model): reflections
+cannot be zero-initialized -- H(v) is a reflection for ANY v != 0 -- so
+``hoft_init`` samples m/2 random vectors and duplicates each consecutively.
+H(v)H(v) = I exactly, so the paired chain is the identity while the two
+copies sit at different chain positions and diverge freely under training.
+This is why HOFT's init is stochastic (seed-sensitive) where OFT's is not,
+and why ``reflections`` must be even.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import AdapterConfig
+
+# Guard for ||v||²: keeps an all-zero reflection vector (e.g. sublane
+# padding rows in the fused kernel) an exact no-op instead of a NaN.  The
+# Pallas kernel and the jnp oracle use the SAME guard so they agree bitwise.
+NORM_EPS = 1e-12
+
+
+def num_reflections(acfg: AdapterConfig) -> int:
+    m = acfg.reflections
+    if m <= 0 or m % 2 != 0:
+        raise ValueError(
+            f"AdapterConfig.reflections must be a positive even number "
+            f"(paired Householder vectors make the init-time chain the "
+            f"identity); got {m}")
+    return m
+
+
+def hoft_init(key, d_in: int, m: int, dtype=jnp.float32) -> dict:
+    """m paired reflection vectors: v[2i] == v[2i+1] at init, so the
+    product of reflections is exactly I (see module docstring)."""
+    if m % 2 != 0:
+        raise ValueError(f"reflections must be even, got {m}")
+    half = jax.random.normal(key, (m // 2, d_in), jnp.float32) \
+        / jnp.sqrt(jnp.asarray(d_in, jnp.float32))
+    return {"hh_v": jnp.repeat(half, 2, axis=0).astype(dtype)}
+
+
+def hoft_param_count(d_in: int, m: int) -> int:
+    return m * d_in
+
+
+def hoft_apply(x: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., d) @ H_1...H_m for v: (m, d); fp32 chain, cast back.
+
+    Sequential by construction (reflection i sees the output of i-1); m is
+    small and static, so the loop unrolls into m fused matvec+axpy steps."""
+    xf = x.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    for i in range(v.shape[0]):
+        vi = vf[i]
+        c = 2.0 / jnp.maximum(jnp.sum(vi * vi), NORM_EPS)
+        xf = xf - c * (xf @ vi)[..., None] * vi
+    return xf.astype(x.dtype)
+
+
+def hoft_linear(x: jnp.ndarray, params: dict, cfg: AdapterConfig,
+                w: jnp.ndarray) -> jnp.ndarray:
+    """Full input-centric adapted linear: y = (x @ H_1...H_m) @ W.
+
+    With cfg.fuse_linear the whole chain + matmul run as ONE Pallas kernel
+    (``kernels/hoft_linear_fused``): the reflected activations never hit
+    HBM.  Its VJP falls back to the jnp reference (no fused backward kernel
+    yet -- the capability matrix says so)."""
+    if cfg.fuse_linear:
+        from repro.kernels import ops as kops
+        return kops.hoft_linear_fused(x, params["hh_v"], w)
+    return hoft_apply(x, params["hh_v"]) @ w
+
+
+def hoft_merge(w: jnp.ndarray, params: dict,
+               cfg: AdapterConfig) -> jnp.ndarray:
+    """W' = H_1...H_m @ W for deployment: x @ W' == hoft_apply(x) @ W.
+
+    Applied right-to-left (H_m first), each step matrix-vector work on W:
+    H_i @ M = M - c_i v_i (v_iᵀ M)."""
+    v = params["hh_v"].astype(jnp.float32)
+    wt = w.astype(jnp.float32)
+    for i in range(v.shape[0] - 1, -1, -1):
+        vi = v[i]
+        c = 2.0 / jnp.maximum(jnp.sum(vi * vi), NORM_EPS)
+        wt = wt - c * vi[:, None] * (vi @ wt)[None, :]
+    return wt.astype(w.dtype)
+
+
+def hoft_flops_per_step(d_in: int, d_out: int, tokens: int, m: int) -> int:
+    """Analytic adapter-overhead FLOPs: m reflections, each a matvec +
+    rank-1 update over the activations (4 * tokens * d per reflection)."""
+    return 4 * tokens * d_in * m

@@ -14,8 +14,6 @@ from typing import Dict
 import jax.numpy as jnp
 
 from repro.config.base import AdapterConfig, QuantConfig
-from repro.core.adapter import merge_adapter
-from repro.quant import nf4
 
 
 def column_norm_drift(w: jnp.ndarray, merged: jnp.ndarray) -> jnp.ndarray:
@@ -39,14 +37,9 @@ def lora_worstcase_range_shift(adapter: dict, acfg: AdapterConfig) -> jnp.ndarra
 
 def requantization_report(w: jnp.ndarray, adapter: dict, acfg: AdapterConfig,
                           qcfg: QuantConfig) -> Dict[str, float]:
-    """Merge -> requantize -> measure. Returns scalars (floats)."""
-    merged = merge_adapter(w, adapter, acfg)
-    q = nf4.quantize(merged, qcfg)
-    back = nf4.dequantize(q, qcfg, merged.dtype)
-    return {
-        "column_norm_drift": float(column_norm_drift(w, merged)),
-        "dynamic_range_shift": float(dynamic_range_shift(w, merged)),
-        "requant_max_err": float(jnp.max(jnp.abs(merged - back))),
-        "requant_rel_fro": float(jnp.linalg.norm(merged - back)
-                                 / jnp.linalg.norm(merged)),
-    }
+    """Merge -> requantize -> measure, via the method's ``requant_report``
+    registry hook (the base-class default covers any method with ``merge``;
+    a method may override to report method-specific diagnostics).  Returns
+    scalars (floats)."""
+    from repro import methods
+    return methods.get(acfg.kind).requant_report(w, adapter, acfg, qcfg)

@@ -30,14 +30,18 @@ from typing import Iterator, Tuple
 
 import jax.numpy as jnp
 
+from repro import methods
 from repro.config.base import AdapterConfig
 from repro.core import oft as oft_lib
 
 
 def should_hoist(adapter_tree, acfg: AdapterConfig) -> bool:
-    """Hoisting applies to input-centric OFT only: v1 rebuilds R as part of
-    its weight transform baseline, LoRA has no rotations."""
-    return (acfg.kind == "oftv2"
+    """Hoisting applies to methods whose registry entry declares
+    ``supports_hoisted_rotations`` (input-centric OFT: v1 rebuilds R as
+    part of its weight transform baseline, LoRA/HOFT have no block
+    rotations to hoist) -- and only when the tree actually carries
+    ``q_packed`` leaves."""
+    return (methods.get(acfg.kind).supports_hoisted_rotations
             and any(True for _ in _oft_leaves(adapter_tree)))
 
 

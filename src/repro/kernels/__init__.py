@@ -13,11 +13,14 @@ interpret mode on CPU; compiled path on real TPUs):
                         routes each token to its adapter's rotation blocks
   qoft_linear_multi  -- the same with in-kernel NF4 dequant of the shared
                         frozen base
+  hoft_linear_fused  -- Householder-chain reflection + matmul in one kernel
+                        (the HOFT method's fused forward)
 """
-from repro.kernels.ops import (block_oft_apply, cayley_neumann, nf4_dequant,
+from repro.kernels.ops import (block_oft_apply, cayley_neumann,
+                               hoft_linear_fused, nf4_dequant,
                                oftv2_linear_fused, oftv2_linear_multi,
                                qoft_linear_fused, qoft_linear_multi)
 
-__all__ = ["block_oft_apply", "cayley_neumann", "nf4_dequant",
-           "oftv2_linear_fused", "oftv2_linear_multi", "qoft_linear_fused",
-           "qoft_linear_multi"]
+__all__ = ["block_oft_apply", "cayley_neumann", "hoft_linear_fused",
+           "nf4_dequant", "oftv2_linear_fused", "oftv2_linear_multi",
+           "qoft_linear_fused", "qoft_linear_multi"]

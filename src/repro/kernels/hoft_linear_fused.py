@@ -1,0 +1,84 @@
+"""Pallas TPU kernel: fused HOFT linear -- the Householder-reflection chain
+applied to the input tile feeding straight into the x @ W matmul.
+
+Unfused, the HOFT hot path writes the reflected activations (T x K) to HBM
+and reads them back for the frozen matmul.  Fused, each program keeps its
+(TOKEN_TILE, K) activation tile in VMEM, applies the m reflections as
+matvec + rank-1 updates (VPU work; a (TT, 1) dot per reflection on the
+MXU), and contracts the result with its (K, N_TILE) weight tile:
+
+  * grid = (token tiles, out tiles).  Unlike the OFT block-diagonal kernel
+    there is NO k grid dim: every reflection vector spans the full feature
+    width, coupling all of K, so each program owns a full-K activation
+    stripe.  The reflection chain is recomputed per n tile -- O(m T K)
+    VPU flops, cheap next to the O(T K N) matmul it feeds.
+  * reflection rows are zero-padded to the sublane multiple by ops.py;
+    the ||v||² guard (core/hoft.NORM_EPS, shared with the jnp oracle)
+    makes a zero row an exact no-op.
+  * HBM traffic per call: x + v + W + y once each; the reflected
+    activations never exist in HBM -- the same "matrix-free" endpoint as
+    oftv2_linear_fused, for a method with full-width generators.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.hoft import NORM_EPS
+from repro.kernels.runtime import resolve_interpret
+
+DEFAULT_TOKEN_TILE = 256
+DEFAULT_N_TILE = 256
+
+
+def _reflect_tile(x: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """(TT, K) x tile, (M, K) reflection vectors -> (TT, K) reflected tile.
+
+    Python loop over the (static) reflection count: the chain is inherently
+    sequential, so it unrolls into m matvec+axpy steps."""
+    for i in range(v.shape[0]):
+        vi = v[i:i + 1, :]                                        # (1, K)
+        c = 2.0 / jnp.maximum(jnp.sum(vi * vi), NORM_EPS)
+        dot = jnp.dot(x, vi.T, preferred_element_type=jnp.float32)  # (TT,1)
+        x = x - c * dot * vi
+    return x
+
+
+def _kernel(x_ref, v_ref, w_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)   # (TT, K)
+    v = v_ref[...].astype(jnp.float32)   # (M, K)
+    w = w_ref[...].astype(jnp.float32)   # (K, NT)
+    o_ref[...] = jnp.dot(_reflect_tile(x, v), w,
+                         preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("token_tile", "n_tile",
+                                             "interpret"))
+def hoft_linear_fused_kernel(x2: jnp.ndarray, v: jnp.ndarray,
+                             w: jnp.ndarray,
+                             token_tile: int = DEFAULT_TOKEN_TILE,
+                             n_tile: int = DEFAULT_N_TILE,
+                             interpret: bool = None) -> jnp.ndarray:
+    """x2: (T, K) activations, v: (M, K) reflection vectors, w: (K, N) ->
+    (T, N) fp32 (callers cast).  T % token_tile == N % n_tile == 0 (ops.py
+    pads/picks); K is un-tiled (reflections couple the full width).
+    interpret=None auto-detects: compiled on TPU, interpreted elsewhere."""
+    interpret = resolve_interpret(interpret)
+    t, k_dim = x2.shape
+    n = w.shape[1]
+    grid = (t // token_tile, n // n_tile)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((token_tile, k_dim), lambda i, j: (i, 0)),
+            pl.BlockSpec(v.shape, lambda i, j: (0, 0)),
+            pl.BlockSpec((k_dim, n_tile), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((token_tile, n_tile), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((t, n), jnp.float32),
+        interpret=interpret,
+    )(x2, v, w)

@@ -34,6 +34,7 @@ from repro.kernels import ref as kref
 from repro.kernels import runtime as _runtime
 from repro.kernels.block_oft_apply import block_oft_apply_kernel
 from repro.kernels.cayley_neumann import cayley_neumann_kernel
+from repro.kernels.hoft_linear_fused import hoft_linear_fused_kernel
 from repro.kernels.nf4_dequant import nf4_dequant_kernel
 from repro.kernels.oftv2_linear_bwd import oftv2_linear_bwd_kernel
 from repro.kernels.oftv2_linear_fused import oftv2_linear_fused_kernel
@@ -309,6 +310,51 @@ def _qlf_bwd(block_size, res, g):
 
 
 qoft_linear_fused.defvjp(_qlf_fwd, _qlf_bwd)
+
+
+# ----------------------------------------------------- fused HOFT linear ----
+def _hoft_fused_raw(x: jnp.ndarray, v: jnp.ndarray,
+                    w: jnp.ndarray) -> jnp.ndarray:
+    x2, lead, t = _flatten_tokens(x)
+    k_dim, n = w.shape
+    # k_align=1: the kernel takes the full K per program (reflections
+    # couple the whole feature width), so the k tile is unused
+    token_tile, t_pad, n_tile, _ = _fused_tiles(t, k_dim, n, 1)
+    if t_pad != t:
+        x2 = jnp.pad(x2, ((0, t_pad - t), (0, 0)))
+    m_pad = _round_up(v.shape[0], 8)
+    if m_pad != v.shape[0]:
+        # zero reflection rows are exact no-ops (core/hoft.NORM_EPS guard)
+        v = jnp.pad(v, ((0, m_pad - v.shape[0]), (0, 0)))
+    y2 = hoft_linear_fused_kernel(x2, v, w, token_tile=token_tile,
+                                  n_tile=n_tile, interpret=_interpret())
+    return y2[:t].astype(x.dtype).reshape(lead + (n,))
+
+
+@jax.custom_vjp
+def hoft_linear_fused(x: jnp.ndarray, v: jnp.ndarray,
+                      w: jnp.ndarray) -> jnp.ndarray:
+    """y = (x @ H_1..H_m) @ W in one Pallas kernel: the reflected
+    activations never touch HBM.  x: (..., K), v: (m, K) Householder
+    vectors, w: (K, N) -> (..., N).
+
+    The backward is the jnp reference VJP (no fused bwd kernel yet --
+    ``repro.methods`` reports supports_fused_vjp=False for hoft), so
+    training works everywhere while only the forward hot path is fused."""
+    return _hoft_fused_raw(x, v, w)
+
+
+def _hlf_fwd(x, v, w):
+    return _hoft_fused_raw(x, v, w), (x, v, w)
+
+
+def _hlf_bwd(res, g):
+    x, v, w = res
+    _, vjp = jax.vjp(kref.hoft_linear_ref, x, v, w)
+    return vjp(g)
+
+
+hoft_linear_fused.defvjp(_hlf_fwd, _hlf_bwd)
 
 
 # ------------------------------------------- multi-adapter fused linears ----

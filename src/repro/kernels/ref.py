@@ -29,6 +29,19 @@ def cayley_neumann_ref(q_packed: jnp.ndarray, block_size: int,
     return _cayley.build_rotation(q_packed, block_size, neumann_terms)
 
 
+def hoft_apply_ref(x: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., d) through the Householder chain H_1..H_m, v: (m, d)."""
+    from repro.core import hoft as _hoft
+    return _hoft.hoft_apply(x, v)
+
+
+def hoft_linear_ref(x: jnp.ndarray, v: jnp.ndarray,
+                    w: jnp.ndarray) -> jnp.ndarray:
+    """Fused HOFT linear oracle: (x @ H_1..H_m) @ W, fp32 accumulate."""
+    xr = hoft_apply_ref(x.astype(jnp.float32), v.astype(jnp.float32))
+    return (xr @ w.astype(jnp.float32)).astype(x.dtype)
+
+
 def oftv2_linear_ref(x: jnp.ndarray, r_blocks: jnp.ndarray,
                      w: jnp.ndarray) -> jnp.ndarray:
     """Fused OFTv2 linear oracle: (x @ blockdiag(R)) @ W, fp32 accumulate."""

@@ -238,10 +238,12 @@ def cell_path(arch, shape, mesh_kind, tag="") -> Path:
 
 def main(argv=None) -> int:
     p = argparse.ArgumentParser()
+    from repro.methods import available as _adapter_kinds
     p.add_argument("--arch")
     p.add_argument("--shape")
     p.add_argument("--mesh", default="single", choices=["single", "multi"])
-    p.add_argument("--adapter", default="oftv2")
+    p.add_argument("--adapter", default="oftv2",
+                   choices=list(_adapter_kinds()))
     p.add_argument("--quant", default="none")
     p.add_argument("--microbatches", type=int, default=4)
     p.add_argument("--remat", default="full")

@@ -21,6 +21,7 @@ import time
 import jax
 import numpy as np
 
+from repro import methods
 from repro.config.base import AdapterConfig, QuantConfig, RunConfig
 from repro.configs import REGISTRY, get_config, get_smoke
 from repro.models import build
@@ -85,7 +86,7 @@ def main(argv=None):
     ap.add_argument("--arch", default="granite-8b", choices=list(REGISTRY))
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--adapter", default="oftv2",
-                    choices=["oftv2", "lora", "none"])
+                    choices=list(methods.available()))
     ap.add_argument("--adapters", type=int, default=1,
                     help="serve N adapters against the one frozen base "
                          "(multi-tenant engine; implies --fuse)")
@@ -108,9 +109,11 @@ def main(argv=None):
     if cfg.is_encoder:
         raise SystemExit("encoder-only architectures have no decode step")
     multi = args.adapters > 1
-    if multi and args.adapter != "oftv2":
-        raise SystemExit("--adapters N>1 serves pooled OFTv2 rotations; "
-                         "use --adapter oftv2")
+    if multi and not methods.get(args.adapter).supports_multi_tenant:
+        raise SystemExit(
+            f"--adapters N>1 needs an adapter method with multi-tenant "
+            f"serving support; {args.adapter!r} has none (methods that "
+            f"do: {list(methods.supporting('supports_multi_tenant'))})")
     run = RunConfig(model=cfg,
                     adapter=AdapterConfig(kind=args.adapter, block_size=32,
                                           neumann_terms=5,

@@ -16,6 +16,7 @@ import argparse
 import jax
 import numpy as np
 
+from repro import methods
 from repro.config.base import (AdapterConfig, QuantConfig, RunConfig,
                                TrainConfig)
 from repro.configs import REGISTRY, get_config, get_smoke
@@ -36,7 +37,7 @@ def main(argv=None):
     ap.add_argument("--smoke", action="store_true",
                     help="use the reduced same-family config (CPU-sized)")
     ap.add_argument("--adapter", default="oftv2",
-                    choices=["oftv2", "oftv1", "lora", "none"])
+                    choices=list(methods.available()))
     ap.add_argument("--quant", default="none",
                     choices=["none", "nf4", "awq", "int8"])
     ap.add_argument("--block-size", type=int, default=32)

@@ -1,0 +1,9 @@
+"""Print the registry-generated method x capability matrix (the README
+embeds this output; tests/test_methods_registry.py keeps it in sync):
+
+    PYTHONPATH=src python -m repro.methods
+"""
+from repro.methods import capability_matrix_md
+
+if __name__ == "__main__":
+    print(capability_matrix_md())

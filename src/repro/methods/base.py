@@ -1,0 +1,209 @@
+"""The ``AdapterMethod`` protocol + registry: the single place adapter-kind
+dispatch is allowed to live.
+
+Everything the framework needs from an adapter method is a hook on this
+class -- init / param_count / param_defs (model building), forward / apply
+(the adapted linear, fused or not), merge + requant_report (deployment),
+and the capability flags that gate the PR-2 rotation hoisting and the PR-3
+multi-tenant serving paths.  ``repro.core.adapter``, ``repro.models.
+linears``, ``repro.serving.pool`` and the launch entrypoints are pure
+registry queries; a new method (BOFT, Givens, principal-subspace, ...) is
+one module calling ``register`` -- no framework surgery.
+
+Capabilities a method does not implement fail LOUDLY: the base hooks raise
+``NotImplementedError`` naming the method and the missing capability, so a
+config that routes e.g. a non-stackable method into the adapter pool is a
+registration-time error, not a silent fall-through.
+
+CI enforces the monopoly: ``benchmarks/check_dispatch.py`` greps the source
+tree and fails the build if ``acfg.kind == ...`` string dispatch reappears
+outside ``src/repro/methods/``.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, List, Tuple
+
+import jax.numpy as jnp
+
+
+class AdapterMethod:
+    """One adapter method's full capability surface.
+
+    Subclass, set ``kind``, implement the required hooks, override the
+    optional ones the method actually supports (and flip the matching
+    capability flag -- the flags drive the README method x capability
+    matrix and the loud-failure diagnostics, so they must tell the truth;
+    ``tests/test_methods_registry.py`` cross-checks them).
+    """
+
+    kind: str = ""
+
+    # ---- capability flags (the README matrix is generated from these) ----
+    has_params: bool = True          # False: the no-adapter passthrough
+    stochastic_init: bool = False    # init consumes the PRNG key
+    supports_fused_forward: bool = False   # fused_plan != 'unfused' possible
+    supports_fused_vjp: bool = False       # the fused fwd's VJP is a kernel
+    supports_hoisted_rotations: bool = False   # core/rotations once-per-step
+    supports_multi_tenant: bool = False    # serving pool stack + routing
+    supports_merge: bool = True
+    supports_quantized_base: bool = True   # works over an NF4/AWQ/int8 base
+
+    # ------------------------------------------------------ required hooks --
+    def init(self, key, name: str, d_in: int, d_out: int, acfg,
+             dtype=jnp.float32) -> dict:
+        """Adapter params for one linear.  ``key`` is ALWAYS threaded --
+        deterministic methods (OFT zero-init) simply ignore it, so
+        stochastic inits (LoRA, HOFT) share one signature and seed
+        sensitivity is testable uniformly."""
+        raise NotImplementedError(self._msg("init"))
+
+    def param_count(self, name: str, d_in: int, d_out: int, acfg) -> int:
+        raise NotImplementedError(self._msg("param_count"))
+
+    def param_defs(self, name: str, d_in: int, d_out: int, acfg,
+                   model_axis_size: int = 1):
+        """Trainable ``ParamDef``/``CompositeDef`` tree for one linear
+        (model-building path; must init-agree with ``init``)."""
+        raise NotImplementedError(self._msg("param_defs"))
+
+    def apply(self, x: jnp.ndarray, w: jnp.ndarray, adapter: dict,
+              acfg) -> jnp.ndarray:
+        """Adapted forward of one linear given a DENSE weight: the
+        reference path (a method may still route through its fused kernel
+        internally, e.g. ``acfg.fuse_linear``)."""
+        raise NotImplementedError(self._msg("apply"))
+
+    # ------------------------------------------------------ optional hooks --
+    def forward(self, x: jnp.ndarray, qstate: dict, adapter: dict, acfg,
+                qcfg) -> jnp.ndarray:
+        """Full adapted forward given the (possibly quantized) frozen
+        state.  Default: dequantize, then ``apply``.  Methods with a
+        quantization-aware fused kernel (QOFT) override this so the dense
+        weight never materializes."""
+        from repro.quant.common import dequantize_linear
+        return self.apply(x, dequantize_linear(qstate, qcfg, x.dtype),
+                          adapter, acfg)
+
+    def fusion_mode(self, acfg, qcfg, qstate_keys: Iterable[str] = ()) -> str:
+        """Which fused forward an adapted linear takes under these configs
+        ('unfused' unless the method declares fused kernels).  Drives
+        ``models.linears.linear_fusion_mode`` and the CI fusion-plan gate."""
+        return "unfused"
+
+    def merge(self, w: jnp.ndarray, adapter: dict, acfg) -> jnp.ndarray:
+        """Fold the adapter into a dequantized weight for deployment."""
+        raise NotImplementedError(self._msg("merge"))
+
+    def requant_report(self, w: jnp.ndarray, adapter: dict, acfg,
+                       qcfg) -> Dict[str, float]:
+        """Merge -> NF4-requantize -> measure (paper §4).  Default works
+        for any method with ``merge``."""
+        if not self.supports_merge:
+            raise NotImplementedError(self._msg("requant_report (no merge)"))
+        from repro.core import merging
+        from repro.quant import nf4
+        merged = self.merge(w, adapter, acfg)
+        q = nf4.quantize(merged, qcfg)
+        back = nf4.dequantize(q, qcfg, merged.dtype)
+        return {
+            "column_norm_drift": float(merging.column_norm_drift(w, merged)),
+            "dynamic_range_shift": float(
+                merging.dynamic_range_shift(w, merged)),
+            "requant_max_err": float(jnp.max(jnp.abs(merged - back))),
+            "requant_rel_fro": float(jnp.linalg.norm(merged - back)
+                                     / jnp.linalg.norm(merged)),
+        }
+
+    # ---- multi-tenant serving (PR 3): both or neither -------------------
+    def stack_for_serving(self, trees: List[dict], acfg) -> dict:
+        """N per-tenant adapter trees -> ONE pooled tree the model can
+        serve with per-row routing (OFT: per-layer ``r_stack``)."""
+        raise NotImplementedError(self._msg("multi-tenant stacking"))
+
+    def route_multi(self, x: jnp.ndarray, qstate: dict, adapter: dict,
+                    adapter_id, acfg, qcfg) -> jnp.ndarray:
+        """Adapted forward over a pooled tree, each batch row routed to its
+        adapter by ``adapter_id``."""
+        raise NotImplementedError(self._msg("multi-tenant routing"))
+
+    # --------------------------------------------------------------- misc --
+    def _msg(self, capability: str) -> str:
+        return (f"adapter method {self.kind!r} does not support "
+                f"{capability} (methods that do: see "
+                f"repro.methods.capability_matrix())")
+
+    def __repr__(self) -> str:
+        return f"<AdapterMethod {self.kind!r}>"
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+_REGISTRY: Dict[str, AdapterMethod] = {}
+
+
+def register(method_cls):
+    """Register an ``AdapterMethod`` subclass (usable as a class decorator).
+    Re-registering a kind is an error -- shadowing a built-in silently is
+    exactly the implicit dispatch this package exists to kill."""
+    method = method_cls() if isinstance(method_cls, type) else method_cls
+    if not method.kind:
+        raise ValueError(f"{method!r} has no kind")
+    if method.kind in _REGISTRY:
+        raise ValueError(f"adapter method {method.kind!r} already registered")
+    _REGISTRY[method.kind] = method
+    return method_cls
+
+
+def get(kind: str) -> AdapterMethod:
+    try:
+        return _REGISTRY[kind]
+    except KeyError:
+        raise ValueError(
+            f"unknown adapter kind {kind!r}; registered methods: "
+            f"{', '.join(available())}") from None
+
+
+def available() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def supporting(flag: str) -> Tuple[str, ...]:
+    """Kinds whose registry entry sets the given capability flag (e.g.
+    ``supporting("supports_multi_tenant")``) -- for diagnostics that name
+    the methods that DO have what the failing one lacks."""
+    return tuple(kind for kind, m in sorted(_REGISTRY.items())
+                 if getattr(m, flag))
+
+
+# ---------------------------------------------------------------------------
+# Capability matrix (README generates from this -- it cannot rot)
+# ---------------------------------------------------------------------------
+_MATRIX_COLUMNS: Tuple[Tuple[str, str], ...] = (
+    ("fused fwd", "supports_fused_forward"),
+    ("fused bwd", "supports_fused_vjp"),
+    ("hoisted R", "supports_hoisted_rotations"),
+    ("multi-tenant", "supports_multi_tenant"),
+    ("merge", "supports_merge"),
+    ("quantized base", "supports_quantized_base"),
+)
+
+
+def capability_matrix() -> Dict[str, Dict[str, bool]]:
+    """{kind: {capability: bool}} for every registered method with params."""
+    return {kind: {col: bool(getattr(m, attr))
+                   for col, attr in _MATRIX_COLUMNS}
+            for kind, m in sorted(_REGISTRY.items()) if m.has_params}
+
+
+def capability_matrix_md() -> str:
+    """The method x capability matrix as a markdown table.  README embeds
+    this verbatim and ``tests/test_methods_registry.py`` asserts the embed
+    matches, so the docs are generated, not hand-maintained."""
+    cols = [c for c, _ in _MATRIX_COLUMNS]
+    lines = ["| method | " + " | ".join(cols) + " |",
+             "|" + "---|" * (len(cols) + 1)]
+    for kind, caps in capability_matrix().items():
+        cells = ["✓" if caps[c] else "·" for c in cols]
+        lines.append(f"| `{kind}` | " + " | ".join(cells) + " |")
+    return "\n".join(lines)

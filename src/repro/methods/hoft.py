@@ -1,0 +1,81 @@
+"""HOFT (Householder-product orthogonal finetuning) as a registered
+``AdapterMethod`` -- the method added to PROVE the registry API: one
+module, zero framework edits.
+
+Math in ``repro.core.hoft``; fused forward kernel in
+``repro.kernels.hoft_linear_fused`` (its VJP is the jnp reference, so
+``supports_fused_vjp`` stays False).  No hoisted-rotation or multi-tenant
+capability yet: routing a HOFT model into the serving pool raises
+``NotImplementedError`` at pool-construction time via the base hooks.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import hoft as hoft_lib
+from repro.methods.base import AdapterMethod, register
+
+# built lazily: repro.models imports repro.core.adapter (which imports this
+# package), so models.spec cannot be a module-level import here
+_HOFT_VDEF_CLS = None
+
+
+def _hoft_vdef_cls():
+    global _HOFT_VDEF_CLS
+    if _HOFT_VDEF_CLS is None:
+        from repro.models.spec import CompositeDef, ParamDef
+
+        class _HoftVDef(CompositeDef):
+            """CompositeDef for the (m, d_in) reflection stack: the paired
+            duplicate-rows identity init is not expressible as an
+            elementwise ``ParamDef`` initializer (rows 2i and 2i+1 must
+            START equal, then train apart)."""
+
+            def __init__(self, d_in: int, m: int):
+                self.d_in, self.m = d_in, m
+                self._def = ParamDef((m, d_in), ("hoft_refl", None),
+                                     "normal")
+
+            def expand_defs(self):
+                return self._def
+
+            def init(self, key, param_dtype):
+                return hoft_lib.hoft_init(key, self.d_in, self.m)["hh_v"]
+
+        _HOFT_VDEF_CLS = _HoftVDef
+    return _HOFT_VDEF_CLS
+
+
+@register
+class HOFTMethod(AdapterMethod):
+    kind = "hoft"
+    stochastic_init = True        # paired random vectors (identity product)
+    supports_fused_forward = True   # hoft_linear_fused (dense W)
+    supports_fused_vjp = False      # backward = jnp reference VJP
+    supports_hoisted_rotations = False
+    supports_multi_tenant = False
+
+    def init(self, key, name, d_in, d_out, acfg, dtype=jnp.float32):
+        return hoft_lib.hoft_init(key, d_in,
+                                  hoft_lib.num_reflections(acfg),
+                                  dtype=dtype)
+
+    def param_count(self, name, d_in, d_out, acfg) -> int:
+        return hoft_lib.hoft_param_count(d_in,
+                                         hoft_lib.num_reflections(acfg))
+
+    def param_defs(self, name, d_in, d_out, acfg, model_axis_size=1):
+        return {"hh_v": _hoft_vdef_cls()(d_in,
+                                         hoft_lib.num_reflections(acfg))}
+
+    def apply(self, x, w, adapter, acfg):
+        return hoft_lib.hoft_linear(x, adapter, acfg, w)
+
+    def fusion_mode(self, acfg, qcfg, qstate_keys=()) -> str:
+        # the HOFT kernel reflects over a DENSE weight tile: quantized
+        # bases are dequantized first (no in-kernel dequant variant yet),
+        # so the mode does not depend on the quant state.
+        return "hoft_fused" if acfg.fuse_linear else "unfused"
+
+    def merge(self, w, adapter, acfg):
+        return hoft_lib.hoft_merge(w, adapter, acfg)

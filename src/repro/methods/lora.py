@@ -1,0 +1,35 @@
+"""LoRA / QLoRA baseline as a registered ``AdapterMethod`` (parallel
+low-rank update; the paper's main comparison)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import lora as lora_lib
+from repro.methods.base import AdapterMethod, register
+
+
+@register
+class LoRAMethod(AdapterMethod):
+    kind = "lora"
+    stochastic_init = True   # A ~ N(0, 1/r); B = 0
+
+    def init(self, key, name, d_in, d_out, acfg, dtype=jnp.float32):
+        return lora_lib.lora_init(key, d_in, d_out, acfg.rank, dtype=dtype)
+
+    def param_count(self, name, d_in, d_out, acfg) -> int:
+        return lora_lib.lora_param_count(d_in, d_out, acfg.rank)
+
+    def param_defs(self, name, d_in, d_out, acfg, model_axis_size=1):
+        from repro.models.spec import ParamDef
+        return {
+            "lora_a": ParamDef((d_in, acfg.rank), (None, "lora_rank"),
+                               "normal", scale=1.0),
+            "lora_b": ParamDef((acfg.rank, d_out), ("lora_rank", None),
+                               "zeros"),
+        }
+
+    def apply(self, x, w, adapter, acfg):
+        return x @ w + lora_lib.lora_delta(x, adapter, acfg)
+
+    def merge(self, w, adapter, acfg):
+        return lora_lib.lora_merge(w, adapter, acfg)

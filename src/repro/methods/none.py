@@ -1,0 +1,29 @@
+"""The no-adapter passthrough, registered like any other method so the
+framework never special-cases ``kind == "none"``."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.methods.base import AdapterMethod, register
+
+
+@register
+class NoneMethod(AdapterMethod):
+    kind = "none"
+    has_params = False
+    supports_merge = True
+
+    def init(self, key, name, d_in, d_out, acfg, dtype=jnp.float32):
+        return None
+
+    def param_count(self, name, d_in, d_out, acfg) -> int:
+        return 0
+
+    def param_defs(self, name, d_in, d_out, acfg, model_axis_size=1):
+        return None
+
+    def apply(self, x, w, adapter, acfg):
+        return x @ w
+
+    def merge(self, w, adapter, acfg):
+        return w

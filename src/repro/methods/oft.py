@@ -1,0 +1,166 @@
+"""OFTv2 (the paper's input-centric method, + QOFT over NF4 bases) and the
+OFTv1 weight-centric baseline, as registered ``AdapterMethod``s.
+
+Every OFT-specific branch the framework used to take on ``acfg.kind``
+lives here now: the fused-kernel dispatch (``fusion_mode`` / ``forward``),
+the PR-2 once-per-step rotation hoisting capability, and the PR-3
+multi-tenant stack/route hooks.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax.numpy as jnp
+
+from repro.core import oft as oft_lib
+from repro.core import skew
+from repro.methods.base import AdapterMethod, register
+
+
+class _OFTBase(AdapterMethod):
+    """Shared packed-skew parameterization (v1/v2 differ in dataflow, not
+    params -- same math, tests assert it)."""
+
+    stochastic_init = False   # zero-init => R = I => starts at pretrained
+
+    def init(self, key, name, d_in, d_out, acfg, dtype=jnp.float32):
+        # key accepted (uniform signature) and unused: deterministic init
+        return oft_lib.oft_init(d_in, acfg.block_size, dtype=dtype)
+
+    def param_count(self, name, d_in, d_out, acfg) -> int:
+        return oft_lib.oft_param_count(d_in, acfg.block_size)
+
+    def param_defs(self, name, d_in, d_out, acfg, model_axis_size=1):
+        from repro.models.spec import ParamDef
+        b = acfg.block_size
+        r = d_in // b
+        # OFT block sharding: when the host linear's input features are
+        # model-sharded (down/o projections under TP) and the shard boundary
+        # is block-aligned, the block dim gets the 'oft_block_sharded'
+        # logical axis so the transform stays collective-free (DESIGN.md §3).
+        sharded_input = name in ("o", "down", "fc2", "out_proj")
+        aligned = (model_axis_size > 1 and r % model_axis_size == 0
+                   and (d_in // model_axis_size) % b == 0)
+        block_axis = "oft_block_sharded" if (sharded_input and aligned) \
+            else "oft_block"
+        return {"q_packed": ParamDef((r, skew.pack_dim(b)),
+                                     (block_axis, None), "zeros")}
+
+    def merge(self, w, adapter, acfg):
+        return oft_lib.oft_merge(w, adapter, acfg)
+
+
+@register
+class OFTv2Method(_OFTBase):
+    """Input-centric OFT: y = (x @ R_bd) @ W -- activations only, the
+    paper's entire scalability claim.  QOFT = the same over an NF4 base,
+    dequantized inside the fused kernel."""
+
+    kind = "oftv2"
+    supports_fused_forward = True
+    supports_fused_vjp = True          # oftv2_linear_bwd / qoft_linear_bwd
+    supports_hoisted_rotations = True  # core/rotations once-per-step build
+    supports_multi_tenant = True       # r_stack pooling + per-row routing
+
+    def apply(self, x, w, adapter, acfg):
+        return oft_lib.oftv2_linear(x, adapter, acfg, w)
+
+    def fusion_mode(self, acfg, qcfg, qstate_keys=()) -> str:
+        """'qoft_fused' (NF4 dequant + rotate + matmul, one kernel),
+        'oftv2_fused' (rotate + matmul, one kernel), or 'unfused'.
+
+        The NF4 predicate is explicit: the QOFT kernel is picked only when
+        the quant state actually CARRIES packed codes.  A genuinely empty
+        (or raw-``w``) qstate under an nf4 QuantConfig -- unquantizable
+        layers, callers probing a config -- takes the dense fused path."""
+        if not acfg.fuse_linear:
+            return "unfused"
+        if qcfg.kind == "nf4" and "nf4_codes" in qstate_keys:
+            return "qoft_fused"
+        return "oftv2_fused"
+
+    def forward(self, x, qstate, adapter, acfg, qcfg):
+        if self.fusion_mode(acfg, qcfg, qstate.keys()) == "qoft_fused":
+            from repro.kernels import ops as kops
+            from repro.quant import nf4
+            # hoisted per-step rotations when present (core/rotations.py),
+            # built on the spot otherwise
+            r_blocks = oft_lib.get_r(adapter, acfg)
+            return kops.qoft_linear_fused(x, r_blocks, qstate["nf4_codes"],
+                                          nf4.absmax_fp32(qstate, qcfg),
+                                          qcfg.block_size)
+        # dense path: apply() routes through oftv2_linear, which itself
+        # takes the fused rotate+matmul kernel under acfg.fuse_linear
+        from repro.quant.common import dequantize_linear
+        return self.apply(x, dequantize_linear(qstate, qcfg, x.dtype),
+                          adapter, acfg)
+
+    # ---------------------------------------------- multi-tenant serving --
+    def stack_for_serving(self, trees: List[dict], acfg) -> dict:
+        """N adapter trees -> pooled tree with per-layer ``r_stack``
+        (A, blocks, b, b): stack every ``q_packed`` leaf along a new
+        adapter axis, build EVERY rotation of every adapter in ONE
+        Cayley--Neumann call (the PR-2 hoisted path), and rename the
+        result to the explicit multi-adapter marker."""
+        from repro.core import rotations as rot_lib
+        stacked = _stack_oft_leaves(trees)
+        augmented = rot_lib.with_rotations(stacked, acfg)
+        return _to_r_stack(augmented)
+
+    def route_multi(self, x, qstate, adapter, adapter_id, acfg, qcfg):
+        from repro.kernels import ops as kops
+        mode = self.fusion_mode(acfg, qcfg, qstate.keys())
+        if mode == "unfused":
+            raise ValueError(
+                "multi-adapter serving requires the fused OFTv2 path "
+                "(AdapterConfig(kind='oftv2', fuse_linear=True))")
+        if mode == "qoft_fused":
+            from repro.quant import nf4
+            return kops.qoft_linear_multi(x, adapter["r_stack"], adapter_id,
+                                          qstate["nf4_codes"],
+                                          nf4.absmax_fp32(qstate, qcfg),
+                                          qcfg.block_size)
+        from repro.quant.common import dequantize_linear
+        w = dequantize_linear(qstate, qcfg, x.dtype)
+        return kops.oftv2_linear_multi(x, adapter["r_stack"], adapter_id, w)
+
+
+@register
+class OFTv1Method(_OFTBase):
+    """Weight-centric baseline: materializes (and backprops through) the
+    transformed d_in x d_out weight every call -- the paper's bottleneck.
+    No fused kernels, no hoisting (it rebuilds R inside the weight
+    transform), no multi-tenant serving."""
+
+    kind = "oftv1"
+
+    def apply(self, x, w, adapter, acfg):
+        return x @ oft_lib.oftv1_transform_weight(w, adapter, acfg)
+
+
+# ---------------------------------------------------------------------------
+# pooled-tree helpers (moved verbatim from serving/pool.py)
+# ---------------------------------------------------------------------------
+def _stack_oft_leaves(trees: List[dict]):
+    """Mirror the adapter-tree structure; stack each ``q_packed`` leaf along
+    a new adapter axis inserted just before the block dim -- AFTER any scan
+    lead dims, so the layer scan still slices layers on axis 0 and each
+    scanned layer sees (A, blocks, pack_dim)."""
+    head = trees[0]
+    if isinstance(head, dict):
+        if "q_packed" in head:
+            qs = [t["q_packed"] for t in trees]
+            return {"q_packed": jnp.stack(qs, axis=qs[0].ndim - 2)}
+        return {k: _stack_oft_leaves([t[k] for t in trees]) for k in head}
+    raise ValueError(f"unexpected adapter-tree node: {type(head)!r}")
+
+
+def _to_r_stack(tree):
+    """Rename the hoisted ``r_blocks`` entries (built by with_rotations over
+    the stacked tree) to ``r_stack`` -- the explicit multi-adapter marker
+    ``adapted_linear`` dispatches on, so a pooled tree can never be
+    mistaken for single-adapter hoisted params."""
+    if isinstance(tree, dict):
+        return {("r_stack" if k == "r_blocks" else k): _to_r_stack(v)
+                for k, v in tree.items()}
+    return tree

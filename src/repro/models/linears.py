@@ -14,9 +14,9 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import methods
 from repro.config.base import AdapterConfig, QuantConfig
 from repro.core import adapter as ad
-from repro.core import skew
 from repro.models.spec import CompositeDef, ParamDef
 from repro.quant.common import quantize_linear
 
@@ -104,12 +104,12 @@ def _is_quantized(defs) -> bool:
 
 def linear_fusion_mode(name: str, d_in: int, d_out: int, acfg: AdapterConfig,
                        qcfg: QuantConfig, scale: float = 1.0) -> str:
-    """Which fused forward THIS linear takes under the given configs:
-    'qoft_fused' | 'oftv2_fused' | 'unfused'.  Resolves the same
-    quantizability rules linear_defs applies (a layer too small/misaligned
-    to quantize falls back to the dense fused path), so benchmarks and the
-    launch dry-run can report the per-layer fusion plan without building
-    params."""
+    """Which fused forward THIS linear takes under the given configs, per
+    the adapter method's registry entry: 'qoft_fused' | 'oftv2_fused' |
+    'hoft_fused' | 'unfused'.  Resolves the same quantizability rules
+    linear_defs applies (a layer too small/misaligned to quantize falls
+    back to the dense fused path), so benchmarks and the launch dry-run can
+    report the per-layer fusion plan without building params."""
     if not ad.wants_adapter(name, acfg):
         return "unfused"
     defs = linear_defs(d_in, d_out, in_axis=None, out_axis=None, qcfg=qcfg,
@@ -126,8 +126,10 @@ def multi_fusion_mode(name: str, d_in: int, d_out: int, acfg: AdapterConfig,
     'oftv2_multi' | 'unfused'.  Mirrors linear_fusion_mode so serving
     benchmarks can emit a check_fusion-gated plan for the multi kernels."""
     mode = linear_fusion_mode(name, d_in, d_out, acfg, qcfg, scale=scale)
-    return {"qoft_fused": "qoft_multi", "oftv2_fused": "oftv2_multi",
-            "unfused": "unfused"}[mode]
+    # methods without multi-adapter kernels (the registry's
+    # supports_multi_tenant=False set) report 'unfused' in the serving plan
+    return {"qoft_fused": "qoft_multi",
+            "oftv2_fused": "oftv2_multi"}.get(mode, "unfused")
 
 
 def model_multi_fusion_plan(cfg, acfg: AdapterConfig,
@@ -169,29 +171,11 @@ def model_fusion_plan(cfg, acfg: AdapterConfig, qcfg: QuantConfig) -> dict:
 
 def adapter_defs(name: str, d_in: int, d_out: int, acfg: AdapterConfig,
                  model_axis_size: int = 1):
-    """Trainable adapter defs for one linear (None if not targeted).
-
-    OFT block sharding: when the host linear's input features are
-    model-sharded (down/o projections under TP) and the shard boundary is
-    block-aligned, the block dim gets the 'oft_block_sharded' logical axis
-    so the transform stays collective-free (DESIGN.md §3)."""
+    """Trainable adapter defs for one linear (None if not targeted), from
+    the method's ``param_defs`` registry hook -- the per-method layout
+    (OFT packed skew + TP block sharding, LoRA A/B, HOFT reflection
+    vectors) lives with the method, not here."""
     if not ad.wants_adapter(name, acfg):
         return None
-    if acfg.is_oft:
-        b = acfg.block_size
-        r = d_in // b
-        sharded_input = name in ("o", "down", "fc2", "out_proj")
-        aligned = (model_axis_size > 1 and r % model_axis_size == 0
-                   and (d_in // model_axis_size) % b == 0)
-        block_axis = "oft_block_sharded" if (sharded_input and aligned) \
-            else "oft_block"
-        return {"q_packed": ParamDef((r, skew.pack_dim(b)),
-                                     (block_axis, None), "zeros")}
-    if acfg.kind == "lora":
-        return {
-            "lora_a": ParamDef((d_in, acfg.rank), (None, "lora_rank"),
-                               "normal", scale=1.0),
-            "lora_b": ParamDef((acfg.rank, d_out), ("lora_rank", None),
-                               "zeros"),
-        }
-    raise ValueError(acfg.kind)
+    return methods.get(acfg.kind).param_defs(name, d_in, d_out, acfg,
+                                             model_axis_size)

@@ -7,10 +7,11 @@ memory ONE merged weight copy would take.  The pool
 
   1. validates every registered adapter tree against the model's adapter
      layout (same treedef -- they were all finetuned from the same base),
-  2. stacks the packed-skew leaves along a new adapter axis, and
-  3. builds every Cayley--Neumann rotation of every adapter of every layer
-     in ONE ``build_r`` call via the PR-2 hoisted path
-     (``core.rotations.with_rotations`` over the stacked tree),
+  2. hands the trees to the method's ``stack_for_serving`` registry hook
+     (``repro.methods``; OFTv2 stacks the packed-skew leaves along a new
+     adapter axis and builds every Cayley--Neumann rotation of every
+     adapter of every layer in ONE ``build_r`` call via the PR-2 hoisted
+     path -- methods without the capability raise at pool construction),
 
 yielding per-layer ``r_stack: (A, blocks, b, b)`` arrays that ride the
 adapter tree through the layer scan exactly like the train-time hoisted
@@ -22,20 +23,31 @@ from __future__ import annotations
 from typing import Dict, List, Optional
 
 import jax
-import jax.numpy as jnp
 
+from repro import methods
 from repro.config.base import AdapterConfig
-from repro.core import rotations as rot_lib
 from repro.models.model import Model
 
 
 def _check_multi_servable(model: Model) -> None:
+    """Config-shape problems raise ValueError; a method that genuinely
+    lacks the multi-tenant capability (no ``stack_for_serving`` /
+    ``route_multi`` hooks -- e.g. HOFT, LoRA) raises NotImplementedError
+    at pool-construction time, loudly, instead of falling through to a
+    wrong single-adapter path later."""
     cfg, acfg = model.cfg, model.run.adapter
-    if acfg.kind != "oftv2" or not acfg.fuse_linear:
+    method = methods.get(acfg.kind)
+    if not acfg.fuse_linear or not method.has_params:
         raise ValueError(
             "multi-tenant serving routes rotations inside the fused Pallas "
             "kernels: AdapterConfig(kind='oftv2', fuse_linear=True) required "
             f"(got kind={acfg.kind!r}, fuse_linear={acfg.fuse_linear})")
+    if not method.supports_multi_tenant:
+        raise NotImplementedError(
+            f"adapter method {acfg.kind!r} does not support multi-tenant "
+            f"serving (no stack_for_serving/route_multi capability; "
+            f"methods that do: "
+            f"{list(methods.supporting('supports_multi_tenant'))})")
     if cfg.is_encoder:
         raise ValueError("encoder-only architectures have no decode step")
     if cfg.num_experts > 0 or any(cfg.is_ssm_layer(i)
@@ -43,34 +55,6 @@ def _check_multi_servable(model: Model) -> None:
         raise NotImplementedError(
             "multi-adapter routing is wired through the dense "
             "attention+MLP path; MoE/SSM layers are not served yet")
-
-
-def _stack_oft_leaves(trees: List[dict]):
-    """Mirror the adapter-tree structure; stack each ``q_packed`` leaf along
-    a new adapter axis inserted just before the block dim -- AFTER any scan
-    lead dims, so the layer scan still slices layers on axis 0 and each
-    scanned layer sees (A, blocks, pack_dim)."""
-    head = trees[0]
-    if isinstance(head, dict):
-        if "q_packed" in head:
-            qs = [t["q_packed"] for t in trees]
-            return {"q_packed": jnp.stack(qs, axis=qs[0].ndim - 2)}
-        if any(k in head for k in ("lora_a", "lora_b")):
-            raise ValueError("adapter pool is OFT-only: LoRA adapters have "
-                             "no rotation stack to route")
-        return {k: _stack_oft_leaves([t[k] for t in trees]) for k in head}
-    raise ValueError(f"unexpected adapter-tree node: {type(head)!r}")
-
-
-def _to_r_stack(tree):
-    """Rename the hoisted ``r_blocks`` entries (built by with_rotations over
-    the stacked tree) to ``r_stack`` -- the explicit multi-adapter marker
-    ``adapted_linear`` dispatches on, so a pooled tree can never be
-    mistaken for single-adapter hoisted params."""
-    if isinstance(tree, dict):
-        return {("r_stack" if k == "r_blocks" else k): _to_r_stack(v)
-                for k, v in tree.items()}
-    return tree
 
 
 class AdapterPool:
@@ -88,6 +72,7 @@ class AdapterPool:
         _check_multi_servable(model)
         self.model = model
         self.acfg: AdapterConfig = model.run.adapter
+        self._method = methods.get(self.acfg.kind)
         self._names: List[str] = []
         self._trees: List[dict] = []
         self._pooled: Optional[dict] = None
@@ -126,15 +111,15 @@ class AdapterPool:
 
     # --------------------------------------------------------------- build --
     def build(self) -> dict:
-        """Stack all registered adapters and build EVERY rotation block of
-        every adapter in one Cayley--Neumann call (the PR-2 hoisted path).
+        """Stack all registered adapters via the method's
+        ``stack_for_serving`` hook (OFT: every rotation block of every
+        adapter built in one Cayley--Neumann call, the PR-2 hoisted path).
         Returns (and caches) the pooled adapter tree with per-layer
         ``r_stack`` leaves."""
         if not self._trees:
             raise ValueError("no adapters registered")
-        stacked = _stack_oft_leaves(self._trees)
-        augmented = rot_lib.with_rotations(stacked, self.acfg)
-        self._pooled = _to_r_stack(augmented)
+        self._pooled = self._method.stack_for_serving(self._trees,
+                                                      self.acfg)
         return self._pooled
 
     @property

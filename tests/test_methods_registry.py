@@ -1,0 +1,366 @@
+"""Registry conformance suite (ISSUE-4): every method registered in
+``repro.methods`` inherits its test matrix for FREE -- init/param_count
+round-trips, identity-at-init, merge-vs-apply agreement, fused==unfused==
+oracle when a fused forward is declared, uniform PRNG-key threading, and
+loud failures for missing capabilities.  A future method (BOFT, Givens,
+principal-subspace, ...) gets all of this by calling ``register``.
+
+Also pins the satellites: the empty-qstate ``fusion_mode`` fix, the
+README capability-matrix sync, the no-string-dispatch grep gate, and the
+HOFT end-to-end path (trainable via AdapterConfig(kind="hoft"), fused
+kernel vs jnp oracle on odd/misaligned shapes, explicit
+NotImplementedError where capabilities are absent).
+"""
+from __future__ import annotations
+
+import dataclasses
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import methods
+from repro.config.base import (AdapterConfig, ModelConfig, QuantConfig,
+                               RunConfig, TrainConfig)
+from repro.core import adapter as ad
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+
+D_IN, D_OUT = 48, 33          # misaligned d_out on purpose
+PARAM_KINDS = [k for k in methods.available() if methods.get(k).has_params]
+
+
+def _acfg(kind: str, fused: bool = False) -> AdapterConfig:
+    return AdapterConfig(kind=kind, block_size=16, neumann_terms=4, rank=4,
+                         reflections=6, alpha=8.0, fuse_linear=fused)
+
+
+def _perturb(tree, key, scale=0.05):
+    """Generic 'trained-ish' params: every leaf nudged off init."""
+    flat, treedef = jax.tree_util.tree_flatten(tree)
+    out = [leaf + scale * jax.random.normal(jax.random.fold_in(key, i),
+                                            leaf.shape, leaf.dtype)
+           for i, leaf in enumerate(flat)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _leaf_count(tree) -> int:
+    return sum(int(np.prod(leaf.shape))
+               for leaf in jax.tree_util.tree_leaves(tree))
+
+
+# ---------------------------------------------------------------- registry --
+def test_unknown_kind_fails_loudly():
+    with pytest.raises(ValueError, match="unknown adapter kind"):
+        methods.get("boft")
+    with pytest.raises(ValueError, match="registered"):
+        methods.get("boft")  # message lists what IS registered
+    # the built-ins are present; a newly registered method must NOT break
+    # this (the suite picks it up from the registry automatically)
+    assert set(PARAM_KINDS) >= {"hoft", "lora", "oftv1", "oftv2"}
+
+
+def test_reregistering_a_kind_is_an_error():
+    class Dupe(methods.AdapterMethod):
+        kind = "oftv2"
+
+    with pytest.raises(ValueError, match="already registered"):
+        methods.register(Dupe)
+
+
+# ----------------------------------------------- per-method conformance ----
+@pytest.mark.parametrize("kind", PARAM_KINDS)
+def test_init_param_count_roundtrip(kind):
+    """init / param_count / param_defs agree on the same layout."""
+    from repro.models import spec as spec_mod
+    from repro.models.linears import adapter_defs
+    acfg = _acfg(kind)
+    params = ad.adapter_init(jax.random.PRNGKey(0), "q", D_IN, D_OUT, acfg)
+    want = ad.adapter_param_count("q", D_IN, D_OUT, acfg)
+    assert _leaf_count(params) == want
+    defs = adapter_defs("q", D_IN, D_OUT, acfg)
+    assert spec_mod.count_tree(defs) == want
+    built = spec_mod.init_tree(jax.random.PRNGKey(1), defs)
+    assert (jax.tree_util.tree_structure(built)
+            == jax.tree_util.tree_structure(params))
+    # untargeted linears get nothing
+    assert ad.adapter_init(jax.random.PRNGKey(0), "zz", D_IN, D_OUT,
+                           acfg) is None
+    assert ad.adapter_param_count("zz", D_IN, D_OUT, acfg) == 0
+
+
+@pytest.mark.parametrize("kind", PARAM_KINDS)
+def test_key_threading_uniform(kind):
+    """One init signature for every method: stochastic inits consume the
+    key (different seed => different params), deterministic ones ignore it
+    -- and the registry flag tells the truth either way."""
+    acfg = _acfg(kind)
+    a = ad.adapter_init(jax.random.PRNGKey(0), "q", D_IN, D_OUT, acfg)
+    b = ad.adapter_init(jax.random.PRNGKey(1), "q", D_IN, D_OUT, acfg)
+    differs = any(not np.array_equal(np.asarray(x), np.asarray(y))
+                  for x, y in zip(jax.tree_util.tree_leaves(a),
+                                  jax.tree_util.tree_leaves(b)))
+    assert differs == methods.get(kind).stochastic_init
+
+
+@pytest.mark.parametrize("kind", PARAM_KINDS)
+def test_identity_at_init(kind):
+    """Finetuning starts at the pretrained model for EVERY method (OFT:
+    R=I from zero skew; LoRA: B=0; HOFT: paired reflections cancel)."""
+    acfg = _acfg(kind)
+    key = jax.random.PRNGKey(3)
+    x = jax.random.normal(key, (2, 9, D_IN))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (D_IN, D_OUT)) / 8.0
+    adp = ad.adapter_init(key, "q", D_IN, D_OUT, acfg)
+    y = ad.adapted_linear(x, {"w": w}, adp, acfg, QuantConfig())
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w), rtol=1e-5,
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("kind", PARAM_KINDS)
+def test_merge_matches_apply(kind):
+    """Deployment contract: x @ merge(w) == runtime adapted forward, for
+    'trained' (perturbed) params."""
+    method = methods.get(kind)
+    if not method.supports_merge:
+        pytest.skip(f"{kind} declares no merge")
+    acfg = _acfg(kind)
+    key = jax.random.PRNGKey(4)
+    adp = _perturb(ad.adapter_init(key, "q", D_IN, D_OUT, acfg),
+                   jax.random.fold_in(key, 1))
+    x = jax.random.normal(key, (5, D_IN))
+    w = jax.random.normal(jax.random.fold_in(key, 2), (D_IN, D_OUT)) / 8.0
+    y_runtime = ad.adapted_linear(x, {"w": w}, adp, acfg, QuantConfig())
+    y_merged = x @ ad.merge_adapter(w, adp, acfg)
+    np.testing.assert_allclose(np.asarray(y_runtime), np.asarray(y_merged),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("kind", PARAM_KINDS)
+def test_requant_report_hook(kind):
+    """The §4 requantization report works through the registry hook for
+    every method with merge."""
+    from repro.core import merging
+    if not methods.get(kind).supports_merge:
+        pytest.skip(f"{kind} declares no merge")
+    acfg = _acfg(kind)
+    key = jax.random.PRNGKey(5)
+    adp = _perturb(ad.adapter_init(key, "q", 64, 64, acfg),
+                   jax.random.fold_in(key, 1), scale=0.02)
+    w = 0.02 * jax.random.normal(key, (64, 64))
+    rep = merging.requantization_report(
+        w, adp, acfg, QuantConfig(kind="nf4", block_size=32,
+                                  double_quant=False))
+    assert set(rep) >= {"column_norm_drift", "dynamic_range_shift",
+                        "requant_rel_fro"}
+    assert all(np.isfinite(v) for v in rep.values())
+
+
+@pytest.mark.kernels
+@pytest.mark.parametrize("kind", PARAM_KINDS)
+def test_fused_matches_unfused_when_declared(kind):
+    """supports_fused_forward methods: fuse_linear=True must be numerically
+    the unfused path (odd token counts / misaligned dims included) AND
+    differentiable; methods without the capability must report 'unfused'."""
+    method = methods.get(kind)
+    acfg_u, acfg_f = _acfg(kind, False), _acfg(kind, True)
+    qcfg = QuantConfig()
+    if not method.supports_fused_forward:
+        assert ad.fusion_mode(acfg_f, qcfg, ("w",)) == "unfused"
+        return
+    assert ad.fusion_mode(acfg_f, qcfg, ("w",)) != "unfused"
+    key = jax.random.PRNGKey(6)
+    adp = _perturb(ad.adapter_init(key, "q", D_IN, D_OUT, acfg_u),
+                   jax.random.fold_in(key, 1))
+    for lead in [(1,), (7,), (2, 9)]:
+        x = jax.random.normal(jax.random.fold_in(key, len(lead)),
+                              lead + (D_IN,))
+        w = jax.random.normal(jax.random.fold_in(key, 9),
+                              (D_IN, D_OUT)) / 8.0
+        y_u = ad.adapted_linear(x, {"w": w}, adp, acfg_u, qcfg)
+        y_f = ad.adapted_linear(x, {"w": w}, adp, acfg_f, qcfg)
+        np.testing.assert_allclose(np.asarray(y_f), np.asarray(y_u),
+                                   rtol=1e-4, atol=1e-4)
+
+    def loss(a, fused):
+        cfg = acfg_f if fused else acfg_u
+        return jnp.sum(ad.adapted_linear(x, {"w": w}, a, cfg, qcfg) ** 2)
+
+    g_u = jax.grad(loss)(adp, False)
+    g_f = jax.grad(loss)(adp, True)
+    for gu, gf in zip(jax.tree_util.tree_leaves(g_u),
+                      jax.tree_util.tree_leaves(g_f)):
+        np.testing.assert_allclose(np.asarray(gf), np.asarray(gu),
+                                   rtol=1e-3, atol=1e-3)
+
+
+# ------------------------------------------------ satellite: fusion_mode ----
+def test_fusion_mode_empty_qstate_is_not_qoft():
+    """The NF4 predicate is explicit: a genuinely empty (or raw-``w``)
+    qstate under an nf4 QuantConfig must NOT route to the qoft_fused
+    kernel (it has no codes to read) -- both sides tested."""
+    acfg = AdapterConfig(kind="oftv2", block_size=16, fuse_linear=True)
+    nf4_q = QuantConfig(kind="nf4", block_size=32)
+    assert ad.fusion_mode(acfg, nf4_q, ()) == "oftv2_fused"
+    assert ad.fusion_mode(acfg, nf4_q) == "oftv2_fused"
+    assert ad.fusion_mode(acfg, nf4_q, ("w",)) == "oftv2_fused"
+    assert ad.fusion_mode(acfg, nf4_q,
+                          ("nf4_codes", "absmax")) == "qoft_fused"
+    assert ad.fusion_mode(acfg, QuantConfig(), ("w",)) == "oftv2_fused"
+    assert ad.fusion_mode(dataclasses.replace(acfg, fuse_linear=False),
+                          nf4_q, ("nf4_codes",)) == "unfused"
+
+
+# --------------------------------------------------- loud capability gaps --
+def test_missing_capabilities_raise_explicitly():
+    for kind in PARAM_KINDS:
+        method = methods.get(kind)
+        if method.supports_multi_tenant:
+            continue
+        with pytest.raises(NotImplementedError, match="multi-tenant"):
+            method.stack_for_serving([{}], _acfg(kind))
+        with pytest.raises(NotImplementedError, match="multi-tenant"):
+            method.route_multi(jnp.zeros((2, 4)), {}, {}, jnp.zeros((2,),
+                               jnp.int32), _acfg(kind), QuantConfig())
+
+
+def test_pool_rejects_non_multi_tenant_method_at_registration():
+    """ISSUE-4 acceptance: HOFT (fused config, but no stacking capability)
+    fails at pool-construction time with an explicit NotImplementedError,
+    not an implicit fall-through."""
+    from repro.models import build
+    from repro.serving import AdapterPool
+    cfg = ModelConfig(name="t", num_layers=1, d_model=32, num_heads=2,
+                      num_kv_heads=1, d_ff=64, vocab_size=64,
+                      rope_theta=1e4)
+    run = RunConfig(model=cfg,
+                    adapter=AdapterConfig(kind="hoft", reflections=4,
+                                          fuse_linear=True))
+    with pytest.raises(NotImplementedError, match="multi-tenant"):
+        AdapterPool(build(run))
+
+
+# -------------------------------------------------- HOFT kernel vs oracle --
+@pytest.mark.kernels
+@pytest.mark.parametrize("t,k,n,m", [
+    (8, 64, 32, 4),
+    (7, 48, 33, 6),      # odd tokens, misaligned n
+    (1, 32, 16, 2),      # decode-step shape
+    (30, 96, 40, 8),     # token count off the tile grid
+    (5, 48, 33, 2),
+])
+def test_hoft_fused_kernel_matches_oracle(t, k, n, m):
+    key = jax.random.PRNGKey(t * 1000 + k + n + m)
+    kx, kv, kw = jax.random.split(key, 3)
+    x = jax.random.normal(kx, (t, k))
+    v = jax.random.normal(kv, (m, k))
+    w = jax.random.normal(kw, (k, n)) / np.sqrt(k)
+    got = kops.hoft_linear_fused(x, v, w)
+    want = kref.hoft_linear_ref(x, v, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_hoft_reflections_must_be_even():
+    acfg = AdapterConfig(kind="hoft", reflections=5)
+    with pytest.raises(ValueError, match="even"):
+        ad.adapter_init(jax.random.PRNGKey(0), "q", 32, 32, acfg)
+    with pytest.raises(ValueError, match="even"):
+        ad.adapter_param_count("q", 32, 32, acfg)
+
+
+def test_hoft_orthogonality_preserves_column_norms():
+    """Householder chains are exactly orthogonal -- the paper's merge/
+    requantization argument extends to HOFT with no Neumann truncation."""
+    from repro.core import merging
+    key = jax.random.PRNGKey(11)
+    acfg = AdapterConfig(kind="hoft", reflections=6)
+    adp = _perturb(ad.adapter_init(key, "q", 64, 48, acfg),
+                   jax.random.fold_in(key, 1), scale=0.3)
+    w = jax.random.normal(key, (64, 48)) / 8.0
+    merged = ad.merge_adapter(w, adp, acfg)
+    assert float(merging.column_norm_drift(w, merged)) < 1e-5
+
+
+# --------------------------------------------------- HOFT end-to-end model --
+def _hoft_run(fused: bool = False, kind: str = "hoft") -> RunConfig:
+    cfg = ModelConfig(name="hoft-e2e", num_layers=1, d_model=64, num_heads=2,
+                      num_kv_heads=1, d_ff=128, vocab_size=64,
+                      rope_theta=1e4)
+    return RunConfig(model=cfg,
+                     adapter=AdapterConfig(kind=kind, reflections=4,
+                                           fuse_linear=fused),
+                     train=TrainConfig(global_batch=2, seq_len=8, steps=3,
+                                       learning_rate=5e-3, warmup_steps=1,
+                                       ckpt_every=0, log_every=0))
+
+
+def test_hoft_model_trains_end_to_end():
+    """AdapterConfig(kind='hoft') builds, starts at the pretrained model
+    (logits == no-adapter model), takes nonzero adapter grads, and steps."""
+    from repro.models import build
+    from repro.train import state as state_lib
+    from repro.train.step import make_train_step
+
+    run = _hoft_run()
+    model = build(run)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    # paired identity init survives the model init path
+    leaves = jax.tree_util.tree_leaves(params["adapter"])
+    assert leaves and all(l.shape[-2] == 4 for l in leaves)
+    batch = {"tokens": jax.random.randint(key, (2, 8), 0, 64)}
+    logits, _, _ = model.forward(params, batch)
+    model_none = build(_hoft_run(kind="none"))
+    params_none = model_none.init(key)
+    logits_none, _, _ = model_none.forward(
+        {"base": params_none["base"], "adapter": {}}, batch)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(logits_none),
+                               rtol=1e-4, atol=1e-4)
+
+    state = state_lib.create(params)
+    step = jax.jit(make_train_step(model, run))
+    s1, m1 = step(state, batch)
+    s2, m2 = step(s1, batch)
+    assert np.isfinite(float(m1["loss"])) and np.isfinite(float(m2["loss"]))
+    moved = any(not np.array_equal(np.asarray(a), np.asarray(b))
+                for a, b in zip(jax.tree_util.tree_leaves(state.adapter),
+                                jax.tree_util.tree_leaves(s2.adapter)))
+    assert moved, "adapter params did not move under training"
+
+
+@pytest.mark.kernels
+def test_hoft_model_fused_matches_unfused():
+    from repro.models import build
+    key = jax.random.PRNGKey(1)
+    model_u = build(_hoft_run(fused=False))
+    model_f = build(_hoft_run(fused=True))
+    params = model_u.init(key)
+    params = {"base": params["base"],
+              "adapter": _perturb(params["adapter"],
+                                  jax.random.fold_in(key, 1), scale=0.05)}
+    batch = {"tokens": jax.random.randint(key, (2, 8), 0, 64)}
+    lu, _, _ = model_u.forward(params, batch)
+    lf, _, _ = model_f.forward(params, batch)
+    np.testing.assert_allclose(np.asarray(lf), np.asarray(lu), rtol=2e-4,
+                               atol=2e-4)
+
+
+# ------------------------------------------------------- docs + CI gates ----
+def test_capability_matrix_is_embedded_in_readme():
+    """The README matrix is GENERATED (repro.methods.capability_matrix_md);
+    this keeps the embed from rotting."""
+    readme = Path(__file__).resolve().parents[1] / "README.md"
+    assert methods.capability_matrix_md() in readme.read_text(), (
+        "README capability matrix is stale -- regenerate with "
+        "`PYTHONPATH=src python -m repro.methods` and paste")
+
+
+def test_no_adapter_string_dispatch_outside_methods():
+    """Tier-1 twin of the benchmarks/check_dispatch.py CI gate."""
+    import sys
+    sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+    from benchmarks.check_dispatch import check
+    assert check() == 0
