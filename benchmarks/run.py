@@ -48,7 +48,8 @@ def main() -> None:
         common.SMOKE = True
     from benchmarks import (fig1_oft_vs_oftv2, fig4_memory, kernels_bench,
                             methods_bench, requant_error, roofline_report,
-                            serving_bench, table12_speed, table345_quality)
+                            serving_bench, sharded_bench, table12_speed,
+                            table345_quality)
     from benchmarks.common import emit
 
     modules = [
@@ -60,6 +61,7 @@ def main() -> None:
         ("kernels", kernels_bench),
         ("adapter methods (registry sweep)", methods_bench),
         ("multi-tenant serving", serving_bench),
+        ("mesh-sharded fused path", sharded_bench),
         ("roofline artifacts", roofline_report),
     ]
     print("name,us_per_call,derived")

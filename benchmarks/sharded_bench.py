@@ -1,0 +1,94 @@
+"""Mesh-native fused path: smoke timing + the sharded fusion-plan gate.
+
+``sharded/train_step/{dense,nf4}``: one hoisted train step through the
+shard_map'd fused kernels on a (1, 1) mesh -- CI hosts have one device;
+real meshes only change ``mesh_shape``.  This exercises the exact code
+path of the 8-device tests (MeshContext -> shard_forward -> shard_map ->
+Pallas) so bit-rot in the sharded path is caught by the smoke run in
+minutes.
+
+``fusion_plan/sharded/train_step/*``: the mode the SHARDED dispatcher
+picks per linear on a production-shaped 2x4 (data, model) mesh, computed
+without devices (models/linears.model_sharded_fusion_plan).  The existing
+benchmarks/check_fusion.py CI gate fails the build if any row reports
+'unfused' -- a fused -> unfused fallback under the mesh would replicate W
+and silently forfeit the scaling story.
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import time_jit
+
+
+def _step_rows():
+    from repro.config.base import (AdapterConfig, ModelConfig,
+                                   ParallelConfig, QuantConfig, RunConfig,
+                                   TrainConfig)
+    from repro.distributed.sharding import (fit_tree, make_constrain,
+                                            make_shard_context)
+    from repro.models import build
+    from repro.models.spec import rules_variant
+    from repro.train import state as state_lib
+    from repro.train.step import make_train_step
+
+    rows = []
+    for qname, qkind in [("dense", "none"), ("nf4", "nf4")]:
+        pcfg = ParallelConfig(mesh_shape=(1, 1),
+                              mesh_axes=("data", "model"))
+        cfg = ModelConfig(name="sh-bench", num_layers=2, d_model=128,
+                          num_heads=4, num_kv_heads=2, d_ff=256,
+                          vocab_size=256, rope_theta=1e4)
+        run_cfg = RunConfig(
+            model=cfg,
+            adapter=AdapterConfig(kind="oftv2", block_size=32,
+                                  neumann_terms=5, fuse_linear=True),
+            quant=QuantConfig(kind=qkind, block_size=32),
+            parallel=pcfg,
+            train=TrainConfig(global_batch=4, seq_len=64, warmup_steps=0))
+        mesh = jax.make_mesh(pcfg.mesh_shape, pcfg.mesh_axes)
+        rules = rules_variant(pcfg, "fused_tp")
+        ctx = make_shard_context(mesh, rules, run_cfg)
+        model = build(run_cfg, constrain=make_constrain(rules, mesh),
+                      shard=ctx)
+        params = fit_tree(model.init(jax.random.PRNGKey(0)),
+                          model.param_specs(rules), mesh)
+        st = state_lib.create(params)
+        batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1),
+                                              (4, 64), 0, 256)}
+        with mesh:
+            step = jax.jit(make_train_step(model, run_cfg))
+            us = time_jit(lambda s, b: step(s, b)[1]["loss"], st, batch)
+        rows.append((f"sharded/train_step/{qname}", us,
+                     "mesh=1x1;d=128;b=32;shard_map_fused"))
+    return rows
+
+
+def plan_rows():
+    """Sharded per-linear plan on a 2x4 mesh shape; check_fusion gates
+    every fusion_plan/* row, so 'got=unfused' here fails CI."""
+    from repro.config.base import (AdapterConfig, ModelConfig,
+                                   ParallelConfig, QuantConfig)
+    from repro.models.linears import model_sharded_fusion_plan
+    pcfg = ParallelConfig(mesh_shape=(2, 4), mesh_axes=("data", "model"))
+    cfg = ModelConfig(name="plan", num_layers=2, d_model=1024, num_heads=8,
+                      num_kv_heads=8, d_ff=4096)
+    acfg = AdapterConfig(kind="oftv2", block_size=32, fuse_linear=True)
+    rows = []
+    for qname, qcfg, expect in [
+            ("nf4", QuantConfig(kind="nf4", block_size=64), "qoft_fused"),
+            ("dense", QuantConfig(kind="none"), "oftv2_fused")]:
+        plan = model_sharded_fusion_plan(cfg, acfg, qcfg, pcfg)
+        for name, got in sorted(plan.items()):
+            rows.append((f"fusion_plan/sharded/train_step/{qname}/{name}/"
+                         f"expect_{expect}", 0.0, f"got={got}"))
+    return rows
+
+
+def run():
+    return _step_rows() + plan_rows()
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

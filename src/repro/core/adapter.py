@@ -62,7 +62,8 @@ def fusion_mode(acfg: AdapterConfig, qcfg: QuantConfig,
 
 def adapted_linear(x: jnp.ndarray, qstate: dict, adapter: Optional[dict],
                    acfg: AdapterConfig, qcfg: QuantConfig,
-                   constrain=None, adapter_id=None) -> jnp.ndarray:
+                   constrain=None, adapter_id=None,
+                   shard=None) -> jnp.ndarray:
     """y = adapted forward of one frozen linear, via the method registry.
 
     OFTv2/QOFT path never touches the quant state before the matmul --
@@ -82,9 +83,21 @@ def adapted_linear(x: jnp.ndarray, qstate: dict, adapter: Optional[dict],
     ZeRO-3 all-gather is forced onto the uint8 quant state (replicate it,
     dequantize locally) instead of the dequantized bf16 weight, cutting
     weight-gather wire ~4x (EXPERIMENTS.md §Perf/llama3 it-4).
+
+    shard (optional, on-mesh only): this linear's ``LinearShard`` from the
+    build-time ``MeshContext`` (repro.distributed.sharding) -- methods with
+    the ``shards`` capability run their fused kernels per-shard inside
+    shard_map (W / quant state / rotation blocks consumed locally, no
+    resharding); make_shard_context already rejected methods without it.
     """
-    if (constrain is not None and qcfg.gather_codes and qcfg.enabled
-            and "w" not in qstate):
+    # gather-codes is a ZeRO-3 optimization (replicate the uint8 state,
+    # dequantize locally).  Under the mesh-native fused path (shard) the
+    # quant state is TP-sharded and consumed locally by the per-shard
+    # kernels -- replicating it would reintroduce the very all-gather the
+    # sharded path exists to avoid (tests assert the compiled HLO is free
+    # of W/codes-shaped gathers).
+    if (constrain is not None and shard is None and qcfg.gather_codes
+            and qcfg.enabled and "w" not in qstate):
         qstate = {k: constrain(v) for k, v in qstate.items()}
     method = methods.get(acfg.kind)
     if adapter is not None and "r_stack" in adapter:
@@ -93,9 +106,12 @@ def adapted_linear(x: jnp.ndarray, qstate: dict, adapter: Optional[dict],
                 "pooled multi-adapter params (r_stack) need a per-row "
                 "adapter_id -- pass batch['adapter_id'] (repro.serving)")
         return method.route_multi(x, qstate, adapter, adapter_id, acfg,
-                                  qcfg)
+                                  qcfg, shard=shard)
     if adapter is None or not method.has_params:
         return x @ dequantize_linear(qstate, qcfg, x.dtype)
+    if shard is not None and method.supports_sharding:
+        return method.shard_forward(x, qstate, adapter, acfg, qcfg, shard,
+                                    adapter_id=adapter_id)
     return method.forward(x, qstate, adapter, acfg, qcfg)
 
 

@@ -56,14 +56,22 @@ def _oft_leaves(tree, path=()) -> Iterator[Tuple[tuple, dict]]:
                 yield from _oft_leaves(tree[k], path + (k,))
 
 
-def with_rotations(adapter_tree, acfg: AdapterConfig):
+def with_rotations(adapter_tree, acfg: AdapterConfig, shard=None):
     """Adapter tree -> same tree with an ``r_blocks`` (lead + (r, b, b))
     entry alongside every ``q_packed`` leaf, built by ONE ``build_r`` call
-    over all leaves concatenated.  Differentiable w.r.t. the tree."""
+    over all leaves concatenated.  Differentiable w.r.t. the tree.
+
+    ``shard`` (optional ``MeshContext``): each hoisted rotation leaf is
+    constrained to its TP layout through the method's ``shard_rotations``
+    hook -- block-sharded over `model` for model-sharded-input linears --
+    so the per-shard fused kernels pick the blocks up locally.  The
+    constraint is AD-transparent: the dR pullback through the concatenated
+    Cayley--Neumann build stays exact."""
     leaves = list(_oft_leaves(adapter_tree))
     if not leaves:
         return adapter_tree
     b = acfg.block_size
+    method = methods.get(acfg.kind) if shard is not None else None
     packed = [leaf["q_packed"] for _, leaf in leaves]
     flat = [q.reshape(-1, q.shape[-1]) for q in packed]
     sizes = [f.shape[0] for f in flat]
@@ -74,6 +82,8 @@ def with_rotations(adapter_tree, acfg: AdapterConfig):
     for (path, _), q, nrows in zip(leaves, packed, sizes):
         r = r_all[start:start + nrows].reshape(q.shape[:-1] + (b, b))
         start += nrows
+        if method is not None:
+            r = method.shard_rotations(path[-1], r, shard)
         node = out
         for k in path:
             node = node[k]

@@ -1,9 +1,24 @@
-"""Sharding glue: logical-axis rules -> NamedShardings, and the `constrain`
+"""Sharding glue: logical-axis rules -> NamedShardings, the `constrain`
 hook threaded through the model (no-op off-mesh, divisibility-checked
-with_sharding_constraint on-mesh)."""
+with_sharding_constraint on-mesh), and the mesh-native fused-kernel layer:
+``MeshContext`` / ``LinearShard`` describe, per adapted linear, which mesh
+axis shards the weight's in-features (``k``), out-features (``n``) and the
+token dim (``data``), so adapter methods with the ``shards`` capability
+(repro.methods) can run their fused Pallas kernels per-shard inside
+``shard_map`` -- dense W, NF4 codes/absmax and the rotation blocks stay
+TP-sharded over ``model`` with no resharding; the only collectives in the
+fused path are the psums a K-sharded linear needs (forward y, backward
+dx/dR).
+
+``make_shard_context`` is the config-time gate: methods without the
+capability raise NotImplementedError there (not deep inside a trace), and
+OFT block counts that do not divide the model axis raise ValueError before
+any device buffer exists.
+"""
 from __future__ import annotations
 
 import math
+from dataclasses import dataclass
 from typing import Any, Optional, Sequence
 
 import jax
@@ -24,6 +39,17 @@ def axis_size(mesh: Mesh, names) -> int:
     return n
 
 
+def axis_fits(mesh: Mesh, ax, dim: int) -> bool:
+    """THE drop-don't-fail divisibility policy, shared by make_constrain,
+    fit_spec and the per-method shard_map spec resolution: an axis (or
+    axis tuple) may shard a dim only when it divides it and the dim is at
+    least one row per shard."""
+    if ax is None:
+        return False
+    size = axis_size(mesh, ax)
+    return dim % size == 0 and dim >= size
+
+
 def make_constrain(rules: AxisRules, mesh: Optional[Mesh]):
     """constrain(x, *logical_axes) -> x with a sharding constraint.
 
@@ -37,11 +63,8 @@ def make_constrain(rules: AxisRules, mesh: Optional[Mesh]):
         for i in range(x.ndim):
             lg = axes[i] if i < len(axes) else None
             mesh_ax = rules.lookup(lg)
-            if mesh_ax is not None and x.shape[i] % axis_size(mesh, mesh_ax) == 0 \
-                    and x.shape[i] >= axis_size(mesh, mesh_ax):
-                spec.append(mesh_ax)
-            else:
-                spec.append(None)
+            spec.append(mesh_ax if axis_fits(mesh, mesh_ax, x.shape[i])
+                        else None)
         return jax.lax.with_sharding_constraint(
             x, NamedSharding(mesh, PartitionSpec(*spec)))
 
@@ -59,3 +82,125 @@ def batch_spec(pcfg, ndim: int) -> PartitionSpec:
     axes = pcfg.data_axes
     lead = axes if len(axes) > 1 else (axes[0] if axes else None)
     return PartitionSpec(lead, *([None] * (ndim - 1)))
+
+
+# ---------------------------------------------------------------------------
+# Mesh-native fused execution (ISSUE-5)
+# ---------------------------------------------------------------------------
+def fit_spec(spec: PartitionSpec, shape, mesh: Mesh) -> PartitionSpec:
+    """Drop spec entries whose mesh axes do not divide the dim (decode
+    batch-1 prefill, padded-free head counts) -- ``axis_fits``, applied to
+    explicit placement."""
+    out = []
+    for i, dim in enumerate(shape):
+        ax = spec[i] if i < len(spec) else None
+        out.append(ax if axis_fits(mesh, ax, dim) else None)
+    return PartitionSpec(*out)
+
+
+def fit_placed(x, spec: Optional[PartitionSpec], mesh: Mesh):
+    """device_put with the divisibility-fitted sharding."""
+    spec = spec if spec is not None else PartitionSpec()
+    return jax.device_put(
+        x, NamedSharding(mesh, fit_spec(spec, x.shape, mesh)))
+
+
+def fit_tree(tree: Any, spec_tree: Any, mesh: Mesh):
+    """device_put a whole tree against a PartitionSpec tree, fitting each
+    leaf's spec to its shape."""
+    return jax.tree_util.tree_map(
+        lambda a, s: fit_placed(a, s, mesh), tree, spec_tree,
+        is_leaf=lambda s: isinstance(s, PartitionSpec) or s is None)
+
+
+@dataclass(frozen=True)
+class LinearShard:
+    """Static sharding of ONE adapted linear ``y = f(x) @ W`` under a mesh:
+    ``data`` shards the token/batch dim of activations, ``k`` shards W's
+    in-feature dim (and therefore the rotation-block dim -- block-diagonal
+    rotations shard exactly like the weight), ``n`` shards W's out-feature
+    dim.  A single ``model`` axis can shard k or n, never both."""
+    mesh: Mesh
+    data: Any            # mesh axis name / tuple / None
+    k: Optional[Any]
+    n: Optional[Any]
+
+
+@dataclass(frozen=True)
+class MeshContext:
+    """Mesh + axis rules threaded build -> Statics -> adapted_linear so the
+    ``shards``-capable adapter methods can wrap their fused kernels in
+    per-shard ``shard_map`` calls."""
+    mesh: Mesh
+    rules: AxisRules
+
+    @property
+    def data_axes(self):
+        """Mesh axes sharding the batch/token dim (from the 'batch' rule)."""
+        return self.rules.lookup("batch")
+
+    def linear(self, name: str) -> LinearShard:
+        from repro.models.linears import LINEAR_AXES
+        in_axis, out_axis = LINEAR_AXES.get(name, (None, None))
+        return LinearShard(self.mesh, self.data_axes,
+                           self.rules.lookup(in_axis),
+                           self.rules.lookup(out_axis))
+
+    def axis_shards(self, names) -> int:
+        return axis_size(self.mesh, names)
+
+
+def make_shard_context(mesh: Optional[Mesh], rules: AxisRules,
+                       run) -> Optional[MeshContext]:
+    """Config-time construction + validation of the mesh-native fused path.
+
+    * ``None`` mesh -> ``None`` (single-device: everything stays as-is).
+    * A method without the ``shards`` capability raises NotImplementedError
+      here, naming the methods that do have it -- exactly like the
+      multi-tenant pool gate, a registration-time error instead of a wrong
+      silent fall-through.
+    * Per-linear divisibility (OFT blocks across the model axis, NF4
+      code/absmax tiles per shard, TP out-features) is checked through the
+      method's ``check_sharding`` hook, so the sharding rules of a method
+      live with the method.
+    """
+    if mesh is None:
+        return None
+    from repro import methods
+    from repro.core import adapter as ad
+    from repro.models.linears import LINEAR_AXES, layer_linear_shapes
+
+    acfg, qcfg, cfg = run.adapter, run.quant, run.model
+    method = methods.get(acfg.kind)
+    ctx = MeshContext(mesh=mesh, rules=rules)
+    if not method.has_params:
+        return ctx
+    if not method.supports_sharding:
+        raise NotImplementedError(
+            f"adapter method {acfg.kind!r} does not support mesh-sharded "
+            f"execution (no 'shards' capability; methods that do: "
+            f"{list(methods.supporting('supports_sharding'))})")
+    if acfg.fuse_linear:
+        # The shard context is threaded through the dense attention+MLP
+        # apply paths only; an adapted SSM (in_proj/out_proj) or MoE
+        # linear would run its fused kernel with shard=None -- an opaque
+        # pallas_call under GSPMD, the silent replication fallback this
+        # gate exists to prevent.  Same restriction (and failure mode) as
+        # the multi-tenant serving pool.
+        ssm = any(cfg.is_ssm_layer(i) for i in range(cfg.num_layers))
+        moe_adapted = cfg.num_experts > 0 and (
+            "router" in acfg.targets or acfg.adapt_experts)
+        if ssm or moe_adapted:
+            raise NotImplementedError(
+                "the mesh-native fused path is wired through the dense "
+                "attention+MLP linears; SSM and MoE-adapted layers do not "
+                "thread the shard context yet -- run them off-mesh or "
+                "with fuse_linear=False")
+    for name, (d_in, d_out) in layer_linear_shapes(cfg).items():
+        if not ad.wants_adapter(name, acfg):
+            continue
+        sh = ctx.linear(name)
+        method.check_sharding(name, d_in, d_out, acfg, qcfg,
+                              k_shards=axis_size(mesh, sh.k),
+                              n_shards=axis_size(mesh, sh.n))
+    return ctx

@@ -12,6 +12,14 @@ decodes a mixed-adapter batch -- every request row routed to its adapter's
 rotation blocks inside the fused Pallas kernels:
 
     PYTHONPATH=src python -m repro.launch.serve --smoke --adapters 3
+
+Mesh-native serving (--mesh data,model --mesh-shape 2,4): the slot batch
+shards over `data`, W / NF4 state / r_stack shard over `model`, and the
+multi-routing kernels run per-shard in shard_map:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    PYTHONPATH=src python -m repro.launch.serve --smoke --adapters 3 \
+        --mesh data,model --mesh-shape 2,4
 """
 from __future__ import annotations
 
@@ -22,7 +30,8 @@ import jax
 import numpy as np
 
 from repro import methods
-from repro.config.base import AdapterConfig, QuantConfig, RunConfig
+from repro.config.base import (AdapterConfig, ParallelConfig, QuantConfig,
+                               RunConfig)
 from repro.configs import REGISTRY, get_config, get_smoke
 from repro.models import build
 from repro.models.linears import model_multi_fusion_plan
@@ -103,6 +112,12 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--mesh", default="none",
+                    help="'none' | comma axis list (e.g. 'data,model') "
+                         "with --mesh-shape: mesh-native serving")
+    ap.add_argument("--mesh-shape", default="",
+                    help="comma ints matching --mesh, e.g. '2,4'")
+    ap.add_argument("--block-size", type=int, default=32)
     args = ap.parse_args(argv)
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
@@ -114,11 +129,43 @@ def main(argv=None):
             f"--adapters N>1 needs an adapter method with multi-tenant "
             f"serving support; {args.adapter!r} has none (methods that "
             f"do: {list(methods.supporting('supports_multi_tenant'))})")
+
+    mesh, rules = None, None
+    pcfg = ParallelConfig()
+    if args.mesh != "none":
+        from repro.models.spec import rules_variant
+        axes = tuple(a for a in args.mesh.split(",") if a)
+        shape = tuple(int(s) for s in args.mesh_shape.split(",") if s)
+        if len(shape) != len(axes):
+            raise SystemExit("--mesh axes and --mesh-shape must match "
+                             f"(got {axes} vs {shape})")
+        mesh = jax.make_mesh(shape, axes)
+        pcfg = ParallelConfig(mesh_shape=shape, mesh_axes=axes)
+        cfg = cfg.with_mesh_padding(pcfg.model_axis_size)
+        rules = rules_variant(pcfg, "fused_tp")
+
     run = RunConfig(model=cfg,
-                    adapter=AdapterConfig(kind=args.adapter, block_size=32,
+                    adapter=AdapterConfig(kind=args.adapter,
+                                          block_size=args.block_size,
                                           neumann_terms=5,
-                                          fuse_linear=args.fuse or multi),
-                    quant=QuantConfig(kind=args.quant))
+                                          fuse_linear=args.fuse or multi
+                                          or mesh is not None),
+                    quant=QuantConfig(kind=args.quant),
+                    parallel=pcfg)
+    if mesh is not None:
+        from repro.distributed.sharding import (fit_tree, make_constrain,
+                                                make_shard_context)
+        shard_ctx = make_shard_context(mesh, rules, run)
+        model = build(run, constrain=make_constrain(rules, mesh),
+                      shard=shard_ctx)
+        params = fit_tree(model.init(jax.random.PRNGKey(0)),
+                          model.param_specs(rules), mesh)
+        with mesh:
+            if multi:
+                _serve_multi(model, params, args, cfg)
+            else:
+                _serve_single(model, params, args, cfg)
+        return
     model = build(run)
     params = model.init(jax.random.PRNGKey(0))
     if multi:

@@ -8,6 +8,16 @@ process-aware.
 
     PYTHONPATH=src python -m repro.launch.train --arch granite-8b \
         --smoke --adapter oftv2 --steps 50
+
+--mesh also accepts an explicit axis list with --mesh-shape, e.g.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    PYTHONPATH=src python -m repro.launch.train --smoke --fuse \
+        --mesh data,model --mesh-shape 2,4
+
+which runs the mesh-native fused path (fused_tp rules): batch data-sharded,
+W / NF4 state / rotation blocks TP-sharded over `model`, fused kernels
+per-shard in shard_map (README "Sharded execution").
 """
 from __future__ import annotations
 
@@ -23,11 +33,11 @@ from repro.configs import REGISTRY, get_config, get_smoke
 from repro.data.loader import ShardedLoader
 from repro.data.synthetic import SyntheticSpec
 from repro.distributed.fault import PreemptionGuard
-from repro.distributed.sharding import (batch_spec, make_constrain,
-                                        named_sharding_tree)
+from repro.distributed.sharding import (fit_tree, make_constrain,
+                                        make_shard_context)
 from repro.launch.mesh import production_parallel_config
 from repro.models import build
-from repro.models.spec import default_rules
+from repro.models.spec import rules_variant
 from repro.train.loop import run_training
 
 
@@ -52,13 +62,22 @@ def main(argv=None):
                     choices=["none", "int8"])
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
     ap.add_argument("--mesh", default="none",
-                    choices=["none", "single", "multi"],
-                    help="production mesh (requires matching device count)")
+                    help="'none' | 'single' | 'multi' (production v5e "
+                         "meshes) | explicit comma axis list, e.g. "
+                         "'data,model' with --mesh-shape")
+    ap.add_argument("--mesh-shape", default="",
+                    help="comma ints matching an explicit --mesh axis "
+                         "list, e.g. '2,4'")
+    ap.add_argument("--fuse", action="store_true",
+                    help="fused Pallas linears; on any mesh this selects "
+                         "the mesh-native per-shard kernel path (fused_tp "
+                         "rules + shard_map)")
     args = ap.parse_args(argv)
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     mesh = None
-    if args.mesh != "none":
+    preset = "baseline"
+    if args.mesh in ("single", "multi"):
         from repro.launch.mesh import make_production_mesh
         mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
         pcfg = production_parallel_config(
@@ -66,15 +85,39 @@ def main(argv=None):
             microbatches=args.microbatches,
             gradient_compression=args.grad_compression)
         cfg = cfg.with_mesh_padding(pcfg.model_axis_size)
+    elif args.mesh != "none":
+        from repro.config.base import ParallelConfig
+        axes = tuple(a for a in args.mesh.split(",") if a)
+        if not args.mesh_shape:
+            raise SystemExit("an explicit --mesh axis list needs "
+                             "--mesh-shape (e.g. --mesh data,model "
+                             "--mesh-shape 2,4)")
+        shape = tuple(int(s) for s in args.mesh_shape.split(",") if s)
+        if len(shape) != len(axes):
+            raise SystemExit(f"--mesh-shape {shape} does not match --mesh "
+                             f"axes {axes}")
+        mesh = jax.make_mesh(shape, axes)
+        pcfg = ParallelConfig(mesh_shape=shape, mesh_axes=axes,
+                              microbatches=args.microbatches,
+                              gradient_compression=args.grad_compression)
+        cfg = cfg.with_mesh_padding(pcfg.model_axis_size)
     else:
         from repro.config.base import ParallelConfig
         pcfg = ParallelConfig(microbatches=args.microbatches,
                               gradient_compression=args.grad_compression)
+    if mesh is not None and args.fuse:
+        # fused kernels on ANY mesh (explicit or production single/multi)
+        # go through the mesh-native path: pallas_call is opaque to GSPMD,
+        # so without the fused_tp layout + shard context the partitioner
+        # would have to replicate W per call -- the exact regression the
+        # fusion_plan/sharded/* gate exists to prevent
+        preset = "fused_tp"
 
     run = RunConfig(
         model=cfg,
         adapter=AdapterConfig(kind=args.adapter, block_size=args.block_size,
-                              neumann_terms=args.neumann, rank=args.rank),
+                              neumann_terms=args.neumann, rank=args.rank,
+                              fuse_linear=args.fuse),
         quant=QuantConfig(kind=args.quant),
         parallel=pcfg,
         train=TrainConfig(global_batch=args.batch, seq_len=args.seq,
@@ -83,8 +126,13 @@ def main(argv=None):
                           ckpt_every=max(args.steps // 4, 1), ckpt_keep=2,
                           log_every=10, ckpt_dir=args.ckpt_dir))
 
-    rules = default_rules(pcfg)
-    model = build(run, constrain=make_constrain(rules, mesh))
+    rules = rules_variant(pcfg, preset)
+    # mesh-native fused path: validated at config time -- methods without
+    # the `shards` capability / non-dividing OFT blocks fail HERE, loudly
+    shard_ctx = make_shard_context(mesh, rules, run) \
+        if (mesh is not None and preset == "fused_tp") else None
+    model = build(run, constrain=make_constrain(rules, mesh),
+                  shard=shard_ctx)
     counts = model.param_counts()
     print(f"[train] {cfg.name}: base {counts['base'] / 1e6:.1f}M frozen, "
           f"adapter {counts['adapter'] / 1e6:.3f}M trainable")
@@ -100,8 +148,17 @@ def main(argv=None):
                            process_count=jax.process_count(), seed=0)
     guard = PreemptionGuard(install=True)
     if mesh is not None:
+        specs = model.param_specs(rules)
+
+        def place_state(state):
+            placed = fit_tree({"base": state.base, "adapter": state.adapter},
+                              specs, mesh)
+            return state._replace(base=placed["base"],
+                                  adapter=placed["adapter"])
+
         with mesh:
-            out = run_training(model, run, loader, guard=guard)
+            out = run_training(model, run, loader, guard=guard,
+                               place_state=place_state)
     else:
         out = run_training(model, run, loader, guard=guard)
     print(f"[train] final loss "

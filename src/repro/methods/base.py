@@ -47,6 +47,7 @@ class AdapterMethod:
     supports_multi_tenant: bool = False    # serving pool stack + routing
     supports_merge: bool = True
     supports_quantized_base: bool = True   # works over an NF4/AWQ/int8 base
+    supports_sharding: bool = False        # mesh-native shard_map fused path
 
     # ------------------------------------------------------ required hooks --
     def init(self, key, name: str, d_in: int, d_out: int, acfg,
@@ -121,10 +122,42 @@ class AdapterMethod:
         raise NotImplementedError(self._msg("multi-tenant stacking"))
 
     def route_multi(self, x: jnp.ndarray, qstate: dict, adapter: dict,
-                    adapter_id, acfg, qcfg) -> jnp.ndarray:
+                    adapter_id, acfg, qcfg, shard=None) -> jnp.ndarray:
         """Adapted forward over a pooled tree, each batch row routed to its
-        adapter by ``adapter_id``."""
+        adapter by ``adapter_id``.  ``shard`` (a ``LinearShard``, on-mesh
+        only) asks for the per-shard ``shard_map`` kernel path."""
         raise NotImplementedError(self._msg("multi-tenant routing"))
+
+    # ---- mesh-sharded execution (ISSUE-5): the `shards` capability ------
+    def check_sharding(self, name: str, d_in: int, d_out: int, acfg, qcfg,
+                       k_shards: int, n_shards: int) -> None:
+        """Validate ONE adapted linear's shapes against the mesh factors
+        that would shard its in-features (``k_shards``) and out-features
+        (``n_shards``).  Called at config time by
+        ``repro.distributed.sharding.make_shard_context`` -- raise
+        ValueError for shapes that cannot shard (e.g. OFT blocks not
+        dividing the model axis)."""
+        raise NotImplementedError(self._msg("mesh-sharded execution"))
+
+    def shard_forward(self, x: jnp.ndarray, qstate: dict, adapter: dict,
+                      acfg, qcfg, shard, adapter_id=None) -> jnp.ndarray:
+        """Adapted forward under a mesh (``shard``: a ``LinearShard``): the
+        method runs its fused kernels per-shard inside ``shard_map`` so
+        dense W / quant state / rotation blocks are consumed locally with
+        no resharding."""
+        raise NotImplementedError(self._msg("mesh-sharded execution"))
+
+    def shard_rotations(self, name: str, r: jnp.ndarray, shard):
+        """Sharding constraint for a hoisted rotation tensor built for the
+        linear ``name`` (``shard``: a ``MeshContext``).  Default identity:
+        methods without block rotations have nothing to constrain."""
+        return r
+
+    def shard_specs(self, tree: dict, shard):
+        """PartitionSpec tree for an adapter tree (single, hoisted, or
+        pooled ``r_stack``) under ``shard`` (a ``MeshContext``) -- used to
+        place serving pools and checkpointed adapters on the mesh."""
+        raise NotImplementedError(self._msg("mesh-sharded execution"))
 
     # --------------------------------------------------------------- misc --
     def _msg(self, capability: str) -> str:
@@ -184,6 +217,7 @@ _MATRIX_COLUMNS: Tuple[Tuple[str, str], ...] = (
     ("fused bwd", "supports_fused_vjp"),
     ("hoisted R", "supports_hoisted_rotations"),
     ("multi-tenant", "supports_multi_tenant"),
+    ("shards", "supports_sharding"),
     ("merge", "supports_merge"),
     ("quantized base", "supports_quantized_base"),
 )

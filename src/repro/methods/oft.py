@@ -3,18 +3,39 @@ OFTv1 weight-centric baseline, as registered ``AdapterMethod``s.
 
 Every OFT-specific branch the framework used to take on ``acfg.kind``
 lives here now: the fused-kernel dispatch (``fusion_mode`` / ``forward``),
-the PR-2 once-per-step rotation hoisting capability, and the PR-3
-multi-tenant stack/route hooks.
+the PR-2 once-per-step rotation hoisting capability, the PR-3 multi-tenant
+stack/route hooks, and the ISSUE-5 ``shards`` capability -- the mesh-native
+execution of the fused kernels.
+
+Why block-diagonal OFTv2 shards for free: each b x b rotation block touches
+only its own b input features, so the rotation tensor partitions along the
+block dim EXACTLY like the weight partitions along its in-feature dim (and
+the NF4 codes/absmax along theirs, quant/nf4.py layout).  A K-sharded
+linear (o/down under TP) therefore runs ``(x_local @ R_local) @ W_local``
+per shard with ONE psum on the partial output -- no resharding of W, codes,
+or rotations, ever.  Butterfly-structured OFT (BOFT) mixes features across
+blocks and would need an all-to-all here; that is precisely what this
+method never does (jaxpr-asserted in tests/test_sharded_fused.py).
 """
 from __future__ import annotations
 
-from typing import List
+import functools
+from typing import List, Optional
 
+import jax
 import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import oft as oft_lib
 from repro.core import skew
 from repro.methods.base import AdapterMethod, register
+
+# Linears whose INPUT features are model-sharded under the baseline/fused_tp
+# TP rules -- their OFT blocks carry the 'oft_block_sharded' logical axis
+# (param_defs below) and their rotations shard over `model` with the weight.
+SHARDED_INPUT_LINEARS = ("o", "down", "fc2", "out_proj")
 
 
 class _OFTBase(AdapterMethod):
@@ -38,7 +59,7 @@ class _OFTBase(AdapterMethod):
         # model-sharded (down/o projections under TP) and the shard boundary
         # is block-aligned, the block dim gets the 'oft_block_sharded'
         # logical axis so the transform stays collective-free (DESIGN.md §3).
-        sharded_input = name in ("o", "down", "fc2", "out_proj")
+        sharded_input = name in SHARDED_INPUT_LINEARS
         aligned = (model_axis_size > 1 and r % model_axis_size == 0
                    and (d_in // model_axis_size) % b == 0)
         block_axis = "oft_block_sharded" if (sharded_input and aligned) \
@@ -61,6 +82,7 @@ class OFTv2Method(_OFTBase):
     supports_fused_vjp = True          # oftv2_linear_bwd / qoft_linear_bwd
     supports_hoisted_rotations = True  # core/rotations once-per-step build
     supports_multi_tenant = True       # r_stack pooling + per-row routing
+    supports_sharding = True           # mesh-native shard_map fused path
 
     def apply(self, x, w, adapter, acfg):
         return oft_lib.oftv2_linear(x, adapter, acfg, w)
@@ -107,13 +129,17 @@ class OFTv2Method(_OFTBase):
         augmented = rot_lib.with_rotations(stacked, acfg)
         return _to_r_stack(augmented)
 
-    def route_multi(self, x, qstate, adapter, adapter_id, acfg, qcfg):
+    def route_multi(self, x, qstate, adapter, adapter_id, acfg, qcfg,
+                    shard=None):
         from repro.kernels import ops as kops
         mode = self.fusion_mode(acfg, qcfg, qstate.keys())
         if mode == "unfused":
             raise ValueError(
                 "multi-adapter serving requires the fused OFTv2 path "
                 "(AdapterConfig(kind='oftv2', fuse_linear=True))")
+        if shard is not None:
+            return self._route_multi_sharded(x, qstate, adapter, adapter_id,
+                                             acfg, qcfg, shard, mode)
         if mode == "qoft_fused":
             from repro.quant import nf4
             return kops.qoft_linear_multi(x, adapter["r_stack"], adapter_id,
@@ -123,6 +149,136 @@ class OFTv2Method(_OFTBase):
         from repro.quant.common import dequantize_linear
         w = dequantize_linear(qstate, qcfg, x.dtype)
         return kops.oftv2_linear_multi(x, adapter["r_stack"], adapter_id, w)
+
+    def _route_multi_sharded(self, x, qstate, adapter, adapter_id, acfg,
+                             qcfg, shard, mode):
+        """Per-shard multi-adapter routing: the slot batch is data-sharded,
+        ``r_stack`` is model-sharded on its block dim, and every shard holds
+        ALL adapters' blocks for ITS block range -- per-row routing needs no
+        collective; only a K-sharded linear psums its partial output."""
+        r_stack = adapter["r_stack"]
+        if isinstance(adapter_id, int):
+            # all-rows-same-adapter fast path -> single-adapter sharded path
+            return self.shard_forward(x, qstate,
+                                      {"r_blocks": r_stack[adapter_id]},
+                                      acfg, qcfg, shard)
+        mesh = shard.mesh
+        data = _fit_axis(mesh, shard.data, x.shape[0])
+        ids = jnp.asarray(adapter_id, jnp.int32)
+        if mode == "qoft_fused":
+            from repro.quant import nf4
+            codes = qstate["nf4_codes"]
+            k_dim, n_dim = codes.shape[0] * 2, codes.shape[1]
+            align = int(np.lcm(np.lcm(2, qcfg.block_size), acfg.block_size))
+            k_ax = _fit_k(mesh, shard.k, k_dim, align)
+            n_ax = _fit_axis(mesh, shard.n, n_dim)
+            fn = _sharded_qoft_multi(mesh, data, k_ax, n_ax, x.ndim,
+                                     qcfg.block_size)
+            return fn(x, ids, r_stack, codes, nf4.absmax_fp32(qstate, qcfg))
+        from repro.quant.common import dequantize_linear
+        w = dequantize_linear(qstate, qcfg, x.dtype)
+        k_ax = _fit_k(mesh, shard.k, w.shape[0], acfg.block_size)
+        n_ax = _fit_axis(mesh, shard.n, w.shape[1])
+        fn = _sharded_oftv2_multi(mesh, data, k_ax, n_ax, x.ndim)
+        return fn(x, ids, r_stack, w)
+
+    # ------------------------------------------- mesh-sharded execution --
+    def check_sharding(self, name, d_in, d_out, acfg, qcfg, k_shards,
+                       n_shards):
+        b = acfg.block_size
+        blocks = d_in // b
+        if k_shards > 1:
+            if blocks % k_shards:
+                raise ValueError(
+                    f"{name}: OFTv2 blocks must divide evenly across the "
+                    f"model axis: {blocks} blocks (d_in={d_in}, "
+                    f"block_size={b}) over {k_shards} shards")
+            local = d_in // k_shards
+            quantized = (qcfg.kind == "nf4" and d_in % 2 == 0
+                         and d_in % qcfg.block_size == 0)
+            if quantized:
+                align = int(np.lcm(2, qcfg.block_size))
+                if local % align:
+                    raise ValueError(
+                        f"{name}: NF4 code/absmax tiles must divide evenly "
+                        f"across the model axis: local in-features {local} "
+                        f"not a multiple of {align}")
+        if n_shards > 1 and d_out % n_shards:
+            raise ValueError(
+                f"{name}: out-features {d_out} not divisible by the "
+                f"{n_shards}-way model axis")
+
+    def shard_forward(self, x, qstate, adapter, acfg, qcfg, shard,
+                      adapter_id=None):
+        mode = self.fusion_mode(acfg, qcfg, qstate.keys())
+        if mode == "unfused":
+            # jnp path: GSPMD partitions plain einsums/matmuls fine
+            return self.forward(x, qstate, adapter, acfg, qcfg)
+        r_blocks = oft_lib.get_r(adapter, acfg)
+        mesh = shard.mesh
+        data = _fit_axis(mesh, shard.data, x.shape[0])
+        if mode == "qoft_fused":
+            from repro.quant import nf4
+            codes = qstate["nf4_codes"]
+            k_dim, n_dim = codes.shape[0] * 2, codes.shape[1]
+            align = int(np.lcm(np.lcm(2, qcfg.block_size), acfg.block_size))
+            k_ax = _fit_k(mesh, shard.k, k_dim, align)
+            n_ax = _fit_axis(mesh, shard.n, n_dim)
+            fn = _sharded_qoft_fused(mesh, data, k_ax, n_ax, x.ndim,
+                                     qcfg.block_size)
+            return fn(x, r_blocks, codes, nf4.absmax_fp32(qstate, qcfg))
+        from repro.quant.common import dequantize_linear
+        w = dequantize_linear(qstate, qcfg, x.dtype)
+        k_ax = _fit_k(mesh, shard.k, w.shape[0], acfg.block_size)
+        n_ax = _fit_axis(mesh, shard.n, w.shape[1])
+        fn = _sharded_oftv2_fused(mesh, data, k_ax, n_ax, x.ndim)
+        return fn(x, r_blocks, w)
+
+    def shard_rotations(self, name, r, shard):
+        """Constrain a hoisted rotation leaf to its TP layout: the block dim
+        (axis -3 of ``(..., blocks, b, b)``) shards over `model` exactly for
+        the linears whose input features are model-sharded."""
+        if name not in SHARDED_INPUT_LINEARS:
+            return r
+        k_ax = shard.linear(name).k
+        if k_ax is None:
+            return r
+        from repro.distributed.sharding import axis_size
+        if r.shape[-3] % axis_size(shard.mesh, k_ax):
+            return r
+        spec = P(*([None] * (r.ndim - 3)), k_ax, None, None)
+        return jax.lax.with_sharding_constraint(
+            r, NamedSharding(shard.mesh, spec))
+
+    def shard_specs(self, tree, shard):
+        """PartitionSpec tree for an OFT adapter tree -- single, hoisted
+        (``r_blocks``), or pooled (``r_stack``): the block dim shards over
+        `model` for model-sharded-input linears, everything else replicates
+        (adapter params are tiny; only the block structure matters)."""
+        from repro.distributed.sharding import axis_size
+
+        def leaf_spec(key, leaf, k_ax):
+            blocks_axis = leaf.ndim - (2 if key == "q_packed" else 3)
+            ax = k_ax
+            if ax is not None and (
+                    blocks_axis < 0
+                    or leaf.shape[blocks_axis] % axis_size(shard.mesh, ax)):
+                ax = None
+            spec = [None] * leaf.ndim
+            if 0 <= blocks_axis < leaf.ndim:
+                spec[blocks_axis] = ax
+            return P(*spec)
+
+        def walk(node, name):
+            if not isinstance(node, dict):
+                return None
+            if any(k in node for k in ("q_packed", "r_blocks", "r_stack")):
+                k_ax = shard.linear(name).k \
+                    if name in SHARDED_INPUT_LINEARS else None
+                return {k: leaf_spec(k, v, k_ax) for k, v in node.items()}
+            return {k: walk(v, k) for k, v in node.items()}
+
+        return walk(tree, "")
 
 
 @register
@@ -136,6 +292,169 @@ class OFTv1Method(_OFTBase):
 
     def apply(self, x, w, adapter, acfg):
         return x @ oft_lib.oftv1_transform_weight(w, adapter, acfg)
+
+
+# ---------------------------------------------------------------------------
+# mesh-sharded fused linears (the `shards` capability, ISSUE-5)
+#
+# Each factory returns one function that runs the corresponding Pallas
+# kernel per-shard inside shard_map.  The factories are lru_cached on the
+# (mesh, resolved axes, rank, ...) key so repeated traces -- every adapted
+# linear of every scanned layer -- reuse ONE callable and jax's tracing
+# caches see a stable identity.
+#
+# Collective budget (the whole point of input-centric block-diagonal OFT):
+#   K-sharded linear (o/down):  fwd  = 1 psum of the partial y
+#                               bwd  = 0 model psums (dx, dR born local)
+#   N-sharded linear (q/up/..): fwd  = 0 collectives
+#                               bwd  = 1 psum each for dx and dR
+#   token-sharded dR           : 1 psum over the data axes (tiny: (r, b, b))
+# Never: an all-gather of W / NF4 codes / rotation blocks, or any
+# all-to-all (tests/test_sharded_fused.py asserts this on the jaxpr).
+# ---------------------------------------------------------------------------
+def _fit_axis(mesh, ax, dim: int):
+    """ax if the shared drop-don't-fail policy
+    (distributed.sharding.axis_fits) lets it shard dim, else None --
+    resolved statically here so the shard_map specs are exact."""
+    from repro.distributed.sharding import axis_fits
+    return ax if axis_fits(mesh, ax, dim) else None
+
+
+def _fit_k(mesh, ax, k_dim: int, align: int):
+    """The in-feature axis additionally needs every structural tile (OFT
+    block, NF4 code pair, absmax block) to land whole on one shard."""
+    from repro.distributed.sharding import axis_fits, axis_size
+    if not axis_fits(mesh, ax, k_dim):
+        return None
+    return ax if (k_dim // axis_size(mesh, ax)) % align == 0 else None
+
+
+def _zeros_codes(codes):
+    # frozen quantized state: int operands take a float0 cotangent
+    return np.zeros(codes.shape, dtype=jax.dtypes.float0)
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_oftv2_fused(mesh, data, k_ax, n_ax, nd: int):
+    """(x, r_blocks, w) -> y with the fused rotate+matmul kernel running on
+    local shards; differentiable (frozen W) via per-shard bwd kernels."""
+    from repro.kernels import ops as kops
+    mid = (None,) * (nd - 2)
+    xs, rs = P(data, *mid, k_ax), P(k_ax, None, None)
+    ws, ys = P(k_ax, n_ax), P(data, *mid, n_ax)
+
+    def fwd_body(x, r, w):
+        y = kops._oftv2_fused_raw(x, r, w)
+        return jax.lax.psum(y, k_ax) if k_ax is not None else y
+
+    fwd = shard_map(fwd_body, mesh=mesh, in_specs=(xs, rs, ws),
+                    out_specs=ys, check_rep=False)
+
+    def bwd_body(g, x, r, w):
+        dx, dr = kops._oftv2_bwd_raw(g, x, r, w)
+        if n_ax is not None:
+            dx = jax.lax.psum(dx, n_ax)
+            dr = jax.lax.psum(dr, n_ax)
+        if data is not None:
+            dr = jax.lax.psum(dr, data)
+        return dx, dr
+
+    bwd = shard_map(bwd_body, mesh=mesh, in_specs=(ys, xs, rs, ws),
+                    out_specs=(xs, rs), check_rep=False)
+
+    @jax.custom_vjp
+    def fused(x, r, w):
+        return fwd(x, r, w)
+
+    def fused_fwd(x, r, w):
+        return fwd(x, r, w), (x, r, w)
+
+    def fused_bwd(res, g):
+        x, r, w = res
+        dx, dr = bwd(g, x, r, w)
+        return dx, dr, jnp.zeros_like(w)   # frozen base
+
+    fused.defvjp(fused_fwd, fused_bwd)
+    return fused
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_qoft_fused(mesh, data, k_ax, n_ax, nd: int, block_size: int):
+    """QOFT variant: NF4 codes/absmax shard exactly like the weight and are
+    dequantized tile-by-tile inside the local kernel -- a dense W never
+    exists anywhere, on any shard, in either direction."""
+    from repro.kernels import ops as kops
+    mid = (None,) * (nd - 2)
+    xs, rs = P(data, *mid, k_ax), P(k_ax, None, None)
+    cs, as_ = P(k_ax, n_ax), P(k_ax, n_ax)
+    ys = P(data, *mid, n_ax)
+
+    def fwd_body(x, r, codes, absmax):
+        y = kops._qoft_fused_raw(x, r, codes, absmax, block_size)
+        return jax.lax.psum(y, k_ax) if k_ax is not None else y
+
+    fwd = shard_map(fwd_body, mesh=mesh, in_specs=(xs, rs, cs, as_),
+                    out_specs=ys, check_rep=False)
+
+    def bwd_body(g, x, r, codes, absmax):
+        dx, dr = kops._qoft_bwd_raw(g, x, r, codes, absmax, block_size)
+        if n_ax is not None:
+            dx = jax.lax.psum(dx, n_ax)
+            dr = jax.lax.psum(dr, n_ax)
+        if data is not None:
+            dr = jax.lax.psum(dr, data)
+        return dx, dr
+
+    bwd = shard_map(bwd_body, mesh=mesh, in_specs=(ys, xs, rs, cs, as_),
+                    out_specs=(xs, rs), check_rep=False)
+
+    @jax.custom_vjp
+    def fused(x, r, codes, absmax):
+        return fwd(x, r, codes, absmax)
+
+    def fused_fwd(x, r, codes, absmax):
+        return fwd(x, r, codes, absmax), (x, r, codes, absmax)
+
+    def fused_bwd(res, g):
+        x, r, codes, absmax = res
+        dx, dr = bwd(g, x, r, codes, absmax)
+        return dx, dr, _zeros_codes(codes), jnp.zeros_like(absmax)
+
+    fused.defvjp(fused_fwd, fused_bwd)
+    return fused
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_oftv2_multi(mesh, data, k_ax, n_ax, nd: int):
+    """Multi-adapter serving kernel per-shard: slot rows data-sharded, the
+    (A, blocks, b, b) r_stack model-sharded on blocks.  Inference-only."""
+    from repro.kernels import ops as kops
+    mid = (None,) * (nd - 2)
+    specs = (P(data, *mid, k_ax), P(data), P(None, k_ax, None, None),
+             P(k_ax, n_ax))
+
+    def body(x, ids, r_stack, w):
+        y = kops.oftv2_linear_multi(x, r_stack, ids, w)
+        return jax.lax.psum(y, k_ax) if k_ax is not None else y
+
+    return shard_map(body, mesh=mesh, in_specs=specs,
+                     out_specs=P(data, *mid, n_ax), check_rep=False)
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_qoft_multi(mesh, data, k_ax, n_ax, nd: int, block_size: int):
+    from repro.kernels import ops as kops
+    mid = (None,) * (nd - 2)
+    specs = (P(data, *mid, k_ax), P(data), P(None, k_ax, None, None),
+             P(k_ax, n_ax), P(k_ax, n_ax))
+
+    def body(x, ids, r_stack, codes, absmax):
+        y = kops.qoft_linear_multi(x, r_stack, ids, codes, absmax,
+                                   block_size)
+        return jax.lax.psum(y, k_ax) if k_ax is not None else y
+
+    return shard_map(body, mesh=mesh, in_specs=specs,
+                     out_specs=P(data, *mid, n_ax), check_rep=False)
 
 
 # ---------------------------------------------------------------------------

@@ -168,7 +168,7 @@ def attention_apply(base: dict, adapters: dict, x: jnp.ndarray,
                     cache: Optional[dict] = None,
                     cache_index: Optional[jnp.ndarray] = None,
                     collect_cache: bool = False,
-                    constrain=None, adapter_id=None
+                    constrain=None, adapter_id=None, shard=None
                     ) -> Tuple[jnp.ndarray, Optional[dict]]:
     """x: (B, S, d). If cache is given (decode), S == 1 and the KV cache
     {"k","v": (B, S_max, KV, hd)} is updated at cache_index.
@@ -180,7 +180,8 @@ def attention_apply(base: dict, adapters: dict, x: jnp.ndarray,
     def lin(name, inp):
         return adapted_linear(inp, base[name], adapters.get(name), acfg,
                               qcfg, constrain=constrain,
-                              adapter_id=adapter_id)
+                              adapter_id=adapter_id,
+                              shard=shard.linear(name) if shard else None)
 
     q = lin("q", x).reshape(b, s, h, hd)
     k = lin("k", x).reshape(b, s, kv, hd)

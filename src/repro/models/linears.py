@@ -20,6 +20,20 @@ from repro.core import adapter as ad
 from repro.models.spec import CompositeDef, ParamDef
 from repro.quant.common import quantize_linear
 
+# Logical (in_axis, out_axis) of every adapted dense linear -- the single
+# source the defs below AND the mesh-native fused path
+# (repro.distributed.sharding.MeshContext.linear) read, so weight placement
+# and the per-shard kernel specs can never disagree.
+LINEAR_AXES = {
+    "q": ("embed", "heads"),
+    "k": ("embed", "kv_heads"),
+    "v": ("embed", "kv_heads"),
+    "o": ("heads", "embed"),
+    "gate": ("embed", "mlp"),
+    "up": ("embed", "mlp"),
+    "down": ("mlp", "embed"),
+}
+
 
 class QuantLinearDef(CompositeDef):
     """Composite leaf: a quantized frozen linear (codes + scales expand from
@@ -132,13 +146,10 @@ def multi_fusion_mode(name: str, d_in: int, d_out: int, acfg: AdapterConfig,
             "oftv2_fused": "oftv2_multi"}.get(mode, "unfused")
 
 
-def model_multi_fusion_plan(cfg, acfg: AdapterConfig,
-                            qcfg: QuantConfig) -> dict:
-    """Per-linear multi-adapter serving plan for a transformer layer of
-    ``cfg``: {name: 'qoft_multi' | 'oftv2_multi' | 'unfused'}.  Emitted by
-    benchmarks/serving_bench.py as ``fusion_plan/serving/*`` rows so the
-    existing check_fusion CI gate also fails on a silent fallback of the
-    serving path."""
+def layer_linear_shapes(cfg) -> dict:
+    """{name: (d_in, d_out)} of the dense adapted linears of one
+    transformer layer of ``cfg`` -- shared by the fusion-plan reports and
+    the config-time mesh validation (make_shard_context)."""
     d = cfg.d_model
     h, kv, hd = cfg.padded_heads, cfg.num_kv_heads, cfg.head_dim
     shapes = {"q": (d, h * hd), "k": (d, kv * hd), "v": (d, kv * hd),
@@ -146,8 +157,18 @@ def model_multi_fusion_plan(cfg, acfg: AdapterConfig,
     if cfg.d_ff > 0:
         shapes.update({"gate": (d, cfg.d_ff), "up": (d, cfg.d_ff),
                        "down": (cfg.d_ff, d)})
+    return shapes
+
+
+def model_multi_fusion_plan(cfg, acfg: AdapterConfig,
+                            qcfg: QuantConfig) -> dict:
+    """Per-linear multi-adapter serving plan for a transformer layer of
+    ``cfg``: {name: 'qoft_multi' | 'oftv2_multi' | 'unfused'}.  Emitted by
+    benchmarks/serving_bench.py as ``fusion_plan/serving/*`` rows so the
+    existing check_fusion CI gate also fails on a silent fallback of the
+    serving path."""
     return {name: multi_fusion_mode(name, di, do, acfg, qcfg)
-            for name, (di, do) in shapes.items()}
+            for name, (di, do) in layer_linear_shapes(cfg).items()}
 
 
 def model_fusion_plan(cfg, acfg: AdapterConfig, qcfg: QuantConfig) -> dict:
@@ -158,15 +179,60 @@ def model_fusion_plan(cfg, acfg: AdapterConfig, qcfg: QuantConfig) -> dict:
     fails if a path expected to fuse reports 'unfused' -- a silent fallback
     to the oracle is a perf regression, not a correctness one, so tests
     alone don't catch it."""
-    d = cfg.d_model
-    h, kv, hd = cfg.padded_heads, cfg.num_kv_heads, cfg.head_dim
-    shapes = {"q": (d, h * hd), "k": (d, kv * hd), "v": (d, kv * hd),
-              "o": (h * hd, d)}
-    if cfg.d_ff > 0:
-        shapes.update({"gate": (d, cfg.d_ff), "up": (d, cfg.d_ff),
-                       "down": (cfg.d_ff, d)})
     return {name: linear_fusion_mode(name, di, do, acfg, qcfg)
-            for name, (di, do) in shapes.items()}
+            for name, (di, do) in layer_linear_shapes(cfg).items()}
+
+
+def sharded_fusion_mode(name: str, d_in: int, d_out: int,
+                        acfg: AdapterConfig, qcfg: QuantConfig, rules,
+                        axis_sizes: dict, scale: float = 1.0) -> str:
+    """Which fused forward THIS linear takes under a mesh whose axis sizes
+    are ``axis_sizes`` ({mesh_axis: size}) and whose logical mapping is
+    ``rules``: the single-device mode, demoted to 'unfused' when the method
+    lacks the ``shards`` capability or the shapes cannot shard (the same
+    ``check_sharding`` validation make_shard_context enforces).  Needs no
+    devices, so benchmarks can emit the sharded plan on any host."""
+    mode = linear_fusion_mode(name, d_in, d_out, acfg, qcfg, scale=scale)
+    if mode == "unfused":
+        return mode
+    method = methods.get(acfg.kind)
+    if not method.supports_sharding:
+        return "unfused"
+
+    def shards(logical):
+        ax = rules.lookup(logical)
+        if ax is None:
+            return 1
+        axes = (ax,) if isinstance(ax, str) else tuple(ax)
+        n = 1
+        for a in axes:
+            n *= axis_sizes.get(a, 1)
+        return n
+
+    in_axis, out_axis = LINEAR_AXES.get(name, (None, None))
+    try:
+        method.check_sharding(name, d_in, d_out, acfg, qcfg,
+                              k_shards=shards(in_axis),
+                              n_shards=shards(out_axis))
+    except (ValueError, NotImplementedError):
+        return "unfused"
+    return mode
+
+
+def model_sharded_fusion_plan(cfg, acfg: AdapterConfig, qcfg: QuantConfig,
+                              pcfg) -> dict:
+    """Per-linear plan of the mesh-native fused path under ``pcfg``'s mesh
+    (fused_tp rules): {name: mode}.  benchmarks/sharded_bench.py emits
+    these as ``fusion_plan/sharded/*`` rows, so the check_fusion CI gate
+    also fails when the SHARDED path would silently fall back to unfused
+    (replicating W under the mesh is a scaling regression tests can't
+    see)."""
+    from repro.models.spec import rules_variant
+    rules = rules_variant(pcfg, "fused_tp")
+    axis_sizes = dict(zip(pcfg.mesh_axes, pcfg.mesh_shape))
+    return {name: sharded_fusion_mode(name, di, do, acfg, qcfg, rules,
+                                      axis_sizes)
+            for name, (di, do) in layer_linear_shapes(cfg).items()}
 
 
 def adapter_defs(name: str, d_in: int, d_out: int, acfg: AdapterConfig,

@@ -39,11 +39,12 @@ def _act(x, kind: str):
 
 def mlp_apply(base: dict, adapters: dict, x: jnp.ndarray, cfg: ModelConfig,
               acfg: AdapterConfig, qcfg: QuantConfig,
-              constrain=None, adapter_id=None) -> jnp.ndarray:
+              constrain=None, adapter_id=None, shard=None) -> jnp.ndarray:
     def lin(name, inp):
         return adapted_linear(inp, base[name], adapters.get(name), acfg,
                               qcfg, constrain=constrain,
-                              adapter_id=adapter_id)
+                              adapter_id=adapter_id,
+                              shard=shard.linear(name) if shard else None)
 
     up = lin("up", x)
     if cfg.glu:

@@ -54,6 +54,7 @@ class Model:
     adapter_defs: dict
     ep: bool
     constrain: Callable = tfm._noop_constrain
+    shard: Optional[Any] = None    # MeshContext: mesh-native fused kernels
 
     # ------------------------------------------------------------ params --
     def statics(self, mode: str, remat: bool = False,
@@ -61,7 +62,7 @@ class Model:
         return Statics(cfg=self.cfg, acfg=self.run.adapter,
                        qcfg=self.run.quant, ep=self.ep,
                        constrain=self.constrain, remat=remat, mode=mode,
-                       adapter_id=adapter_id)
+                       adapter_id=adapter_id, shard=self.shard)
 
     def init(self, key) -> dict:
         pd = jnp.dtype(self.cfg.param_dtype)
@@ -229,10 +230,15 @@ class Model:
         return out
 
 
-def build(run: RunConfig, constrain: Callable = tfm._noop_constrain) -> Model:
+def build(run: RunConfig, constrain: Callable = tfm._noop_constrain,
+          shard=None) -> Model:
+    """``shard`` (optional): a validated ``MeshContext`` from
+    ``repro.distributed.sharding.make_shard_context`` -- every adapted
+    linear then runs its fused kernels per-shard inside shard_map."""
     cfg = run.model
     ep = pick_ep(cfg, run.parallel)
     base_defs, adapter_defs = tfm.build_defs(cfg, run.adapter, run.quant,
                                              run.parallel, ep)
     return Model(cfg=cfg, run=run, base_defs=base_defs,
-                 adapter_defs=adapter_defs, ep=ep, constrain=constrain)
+                 adapter_defs=adapter_defs, ep=ep, constrain=constrain,
+                 shard=shard)

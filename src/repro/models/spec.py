@@ -122,6 +122,12 @@ def rules_variant(pcfg, preset: str = "baseline") -> AxisRules:
     ep_model : no attention/dense TP; experts EP over `model`, expert d_ff
                over `data` (arctic-class MoE: trades TP all-reduces for
                dispatch all-to-alls)
+    fused_tp : the mesh-native fused-kernel layout (ISSUE-5): batch over
+               (pod, data), W / NF4 codes / rotation blocks TP-only over
+               `model` (no ZeRO-3 on the embed dim, no SP on the residual
+               -- the per-shard Pallas kernels consume local W directly
+               inside shard_map, so the only storage sharding that works
+               is the one the kernels compute on)
     """
     fsdp = pcfg.data_axes if len(pcfg.data_axes) > 1 else (
         pcfg.data_axes[0] if pcfg.data_axes else None)
@@ -163,6 +169,8 @@ def rules_variant(pcfg, preset: str = "baseline") -> AxisRules:
         base.update(heads=None, mlp=None, seq=None, ssm_inner=None,
                     oft_block_sharded=None,
                     expert=model, expert_mlp="data")
+    elif preset == "fused_tp":
+        base.update(embed=None, seq=None, ssm_inner=None)
     elif preset != "baseline":
         raise ValueError(f"unknown rules preset {preset}")
     return AxisRules(rules=tuple(base.items()))

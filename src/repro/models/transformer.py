@@ -47,6 +47,7 @@ class Statics:
     remat: bool = False
     mode: str = "train"                    # train | prefill | decode
     adapter_id: Optional[Any] = None       # (B,) int32 multi-adapter routing
+    shard: Optional[Any] = None            # MeshContext: shard_map'd kernels
 
 
 # ---------------------------------------------------------------------------
@@ -157,7 +158,7 @@ def _apply_layer(st: Statics, idx_in_group: int, base, adapt, x, positions,
             base["attn"], adapt.get("attn", {}), h, positions, cfg, st.acfg,
             st.qcfg, cache=cache, cache_index=cache_index,
             collect_cache=(st.mode == "prefill"), constrain=st.constrain,
-            adapter_id=st.adapter_id)
+            adapter_id=st.adapter_id, shard=st.shard)
     else:
         out, new_cache = mamba_mod.mamba_apply(
             base["mamba"], adapt.get("mamba", {}), h, cfg, st.acfg, st.qcfg,
@@ -174,12 +175,14 @@ def _apply_layer(st: Statics, idx_in_group: int, base, adapt, x, positions,
                                               adapt.get("mlp", {}), h, cfg,
                                               st.acfg, st.qcfg,
                                               constrain=st.constrain,
-                                              adapter_id=st.adapter_id)
+                                              adapter_id=st.adapter_id,
+                                              shard=st.shard)
         else:
             out = mlp_mod.mlp_apply(base["mlp"], adapt.get("mlp", {}), h,
                                     cfg, st.acfg, st.qcfg,
                                     constrain=st.constrain,
-                                    adapter_id=st.adapter_id)
+                                    adapter_id=st.adapter_id,
+                                    shard=st.shard)
         x = x + out
     return x, aux, new_cache
 

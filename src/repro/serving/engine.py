@@ -23,6 +23,14 @@ Greedy decoding is the bit-exactness contract: a mixed-adapter batch
 produces token-for-token what N separate single-adapter runs produce
 (tests/test_serving_multi.py asserts it).  temperature > 0 samples on the
 host from the returned logits (per-request fold of the engine key).
+
+Mesh-native serving (ISSUE-5): when the model was built with a
+``MeshContext`` (repro.distributed.sharding.make_shard_context), the engine
+shards the slot batch over the `data` axes and the pool's per-layer
+``r_stack`` over `model` (via the method's ``shard_specs`` hook, blocks
+co-sharded with the weight), and the batched decode runs the multi-routing
+kernels per-shard inside shard_map -- greedy decode stays token-for-token
+identical to the single-device engine (tests/test_sharded_fused.py).
 """
 from __future__ import annotations
 
@@ -32,6 +40,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import methods
 from repro.models.model import Model
 from repro.serving.pool import AdapterPool
 from repro.serving.scheduler import Request, Scheduler
@@ -86,14 +95,35 @@ class ServingEngine:
         self.temperature = temperature
         self.jit = jit
         self.key = key if key is not None else jax.random.PRNGKey(0)
+        self.shard = model.shard     # MeshContext or None (off-mesh)
         self._decode = self._make_decode()
 
     @property
     def params(self) -> dict:
         """Serving tree resolved against the pool's CURRENT stack, so
         tenants registered after engine construction are served (the pool
-        caches the built stack; registration invalidates it)."""
-        return self.pool.serving_params(self._base_params)
+        caches the built stack; registration invalidates it).  On-mesh,
+        the pooled tree is placed per the method's ``shard_specs`` --
+        every ``r_stack`` block-sharded over `model` with its weight."""
+        p = self.pool.serving_params(self._base_params)
+        if self.shard is not None:
+            from repro.distributed.sharding import fit_tree
+            method = methods.get(self.pool.acfg.kind)
+            specs = method.shard_specs(p["adapter"], self.shard)
+            p = {"base": p["base"],
+                 "adapter": fit_tree(p["adapter"], specs, self.shard.mesh)}
+        return p
+
+    def _place_batch(self, x):
+        """Shard a decode input's slot dim over the data axes (dropped when
+        n_slots does not divide them)."""
+        if self.shard is None:
+            return jnp.asarray(x)
+        from repro.distributed.sharding import fit_placed
+        from jax.sharding import PartitionSpec
+        spec = PartitionSpec(self.shard.data_axes,
+                             *([None] * (np.ndim(x) - 1)))
+        return fit_placed(jnp.asarray(x), spec, self.shard.mesh)
 
     # ------------------------------------------------------------- decode --
     def _make_decode(self):
@@ -169,6 +199,14 @@ class ServingEngine:
         params = self.params      # resolve the pool stack once per run
 
         caches = self.model.make_caches(self.n_slots, s_max)
+        if self.shard is not None:
+            # decode caches: slot dim over `data` (and, when enabled and
+            # divisible, the cache seq dim over `model` -- split-KV decode)
+            from repro.distributed.sharding import fit_tree
+            caches = fit_tree(
+                caches, self.model.cache_specs(self.shard.rules,
+                                               self.n_slots, s_max),
+                self.shard.mesh)
         tok = np.zeros((self.n_slots, 1), np.int32)
         pos = np.zeros((self.n_slots,), np.int32)
         aid = np.zeros((self.n_slots,), np.int32)
@@ -193,8 +231,8 @@ class ServingEngine:
 
             # ---- one batched decode tick for every active slot ------------
             greedy, logits, caches = self._decode(
-                params, caches, jnp.asarray(tok), jnp.asarray(pos),
-                jnp.asarray(aid))
+                params, caches, self._place_batch(tok),
+                self._place_batch(pos), self._place_batch(aid))
             greedy_np = np.asarray(greedy)
             logits_np = None if self.temperature <= 0 else np.asarray(logits)
             for slot in active:

@@ -30,7 +30,11 @@ def run_training(model: Model, run: RunConfig, loader: ShardedLoader,
                  guard: Optional[PreemptionGuard] = None,
                  log: Callable[[str], None] = print,
                  init_key=None,
-                 stop_after: Optional[int] = None) -> Dict[str, Any]:
+                 stop_after: Optional[int] = None,
+                 place_state: Optional[Callable] = None) -> Dict[str, Any]:
+    """``place_state`` (on-mesh launches): applied to the TrainState after
+    init/restore -- device_put params to their NamedShardings so jit
+    in_shardings come from committed placement, not per-step resharding."""
     tc = run.train
     manager = manager or CheckpointManager(tc.ckpt_dir, keep=tc.ckpt_keep)
     guard = guard or PreemptionGuard(install=False)
@@ -51,6 +55,8 @@ def run_training(model: Model, run: RunConfig, loader: ShardedLoader,
         start_step = int(meta["step"])
         log(f"[loop] resumed from step {start_step} "
             f"(data cursor {meta['data_cursor']})")
+    if place_state is not None:
+        state = place_state(state)
 
     losses = []
     stragglers = 0

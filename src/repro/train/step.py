@@ -49,6 +49,16 @@ def make_train_step(model: Model, run: RunConfig,
     use_remat = pcfg.remat != "none"
     use_comp = pcfg.gradient_compression == "int8"
     acfg = run.adapter
+    # mesh-native path: the model carries a validated MeshContext; the
+    # hoisted rotation build constrains its output leaves to their TP
+    # layout so the per-shard fused kernels consume them locally.
+    shard = model.shard
+    if shard is not None and tc.global_batch % max(
+            shard.axis_shards(shard.data_axes), 1):
+        raise ValueError(
+            f"global_batch={tc.global_batch} not divisible by the "
+            f"{shard.axis_shards(shard.data_axes)}-way data axes of the "
+            f"mesh")
 
     def loss_fn(adapter, base, mb):
         loss, metrics = model.loss({"base": base, "adapter": adapter}, mb,
@@ -67,7 +77,8 @@ def make_train_step(model: Model, run: RunConfig,
             if hoist_rotations is None else hoist_rotations
         if hoist:
             adapter, pullback = jax.vjp(
-                lambda a: rot_lib.with_rotations(a, acfg), state.adapter)
+                lambda a: rot_lib.with_rotations(a, acfg, shard=shard),
+                state.adapter)
         else:
             adapter, pullback = state.adapter, None
 

@@ -1,0 +1,45 @@
+"""Shared multi-device test harness: run a code snippet in a subprocess
+with N fake CPU devices, so the forced device count never leaks into the
+rest of the suite (jax locks the device count at first init).
+
+``run_py`` sets ``--xla_force_host_platform_device_count=N`` by PROPER
+token filtering of any pre-existing XLA_FLAGS: every
+``--xla_force_host_platform_device_count=...`` token is removed (whatever
+its value) and the rest of the flags pass through verbatim.  The old
+string-replace of the literal ``=512`` corrupted any other preset value
+(``=5120`` became ``0``) and left stale forced counts in place.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_FORCE_FLAG = "--xla_force_host_platform_device_count"
+
+
+def force_device_count_flags(existing: str, devices: int) -> str:
+    """XLA_FLAGS value forcing ``devices`` host devices, preserving every
+    unrelated token of ``existing``."""
+    kept = [t for t in existing.split()
+            if not t.startswith(_FORCE_FLAG + "=") and t != _FORCE_FLAG]
+    return " ".join([f"{_FORCE_FLAG}={devices}"] + kept)
+
+
+def run_py(code: str, devices: int = 8, timeout: int = 900) -> str:
+    """Run ``code`` (dedented) in a fresh interpreter with ``devices`` fake
+    CPU devices and the repo's src/ on PYTHONPATH; assert exit 0 and return
+    stdout."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = force_device_count_flags(env.get("XLA_FLAGS", ""),
+                                                devices)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=timeout)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout

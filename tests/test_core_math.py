@@ -65,6 +65,60 @@ def test_neumann_near_orthogonal_small_q():
     assert float(cayley.orthogonality_error(r)) < 1e-4
 
 
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), bexp=st.integers(1, 5),
+       scale=st.floats(1e-3, 0.05))
+def test_neumann_orthogonality_decays_monotonically(seed, bexp, scale):
+    """Property (ISSUE-5 satellite): the orthogonality residual
+    ||R^T R - I|| of the k-term Cayley-Neumann build decays monotonically
+    in ``neumann_terms`` over random skew params / block sizes, up to the
+    float32 noise floor.  The decay is monotone in strides of TWO: odd
+    powers of a skew Q are themselves skew and cancel in the symmetric
+    residual, so err(k) ~ ||Q||^{k+1} with alternating constants --
+    comparing k to k+2 isolates the true geometric decay.  Generalizes the
+    fixed-shape spot checks above."""
+    b = 2 ** bexp                       # block sizes 2..32
+    blocks = 1 + seed % 4
+    q_packed = skew.random_skew(jax.random.PRNGKey(seed), (blocks,), b,
+                                scale=scale)
+    errs = [float(cayley.orthogonality_error(
+        cayley.build_rotation(q_packed, b, neumann_terms=k)))
+        for k in range(1, 7)]
+    floor = 1e-6
+    for e0, e2 in zip(errs, errs[2:]):
+        assert e2 <= e0 + floor, (errs, b, blocks, scale)
+    assert errs[-1] <= max(0.05 * errs[0], floor), (errs, b, scale)
+    assert errs[-2] <= max(0.05 * errs[0], floor), (errs, b, scale)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), bexp=st.integers(1, 4),
+       scale=st.floats(1e-3, 0.2))
+def test_merge_preserves_column_norms_property(seed, bexp, scale):
+    """Property: merging an exact-Cayley OFT adapter (neumann_terms=0,
+    exactly orthogonal R) into W preserves every column norm to float
+    tolerance -- the paper's requantization argument.  The k-truncated
+    merge drifts by at most the truncated R's own orthogonality residual
+    (|.|norm ratio <= ||R^T R - I||_2 <= b * max-abs), a self-consistent
+    bound with no fitted constants."""
+    b = 2 ** bexp
+    d_in, d_out = 4 * b, 24
+    key = jax.random.PRNGKey(seed)
+    w = jax.random.normal(key, (d_in, d_out)) / np.sqrt(d_in)
+    params = {"q_packed": skew.random_skew(jax.random.fold_in(key, 1),
+                                           (d_in // b,), b, scale=scale)}
+    exact = AdapterConfig(kind="oftv2", block_size=b, neumann_terms=0)
+    merged = oft.oft_merge(w, params, exact)
+    drift = float(merging.column_norm_drift(w, merged))
+    assert drift < 1e-5, (drift, b, scale)
+    trunc = AdapterConfig(kind="oftv2", block_size=b, neumann_terms=6)
+    merged_t = oft.oft_merge(w, params, trunc)
+    drift_t = float(merging.column_norm_drift(w, merged_t))
+    res = float(cayley.orthogonality_error(
+        cayley.build_rotation(params["q_packed"], b, neumann_terms=6)))
+    assert drift_t <= b * res + 1e-5, (drift_t, res, b, scale)
+
+
 def test_zero_init_gives_identity():
     params = oft.oft_init(64, 16)
     r = cayley.build_rotation(params["q_packed"], 16, 5)

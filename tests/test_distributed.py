@@ -1,27 +1,24 @@
 """Multi-device tests, run in subprocesses so the 8 fake host devices never
-leak into the rest of the suite (jax locks device count at first init)."""
-import os
-import subprocess
-import sys
-import textwrap
-
+leak into the rest of the suite (jax locks device count at first init).
+The harness (with proper XLA_FLAGS token filtering) lives in tests/_mesh.py,
+shared with test_sharded_fused.py."""
 import pytest
 
-ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+from _mesh import force_device_count_flags, run_py
 
 
-def run_py(code: str, devices: int = 8) -> str:
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={devices} "
-                        + env.get("XLA_FLAGS", "").replace(
-                            "--xla_force_host_platform_device_count=512", ""))
-    env["PYTHONPATH"] = os.path.join(ROOT, "src")
-    env["JAX_PLATFORMS"] = "cpu"
-    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
-                         capture_output=True, text=True, env=env,
-                         timeout=900)
-    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
-    return out.stdout
+def test_force_device_count_preserves_other_flags():
+    """The old '=512' string replace corrupted any other preset value; the
+    token filter must strip EVERY forced count and keep the rest."""
+    out = force_device_count_flags(
+        "--xla_force_host_platform_device_count=5120 "
+        "--xla_cpu_enable_fast_math=true", 8)
+    toks = out.split()
+    assert toks[0] == "--xla_force_host_platform_device_count=8"
+    assert "--xla_cpu_enable_fast_math=true" in toks
+    assert len([t for t in toks if "device_count" in t]) == 1
+    assert force_device_count_flags("", 4) == \
+        "--xla_force_host_platform_device_count=4"
 
 
 @pytest.mark.slow

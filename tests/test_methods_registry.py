@@ -22,8 +22,8 @@ import numpy as np
 import pytest
 
 from repro import methods
-from repro.config.base import (AdapterConfig, ModelConfig, QuantConfig,
-                               RunConfig, TrainConfig)
+from repro.config.base import (AdapterConfig, ModelConfig, ParallelConfig,
+                               QuantConfig, RunConfig, TrainConfig)
 from repro.core import adapter as ad
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
@@ -240,6 +240,84 @@ def test_pool_rejects_non_multi_tenant_method_at_registration():
                                           fuse_linear=True))
     with pytest.raises(NotImplementedError, match="multi-tenant"):
         AdapterPool(build(run))
+
+
+# ---------------------------------------------- mesh-sharding capability ---
+@pytest.mark.parametrize("kind", PARAM_KINDS)
+def test_sharding_capability_sweep(kind):
+    """ISSUE-5 conformance, inherited by every registered method: a method
+    advertising the ``shards`` capability is auto-swept for sharded ==
+    unsharded parity (1x1 mesh in-process -- the structural path: mesh
+    validation, spec resolution, shard_map'd kernels; 8-device numeric
+    parity lives in tests/test_sharded_fused.py), and a method WITHOUT it
+    raises loudly at mesh setup -- like the HOFT pool case, a config-time
+    error, not a silent fall-through."""
+    from repro.distributed.sharding import make_constrain, make_shard_context
+    from repro.models import build
+    from repro.models.spec import rules_variant
+
+    method = methods.get(kind)
+    pcfg = ParallelConfig(mesh_shape=(1, 1), mesh_axes=("data", "model"))
+    cfg = ModelConfig(name=f"shard-{kind}", num_layers=1, d_model=64,
+                      num_heads=2, num_kv_heads=1, d_ff=128, vocab_size=64,
+                      rope_theta=1e4)
+    run = RunConfig(model=cfg, parallel=pcfg,
+                    adapter=_acfg(kind,
+                                  fused=method.supports_fused_forward))
+    mesh = jax.make_mesh(pcfg.mesh_shape, pcfg.mesh_axes)
+    rules = rules_variant(pcfg, "fused_tp")
+    if not method.supports_sharding:
+        with pytest.raises(NotImplementedError, match="shards"):
+            make_shard_context(mesh, rules, run)
+        return
+    ctx = make_shard_context(mesh, rules, run)
+    assert ctx is not None and make_shard_context(None, rules, run) is None
+
+    model_ref = build(run)
+    key = jax.random.PRNGKey(0)
+    init = model_ref.init(key)
+    params = {"base": init["base"],
+              "adapter": _perturb(init["adapter"],
+                                  jax.random.fold_in(key, 1))}
+    batch = {"tokens": jax.random.randint(jax.random.fold_in(key, 2),
+                                          (2, 8), 0, 64)}
+    logits_ref, _, _ = model_ref.forward(params, batch)
+    model_sh = build(run, constrain=make_constrain(rules, mesh), shard=ctx)
+    with mesh:
+        logits, _, _ = jax.jit(
+            lambda p, b: model_sh.forward(p, b))(params, batch)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(logits_ref),
+                               rtol=2e-4, atol=2e-4)
+
+    def loss(m):
+        return lambda a, b, bt: m.loss({"base": b, "adapter": a}, bt)[0]
+
+    g_ref = jax.grad(loss(model_ref))(params["adapter"], params["base"],
+                                      batch)
+    with mesh:
+        g_sh = jax.jit(jax.grad(loss(model_sh)))(params["adapter"],
+                                                 params["base"], batch)
+    for gu, gf in zip(jax.tree_util.tree_leaves(g_ref),
+                      jax.tree_util.tree_leaves(g_sh)):
+        np.testing.assert_allclose(np.asarray(gf), np.asarray(gu),
+                                   rtol=2e-3, atol=2e-4)
+
+
+def test_shards_capability_flag_tells_the_truth():
+    """The matrix column is generated from supports_sharding; methods that
+    set it must implement check_sharding + shard_forward (the conformance
+    sweep exercises them), and the base hooks raise with the capability
+    name for everyone else."""
+    for kind in PARAM_KINDS:
+        method = methods.get(kind)
+        if method.supports_sharding:
+            continue
+        with pytest.raises(NotImplementedError, match="mesh-sharded"):
+            method.check_sharding("q", 64, 64, _acfg(kind), QuantConfig(),
+                                  k_shards=2, n_shards=1)
+        with pytest.raises(NotImplementedError, match="mesh-sharded"):
+            method.shard_forward(jnp.zeros((2, 4)), {}, {}, _acfg(kind),
+                                 QuantConfig(), None)
 
 
 # -------------------------------------------------- HOFT kernel vs oracle --
