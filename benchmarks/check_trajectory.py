@@ -1,0 +1,68 @@
+"""CI gate on the committed benchmark trajectory (ROADMAP item 5:
+"bench rows vanish with each CI run").
+
+``BENCH_<pr>.json`` files at the repo root are committed snapshots of
+``benchmarks/run.py --smoke --json`` -- one per PR that changed what the
+suite emits.  This script compares a fresh run's report against the
+NEWEST committed snapshot and fails when a row NAME disappeared: a
+renamed or dropped row silently breaks the cross-PR trajectory (numbers
+are expected to drift between machines and are not compared).
+
+Usage: python -m benchmarks.check_trajectory <fresh.json> [repo_root]
+"""
+from __future__ import annotations
+
+import json
+import re
+import sys
+from pathlib import Path
+
+
+def newest_snapshot(root: Path):
+    """(path, pr_number) of the highest-numbered BENCH_<n>.json, or
+    (None, None) when no trajectory has been committed yet."""
+    best, best_n = None, -1
+    for p in root.glob("BENCH_*.json"):
+        m = re.fullmatch(r"BENCH_(\d+)\.json", p.name)
+        if m and int(m.group(1)) > best_n:
+            best, best_n = p, int(m.group(1))
+    return best, (best_n if best else None)
+
+
+def check(fresh_rows, snap_rows, snap_name: str) -> int:
+    fresh = {r["name"] for r in fresh_rows}
+    snap = {r["name"] for r in snap_rows}
+    missing = sorted(snap - fresh)
+    for name in missing:
+        print(f"check_trajectory: row {name!r} is in {snap_name} but the "
+              "fresh run no longer emits it", file=sys.stderr)
+    new = sorted(fresh - snap)
+    print(f"check_trajectory: {len(snap)} snapshot rows ({snap_name}); "
+          f"{len(missing)} vanished, {len(new)} new")
+    if new:
+        print("check_trajectory: new rows (commit an updated BENCH_<pr>."
+              f"json next time the suite changes): {new[:10]}"
+              f"{' ...' if len(new) > 10 else ''}")
+    return 1 if missing else 0
+
+
+def main() -> None:
+    if len(sys.argv) not in (2, 3):
+        print("usage: check_trajectory.py <fresh.json> [repo_root]",
+              file=sys.stderr)
+        sys.exit(2)
+    root = Path(sys.argv[2]) if len(sys.argv) == 3 else Path(".")
+    snap_path, _ = newest_snapshot(root)
+    if snap_path is None:
+        print("check_trajectory: no BENCH_*.json snapshot committed -- "
+              "nothing to compare", file=sys.stderr)
+        sys.exit(1)
+    with open(sys.argv[1]) as f:
+        fresh_rows = json.load(f)
+    with snap_path.open() as f:
+        snap_rows = json.load(f)
+    sys.exit(check(fresh_rows, snap_rows, snap_path.name))
+
+
+if __name__ == "__main__":
+    main()

@@ -14,9 +14,18 @@ Rows:
      check_fusion CI gate fails the run if it drops below the threshold
   fusion_plan/serving/{dense,nf4}/...     -- expected multi-kernel per
      linear; the same gate fails on any silent 'unfused' fallback.
+  serving/load/{paged,slots}/N{a}_R{r}    -- open-loop Poisson traffic
+     (mixed lengths, per-adapter skew, shared system prompt) against the
+     paged v2 engine and the fixed-slot v1 engine; tok/s + p50/p99 ms
+  serving/load/throughput/.../expect_ge_1.0 -- paged tok/s at saturation
+     must not fall below fixed-slot (the ISSUE-6 acceptance gate)
+  serving/load/p99/.../expect_ge_0.7      -- nor may its latency tail
+     collapse while buying that throughput
 
 Both paths are explicitly warmed up (compile excluded) even under --smoke:
-the speedup row is a CI-checked acceptance number, not a vibe.
+the speedup row is a CI-checked acceptance number, not a vibe.  The load
+generator alone is runnable as ``python -m benchmarks.serving_bench
+--load [--smoke]``.
 """
 from __future__ import annotations
 
@@ -31,6 +40,8 @@ from benchmarks import common
 PROMPT_LEN = 8
 GEN = 16
 BATCH = 4
+SYS_LEN = 32        # shared system prompt length for the --load workload
+ARRIVAL_RATE = 4.0  # Poisson arrivals per engine step: saturating at 8 slots
 
 
 def _build_model(qkind: str):
@@ -158,6 +169,151 @@ def scaling_rows():
     return rows
 
 
+def _load_workload(cfg, n_requests: int, n_adapters: int, seed: int = 0):
+    """Poisson arrivals (measured in engine-step time so the schedule is
+    machine-independent), mixed prompt/output length distributions,
+    per-adapter traffic skew (adapter 0 takes ~half the traffic), and ONE
+    shared system prompt so the paged engine's prefix cache has something
+    to share.  Returns (requests, arrival_steps)."""
+    import random
+
+    from repro.serving import Request, SamplingParams
+    rnd = random.Random(seed)
+    sys_prompt = [rnd.randrange(cfg.vocab_size) for _ in range(SYS_LEN)]
+    reqs, arrivals = [], []
+    t = 0.0
+    for i in range(n_requests):
+        t += rnd.expovariate(ARRIVAL_RATE)
+        aid = 0 if rnd.random() < 0.5 else rnd.randrange(n_adapters)
+        tail = [rnd.randrange(cfg.vocab_size)
+                for _ in range(rnd.choice((2, 4, 8, 16, 24)))]
+        reqs.append(Request(
+            f"load-{i}", np.asarray(sys_prompt + tail, np.int32),
+            adapter_id=aid,
+            sampling=SamplingParams(
+                max_new_tokens=rnd.choice((4, 8, 12, 16)))))
+        arrivals.append(t)
+    return reqs, arrivals
+
+
+def _drive_load(engine, reqs, arrivals):
+    """Serve ``reqs`` on the incremental submit()/step() interface,
+    releasing each at its arrival step.  Returns (wall seconds, {rid:
+    GenerationResult}, peak number of requests in flight)."""
+    results = {}
+    inflight = peak = 0
+    i, step = 0, 0
+    t0 = time.perf_counter()
+    while len(results) < len(reqs):
+        while i < len(reqs) and arrivals[i] <= step:
+            engine.submit(reqs[i])
+            i += 1
+            inflight += 1
+            peak = max(peak, inflight)
+        for res in engine.step():
+            results[res.rid] = res
+            inflight -= 1
+        step += 1
+    return time.perf_counter() - t0, results, peak
+
+
+def _warm_engine(engine, cfg, prompt_lens):
+    """Carry the jit compiles outside the timed window: one throwaway
+    request per distinct prompt length in the workload (the slots path
+    buckets prefill by padded length, so each bucket is its own compile),
+    then one solo short request so the paged engine's pure-decode C=1
+    shape compiles too.  Warmup prompts are random -- they do NOT
+    pre-populate the paged prefix cache, so the timed run measures
+    cold-cache sharing."""
+    from repro.serving import Request, SamplingParams
+    key = jax.random.PRNGKey(1234)
+    reqs = [Request(f"warm-{n}", np.asarray(jax.random.randint(
+                jax.random.fold_in(key, n), (n,), 0, cfg.vocab_size)),
+                sampling=SamplingParams(max_new_tokens=2))
+            for n in sorted(set(prompt_lens))]
+    engine.run(reqs)
+    engine.run([Request("warm-decode", np.asarray(jax.random.randint(
+        key, (4,), 0, cfg.vocab_size)),
+        sampling=SamplingParams(max_new_tokens=4))])
+
+
+def _pct(xs, q: float) -> float:
+    xs = sorted(xs)
+    return xs[min(len(xs) - 1, int(q * len(xs)))]
+
+
+def load_rows(n_adapters: int = 4, n_requests: int | None = None):
+    """The --load mode: saturating open-loop traffic against the paged
+    engine vs the fixed-slot (v1) engine on the SAME workload + arrival
+    schedule.  Emits per-mode latency/throughput rows plus two gated
+    ratio rows (paged throughput >= slots; paged p99 not collapsing)."""
+    from repro.serving import AdapterPool, ServingEngine, init_adapters
+    if n_requests is None:
+        n_requests = 48 if common.SMOKE else 96
+    model, params, cfg = _build_model("none")
+    adapters = init_adapters(model, n_adapters, jax.random.PRNGKey(7))
+    reqs, arrivals = _load_workload(cfg, n_requests, n_adapters)
+    s_max = max(len(r.prompt) + r.max_new_tokens for r in reqs)
+    tag = f"N{n_adapters}_R{n_requests}"
+    def fresh_engine(mode):
+        pool = AdapterPool(model)
+        for i, tree in enumerate(adapters):
+            pool.register(f"tenant-{i}", tree)
+        # page_size divides SYS_LEN: the shared system prompt is whole
+        # blocks, so sharers adopt it zero-copy instead of CoW-copying a
+        # partial tail block per request
+        kw = {"page_size": 8, "prefill_chunk": 8} if mode == "paged" else {}
+        return ServingEngine(model, params, pool, n_slots=8, s_max=s_max,
+                             mode=mode, **kw)
+
+    for mode in ("paged", "slots"):
+        # one warmup engine per mode carries the compiles (the jit cache
+        # is per model+fn, shared across engines)
+        _warm_engine(fresh_engine(mode), cfg, [len(r.prompt) for r in reqs])
+
+    # the gated numbers are MEDIANS of per-iteration interleaved ratios
+    # (same reasoning as _time_pair: a scheduler spike hits one pair, not
+    # one whole side).  Every iteration gets a FRESH engine -- reusing one
+    # would hand later paged runs a pre-warmed prefix cache.
+    rows, stats = [], {"paged": [], "slots": []}
+    first = {}
+    for _ in range(3):
+        for mode in ("paged", "slots"):
+            wall, results, peak = _drive_load(fresh_engine(mode), reqs,
+                                              arrivals)
+            toks = sum(r.n_generated for r in results.values())
+            lats = [r.latency for r in results.values()]
+            stats[mode].append((toks / wall, _pct(lats, 0.99)))
+            if mode not in first:
+                shared = sum(r.prefix_blocks_shared
+                             for r in results.values())
+                first[mode] = (wall, toks / wall, _pct(lats, 0.5),
+                               _pct(lats, 0.99), peak, shared)
+    for mode in ("paged", "slots"):
+        wall, tok_s, p50, p99, peak, shared = first[mode]
+        rows.append((
+            f"serving/load/{mode}/{tag}", wall * 1e6,
+            f"tok_s={tok_s:.1f};p50_ms={p50 * 1e3:.1f};"
+            f"p99_ms={p99 * 1e3:.1f};peak_inflight={peak};"
+            f"shared_blocks={shared}"))
+    med = lambda xs: sorted(xs)[len(xs) // 2]   # noqa: E731
+    tput = med([p[0] / s[0] for p, s in zip(stats["paged"],
+                                            stats["slots"])])
+    p99r = med([s[1] / p[1] for p, s in zip(stats["paged"],
+                                            stats["slots"])])
+    rows.append((
+        # acceptance gate: paged tok/s at saturation >= fixed-slot
+        f"serving/load/throughput/{tag}/expect_ge_1.0", 0.0,
+        f"ratio={tput:.2f}"))
+    rows.append((
+        # p99 gate: slots_p99 / paged_p99 -- paged must not trade its
+        # throughput win for a latency-tail collapse (threshold below 1.0
+        # on purpose: the tail is the noisiest statistic here)
+        f"serving/load/p99/{tag}/expect_ge_0.7", 0.0,
+        f"ratio={p99r:.2f}"))
+    return rows
+
+
 def fusion_plan_rows():
     """Per-linear serving plan; check_fusion fails the CI smoke run if any
     expected multi path reports 'unfused'."""
@@ -181,4 +337,22 @@ def run():
     rows = decode_rows(n_adapters=4, batch=BATCH)
     if not common.SMOKE:
         rows += scaling_rows()
-    return rows + fusion_plan_rows()
+    return rows + load_rows() + fusion_plan_rows()
+
+
+def main() -> None:
+    """``python -m benchmarks.serving_bench --load [--smoke]``: just the
+    open-loop load generator (the full bench suite lives in run.py)."""
+    import sys
+    args = set(sys.argv[1:])
+    if not args <= {"--load", "--smoke"} or "--load" not in args:
+        print("usage: serving_bench.py --load [--smoke]", file=sys.stderr)
+        sys.exit(2)
+    if "--smoke" in args:
+        common.SMOKE = True
+    print("name,us_per_call,derived")
+    common.emit(load_rows())
+
+
+if __name__ == "__main__":
+    main()

@@ -11,6 +11,7 @@ import jax.numpy as jnp
 from repro.config.base import (AdapterConfig, ModelConfig, QuantConfig,
                                RunConfig)
 from repro.models import build
+from repro.serving import SamplingParams
 from repro.train.serving import generate
 
 
@@ -26,14 +27,15 @@ def main():
     params = model.init(jax.random.PRNGKey(0))
 
     prompts = jax.random.randint(jax.random.PRNGKey(1), (4, 12), 0, 256)
-    out = generate(model, params, prompts, steps=8, temperature=0.0)
+    sampling = SamplingParams(max_new_tokens=8)   # temperature=None: greedy
+    out = generate(model, params, prompts, sampling=sampling)
     assert out.shape == (4, 20)
     print("prompts -> continuations (greedy):")
     for row in out:
         toks = [int(t) for t in row]
         print(" ", toks[:12], "->", toks[12:])
     # determinism check: greedy decode is reproducible
-    out2 = generate(model, params, prompts, steps=8, temperature=0.0)
+    out2 = generate(model, params, prompts, sampling=sampling)
     assert jnp.array_equal(out, out2)
     print("OK")
 

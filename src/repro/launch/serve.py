@@ -39,12 +39,16 @@ from repro.train.serving import generate
 
 
 def _serve_single(model, params, args, cfg):
+    from repro.serving import SamplingParams
     prompts = jax.random.randint(jax.random.PRNGKey(1),
                                  (args.batch, args.prompt_len), 0,
                                  cfg.vocab_size)
     t0 = time.time()
-    out = generate(model, params, prompts, steps=args.gen,
-                   temperature=args.temperature, jit=not args.no_jit)
+    out = generate(model, params, prompts,
+                   sampling=SamplingParams(
+                       max_new_tokens=args.gen,
+                       temperature=args.temperature or None),
+                   jit=not args.no_jit)
     dt = time.time() - t0
     tok_s = args.batch * args.gen / dt
     print(f"[serve] {cfg.name} {args.adapter}/{args.quant}: generated "
@@ -53,8 +57,8 @@ def _serve_single(model, params, args, cfg):
 
 
 def _serve_multi(model, params, args, cfg):
-    from repro.serving import AdapterPool, Request, ServingEngine, \
-        init_adapters
+    from repro.serving import AdapterPool, Request, SamplingParams, \
+        ServingEngine, init_adapters
 
     pool = AdapterPool(model)
     for i, tree in enumerate(init_adapters(model, args.adapters,
@@ -68,6 +72,8 @@ def _serve_multi(model, params, args, cfg):
           f"plan={{{', '.join(f'{k}:{v}' for k, v in sorted(plan.items()))}}}")
 
     key = jax.random.PRNGKey(1)
+    sampling = SamplingParams(max_new_tokens=args.gen,
+                              temperature=args.temperature or None)
     requests = []
     for i in range(args.batch):
         prompt = np.asarray(jax.random.randint(
@@ -75,19 +81,26 @@ def _serve_multi(model, params, args, cfg):
             cfg.vocab_size))
         requests.append(Request(f"req-{i}", prompt,
                                 adapter_id=i % args.adapters,
-                                max_new_tokens=args.gen))
+                                sampling=sampling))
     engine = ServingEngine(model, params, pool, n_slots=args.slots
-                           or args.batch, temperature=args.temperature,
-                           jit=not args.no_jit)
+                           or args.batch, jit=not args.no_jit,
+                           mode=args.engine, page_size=args.page_size,
+                           prefill_chunk=args.prefill_chunk)
     t0 = time.time()
-    out = engine.run(requests)
-    dt = time.time() - t0
-    total = sum(len(v) for v in out.values())
-    print(f"[serve] {cfg.name} multi-tenant {args.adapter}/{args.quant}: "
-          f"{len(requests)} requests over {args.adapters} adapters, "
-          f"{total} tokens in {dt:.1f}s ({total / dt:.1f} tok/s batched)")
     for req in requests:
-        print(f"  {req.rid} (adapter {req.adapter_id}): {out[req.rid]}")
+        engine.submit(req)
+    results = engine.drain()
+    dt = time.time() - t0
+    total = sum(r.n_generated for r in results.values())
+    print(f"[serve] {cfg.name} multi-tenant {args.adapter}/{args.quant} "
+          f"({args.engine} engine): {len(requests)} requests over "
+          f"{args.adapters} adapters, {total} tokens in {dt:.1f}s "
+          f"({total / dt:.1f} tok/s batched)")
+    for req in requests:
+        r = results[req.rid]
+        print(f"  {r.rid} (adapter {req.adapter_id}, {r.finish_reason}, "
+              f"ttft {r.ttft * 1e3:.0f}ms, latency {r.latency * 1e3:.0f}ms, "
+              f"{r.prefix_blocks_shared} shared blocks): {r.tokens}")
 
 
 def main(argv=None):
@@ -112,6 +125,15 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--engine", default="paged", choices=["paged", "slots"],
+                    help="multi-tenant data plane: paged KV cache with "
+                         "chunked prefill + prefix sharing (v2, default) "
+                         "or the fixed-slot v1 scheduler")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="KV block size (tokens) for --engine paged")
+    ap.add_argument("--prefill-chunk", type=int, default=32,
+                    help="prompt tokens prefilled per tick per request "
+                         "for --engine paged")
     ap.add_argument("--mesh", default="none",
                     help="'none' | comma axis list (e.g. 'data,model') "
                          "with --mesh-shape: mesh-native serving")

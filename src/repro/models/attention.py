@@ -168,10 +168,18 @@ def attention_apply(base: dict, adapters: dict, x: jnp.ndarray,
                     cache: Optional[dict] = None,
                     cache_index: Optional[jnp.ndarray] = None,
                     collect_cache: bool = False,
-                    constrain=None, adapter_id=None, shard=None
+                    constrain=None, adapter_id=None, shard=None,
+                    block_tables=None
                     ) -> Tuple[jnp.ndarray, Optional[dict]]:
     """x: (B, S, d). If cache is given (decode), S == 1 and the KV cache
     {"k","v": (B, S_max, KV, hd)} is updated at cache_index.
+
+    With ``block_tables`` (serving v2), ``cache`` is instead the *paged*
+    block pool {"k","v": (NB, bs, KV, hd), "pos": (NB, bs)} shared by all
+    requests; ``block_tables`` is (B, NBT) int32 mapping each request's
+    position span ``[i*bs, (i+1)*bs)`` to a physical block. S may be > 1
+    (a prefill chunk); lanes with ``positions < 0`` are padding and route
+    to the reserved null block 0.
 
     Returns (output (B, S, d), new_cache_or_None)."""
     b, s, d = x.shape
@@ -193,7 +201,40 @@ def attention_apply(base: dict, adapters: dict, x: jnp.ndarray,
         k = apply_rope(k, cos, sin)
 
     new_cache = None
-    if cache is not None:
+    if cache is not None and block_tables is not None:
+        # paged decode / chunked prefill: scatter this step's k/v into each
+        # request's blocks (block = table[pos // bs], lane = pos % bs), then
+        # attend over the gather of the whole table. Stored absolute
+        # positions mask invalid lanes, so blocks are exact-length: no
+        # padded-tail invalidation, no length bucketing. Padding lanes
+        # (positions < 0) write to the reserved null block 0.
+        nb, bs = cache["pos"].shape
+        nbt = block_tables.shape[1]
+        valid = positions >= 0                                    # (B, S)
+        blk = jnp.clip(jnp.where(valid, positions, 0) // bs, 0, nbt - 1)
+        phys = jnp.take_along_axis(block_tables, blk, axis=1)     # (B, S)
+        slot = jnp.where(valid, phys * bs + positions % bs, 0)
+        flat = slot.reshape(-1)
+        kf = cache["k"].reshape(nb * bs, kv, hd)
+        vf = cache["v"].reshape(nb * bs, kv, hd)
+        pf = cache["pos"].reshape(nb * bs)
+        kf = kf.at[flat].set(k.reshape(-1, kv, hd).astype(kf.dtype))
+        vf = vf.at[flat].set(v.reshape(-1, kv, hd).astype(vf.dtype))
+        pf = pf.at[flat].set(
+            jnp.where(valid, positions, -1).reshape(-1).astype(jnp.int32))
+        new_cache = {"k": kf.reshape(nb, bs, kv, hd),
+                     "v": vf.reshape(nb, bs, kv, hd),
+                     "pos": pf.reshape(nb, bs)}
+        k_seq = jnp.take(new_cache["k"], block_tables, axis=0)
+        v_seq = jnp.take(new_cache["v"], block_tables, axis=0)
+        p_seq = jnp.take(new_cache["pos"], block_tables, axis=0)
+        out = attention_core(
+            q, k_seq.reshape(b, nbt * bs, kv, hd).astype(q.dtype),
+            v_seq.reshape(b, nbt * bs, kv, hd).astype(q.dtype),
+            positions, p_seq.reshape(b, nbt * bs), causal=True,
+            window=cfg.sliding_window, chunk=cfg.attn_chunk,
+            softcap=cfg.attn_logit_softcap)
+    elif cache is not None:
         # decode: ring-buffer scatter of this step's k/v. For SWA the cache
         # holds only `window` slots (slot = index % window) and the stored
         # absolute positions make masking exact; for full attention the

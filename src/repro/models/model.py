@@ -58,11 +58,12 @@ class Model:
 
     # ------------------------------------------------------------ params --
     def statics(self, mode: str, remat: bool = False,
-                adapter_id=None) -> Statics:
+                adapter_id=None, block_tables=None) -> Statics:
         return Statics(cfg=self.cfg, acfg=self.run.adapter,
                        qcfg=self.run.quant, ep=self.ep,
                        constrain=self.constrain, remat=remat, mode=mode,
-                       adapter_id=adapter_id, shard=self.shard)
+                       adapter_id=adapter_id, shard=self.shard,
+                       block_tables=block_tables)
 
     def init(self, key) -> dict:
         pd = jnp.dtype(self.cfg.param_dtype)
@@ -158,8 +159,13 @@ class Model:
     def decode_step(self, params, batch):
         """batch: {"tokens": (B,1), "positions": (B,1), "cache_index": (B,),
         "caches": {...}, optional "adapter_id": (B,)}.
-        Returns (logits (B,1,V), new_caches)."""
-        st = self.statics("decode", adapter_id=batch.get("adapter_id"))
+        Returns (logits (B,1,V), new_caches).
+
+        Paged serving (v2) passes "block_tables" ((B, NBT) int32) and the
+        shared block pool as "caches"; tokens/positions may then be (B, C)
+        for a prefill chunk, with positions == -1 marking padding lanes."""
+        st = self.statics("decode", adapter_id=batch.get("adapter_id"),
+                          block_tables=batch.get("block_tables"))
         cfg = self.cfg
         if cfg.frontend == "audio_frames":
             raise ValueError("encoder-only model has no decode step")

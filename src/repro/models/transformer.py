@@ -48,6 +48,7 @@ class Statics:
     mode: str = "train"                    # train | prefill | decode
     adapter_id: Optional[Any] = None       # (B,) int32 multi-adapter routing
     shard: Optional[Any] = None            # MeshContext: shard_map'd kernels
+    block_tables: Optional[Any] = None     # (B, NBT) i32 paged-KV tables
 
 
 # ---------------------------------------------------------------------------
@@ -158,7 +159,8 @@ def _apply_layer(st: Statics, idx_in_group: int, base, adapt, x, positions,
             base["attn"], adapt.get("attn", {}), h, positions, cfg, st.acfg,
             st.qcfg, cache=cache, cache_index=cache_index,
             collect_cache=(st.mode == "prefill"), constrain=st.constrain,
-            adapter_id=st.adapter_id, shard=st.shard)
+            adapter_id=st.adapter_id, shard=st.shard,
+            block_tables=st.block_tables)
     else:
         out, new_cache = mamba_mod.mamba_apply(
             base["mamba"], adapt.get("mamba", {}), h, cfg, st.acfg, st.qcfg,

@@ -1,17 +1,26 @@
 """Multi-tenant OFT serving: one frozen (possibly NF4) base, N adapters,
-mixed-adapter batches.
+mixed-adapter batches, paged KV cache with cross-request prefix sharing.
 
+  api       -- the versioned request/response contract (API_VERSION = 2):
+               SamplingParams, Request, GenerationResult
   pool      -- AdapterPool: register N adapters, stack their rotations into
                per-layer r_stack arrays (one Cayley--Neumann build total)
-  scheduler -- Request + slot-based continuous-batching control plane
-  engine    -- ServingEngine: jitted batched decode with per-row adapter
-               routing inside the fused Pallas kernels
+  kv_cache  -- PagedKVCache: block-pool KV storage, per-request block
+               tables, copy-on-write prefix sharing, LRU prefix cache
+  scheduler -- slot-based continuous-batching control plane
+  engine    -- ServingEngine: submit()/step()/drain() (run() compat);
+               chunked prefill + paged decode with per-row adapter routing
+               inside the fused Pallas kernels
 
-See README "Multi-tenant serving" for the data-flow map.
+See README "Serving" for the data-flow map.
 """
+from repro.serving.api import (API_VERSION, FINISH_LENGTH, FINISH_STOP,
+                               GenerationResult, Request, SamplingParams)
 from repro.serving.engine import ServingEngine
+from repro.serving.kv_cache import BlockAllocator, PagedKVCache
 from repro.serving.pool import AdapterPool, init_adapters
-from repro.serving.scheduler import Request, Scheduler
+from repro.serving.scheduler import Scheduler
 
-__all__ = ["AdapterPool", "ServingEngine", "Request", "Scheduler",
-           "init_adapters"]
+__all__ = ["API_VERSION", "AdapterPool", "BlockAllocator", "FINISH_LENGTH",
+           "FINISH_STOP", "GenerationResult", "PagedKVCache", "Request",
+           "SamplingParams", "Scheduler", "ServingEngine", "init_adapters"]

@@ -1,0 +1,116 @@
+"""Serving API v2: the one request/response contract every serving
+consumer speaks -- the paged scheduler, streaming `submit()/step()/drain()`
+callers, the `run()` compatibility wrapper, the load generator, and
+`train/serving.generate()` (a convenience wrapper over a single-request
+engine call).
+
+    SamplingParams   -- how to decode (budget, temperature, stop token)
+    Request          -- rid + prompt + adapter + SamplingParams
+    GenerationResult -- tokens, finish_reason, per-request timing
+
+``Request`` lived in ``repro.serving.scheduler`` through PR 3-5; that
+import path still works but emits a DeprecationWarning (the scheduler is a
+control-plane detail, the API is the contract).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Sequence
+
+import numpy as np
+
+API_VERSION = 2
+
+
+@dataclass(frozen=True)
+class SamplingParams:
+    """How to decode one request.
+
+    ``temperature=None`` defers to the engine-level default (greedy unless
+    the engine was built with ``temperature > 0``)."""
+    max_new_tokens: int = 16
+    temperature: Optional[float] = None
+    eos_id: Optional[int] = None   # stop early on this token (None = never)
+
+    def __post_init__(self):
+        if self.max_new_tokens < 1:
+            raise ValueError("max_new_tokens < 1")
+
+
+class Request:
+    """One generation request against one pooled adapter.
+
+    ``max_new_tokens=`` / ``eos_id=`` keyword arguments are the PR-3
+    spelling; they still work (folded into ``sampling``) but new code
+    should pass ``sampling=SamplingParams(...)``."""
+
+    __slots__ = ("rid", "prompt", "adapter_id", "sampling")
+
+    def __init__(self, rid: str, prompt: Sequence[int], adapter_id: int = 0,
+                 sampling: Optional[SamplingParams] = None,
+                 max_new_tokens: Optional[int] = None,
+                 eos_id: Optional[int] = None):
+        if len(prompt) == 0:
+            raise ValueError(f"request {rid!r}: empty prompt")
+        if sampling is None:
+            sampling = SamplingParams(
+                max_new_tokens=16 if max_new_tokens is None
+                else max_new_tokens,
+                eos_id=eos_id)
+        elif max_new_tokens is not None or eos_id is not None:
+            raise ValueError(
+                f"request {rid!r}: pass either sampling= or the legacy "
+                f"max_new_tokens=/eos_id= kwargs, not both")
+        self.rid = rid
+        self.prompt = prompt
+        self.adapter_id = adapter_id
+        self.sampling = sampling
+
+    # PR-3 call sites read these off the request directly.
+    @property
+    def max_new_tokens(self) -> int:
+        return self.sampling.max_new_tokens
+
+    @property
+    def eos_id(self) -> Optional[int]:
+        return self.sampling.eos_id
+
+    def __repr__(self):
+        return (f"Request(rid={self.rid!r}, len={len(self.prompt)}, "
+                f"adapter_id={self.adapter_id}, sampling={self.sampling})")
+
+
+@dataclass
+class GenerationResult:
+    """What the engine returns per finished request.
+
+    Timestamps are ``time.perf_counter()`` values stamped by the engine,
+    so latencies mix freely with a load generator's own clock:
+
+        ttft    = first_token_at - submitted_at   (queueing + prefill)
+        latency = finished_at - submitted_at
+    """
+    rid: str
+    tokens: np.ndarray             # generated ids, prompt excluded
+    finish_reason: str             # "length" | "stop"
+    prompt_len: int
+    submitted_at: float = 0.0
+    first_token_at: float = 0.0
+    finished_at: float = 0.0
+    prefix_blocks_shared: int = 0  # KV blocks reused from the prefix cache
+
+    @property
+    def n_generated(self) -> int:
+        return int(len(self.tokens))
+
+    @property
+    def ttft(self) -> float:
+        return self.first_token_at - self.submitted_at
+
+    @property
+    def latency(self) -> float:
+        return self.finished_at - self.submitted_at
+
+
+FINISH_LENGTH = "length"
+FINISH_STOP = "stop"

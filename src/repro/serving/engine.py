@@ -1,39 +1,50 @@
-"""Multi-tenant serving engine: continuous batching over one frozen base
-and an adapter pool, with per-request rotation routing in the fused Pallas
-kernels.
+"""Serving engine v2: paged KV cache + chunked prefill + prefix sharing
+behind the versioned submit()/step()/drain() API (repro.serving.api).
 
-Data plane per tick:
+Two data planes, one contract:
 
-  admit   -- free slots take pending requests; each new request is
-             prefilled (batch-1 forward through the SAME multi-routing
-             kernels, adapter_id = its tenant) and its caches scattered
-             into the slot's region of the batched decode cache.  The
-             prefill logits directly yield the first generated token -- the
-             prompt is never forwarded twice.
-  decode  -- ONE jitted decode step advances every active slot: tokens
-             (n_slots, 1), per-slot positions/cache_index, and the per-slot
-             adapter_id vector that the multi kernels use to gather each
-             row's rotation blocks.  Rows of free slots compute garbage and
-             are ignored (row independence is what the kernel tests pin
-             down, bitwise).
-  evict   -- finished requests free their slot; the next pending request
-             takes it on the following tick.
+``mode="paged"`` (default) -- the KV cache is a shared pool of fixed-size
+blocks (repro.serving.kv_cache); each slot's sequence lives in the blocks
+its table points at.  Per tick:
+
+  admit    -- free slots take pending requests, gated by block capacity
+              (worst-case blocks of every active request always fit, so
+              allocation never fails mid-flight).  Admission walks the
+              prefix index: full blocks matching an earlier request's
+              prompt are adopted zero-copy, a matching partial tail block
+              is copied (eager copy-on-write) -- a shared system prompt
+              is prefilled once, ever.
+  prefill  -- ONE jitted multi-token forward advances every prefilling
+              slot by one prompt chunk (positions=-1 padding routes to
+              the null block), interleaved with decode so a long prompt
+              never stalls the batch.  Blocks are exact-length: no
+              length bucketing, no padded-tail invalidation.
+  decode   -- ONE jitted step advances every decoding slot (S=1 chunk of
+              the same paged path: scatter by table, gather by table,
+              mask by stored absolute positions).
+  finish   -- eviction frees the request's blocks; blocks indexed by the
+              prefix cache stay resident (LRU-evicted under pressure).
+
+``mode="slots"`` -- the PR-3..5 fixed-slot data plane, kept verbatim
+(batch-1 bucketed prefill + `_invalidate_tail` + slot-scattered
+rectangular caches) as the regression baseline the paged path must match
+token-for-token, and as the `serving_bench --load` comparison point.
 
 Greedy decoding is the bit-exactness contract: a mixed-adapter batch
 produces token-for-token what N separate single-adapter runs produce
-(tests/test_serving_multi.py asserts it).  temperature > 0 samples on the
-host from the returned logits (per-request fold of the engine key).
+(tests/test_serving_multi.py, tests/test_serving_paged.py assert it).
+temperature > 0 samples on the host from the returned logits
+(per-request fold of the engine key).
 
 Mesh-native serving (ISSUE-5): when the model was built with a
-``MeshContext`` (repro.distributed.sharding.make_shard_context), the engine
-shards the slot batch over the `data` axes and the pool's per-layer
-``r_stack`` over `model` (via the method's ``shard_specs`` hook, blocks
-co-sharded with the weight), and the batched decode runs the multi-routing
-kernels per-shard inside shard_map -- greedy decode stays token-for-token
+``MeshContext``, decode inputs are sharded over the `data` axes, the
+pool's per-layer ``r_stack`` over `model` (method ``shard_specs``), and
+the paged block pool is replicated -- greedy decode stays token-for-token
 identical to the single-device engine (tests/test_sharded_fused.py).
 """
 from __future__ import annotations
 
+import time
 from typing import Dict, List, Optional, Sequence
 
 import jax
@@ -42,15 +53,19 @@ import numpy as np
 
 from repro import methods
 from repro.models.model import Model
+from repro.serving.api import (FINISH_LENGTH, FINISH_STOP, GenerationResult,
+                               Request)
+from repro.serving.kv_cache import PagedKVCache
 from repro.serving.pool import AdapterPool
-from repro.serving.scheduler import Request, Scheduler
+from repro.serving.scheduler import Scheduler
 from repro.train import serving as base_serving
 
 
 def _invalidate_tail(model: Model, caches: dict, true_len: int) -> dict:
-    """Mark attention cache entries at positions >= true_len invalid
-    (pos=-1): the k/v written there by a length-bucketed prefill's padding
-    rows must never be attended (decode overwrites slot true_len first)."""
+    """(slots mode only) Mark attention cache entries at positions >=
+    true_len invalid (pos=-1): the k/v written there by a length-bucketed
+    prefill's padding rows must never be attended.  The paged path needs
+    none of this -- blocks are exact-length by construction."""
     from repro.models import transformer as tfm
 
     def fix(p, entry):
@@ -76,17 +91,30 @@ def _scatter_slot(caches: dict, slot_caches: dict, slot: int) -> dict:
 
 
 class ServingEngine:
-    """Slot-batched decode over a pooled multi-adapter model.
+    """Continuous-batching engine over one frozen base and (optionally)
+    an adapter pool, speaking the v2 request/response API:
 
-    engine = ServingEngine(model, params, pool, n_slots=8)
-    outputs = engine.run([Request("r0", prompt, adapter_id=2, ...), ...])
-    # outputs: {rid: np.ndarray of generated token ids}
+        engine = ServingEngine(model, params, pool, n_slots=8)
+        engine.submit(Request("r0", prompt, adapter_id=2,
+                              sampling=SamplingParams(max_new_tokens=32)))
+        finished = engine.step()      # one scheduler tick
+        results = engine.drain()      # {rid: GenerationResult}
+
+    ``run(requests) -> {rid: np.ndarray}`` is the v1-compatible wrapper.
+    ``pool=None`` serves a single adapter tree (params as given, no
+    per-row routing) -- that is what ``train.serving.generate`` wraps.
     """
 
-    def __init__(self, model: Model, params: dict, pool: AdapterPool,
+    def __init__(self, model: Model, params: dict,
+                 pool: Optional[AdapterPool] = None,
                  n_slots: int = 4, s_max: Optional[int] = None,
-                 temperature: float = 0.0, jit: bool = True,
-                 key=None):
+                 temperature: float = 0.0, jit: bool = True, key=None,
+                 mode: str = "paged", page_size: int = 16,
+                 num_blocks: Optional[int] = None, prefill_chunk: int = 32):
+        if mode not in ("paged", "slots"):
+            raise ValueError(f"mode must be 'paged' or 'slots', got {mode!r}")
+        if prefill_chunk < 1:
+            raise ValueError("prefill_chunk must be >= 1")
         self.model = model
         self.pool = pool
         self._base_params = params
@@ -95,23 +123,44 @@ class ServingEngine:
         self.temperature = temperature
         self.jit = jit
         self.key = key if key is not None else jax.random.PRNGKey(0)
+        self.mode = mode
+        self.page_size = page_size
+        self.num_blocks = num_blocks
+        self.prefill_chunk = prefill_chunk
         self.shard = model.shard     # MeshContext or None (off-mesh)
+        self._sched = Scheduler(n_slots)
+        self._step_fn = self._make_step()
         self._decode = self._make_decode()
+        # per-request bookkeeping, keyed by rid while unreaped
+        self._gen: Dict[str, List[int]] = {}
+        self._meta: Dict[str, dict] = {}
+        # lazily-built data plane (needs the capacity, known at first step)
+        self._state: Optional[dict] = None
+        self._resolved: Optional[dict] = None
+        self._resolved_key: Optional[int] = None
 
+    # -------------------------------------------------------------- params --
     @property
     def params(self) -> dict:
         """Serving tree resolved against the pool's CURRENT stack, so
         tenants registered after engine construction are served (the pool
         caches the built stack; registration invalidates it).  On-mesh,
         the pooled tree is placed per the method's ``shard_specs`` --
-        every ``r_stack`` block-sharded over `model` with its weight."""
-        p = self.pool.serving_params(self._base_params)
+        every ``r_stack`` block-sharded over `model` with its weight.
+        ``pool=None``: the constructor params, as given."""
+        if self.pool is None:
+            return self._base_params
+        pooled = self.pool.pooled_adapter
+        if self._resolved is not None and self._resolved_key == id(pooled):
+            return self._resolved
+        p = {"base": self._base_params["base"], "adapter": pooled}
         if self.shard is not None:
             from repro.distributed.sharding import fit_tree
             method = methods.get(self.pool.acfg.kind)
             specs = method.shard_specs(p["adapter"], self.shard)
             p = {"base": p["base"],
                  "adapter": fit_tree(p["adapter"], specs, self.shard.mesh)}
+        self._resolved, self._resolved_key = p, id(pooled)
         return p
 
     def _place_batch(self, x):
@@ -125,27 +174,135 @@ class ServingEngine:
                              *([None] * (np.ndim(x) - 1)))
         return fit_placed(jnp.asarray(x), spec, self.shard.mesh)
 
-    # ------------------------------------------------------------- decode --
-    def _make_decode(self):
+    # ---------------------------------------------------------------- intake --
+    def submit(self, request: Request) -> None:
+        """Queue one request; it is admitted on a later ``step()`` when a
+        slot and (paged mode) enough KV blocks are free."""
+        rid = request.rid
+        if rid in self._gen:
+            raise ValueError(f"duplicate request ids: {[rid]}")
+        if self.pool is not None:
+            n_pool = self.pool.n_adapters
+            if not 0 <= request.adapter_id < n_pool:
+                raise ValueError(
+                    f"request {rid!r}: adapter_id {request.adapter_id} "
+                    f"outside the pool (n_adapters={n_pool}) -- the kernels "
+                    f"would silently rotate its rows to zero")
+        elif request.adapter_id != 0:
+            raise ValueError(
+                f"request {rid!r}: adapter_id {request.adapter_id} without "
+                f"an adapter pool (single-adapter engine serves id 0 only)")
+        need = len(request.prompt) + request.max_new_tokens
+        if self._state is not None and need > self._state["s_cap"] \
+                and self._sched.active_slots():
+            raise ValueError(
+                f"request {rid!r} needs {need} positions but the engine "
+                f"was sized for {self._state['s_cap']} and is mid-flight; "
+                f"construct the engine with s_max={need} (or larger)")
+        self._gen[rid] = []
+        self._meta[rid] = {"req": request,
+                           "submitted": time.perf_counter(),
+                           "first": None, "shared": 0, "blocks": 0}
+        self._sched.submit(request)
+
+    def has_work(self) -> bool:
+        return self._sched.has_work()
+
+    # ----------------------------------------------------------- data plane --
+    def _required_cap(self) -> int:
+        need = [m["req"] for m in self._meta.values()]
+        return max((len(r.prompt) + r.max_new_tokens for r in need),
+                   default=0)
+
+    def _ensure_state(self) -> None:
+        required = self._required_cap()
+        if self._state is not None:
+            if required <= self._state["s_cap"]:
+                return
+            # grow: only safe between flights (nothing holds cache state)
+            assert not self._sched.active_slots(), \
+                "submit() should have rejected an over-size mid-flight request"
+            self._state = None
+        # slots mode honors an explicit s_max verbatim (v1 semantics); the
+        # paged table width must cover the longest request regardless.
+        s_cap = (self.s_max or required) if self.mode == "slots" \
+            else max(self.s_max or 0, required)
+        st: dict = {"s_cap": s_cap}
+        if self.mode == "paged":
+            bps = -(-s_cap // self.page_size)
+            nb = self.num_blocks or (self.n_slots * bps + bps + 1)
+            kv = PagedKVCache(self.model, num_blocks=nb,
+                              block_size=self.page_size,
+                              max_seq_len=bps * self.page_size)
+            if self.shard is not None:
+                # the block pool is replicated over the mesh (tables and
+                # tokens are the data-sharded inputs)
+                from repro.distributed.sharding import fit_placed
+                from jax.sharding import PartitionSpec as P
+                kv.pool = jax.tree_util.tree_map(
+                    lambda a: fit_placed(a, P(), self.shard.mesh), kv.pool)
+            st["kv"] = kv
+            st["committed"] = 0
+            st["prefill"] = {}       # slot -> next prompt position to write
+        else:
+            caches = self.model.make_caches(self.n_slots, s_cap)
+            if self.shard is not None:
+                from repro.distributed.sharding import fit_tree
+                caches = fit_tree(
+                    caches, self.model.cache_specs(self.shard.rules,
+                                                   self.n_slots, s_cap),
+                    self.shard.mesh)
+            st["caches"] = caches
+        st["tok"] = np.zeros((self.n_slots, 1), np.int32)
+        st["pos"] = np.full((self.n_slots,), -1, np.int32)
+        st["aid"] = np.zeros((self.n_slots,), np.int32)
+        self._state = st
+
+    # ------------------------------------------------------------- forwards --
+    def _make_step(self):
+        """One jitted forward for BOTH paged prefill chunks and paged
+        decode (S=1 is just the smallest chunk): scatter k/v by block
+        table, gather by table, mask by stored positions."""
         model = self.model
+        routed = self.pool is not None
+
+        def step(params, pool, tok, pos, tables, aid):
+            batch = {"tokens": tok, "positions": pos,
+                     "cache_index": pos[:, 0],
+                     "caches": pool, "block_tables": tables}
+            if routed:
+                batch["adapter_id"] = aid
+            logits, pool = model.decode_step(params, batch)
+            greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return greedy, logits, pool
+
+        name = "paged_step_multi" if routed else "paged_step"
+        return base_serving.model_jit_fn(model, name, step, jit=self.jit)
+
+    def _make_decode(self):
+        """Slots-mode batched decode (the v1 data plane)."""
+        model = self.model
+        routed = self.pool is not None
 
         def step(params, caches, tok, pos, aid):
             batch = {"tokens": tok,
                      "positions": pos[:, None],
                      "cache_index": pos,
-                     "caches": caches,
-                     "adapter_id": aid}
+                     "caches": caches}
+            if routed:
+                batch["adapter_id"] = aid
             logits, caches = model.decode_step(params, batch)
             logits = logits[:, 0]                       # (n_slots, V)
             greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
             return greedy, logits, caches
 
-        return base_serving.model_jit_fn(model, "serving_decode", step,
-                                         jit=self.jit)
+        name = "serving_decode" if routed else "serving_decode_single"
+        return base_serving.model_jit_fn(model, name, step, jit=self.jit)
 
-    def _prefill(self, req: Request, s_max: int, params: dict):
-        """Batch-1 prefill through the multi kernels (adapter_id routes the
-        single row); returns (last-real-token logits, slot caches at s_max).
+    def _prefill_slots(self, req: Request, s_max: int, params: dict):
+        """(slots mode) Batch-1 prefill through the multi kernels
+        (adapter_id routes the single row); returns (last-real-token
+        logits, slot caches at s_max).
 
         The prompt is zero-padded to a multiple of 8 before the jitted
         prefill so heterogeneous traffic compiles O(s_max/8) prefill
@@ -158,95 +315,246 @@ class ServingEngine:
         prompt = jnp.asarray(req.prompt, jnp.int32)
         if pad_to > true_len:
             prompt = jnp.pad(prompt, (0, pad_to - true_len))
-        aid = jnp.full((1,), req.adapter_id, jnp.int32)
+        batch = {"tokens": prompt[None, :]}
+        if self.pool is not None:
+            batch["adapter_id"] = jnp.full((1,), req.adapter_id, jnp.int32)
         logits, caches = base_serving.prefill_fn(self.model, jit=self.jit)(
-            params, {"tokens": prompt[None, :], "adapter_id": aid})
+            params, batch)
         caches = base_serving.pad_caches(self.model, caches, s_max)
         if pad_to > true_len:
             caches = _invalidate_tail(self.model, caches, true_len)
         return logits[0, true_len - 1], caches
 
-    def _sample(self, logits, rid: str, step: int) -> int:
-        if self.temperature <= 0:
+    # -------------------------------------------------------------- sampling --
+    def _sample(self, logits, req: Request, step: int) -> int:
+        t = req.sampling.temperature
+        if t is None:
+            t = self.temperature
+        if t <= 0:
             return int(jnp.argmax(logits, axis=-1))
         import zlib
         k = jax.random.fold_in(jax.random.fold_in(
-            self.key, zlib.crc32(rid.encode()) % (2 ** 31)), step)
+            self.key, zlib.crc32(req.rid.encode()) % (2 ** 31)), step)
         return int(jax.random.categorical(
-            k, logits.astype(jnp.float32) / self.temperature, axis=-1))
+            k, logits.astype(jnp.float32) / t, axis=-1))
 
-    # ---------------------------------------------------------------- run --
+    def _greedy_all(self, req: Request) -> bool:
+        t = req.sampling.temperature
+        return (self.temperature if t is None else t) <= 0
+
+    # ------------------------------------------------------------ lifecycle --
+    def _record(self, slot: int, req: Request, token: int,
+                finished: List[GenerationResult]) -> None:
+        meta = self._meta[req.rid]
+        now = time.perf_counter()
+        if meta["first"] is None:
+            meta["first"] = now
+        self._gen[req.rid].append(token)
+        if self._sched.record_token(slot, token):
+            self._finish(slot, req, token, finished, now)
+
+    def _finish(self, slot: int, req: Request, last_token: int,
+                finished: List[GenerationResult], now: float) -> None:
+        meta = self._meta.pop(req.rid)
+        tokens = np.asarray(self._gen.pop(req.rid), np.int32)
+        reason = FINISH_STOP if (req.eos_id is not None
+                                 and last_token == req.eos_id) \
+            else FINISH_LENGTH
+        self._sched.evict(slot)
+        st = self._state
+        st["pos"][slot] = -1
+        if self.mode == "paged":
+            st["kv"].free(req.rid)
+            st["committed"] -= meta["blocks"]
+            st["prefill"].pop(slot, None)
+        finished.append(GenerationResult(
+            rid=req.rid, tokens=tokens, finish_reason=reason,
+            prompt_len=len(req.prompt), submitted_at=meta["submitted"],
+            first_token_at=meta["first"], finished_at=now,
+            prefix_blocks_shared=meta["shared"]))
+
+    # ----------------------------------------------------------------- step --
+    def step(self) -> List[GenerationResult]:
+        """One scheduler tick: admit what fits, advance every prefilling
+        slot by one prompt chunk, advance every decoding slot by one
+        token.  Returns the requests that finished this tick."""
+        finished: List[GenerationResult] = []
+        if not self._sched.has_work():
+            return finished
+        self._ensure_state()
+        params = self.params
+        if self.mode == "paged":
+            self._tick_paged(params, finished)
+        else:
+            self._tick_slots(params, finished)
+        return finished
+
+    def drain(self) -> Dict[str, GenerationResult]:
+        """Step until idle; returns {rid: GenerationResult} for everything
+        that finished along the way."""
+        out: Dict[str, GenerationResult] = {}
+        while self._sched.has_work():
+            for res in self.step():
+                out[res.rid] = res
+        return out
+
     def run(self, requests: Sequence[Request]) -> Dict[str, np.ndarray]:
-        """Serve all requests to completion with continuous batching;
-        returns {rid: generated token ids} (prompt excluded)."""
+        """v1-compatible batch interface: serve all requests to
+        completion; returns {rid: generated token ids} (prompt excluded).
+        New code should use submit()/step()/drain() and GenerationResult."""
         if not requests:
             return {}
         rids = [r.rid for r in requests]
         if len(set(rids)) != len(rids):
             dup = sorted({r for r in rids if rids.count(r) > 1})
             raise ValueError(f"duplicate request ids: {dup}")
-        n_pool = self.pool.n_adapters
         for r in requests:
-            if not 0 <= r.adapter_id < n_pool:
+            self.submit(r)
+        results = self.drain()
+        return {rid: results[rid].tokens for rid in rids}
+
+    # ------------------------------------------------------------ paged tick --
+    def _tick_paged(self, params, finished: List[GenerationResult]) -> None:
+        st = self._state
+        kv: PagedKVCache = st["kv"]
+
+        def can_admit(req: Request) -> bool:
+            # reserves on True: the scheduler admits exactly the requests
+            # this returns True for, one call each, so committing here
+            # keeps the worst-case block count honest WITHIN one tick's
+            # admission sweep (not just across ticks).
+            need = kv.blocks_for(len(req.prompt) + req.max_new_tokens)
+            if need > kv.capacity_blocks:
                 raise ValueError(
-                    f"request {r.rid!r}: adapter_id {r.adapter_id} outside "
-                    f"the pool (n_adapters={n_pool}) -- the kernels would "
-                    f"silently rotate its rows to zero")
-        sched = Scheduler(self.n_slots)
-        sched.submit_all(requests)
-        s_max = self.s_max or max(len(r.prompt) + r.max_new_tokens
-                                  for r in requests)
-        params = self.params      # resolve the pool stack once per run
+                    f"request {req.rid!r} alone needs {need} KV blocks but "
+                    f"the pool holds {kv.capacity_blocks}; raise num_blocks "
+                    f"or s_max")
+            if st["committed"] + need > kv.capacity_blocks:
+                return False
+            st["committed"] += need
+            return True
 
-        caches = self.model.make_caches(self.n_slots, s_max)
-        if self.shard is not None:
-            # decode caches: slot dim over `data` (and, when enabled and
-            # divisible, the cache seq dim over `model` -- split-KV decode)
-            from repro.distributed.sharding import fit_tree
-            caches = fit_tree(
-                caches, self.model.cache_specs(self.shard.rules,
-                                               self.n_slots, s_max),
-                self.shard.mesh)
-        tok = np.zeros((self.n_slots, 1), np.int32)
-        pos = np.zeros((self.n_slots,), np.int32)
-        aid = np.zeros((self.n_slots,), np.int32)
-        out: Dict[str, List[int]] = {r.rid: [] for r in requests}
+        for slot, req in self._sched.admit(can_admit):
+            start, shared = kv.begin(req.rid, req.prompt, req.adapter_id)
+            need = kv.blocks_for(len(req.prompt) + req.max_new_tokens)
+            meta = self._meta[req.rid]
+            meta["shared"] = shared
+            meta["blocks"] = need
+            st["aid"][slot] = req.adapter_id
+            st["pos"][slot] = -1          # not decoding until prefill done
+            st["prefill"][slot] = start
 
-        while sched.has_work():
-            # ---- admission: prefill into free slots -----------------------
-            for slot, req in sched.admit():
-                logits_last, slot_caches = self._prefill(req, s_max, params)
-                caches = _scatter_slot(caches, slot_caches, slot)
-                first = self._sample(logits_last, req.rid, 0)
-                out[req.rid].append(first)
-                tok[slot, 0] = first
-                pos[slot] = len(req.prompt)
-                aid[slot] = req.adapter_id
-                if sched.record_token(slot, first):
-                    sched.evict(slot)
+        def slot_rids():
+            rids: List[Optional[str]] = [None] * self.n_slots
+            for s in self._sched.active_slots():
+                rids[s] = self._sched.slot_request(s).rid
+            return rids
 
-            active = sched.active_slots()
-            if not active:
-                continue     # everything admitted this tick already finished
-
-            # ---- one batched decode tick for every active slot ------------
-            greedy, logits, caches = self._decode(
-                params, caches, self._place_batch(tok),
-                self._place_batch(pos), self._place_batch(aid))
-            greedy_np = np.asarray(greedy)
-            logits_np = None if self.temperature <= 0 else np.asarray(logits)
-            for slot in active:
-                req = sched.slot_request(slot)
-                step_i = len(out[req.rid])
-                if self.temperature <= 0:
-                    token = int(greedy_np[slot])
+        # ---- ONE unified forward per tick: every prefilling slot advances
+        # one prompt chunk and every decoding slot one token, in the SAME
+        # batch (decode rows ride lane 0 of the chunk, lanes 1..C-1 are -1
+        # padding into the null block).  Mixed prefill/decode ticks cost
+        # one jitted call, not two -- under churny open-loop traffic most
+        # ticks are mixed, and this is where the paged engine's saturation
+        # throughput comes from.  Pure-decode ticks shrink to C=1.
+        decoding = [s for s in self._sched.active_slots()
+                    if s not in st["prefill"]]
+        if not st["prefill"] and not decoding:
+            return
+        C = self.prefill_chunk if st["prefill"] else 1
+        tok = np.zeros((self.n_slots, C), np.int32)
+        pos = np.full((self.n_slots, C), -1, np.int32)
+        spans = {}
+        for slot, done in st["prefill"].items():
+            req = self._sched.slot_request(slot)
+            c = min(C, len(req.prompt) - done)
+            tok[slot, :c] = req.prompt[done:done + c]
+            pos[slot, :c] = np.arange(done, done + c)
+            kv.ensure_capacity(req.rid, done + c - 1)
+            spans[slot] = (req, done, c)
+        for slot in decoding:
+            tok[slot, 0] = st["tok"][slot, 0]
+            pos[slot, 0] = st["pos"][slot]
+            kv.ensure_capacity(self._sched.slot_request(slot).rid,
+                               int(st["pos"][slot]))
+        kv.flush()
+        tables = kv.table_rows(slot_rids())
+        greedy, logits, kv.pool = self._step_fn(
+            params, kv.pool, self._place_batch(tok),
+            self._place_batch(pos), self._place_batch(tables),
+            self._place_batch(st["aid"]))
+        greedy_np = np.asarray(greedy)
+        logits_np = None
+        for slot, (req, done, c) in spans.items():
+            if done + c >= len(req.prompt):
+                del st["prefill"][slot]
+                kv.commit_prefix(req.rid)
+                if self._greedy_all(req):
+                    first = int(greedy_np[slot, c - 1])
                 else:
-                    token = self._sample(jnp.asarray(logits_np[slot]),
-                                         req.rid, step_i)
-                out[req.rid].append(token)
-                tok[slot, 0] = token
-                pos[slot] += 1
-                if sched.record_token(slot, token):
-                    sched.evict(slot)
+                    if logits_np is None:
+                        logits_np = np.asarray(logits)
+                    first = self._sample(
+                        jnp.asarray(logits_np[slot, c - 1]), req, 0)
+                st["tok"][slot, 0] = first
+                st["pos"][slot] = len(req.prompt)
+                self._record(slot, req, first, finished)
+            else:
+                st["prefill"][slot] = done + c
+        for slot in decoding:
+            req = self._sched.slot_request(slot)
+            if self._greedy_all(req):
+                token = int(greedy_np[slot, 0])
+            else:
+                if logits_np is None:
+                    logits_np = np.asarray(logits)
+                token = self._sample(jnp.asarray(logits_np[slot, 0]), req,
+                                     len(self._gen[req.rid]))
+            st["pos"][slot] += 1
+            self._record(slot, req, token, finished)
+            if req.rid in self._gen:       # still running
+                st["tok"][slot, 0] = token
 
-        return {rid: np.asarray(toks, np.int32) for rid, toks in out.items()}
+    # ------------------------------------------------------------ slots tick --
+    def _tick_slots(self, params, finished: List[GenerationResult]) -> None:
+        st = self._state
+        decode = getattr(self, "_decode", None)
+        if decode is None:
+            decode = self._decode = self._make_decode()
+
+        for slot, req in self._sched.admit():
+            logits_last, slot_caches = self._prefill_slots(
+                req, st["s_cap"], params)
+            st["caches"] = _scatter_slot(st["caches"], slot_caches, slot)
+            first = self._sample(logits_last, req, 0)
+            st["tok"][slot, 0] = first
+            st["pos"][slot] = len(req.prompt)
+            st["aid"][slot] = req.adapter_id
+            self._record(slot, req, first, finished)
+
+        active = self._sched.active_slots()
+        if not active:
+            return
+
+        # rows of free slots compute garbage and are ignored (row
+        # independence is what the kernel tests pin down, bitwise); their
+        # pos rides at 0, not -1, exactly as in the v1 engine.
+        pos = np.maximum(st["pos"], 0)
+        greedy, logits, st["caches"] = decode(
+            params, st["caches"], self._place_batch(st["tok"]),
+            self._place_batch(pos), self._place_batch(st["aid"]))
+        greedy_np = np.asarray(greedy)
+        logits_np = None
+        for slot in active:
+            req = self._sched.slot_request(slot)
+            if self._greedy_all(req):
+                token = int(greedy_np[slot])
+            else:
+                if logits_np is None:
+                    logits_np = np.asarray(logits)
+                token = self._sample(jnp.asarray(logits_np[slot]), req,
+                                     len(self._gen[req.rid]))
+            st["pos"][slot] += 1
+            self._record(slot, req, token, finished)
+            if req.rid in self._gen:
+                st["tok"][slot, 0] = token

@@ -1,0 +1,456 @@
+"""Paged KV cache for serving v2 (vLLM-style PagedAttention layout).
+
+The decode cache stops being per-slot rectangles ``(B, s_max, KV, hd)``
+and becomes one shared pool of fixed-size blocks per layer group::
+
+    pool["pos_p"]["k"]   : (n_layers, num_blocks, block_size, KV, hd)
+    pool["pos_p"]["v"]   : same
+    pool["pos_p"]["pos"] : (n_layers, num_blocks, block_size)  int32, -1 invalid
+
+Each request owns a *block table* -- a list of physical block ids, one per
+``block_size`` span of its sequence.  Attention gathers the request's
+blocks by table and masks by the stored absolute positions, so blocks are
+exact-length: no padded-tail invalidation, no length bucketing.
+
+Block 0 is the reserved *null block*: padded lanes in a chunk (and table
+slots past a request's length) route their writes/gathers there, which
+keeps every jit shape static.
+
+Prefix sharing keys full blocks by the exact token chain that produced
+them (nested tuples, so no hash collisions): ``key_i = (key_{i-1},
+tokens_i)`` with root ``()``.  A new request walks the chain and adopts
+matching full blocks zero-copy (refcounted -- they are never written
+again, since writes only happen at positions >= the writer's own prompt
+end).  A partially-filled prompt-tail block is shared by *copy*: the
+copy-on-write happens eagerly at admission, keeping only the matched
+prefix of the block valid, so the sharer can diverge freely.
+
+Blocks whose refcount drops to zero but that are still indexed stay
+resident as *cached* (evictable) blocks; the allocator reclaims them LRU
+when the free list runs dry.  Freshly (re)allocated blocks carry stale
+``pos`` lanes from their previous life, so allocation marks them dirty
+and ``flush()`` resets those lanes on device before the next forward.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict, deque
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+import jax
+
+from repro.models import transformer as tfm
+from repro.models.model import Model
+
+NULL_BLOCK = 0
+
+
+@jax.jit
+def _copy_block_fn(pool, src, dst, keep):
+    """Copy block ``src`` -> ``dst`` in every layer group, keeping only
+    ``pos`` lanes ``< keep`` valid.  src/dst/keep are TRACED scalars: a
+    Python-int block id would bake into the jaxpr as a constant and every
+    distinct id would trigger its own XLA compile (measured: dominates an
+    admission-heavy serving tick)."""
+    out = {}
+    for gkey, e in pool.items():
+        lane = jnp.arange(e["pos"].shape[-1]) < keep
+        out[gkey] = {
+            "k": e["k"].at[:, dst].set(e["k"][:, src]),
+            "v": e["v"].at[:, dst].set(e["v"][:, src]),
+            "pos": e["pos"].at[:, dst].set(
+                jnp.where(lane, e["pos"][:, src], -1)),
+        }
+    return out
+
+
+@jax.jit
+def _flush_fn(pool, stale):
+    """Invalidate ``pos`` lanes of every block flagged in the fixed-shape
+    ``(num_blocks,)`` bool mask (one compile regardless of how many
+    blocks were recycled this tick)."""
+    return {gkey: {"k": e["k"], "v": e["v"],
+                   "pos": jnp.where(stale[None, :, None], -1, e["pos"])}
+            for gkey, e in pool.items()}
+
+
+class BlockAllocator:
+    """Refcounted free-list allocator over blocks ``1..num_blocks-1``.
+
+    Pure control plane (no device arrays) so the unit/property tests can
+    hammer it.  The cached/evictable tier lives in :class:`PagedKVCache`;
+    the allocator only distinguishes *free* from *referenced*."""
+
+    def __init__(self, num_blocks: int):
+        if num_blocks < 2:
+            raise ValueError("num_blocks must be >= 2 (block 0 is reserved)")
+        self.num_blocks = num_blocks
+        self._free = deque(range(1, num_blocks))
+        self._ref: Dict[int, int] = {}
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_used(self) -> int:
+        return len(self._ref)
+
+    def ref(self, bid: int) -> int:
+        return self._ref.get(bid, 0)
+
+    def alloc(self) -> Optional[int]:
+        if not self._free:
+            return None
+        bid = self._free.popleft()
+        self._ref[bid] = 1
+        return bid
+
+    def incref(self, bid: int) -> None:
+        if bid not in self._ref:
+            raise ValueError(f"incref on unallocated block {bid}")
+        self._ref[bid] += 1
+
+    def decref(self, bid: int) -> bool:
+        """Drop one reference; True when the block just became
+        unreferenced (caller decides: cache it or ``release`` it)."""
+        if bid not in self._ref:
+            raise ValueError(f"double free of block {bid}")
+        self._ref[bid] -= 1
+        if self._ref[bid] == 0:
+            del self._ref[bid]
+            return True
+        return False
+
+    def resurrect(self, bid: int) -> None:
+        """Re-reference an unreferenced-but-resident (cached) block."""
+        if bid in self._ref or bid in self._free:
+            raise ValueError(f"block {bid} is not cached")
+        self._ref[bid] = 1
+
+    def release(self, bid: int) -> None:
+        """Return an unreferenced block to the free list."""
+        if bid in self._ref:
+            raise ValueError(f"release of referenced block {bid}")
+        if bid in self._free:
+            raise ValueError(f"double release of block {bid}")
+        self._free.append(bid)
+
+
+def _chain_keys(tokens: Sequence[int], block_size: int, namespace=0):
+    """Chain keys for every *full* block of ``tokens``:
+    ``[(key_prefix, block_tokens), ...]`` with root key ``(namespace,)``.
+
+    The namespace is the adapter id: k/v projections are adapter-rotated,
+    so identical prompts under different adapters produce different cache
+    contents and must never share blocks."""
+    out = []
+    key: Tuple = (namespace,)
+    for i in range(len(tokens) // block_size):
+        tok = tuple(int(t) for t in tokens[i * block_size:(i + 1) * block_size])
+        key = (key, tok)
+        out.append(key)
+    return out
+
+
+class PagedKVCache:
+    """Device block pool + per-request block tables + prefix index.
+
+    Control-plane methods (``begin``/``ensure_capacity``/``commit_prefix``
+    /``free``) run on the host per scheduler tick; the only device ops are
+    ``flush()`` (reset stale ``pos`` lanes of recycled blocks) and the
+    eager partial-block copy in ``begin``.  The engine threads ``.pool``
+    through its jitted forwards and assigns the updated tree back."""
+
+    def __init__(self, model: Model, num_blocks: int, block_size: int = 16,
+                 max_seq_len: int = 256):
+        if block_size < 1:
+            raise ValueError("block_size must be >= 1")
+        cfg = model.cfg
+        g, _ = tfm.group_structure(cfg)
+        for p in range(g):
+            if tfm.layer_kind(cfg, p) != "attn":
+                raise NotImplementedError(
+                    "paged KV serving covers attention-only stacks; "
+                    f"layer group {p} is {tfm.layer_kind(cfg, p)!r}")
+        self.block_size = block_size
+        self.num_blocks = num_blocks
+        self.max_seq_len = max_seq_len
+        # static block-table width: every request's table is padded to this
+        self.blocks_per_seq = -(-max_seq_len // block_size)
+        self.alloc = BlockAllocator(num_blocks)
+        self.pool = self._make_pool(model)
+        self.tables: Dict[str, List[int]] = {}
+        self._prompts: Dict[str, Tuple[int, ...]] = {}
+        self._namespaces: Dict[str, int] = {}
+        # prefix index: full blocks by chain key; partial prompt tails by
+        # (chain key of the preceding full blocks) -> {tail tokens: bid}
+        self._full: Dict[Tuple, int] = {}
+        self._partial: Dict[Tuple, Dict[Tuple[int, ...], int]] = {}
+        self._meta: Dict[int, Tuple] = {}   # bid -> index entry (reverse)
+        self._cached: "OrderedDict[int, None]" = OrderedDict()  # LRU order
+        self._dirty: List[int] = []  # (re)allocated since last flush()
+        self.stats = {"shared_full_blocks": 0, "shared_partial_tokens": 0,
+                      "cow_copies": 0, "evictions": 0}
+
+    # ---------------------------------------------------------------- pool
+    def _make_pool(self, model: Model):
+        cfg = model.cfg
+        g, n = tfm.group_structure(cfg)
+        dt = jnp.dtype(cfg.dtype)
+        shape = (n, self.num_blocks, self.block_size,
+                 cfg.num_kv_heads, cfg.head_dim)
+        return {f"pos_{p}": {
+            "k": jnp.zeros(shape, dt),
+            "v": jnp.zeros(shape, dt),
+            "pos": jnp.full((n, self.num_blocks, self.block_size), -1,
+                            jnp.int32)}
+            for p in range(g)}
+
+    @property
+    def capacity_blocks(self) -> int:
+        """Blocks available to requests (block 0 excluded)."""
+        return self.num_blocks - 1
+
+    def blocks_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.block_size)
+
+    # ----------------------------------------------------------- allocation
+    def _evict_cached(self) -> bool:
+        """Drop the least-recently-indexed unreferenced block."""
+        if not self._cached:
+            return False
+        bid, _ = self._cached.popitem(last=False)
+        self._unindex(bid)
+        self.alloc.release(bid)
+        self.stats["evictions"] += 1
+        return True
+
+    def _take_block(self) -> int:
+        bid = self.alloc.alloc()
+        if bid is None:
+            if not self._evict_cached():
+                raise RuntimeError(
+                    "KV block pool exhausted -- admission accounting let an "
+                    "active request outgrow capacity (engine bug)")
+            bid = self.alloc.alloc()
+            assert bid is not None
+        self._dirty.append(bid)
+        return bid
+
+    def _claim(self, bid: int) -> None:
+        """Add a reference to an indexed block (live or cached)."""
+        if self.alloc.ref(bid) > 0:
+            self.alloc.incref(bid)
+        else:
+            del self._cached[bid]
+            self.alloc.resurrect(bid)
+
+    def _unindex(self, bid: int) -> None:
+        entry = self._meta.pop(bid, None)
+        if entry is None:
+            return
+        kind, key = entry[0], entry[1]
+        if kind == "full":
+            del self._full[key]
+        else:
+            tails = self._partial[key]
+            del tails[entry[2]]
+            if not tails:
+                del self._partial[key]
+
+    # ------------------------------------------------------------ lifecycle
+    def begin(self, rid: str, prompt: Sequence[int],
+              adapter_id: int = 0) -> Tuple[int, int]:
+        """Open a table for ``rid``, adopting every cached prefix block
+        prefilled under the SAME adapter (the prefix index namespace).
+
+        Returns ``(start_pos, shared_blocks)``: prefill can skip positions
+        ``< start_pos``; ``shared_blocks`` counts blocks reused from the
+        prefix index (full adoptions + at most one copied partial)."""
+        if rid in self.tables:
+            raise ValueError(f"request {rid!r} already has a block table")
+        prompt_t = tuple(int(t) for t in prompt)
+        bs = self.block_size
+        # never adopt past len-1: the LAST prompt token must go through
+        # prefill -- its forward produces the logits the first generated
+        # token is sampled from (a fully-cached prompt has no logits).
+        adoptable = len(prompt_t) - 1
+        table: List[int] = []
+        matched = 0
+        chain: Tuple = (adapter_id,)
+        for key in _chain_keys(prompt_t, bs, adapter_id):
+            if matched + bs > adoptable:
+                break
+            bid = self._full.get(key)
+            if bid is None:
+                break
+            self._claim(bid)
+            table.append(bid)
+            chain = key
+            matched += bs
+        shared = len(table)
+        self.stats["shared_full_blocks"] += shared
+        # longest-common-prefix match against cached partial tails under
+        # the same chain; the winner is COPIED (eager copy-on-write) with
+        # only the matched lanes kept valid, so both sides diverge freely.
+        remainder = prompt_t[matched:]
+        best_bid, best_m = -1, 0
+        for tok, bid in self._partial.get(chain, {}).items():
+            m = 0
+            for a, b in zip(tok, remainder):
+                if a != b:
+                    break
+                m += 1
+            m = min(m, adoptable - matched)
+            if m > best_m:
+                best_bid, best_m = bid, m
+        # a cached FULL block that would cover the prompt end is also a
+        # copy source (keep all but the last token): exact-block prompts
+        # still share all-but-one token of their final block.
+        if len(remainder) >= bs:
+            bid = self._full.get((chain, tuple(remainder[:bs])))
+            if bid is not None and adoptable - matched > best_m:
+                best_bid, best_m = bid, adoptable - matched
+        if best_m > 0:
+            if best_bid in self._cached:
+                self._cached.move_to_end(best_bid)
+            dst = self._take_block()
+            self._copy_block(best_bid, dst, keep=best_m)
+            # the copy overwrites every lane, no stale-pos flush needed
+            self._dirty.remove(dst)
+            table.append(dst)
+            matched += best_m
+            shared += 1
+            self.stats["cow_copies"] += 1
+            self.stats["shared_partial_tokens"] += best_m
+        self.tables[rid] = table
+        self._prompts[rid] = prompt_t
+        self._namespaces[rid] = adapter_id
+        return matched, shared
+
+    def ensure_capacity(self, rid: str, upto_pos: int) -> None:
+        """Grow ``rid``'s table to cover position ``upto_pos`` (0-based)."""
+        if upto_pos >= self.max_seq_len:
+            raise ValueError(
+                f"request {rid!r}: position {upto_pos} exceeds "
+                f"max_seq_len={self.max_seq_len}")
+        table = self.tables[rid]
+        need = upto_pos // self.block_size + 1
+        while len(table) < need:
+            table.append(self._take_block())
+        # defensive copy-on-write: by construction shared blocks are never
+        # written (full blocks lie entirely before the sharer's start_pos;
+        # partials are copied at begin()), but guard anyway.
+        tail = table[need - 1]
+        if self.alloc.ref(tail) > 1:
+            dst = self._take_block()
+            self._copy_block(tail, dst, keep=upto_pos % self.block_size)
+            self._dirty.remove(dst)
+            table[need - 1] = dst
+            if self.alloc.decref(tail):   # pragma: no cover (defensive)
+                self._retire(tail)
+            self.stats["cow_copies"] += 1
+
+    def commit_prefix(self, rid: str) -> None:
+        """Index ``rid``'s prompt blocks for cross-request sharing.
+
+        Called when prefill completes -- possibly while ``rid`` is still
+        decoding, which is safe: full prompt blocks are never written
+        again, and a partial prompt tail only ever gains lanes *beyond*
+        the indexed length."""
+        prompt = self._prompts[rid]
+        table = self.tables[rid]
+        bs = self.block_size
+        assert len(table) * bs >= len(prompt), \
+            f"commit_prefix({rid!r}) before its prompt blocks exist"
+        keys = _chain_keys(prompt, bs, self._namespaces[rid])
+        for i, key in enumerate(keys):
+            bid = table[i]
+            if key in self._full or bid in self._meta:
+                continue   # content already indexed (or block is)
+            self._full[key] = bid
+            self._meta[bid] = ("full", key)
+        tail = prompt[len(keys) * bs:]
+        if tail:
+            chain = keys[-1] if keys else (self._namespaces[rid],)
+            bid = table[len(keys)]
+            tails = self._partial.setdefault(chain, {})
+            if tail not in tails and bid not in self._meta:
+                tails[tail] = bid
+                self._meta[bid] = ("partial", chain, tail)
+
+    def free(self, rid: str) -> None:
+        """Drop ``rid``'s references; indexed blocks stay cached (LRU)."""
+        for bid in self.tables.pop(rid):
+            if self.alloc.decref(bid):
+                self._retire(bid)
+        del self._prompts[rid]
+        del self._namespaces[rid]
+
+    def _retire(self, bid: int) -> None:
+        if bid in self._meta:
+            self._cached[bid] = None       # evictable, contents retained
+            self._cached.move_to_end(bid)
+        else:
+            self.alloc.release(bid)
+
+    # ------------------------------------------------------------ device ops
+    def _copy_block(self, src: int, dst: int, keep: int) -> None:
+        self.pool = _copy_block_fn(self.pool, jnp.int32(src),
+                                   jnp.int32(dst), jnp.int32(keep))
+
+    def flush(self) -> None:
+        """Invalidate ``pos`` lanes of blocks recycled since last flush --
+        they carry entries from a previous owner that would otherwise pass
+        the position mask.  One fixed-shape device op per tick."""
+        if not self._dirty:
+            return
+        stale = np.zeros((self.num_blocks,), bool)
+        stale[sorted(set(self._dirty))] = True
+        self.pool = _flush_fn(self.pool, jnp.asarray(stale))
+        self._dirty.clear()
+
+    def table_rows(self, rids: Sequence[Optional[str]]) -> np.ndarray:
+        """Dense ``(len(rids), blocks_per_seq)`` int32 block-table batch;
+        ``None`` rows and slots past a table's length hit the null block."""
+        out = np.full((len(rids), self.blocks_per_seq), NULL_BLOCK, np.int32)
+        for i, rid in enumerate(rids):
+            if rid is None:
+                continue
+            t = self.tables[rid]
+            out[i, :len(t)] = t
+        return out
+
+    # -------------------------------------------------------------- testing
+    def audit(self) -> Dict[str, int]:
+        """Check the no-leak/no-double-free invariants; raise on violation.
+
+        free + referenced + cached must partition blocks 1..NB-1, and the
+        total of allocator refcounts must equal the total of block-table
+        entries (every reference is table-held)."""
+        free = set(self.alloc._free)
+        used = set(self.alloc._ref)
+        cached = set(self._cached)
+        assert not free & used, f"free/used overlap: {free & used}"
+        assert not free & cached, f"free/cached overlap: {free & cached}"
+        assert not used & cached, f"used/cached overlap: {used & cached}"
+        every = free | used | cached
+        expect = set(range(1, self.num_blocks))
+        assert every == expect, \
+            f"leaked: {expect - every}, phantom: {every - expect}"
+        n_refs = sum(self.alloc._ref.values())
+        n_held = sum(len(t) for t in self.tables.values())
+        assert n_refs == n_held, \
+            f"refcount total {n_refs} != table entries {n_held}"
+        for bid in self._meta:
+            assert bid in used or bid in cached, \
+                f"indexed block {bid} neither referenced nor cached"
+        for key, bid in self._full.items():
+            assert self._meta.get(bid) == ("full", key)
+        for chain, tails in self._partial.items():
+            for tok, bid in tails.items():
+                assert self._meta.get(bid) == ("partial", chain, tok)
+        return {"free": len(free), "used": len(used), "cached": len(cached)}

@@ -1,42 +1,45 @@
-"""Continuous-batching scheduler: slot-based KV-cache admission/eviction.
+"""Continuous-batching scheduler: slot-based admission/eviction.
 
-The engine's decode state is a fixed-size batch of ``n_slots`` cache
-regions.  Requests (each tagged with the adapter_id of its tenant) queue
-here; a free slot admits the next pending request, a finished request
-evicts its slot immediately, and the next pending request takes it on the
-following tick -- so a long request never stalls the batch behind it, and
-requests for DIFFERENT adapters interleave freely in one batch (the multi
-kernels route each row to its adapter's rotations).
+The engine's decode state is a fixed-size batch of ``n_slots`` rows.
+Requests (each tagged with the adapter_id of its tenant) queue here; a
+free slot admits the next pending request, a finished request evicts its
+slot immediately, and the next pending request takes it on the following
+tick -- so a long request never stalls the batch behind it, and requests
+for DIFFERENT adapters interleave freely in one batch (the multi kernels
+route each row to its adapter's rotations).
 
 Pure Python, no jax: this is the control plane.  The data plane (caches,
-decode step) lives in repro.serving.engine.
+decode step) lives in repro.serving.engine; under the paged engine a slot
+is just a decode-batch row (its KV lives in block-granular pool pages,
+see repro.serving.kv_cache), and admission is additionally gated by the
+engine's block-capacity check (the ``can_admit`` hook).
+
+``Request`` moved to ``repro.serving.api`` in serving v2; importing it
+from here still works but warns.
 """
 from __future__ import annotations
 
 from collections import deque
-from dataclasses import dataclass, field
-from typing import Deque, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Callable, Deque, List, Optional, Tuple
+
+from repro.serving.api import Request as _Request
 
 
-@dataclass
-class Request:
-    """One generation request against one pooled adapter."""
-    rid: str
-    prompt: Sequence[int]          # prompt token ids
-    adapter_id: int                # row index into the pool's r_stack
-    max_new_tokens: int = 16
-    eos_id: Optional[int] = None   # stop early on this token (None = never)
-
-    def __post_init__(self):
-        if len(self.prompt) == 0:
-            raise ValueError(f"request {self.rid!r}: empty prompt")
-        if self.max_new_tokens < 1:
-            raise ValueError(f"request {self.rid!r}: max_new_tokens < 1")
+def __getattr__(name):
+    if name == "Request":
+        import warnings
+        warnings.warn(
+            "repro.serving.scheduler.Request moved to repro.serving.api "
+            "(serving API v2); import it from repro.serving.api or "
+            "repro.serving", DeprecationWarning, stacklevel=2)
+        return _Request
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 @dataclass
 class _Slot:
-    request: Optional[Request] = None
+    request: Optional[_Request] = None
     generated: int = 0             # tokens produced so far
 
 
@@ -48,10 +51,10 @@ class Scheduler:
             raise ValueError("need at least one slot")
         self.n_slots = n_slots
         self._slots: List[_Slot] = [_Slot() for _ in range(n_slots)]
-        self._pending: Deque[Request] = deque()
+        self._pending: Deque[_Request] = deque()
 
     # ------------------------------------------------------------- intake --
-    def submit(self, request: Request) -> None:
+    def submit(self, request: _Request) -> None:
         self._pending.append(request)
 
     def submit_all(self, requests) -> None:
@@ -68,7 +71,7 @@ class Scheduler:
     def free_slots(self) -> List[int]:
         return [i for i, s in enumerate(self._slots) if s.request is None]
 
-    def slot_request(self, slot: int) -> Request:
+    def slot_request(self, slot: int) -> _Request:
         req = self._slots[slot].request
         assert req is not None, f"slot {slot} is free"
         return req
@@ -78,13 +81,18 @@ class Scheduler:
         return len(self._pending)
 
     # ------------------------------------------------------ admit / evict --
-    def admit(self) -> List[Tuple[int, Request]]:
+    def admit(self, can_admit: Optional[Callable[[_Request], bool]] = None
+              ) -> List[Tuple[int, _Request]]:
         """Fill free slots from the pending queue (FIFO).  Returns the
         (slot, request) pairs admitted this tick; the engine prefills each
-        and scatters its caches into the slot."""
+        into the slot.  ``can_admit`` (paged engine) gates each admission
+        on resource capacity; admission stops at the first refusal so FIFO
+        order is preserved (no small-request starvation of a big one)."""
         admitted = []
         for slot in self.free_slots():
             if not self._pending:
+                break
+            if can_admit is not None and not can_admit(self._pending[0]):
                 break
             req = self._pending.popleft()
             self._slots[slot] = _Slot(request=req)
@@ -104,6 +112,7 @@ class Scheduler:
         return done
 
     def evict(self, slot: int) -> None:
-        """Free the slot's cache region for the next admission (the KV cache
-        itself is overwritten wholesale by the next prefill scatter)."""
+        """Free the slot for the next admission (the paged engine also
+        frees the request's KV blocks; the slots engine overwrites the
+        slot's cache region wholesale on the next prefill scatter)."""
         self._slots[slot] = _Slot()

@@ -7,10 +7,12 @@ in ``repro.serving``; it builds on the same primitives here (``pad_caches``,
 the per-model jit cache)."""
 from __future__ import annotations
 
+import warnings
 from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models import transformer as tfm
 from repro.models.model import Model
@@ -73,42 +75,55 @@ def decode_fn(model: Model, jit: bool = True):
                         lambda p, b: model.decode_step(p, b), jit=jit)
 
 
-def generate(model: Model, params: dict, prompt: jnp.ndarray, steps: int,
-             temperature: float = 0.0, key=None,
-             s_max: Optional[int] = None, jit: bool = True) -> jnp.ndarray:
-    """Batched generation: prefill the prompt, then decode `steps` tokens.
+def generate(model: Model, params: dict, prompt: jnp.ndarray,
+             steps: Optional[int] = None, temperature: float = 0.0,
+             key=None, s_max: Optional[int] = None, jit: bool = True,
+             sampling=None) -> jnp.ndarray:
+    """Batched generation: prefill the prompt, then decode.
 
-    The prompt is forwarded ONCE: the prefill that builds the caches also
-    yields the last-token logits the first sampled token needs (a second
-    full forward over the prompt would double prefill compute for nothing).
-    The decode step is jitted (``jit=False`` to debug eagerly).
+    Serving API v2 made this a convenience wrapper over a single-adapter
+    ``repro.serving.ServingEngine`` (one request per prompt row), so there
+    is exactly ONE prefill/decode data plane and ONE sampling
+    implementation between ``generate`` and the multi-tenant engine.  The
+    prompt is still forwarded once -- the prefill that builds the caches
+    also yields the first token's logits.
 
-    prompt: (B, S) int32. Returns (B, S + steps)."""
+    Pass ``sampling=repro.serving.SamplingParams(...)``; the legacy
+    ``steps=``/``temperature=`` spelling still works but is deprecated.
+    With ``sampling.eos_id`` set, rows that stop early are right-padded
+    with ``eos_id`` (the legacy spelling never stops early).
+
+    prompt: (B, S) int32. Returns (B, S + max_new_tokens)."""
+    from repro.serving.api import Request, SamplingParams
+    from repro.serving.engine import ServingEngine
+
     b, s = prompt.shape
-    s_max = s_max or (s + steps)
-    logits_p, caches = prefill_fn(model, jit=jit)(params,
-                                                  {"tokens": prompt})
-    caches = pad_caches(model, caches, s_max)
+    if sampling is None:
+        if steps is None:
+            raise TypeError("generate() requires sampling= (or the "
+                            "deprecated steps=)")
+        warnings.warn(
+            "generate(steps=, temperature=) is deprecated; pass "
+            "sampling=repro.serving.SamplingParams(max_new_tokens=, "
+            "temperature=)", DeprecationWarning, stacklevel=2)
+        sampling = SamplingParams(
+            max_new_tokens=steps,
+            temperature=temperature if temperature > 0 else None)
+    elif steps is not None:
+        raise TypeError("generate(): pass either sampling= or the "
+                        "deprecated steps=, not both")
 
-    def sample(logits, k):
-        if temperature <= 0:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        return jax.random.categorical(k, logits / temperature, axis=-1
-                                      ).astype(jnp.int32)
-
-    key = key if key is not None else jax.random.PRNGKey(0)
-    tok = sample(logits_p[:, -1], key)[:, None]
-    out = [prompt, tok]
-
-    step = decode_fn(model, jit=jit)
-    for t in range(steps - 1):
-        idx = s + t
-        batch = {"tokens": tok,
-                 "positions": jnp.full((b, 1), idx, jnp.int32),
-                 "cache_index": jnp.full((b,), idx, jnp.int32),
-                 "caches": caches}
-        logits, caches = step(params, batch)
-        key = jax.random.fold_in(key, t)
-        tok = sample(logits[:, 0], key)[:, None]
-        out.append(tok)
-    return jnp.concatenate(out, axis=1)
+    engine = ServingEngine(model, params, pool=None, n_slots=b,
+                           s_max=s_max or (s + sampling.max_new_tokens),
+                           jit=jit, key=key, mode="slots")
+    prompt_np = np.asarray(prompt)
+    out = engine.run([Request(f"row{i}", prompt_np[i], sampling=sampling)
+                      for i in range(b)])
+    gen = np.full((b, sampling.max_new_tokens),
+                  sampling.eos_id if sampling.eos_id is not None else 0,
+                  np.int32)
+    for i in range(b):
+        toks = out[f"row{i}"]
+        gen[i, :len(toks)] = toks
+    return jnp.concatenate([jnp.asarray(prompt_np, jnp.int32),
+                            jnp.asarray(gen)], axis=1)

@@ -1,0 +1,258 @@
+"""Paged KV cache as a unit: allocator invariants, prefix-index
+adoption/copy-on-write, LRU eviction of cached blocks, and a property
+test that ANY interleaving of begin/grow/free never leaks or
+double-frees a block.
+
+Control-plane only where possible -- the device pool rides along but the
+assertions here are about block bookkeeping (token-for-token correctness
+of paged attention lives in tests/test_serving_paged.py)."""
+import random
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.config.base import AdapterConfig, ModelConfig, QuantConfig, \
+    RunConfig
+from repro.models import build
+from repro.serving.kv_cache import NULL_BLOCK, BlockAllocator, PagedKVCache
+
+
+def _tiny_model():
+    cfg = ModelConfig(name="kvt", num_layers=2, d_model=32, num_heads=2,
+                      num_kv_heads=1, d_ff=64, vocab_size=64,
+                      rope_theta=1e4)
+    run = RunConfig(model=cfg,
+                    adapter=AdapterConfig(kind="oftv2", block_size=8,
+                                          neumann_terms=5,
+                                          fuse_linear=True),
+                    quant=QuantConfig(kind="none"))
+    return build(run)
+
+
+def _kv(num_blocks=12, block_size=4, max_seq_len=32):
+    return PagedKVCache(_tiny_model(), num_blocks=num_blocks,
+                        block_size=block_size, max_seq_len=max_seq_len)
+
+
+# ---------------------------------------------------------------------------
+# allocator
+# ---------------------------------------------------------------------------
+def test_allocator_alloc_free_reuse():
+    a = BlockAllocator(4)                    # blocks 1..3
+    got = [a.alloc() for _ in range(3)]
+    assert sorted(got) == [1, 2, 3]
+    assert a.alloc() is None                 # exhausted, no block 0 ever
+    assert a.decref(2) is True
+    a.release(2)
+    assert a.alloc() == 2                    # reused
+    assert a.n_free == 0 and a.n_used == 3
+
+
+def test_allocator_refcounting():
+    a = BlockAllocator(4)
+    b = a.alloc()
+    a.incref(b)
+    assert a.ref(b) == 2
+    assert a.decref(b) is False              # still referenced
+    assert a.decref(b) is True               # now unreferenced
+    with pytest.raises(ValueError, match="double free"):
+        a.decref(b)
+    with pytest.raises(ValueError, match="unallocated"):
+        a.incref(b)
+    a.release(b)
+    with pytest.raises(ValueError, match="double release"):
+        a.release(b)
+
+
+def test_allocator_rejects_bad_sizes():
+    with pytest.raises(ValueError, match="reserved"):
+        BlockAllocator(1)
+
+
+# ---------------------------------------------------------------------------
+# block tables / capacity
+# ---------------------------------------------------------------------------
+def test_begin_grow_free_roundtrip():
+    kv = _kv()
+    start, shared = kv.begin("r0", [1, 2, 3, 4, 5], adapter_id=0)
+    assert (start, shared) == (0, 0)         # cold cache: prefill everything
+    kv.ensure_capacity("r0", 4)              # positions 0..4 -> 2 blocks
+    assert len(kv.tables["r0"]) == 2
+    kv.ensure_capacity("r0", 4)              # idempotent
+    assert len(kv.tables["r0"]) == 2
+    kv.audit()
+    kv.free("r0")
+    assert kv.audit() == {"free": kv.capacity_blocks, "used": 0, "cached": 0}
+
+
+def test_table_rows_pads_with_null_block():
+    kv = _kv()
+    kv.begin("r0", [1, 2, 3, 4, 5])
+    kv.ensure_capacity("r0", 4)
+    rows = kv.table_rows(["r0", None])
+    assert rows.shape == (2, kv.blocks_per_seq)
+    assert (rows[0, :2] > NULL_BLOCK).all()  # real blocks
+    assert (rows[0, 2:] == NULL_BLOCK).all()
+    assert (rows[1] == NULL_BLOCK).all()
+
+
+def test_ensure_capacity_rejects_overflow():
+    kv = _kv(max_seq_len=8)
+    kv.begin("r0", [1, 2])
+    with pytest.raises(ValueError, match="max_seq_len"):
+        kv.ensure_capacity("r0", 8)
+
+
+def test_duplicate_begin_rejected():
+    kv = _kv()
+    kv.begin("r0", [1, 2])
+    with pytest.raises(ValueError, match="already has a block table"):
+        kv.begin("r0", [3, 4])
+
+
+# ---------------------------------------------------------------------------
+# prefix sharing / copy-on-write
+# ---------------------------------------------------------------------------
+def test_full_block_sharing_is_zero_copy_and_refcounted():
+    kv = _kv(block_size=4)
+    prompt = [1, 2, 3, 4, 5, 6, 7, 8, 9]     # 2 full blocks + tail of 1
+    kv.begin("a", prompt)
+    kv.ensure_capacity("a", 8)
+    kv.commit_prefix("a")
+    start, shared = kv.begin("b", prompt)
+    assert shared == 2                       # both full blocks adopted
+    assert start == 8                        # only the LAST token prefills:
+    # its forward produces the first-token logits, so it is never adopted
+    # the two full blocks are the SAME physical blocks, refcount 2
+    assert kv.tables["b"] == kv.tables["a"][:2]
+    for bid in kv.tables["a"][:2]:
+        assert kv.alloc.ref(bid) == 2
+    assert kv.stats["cow_copies"] == 0       # nothing needed copying
+    kv.audit()
+    kv.free("a")
+    kv.free("b")
+    kv.audit()
+
+
+def test_prefix_sharing_is_per_adapter():
+    kv = _kv(block_size=4)
+    kv.begin("a", [1, 2, 3, 4, 5, 6, 7, 8], adapter_id=0)
+    kv.ensure_capacity("a", 7)
+    kv.commit_prefix("a")
+    _, shared_same = kv.begin("b", [1, 2, 3, 4, 9], adapter_id=0)
+    _, shared_other = kv.begin("c", [1, 2, 3, 4, 9], adapter_id=1)
+    assert shared_same == 1                  # adopted the full block
+    assert shared_other == 0                 # adapter-rotated k/v: no reuse
+    kv.audit()
+
+
+def test_cow_divergence_keeps_only_common_prefix():
+    kv = _kv(block_size=4)
+    kv.begin("a", [1, 2, 3, 4, 5, 6, 7])     # tail block holds [5, 6, 7]
+    kv.ensure_capacity("a", 6)
+    kv.commit_prefix("a")
+    # b matches the full block and 2 of the 3 tail tokens, then diverges
+    start, shared = kv.begin("b", [1, 2, 3, 4, 5, 6, 99])
+    assert start == 6                        # 4 (full) + 2 (tail LCP)
+    assert shared == 2
+    assert kv.stats["shared_partial_tokens"] == 2
+    assert kv.tables["b"][1] != kv.tables["a"][1]   # copied, not shared
+    kv.audit()
+
+
+def test_exact_block_prompt_shares_by_copy():
+    # a prompt that ends exactly on a block boundary cannot adopt its
+    # final full block zero-copy (the last token must prefill), but it
+    # still shares all-but-one token of that block via an eager copy
+    kv = _kv(block_size=4)
+    kv.begin("a", [1, 2, 3, 4])
+    kv.ensure_capacity("a", 3)
+    kv.commit_prefix("a")
+    start, shared = kv.begin("b", [1, 2, 3, 4])
+    assert (start, shared) == (3, 1)
+    assert kv.tables["b"][0] != kv.tables["a"][0]
+    assert kv.stats["cow_copies"] == 1
+    assert kv.stats["shared_partial_tokens"] == 3
+    kv.audit()
+
+
+def test_freed_indexed_blocks_stay_cached_then_lru_evict():
+    kv = _kv(num_blocks=5, block_size=4, max_seq_len=16)   # 4 usable blocks
+    kv.begin("a", [1, 2, 3, 4, 9])
+    kv.ensure_capacity("a", 4)
+    kv.commit_prefix("a")
+    kv.free("a")
+    assert kv.audit()["cached"] == 2         # indexed blocks survive free
+    # a new request with the same prompt resurrects the full block from
+    # the cache zero-copy (the tail token still prefills)
+    start, shared = kv.begin("b", [1, 2, 3, 4, 9])
+    assert (start, shared) == (4, 1)
+    kv.free("b")
+    # now exhaust the pool: cached blocks are evicted LRU under pressure
+    kv.begin("c", [7] * 16)
+    for pos in range(16):
+        kv.ensure_capacity("c", pos)
+    assert kv.stats["evictions"] == 2
+    assert kv.audit() == {"free": 0, "used": 4, "cached": 0}
+
+
+def test_exhaustion_raises_when_nothing_evictable():
+    kv = _kv(num_blocks=3, block_size=4, max_seq_len=16)   # 2 usable blocks
+    kv.begin("a", [1] * 12)
+    kv.ensure_capacity("a", 7)               # takes both blocks
+    with pytest.raises(RuntimeError, match="exhausted"):
+        kv.ensure_capacity("a", 8)
+
+
+# ---------------------------------------------------------------------------
+# property: no interleaving leaks or double-frees
+# ---------------------------------------------------------------------------
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2 ** 31 - 1))
+def test_any_interleaving_never_leaks_blocks(seed):
+    """Random begin/grow/free/commit interleavings (with prompts drawn
+    from a tiny vocabulary so prefix collisions are common) keep the
+    audit invariants: free+used+cached partitions the pool, refcounts
+    equal table entries, the index maps only to resident blocks."""
+    rnd = random.Random(seed)
+    kv = _kv(num_blocks=9, block_size=4, max_seq_len=24)
+    live = {}                                # rid -> (prompt_len, grown_to)
+    next_rid = 0
+    for _ in range(60):
+        ops = ["begin", "free", "grow", "commit"]
+        op = rnd.choice(ops)
+        if op == "begin":
+            n = rnd.randint(1, 12)
+            prompt = [rnd.randint(0, 3) for _ in range(n)]
+            committed = sum(-(-pl // 4) + 1 for pl, _ in live.values())
+            if committed + -(-n // 4) + 1 > kv.capacity_blocks:
+                continue                     # the engine's admission gate
+            rid = f"r{next_rid}"
+            next_rid += 1
+            start, _ = kv.begin(rid, prompt, adapter_id=rnd.randint(0, 1))
+            assert start <= n
+            live[rid] = (n, max(start - 1, -1))
+        elif op == "free" and live:
+            rid = rnd.choice(sorted(live))
+            kv.free(rid)
+            del live[rid]
+        elif op == "grow" and live:
+            rid = rnd.choice(sorted(live))
+            pl, grown = live[rid]
+            upto = min(grown + rnd.randint(1, 4), pl)   # prompt + 1 token
+            kv.ensure_capacity(rid, upto)
+            kv.flush()
+            live[rid] = (pl, max(grown, upto))
+        elif op == "commit" and live:
+            rid = rnd.choice(sorted(live))
+            pl, grown = live[rid]
+            if grown >= pl - 1:              # only commit filled prompts
+                kv.ensure_capacity(rid, pl - 1)
+                kv.commit_prefix(rid)
+        kv.audit()
+    for rid in sorted(live):
+        kv.free(rid)
+    counts = kv.audit()
+    assert counts["used"] == 0
+    assert counts["free"] + counts["cached"] == kv.capacity_blocks

@@ -1,0 +1,322 @@
+"""Serving v2 integration: the paged data plane (block pool + chunked
+prefill + prefix sharing) must decode token-for-token what the PR-3
+fixed-slot path and the single-run ``generate`` oracle produce, and the
+submit()/step()/drain() API must report faithful per-request results.
+
+The bitwise contract chain: ``generate`` wraps a single-adapter slots
+engine; the multi-adapter slots engine is the PR-3 data plane (bucketed
+batch-1 prefill + rectangular caches); the paged engine shares neither
+prefill nor cache layout with them -- agreement is a real check, not a
+tautology."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config.base import AdapterConfig, ModelConfig, QuantConfig, \
+    RunConfig
+from repro.models import build
+
+
+def _serving_model(qkind="none"):
+    cfg = ModelConfig(name=f"pg_{qkind}", num_layers=2, d_model=64,
+                      num_heads=4, num_kv_heads=2, d_ff=128,
+                      vocab_size=128, rope_theta=1e4)
+    run = RunConfig(model=cfg,
+                    adapter=AdapterConfig(kind="oftv2", block_size=16,
+                                          neumann_terms=5,
+                                          fuse_linear=True),
+                    quant=QuantConfig(kind=qkind, block_size=32))
+    model = build(run)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params, cfg
+
+
+def _pooled(model, n_adapters=2):
+    from repro.serving import AdapterPool, init_adapters
+    adapters = init_adapters(model, n_adapters, jax.random.PRNGKey(7))
+    pool = AdapterPool(model)
+    for i, tree in enumerate(adapters):
+        pool.register(f"t{i}", tree)
+    return pool, adapters
+
+
+def _prompts(cfg, lengths, seed=3):
+    return [np.asarray(jax.random.randint(
+        jax.random.fold_in(jax.random.PRNGKey(seed), i), (n,), 0,
+        cfg.vocab_size)) for i, n in enumerate(lengths)]
+
+
+# ---------------------------------------------------------------------------
+# paged == slots == generate (the satellite regression: bucketed and paged
+# prefill agree token-for-token; no bucketing artifacts in the paged path)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("qkind", ["none", "nf4"])
+def test_paged_equals_bucketed_equals_generate(qkind):
+    from repro.serving import Request, SamplingParams, ServingEngine
+    from repro.train.serving import generate
+    model, params, cfg = _serving_model(qkind)
+    pool, adapters = _pooled(model)
+    # lengths off the 8-bucket: the slots path pads to multiples of 8 and
+    # invalidates the tail; the paged path allocates exact-length blocks
+    lengths, gen = [3, 6, 11, 9], 5
+    prompts = _prompts(cfg, lengths)
+    reqs = [Request(f"r{i}", prompts[i], adapter_id=i % 2,
+                    sampling=SamplingParams(max_new_tokens=gen))
+            for i in range(4)]
+    paged = ServingEngine(model, params, pool, n_slots=4, mode="paged",
+                          page_size=4, prefill_chunk=8).run(reqs)
+    slots = ServingEngine(model, params, pool, n_slots=4,
+                          mode="slots").run(reqs)
+    for i in range(4):
+        np.testing.assert_array_equal(paged[f"r{i}"], slots[f"r{i}"])
+        single = {"base": params["base"], "adapter": adapters[i % 2]}
+        full = generate(model, single, jnp.asarray(prompts[i])[None],
+                        sampling=SamplingParams(max_new_tokens=gen))
+        np.testing.assert_array_equal(paged[f"r{i}"],
+                                      np.asarray(full)[0, lengths[i]:])
+
+
+def test_chunked_prefill_long_prompt_interleaves_and_matches():
+    """A prompt much longer than the chunk is prefilled across many ticks
+    while a short request decodes in between -- and both still produce
+    exactly their single-run tokens."""
+    from repro.serving import Request, SamplingParams, ServingEngine
+    from repro.train.serving import generate
+    model, params, cfg = _serving_model()
+    pool, adapters = _pooled(model)
+    long_p, short_p = _prompts(cfg, [37, 4])
+    gen = 4
+    eng = ServingEngine(model, params, pool, n_slots=2, mode="paged",
+                        page_size=4, prefill_chunk=8)
+    eng.submit(Request("long", long_p, adapter_id=0,
+                       sampling=SamplingParams(max_new_tokens=gen)))
+    eng.submit(Request("short", short_p, adapter_id=1,
+                       sampling=SamplingParams(max_new_tokens=gen)))
+    # the short request finishes while the long one is still prefilling
+    # (37 tokens / chunk 8 = 5 prefill ticks; short needs 1 + 3 ticks)
+    ticks_to_short = 0
+    done = {}
+    while eng.has_work():
+        for res in eng.step():
+            done[res.rid] = res
+        ticks_to_short += 1
+        if "short" in done:
+            break
+    assert "long" not in done     # chunked prefill did not stall the batch
+    while eng.has_work():
+        for res in eng.step():
+            done[res.rid] = res
+    for rid, prompt, aid in [("long", long_p, 0), ("short", short_p, 1)]:
+        single = {"base": params["base"], "adapter": adapters[aid]}
+        full = generate(model, single, jnp.asarray(prompt)[None],
+                        sampling=SamplingParams(max_new_tokens=gen))
+        np.testing.assert_array_equal(done[rid].tokens,
+                                      np.asarray(full)[0, len(prompt):])
+
+
+def test_prefix_sharing_same_adapter_exact_and_counted():
+    """Requests repeating a system prompt under the SAME adapter skip its
+    prefill (prefix_blocks_shared > 0) and still decode exactly; a
+    different adapter must NOT reuse those blocks (k/v are
+    adapter-rotated)."""
+    from repro.serving import Request, SamplingParams, ServingEngine
+    from repro.train.serving import generate
+    model, params, cfg = _serving_model()
+    pool, adapters = _pooled(model)
+    sys_p = list(range(1, 13))
+    eng = ServingEngine(model, params, pool, n_slots=2, mode="paged",
+                        page_size=4, prefill_chunk=4)
+    eng.submit(Request("warm", sys_p + [50, 51], adapter_id=0,
+                       sampling=SamplingParams(max_new_tokens=3)))
+    eng.drain()
+    eng.submit(Request("same", sys_p + [60], adapter_id=0,
+                       sampling=SamplingParams(max_new_tokens=3)))
+    eng.submit(Request("other", sys_p + [60], adapter_id=1,
+                       sampling=SamplingParams(max_new_tokens=3)))
+    res = eng.drain()
+    assert res["same"].prefix_blocks_shared >= 3
+    assert res["other"].prefix_blocks_shared == 0
+    for rid, aid in [("same", 0), ("other", 1)]:
+        single = {"base": params["base"], "adapter": adapters[aid]}
+        full = generate(model, single, jnp.asarray(sys_p + [60])[None],
+                        sampling=SamplingParams(max_new_tokens=3))
+        np.testing.assert_array_equal(res[rid].tokens,
+                                      np.asarray(full)[0, 13:])
+    eng._state["kv"].audit()
+
+
+def test_partial_block_cow_divergence_exact():
+    """Prompts sharing a partial tail block diverge after the copy-on-
+    write -- both decode exactly their single-run tokens."""
+    from repro.serving import Request, SamplingParams, ServingEngine
+    from repro.train.serving import generate
+    model, params, cfg = _serving_model()
+    pool, adapters = _pooled(model)
+    p1 = list(range(1, 9)) + [20, 21, 22]
+    p2 = list(range(1, 9)) + [20, 21, 99]     # diverges inside the block
+    eng = ServingEngine(model, params, pool, n_slots=2, mode="paged",
+                        page_size=8, prefill_chunk=8)
+    eng.submit(Request("x", p1, adapter_id=0,
+                       sampling=SamplingParams(max_new_tokens=2)))
+    eng.drain()
+    eng.submit(Request("y", p2, adapter_id=0,
+                       sampling=SamplingParams(max_new_tokens=2)))
+    ry = eng.drain()["y"]
+    assert eng._state["kv"].stats["cow_copies"] == 1
+    single = {"base": params["base"], "adapter": adapters[0]}
+    full = generate(model, single, jnp.asarray(p2)[None],
+                    sampling=SamplingParams(max_new_tokens=2))
+    np.testing.assert_array_equal(ry.tokens, np.asarray(full)[0, len(p2):])
+
+
+def test_block_pressure_queues_requests_and_completes():
+    """More concurrent demand than KV blocks: the admission gate queues
+    requests instead of exhausting the pool mid-flight, and everyone
+    still finishes with exact tokens."""
+    from repro.serving import Request, SamplingParams, ServingEngine
+    model, params, cfg = _serving_model()
+    pool, _ = _pooled(model)
+    prompts = _prompts(cfg, [8] * 6)
+    reqs = [Request(f"r{i}", prompts[i], adapter_id=i % 2,
+                    sampling=SamplingParams(max_new_tokens=4))
+            for i in range(6)]
+    # 6 slots but only enough blocks for ~2 requests at a time
+    tight = ServingEngine(model, params, pool, n_slots=6, mode="paged",
+                          page_size=4, num_blocks=8, prefill_chunk=8,
+                          s_max=12)
+    roomy = ServingEngine(model, params, pool, n_slots=6, mode="paged",
+                          page_size=4, prefill_chunk=8, s_max=12)
+    out_t = tight.run(reqs)
+    out_r = roomy.run(reqs)
+    for i in range(6):
+        np.testing.assert_array_equal(out_t[f"r{i}"], out_r[f"r{i}"])
+    tight._state["kv"].audit()
+
+
+# ---------------------------------------------------------------------------
+# the v2 API surface
+# ---------------------------------------------------------------------------
+def test_submit_step_drain_lifecycle_and_timing():
+    from repro.serving import (FINISH_LENGTH, GenerationResult, Request,
+                               SamplingParams, ServingEngine)
+    model, params, cfg = _serving_model()
+    pool, _ = _pooled(model)
+    eng = ServingEngine(model, params, pool, n_slots=2)
+    assert not eng.has_work()
+    assert eng.step() == []                  # idle step is a no-op
+    prompt = _prompts(cfg, [5])[0]
+    eng.submit(Request("r0", prompt, adapter_id=0,
+                       sampling=SamplingParams(max_new_tokens=3)))
+    assert eng.has_work()
+    results = eng.drain()
+    assert not eng.has_work()
+    res = results["r0"]
+    assert isinstance(res, GenerationResult)
+    assert res.finish_reason == FINISH_LENGTH
+    assert res.prompt_len == 5 and res.n_generated == 3
+    assert res.tokens.dtype == np.int32
+    assert res.submitted_at <= res.first_token_at <= res.finished_at
+    assert res.ttft > 0 and res.latency >= res.ttft
+
+
+def test_eos_stops_early_with_finish_stop():
+    from repro.serving import (FINISH_STOP, Request, SamplingParams,
+                               ServingEngine)
+    model, params, cfg = _serving_model()
+    pool, _ = _pooled(model)
+    prompt = _prompts(cfg, [6])[0]
+    eng = ServingEngine(model, params, pool, n_slots=1)
+    probe = eng.run([Request("probe", prompt, adapter_id=0,
+                             sampling=SamplingParams(max_new_tokens=8))])
+    second = int(probe["probe"][1])          # greedy is deterministic
+    eng2 = ServingEngine(model, params, pool, n_slots=1)
+    eng2.submit(Request("r0", prompt, adapter_id=0,
+                        sampling=SamplingParams(max_new_tokens=8,
+                                                eos_id=second)))
+    res = eng2.drain()["r0"]
+    assert res.finish_reason == FINISH_STOP
+    assert res.n_generated == 2 and int(res.tokens[-1]) == second
+
+
+def test_run_compat_wrapper_and_validation():
+    """run() keeps the v1 surface: dict of raw token arrays, batch-level
+    duplicate/adapter validation with the v1 messages."""
+    from repro.serving import Request, ServingEngine
+    model, params, cfg = _serving_model()
+    pool, _ = _pooled(model)
+    eng = ServingEngine(model, params, pool, n_slots=2)
+    assert eng.run([]) == {}
+    with pytest.raises(ValueError, match="adapter_id 5 outside"):
+        eng.run([Request("bad", [1, 2], adapter_id=5)])
+    with pytest.raises(ValueError, match="duplicate request ids"):
+        eng.run([Request("r0", [1, 2]), Request("r0", [3, 4])])
+    out = eng.run([Request("r0", [1, 2], max_new_tokens=2)])
+    assert isinstance(out["r0"], np.ndarray) and len(out["r0"]) == 2
+    # rid is reusable after its result was drained
+    out2 = eng.run([Request("r0", [1, 2], max_new_tokens=2)])
+    np.testing.assert_array_equal(out["r0"], out2["r0"])
+
+
+def test_single_adapter_engine_pool_none():
+    """pool=None serves the params as-is (what generate() wraps): paged
+    and slots modes agree without any routing."""
+    from repro.serving import Request, SamplingParams, ServingEngine
+    model, params, cfg = _serving_model()
+    prompts = _prompts(cfg, [5, 9])
+    reqs = [Request(f"r{i}", prompts[i],
+                    sampling=SamplingParams(max_new_tokens=4))
+            for i in range(2)]
+    paged = ServingEngine(model, params, pool=None, n_slots=2,
+                          mode="paged", page_size=4).run(reqs)
+    slots = ServingEngine(model, params, pool=None, n_slots=2,
+                          mode="slots").run(reqs)
+    for rid in paged:
+        np.testing.assert_array_equal(paged[rid], slots[rid])
+    with pytest.raises(ValueError, match="without\nan adapter pool|without "
+                       "an adapter pool"):
+        ServingEngine(model, params, pool=None, n_slots=1).submit(
+            Request("x", [1], adapter_id=3))
+
+
+def test_request_validation_and_legacy_kwargs():
+    from repro.serving import Request, SamplingParams
+    with pytest.raises(ValueError, match="empty prompt"):
+        Request("r0", [])
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        SamplingParams(max_new_tokens=0)
+    with pytest.raises(ValueError, match="not both"):
+        Request("r0", [1], sampling=SamplingParams(), max_new_tokens=4)
+    legacy = Request("r0", [1, 2], adapter_id=1, max_new_tokens=7, eos_id=9)
+    assert legacy.max_new_tokens == 7 and legacy.eos_id == 9
+    assert legacy.sampling.max_new_tokens == 7
+
+
+def test_deprecated_import_path_and_generate_signature():
+    """The two deprecated spellings still work, loudly."""
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        from repro.serving.scheduler import Request as OldRequest
+    assert any(issubclass(w.category, DeprecationWarning) for w in caught)
+    from repro.serving.api import Request as NewRequest
+    assert OldRequest is NewRequest
+
+    from repro.train.serving import generate
+    model, params, cfg = _serving_model()
+    prompt = jnp.zeros((1, 4), jnp.int32)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        legacy = generate(model, params, prompt, steps=3)
+    assert any(issubclass(w.category, DeprecationWarning) for w in caught)
+    from repro.serving import SamplingParams
+    new = generate(model, params, prompt,
+                   sampling=SamplingParams(max_new_tokens=3))
+    np.testing.assert_array_equal(np.asarray(legacy), np.asarray(new))
+    assert new.shape == (1, 7)
+    with pytest.raises(TypeError, match="not both"):
+        generate(model, params, prompt, steps=3,
+                 sampling=SamplingParams(max_new_tokens=3))
+    with pytest.raises(TypeError, match="requires sampling"):
+        generate(model, params, prompt)

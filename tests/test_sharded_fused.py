@@ -260,6 +260,59 @@ def test_sharded_serving_decode_matches_single_device():
     """)
 
 
+@pytest.mark.slow
+@pytest.mark.parametrize("quant", ["none", "nf4"])
+def test_sharded_paged_serving_matches_single_device_slots(quant):
+    """ISSUE-6 acceptance: the paged + chunked-prefill + prefix-sharing
+    data plane on the mesh reproduces the single-device FIXED-SLOT (v1)
+    engine token for token, dense and NF4.  Requests share a system
+    prompt so the mesh run exercises block adoption, and page_size /
+    prefill_chunk are chosen so the 9-token shared prefix spans both full
+    and partial blocks and the longest prompt needs multiple chunks."""
+    _run(f"""
+    from repro.serving import AdapterPool, Request, SamplingParams, \\
+        ServingEngine, init_adapters
+    run = make_run((2, 4), quant={quant!r})
+    model_ref = build(run)
+    params = model_ref.init(jax.random.PRNGKey(0))
+    adapters = init_adapters(model_ref, 3, jax.random.PRNGKey(2))
+    key = jax.random.PRNGKey(1)
+    sys_prompt = list(np.asarray(jax.random.randint(
+        jax.random.fold_in(key, 99), (9,), 0, run.model.vocab_size)))
+
+    def requests():
+        out = []
+        for i in range(6):
+            tail = list(np.asarray(jax.random.randint(
+                jax.random.fold_in(key, i), (3 + i,), 0,
+                run.model.vocab_size)))
+            out.append(Request(f"r{{i}}", np.asarray(sys_prompt + tail),
+                               adapter_id=i % 3,
+                               sampling=SamplingParams(max_new_tokens=7)))
+        return out
+
+    pool_ref = AdapterPool(model_ref)
+    for i, t in enumerate(adapters):
+        pool_ref.register(f"t{{i}}", t)
+    out_ref = ServingEngine(model_ref, params, pool_ref, n_slots=4,
+                            mode="slots").run(requests())
+
+    mesh, rules, model = make_sharded(run)
+    params_sh = fit_tree(params, model.param_specs(rules), mesh)
+    pool = AdapterPool(model)
+    for i, t in enumerate(adapters):
+        pool.register(f"t{{i}}", t)
+    with mesh:
+        engine = ServingEngine(model, params_sh, pool, n_slots=4,
+                               mode="paged", page_size=4, prefill_chunk=8)
+        out = engine.run(requests())
+    assert set(out) == set(out_ref)
+    for rid in out_ref:
+        np.testing.assert_array_equal(out[rid], out_ref[rid])
+    print("PAGED-MESH-OK", {quant!r})
+    """)
+
+
 def test_mesh_setup_rejects_bad_configs():
     """Config-time gate: blocks not dividing the model axis -> ValueError
     naming the linear; a method without the `shards` capability (HOFT) ->
