@@ -47,9 +47,9 @@ def main() -> None:
     if smoke:
         common.SMOKE = True
     from benchmarks import (fig1_oft_vs_oftv2, fig4_memory, kernels_bench,
-                            methods_bench, requant_error, roofline_report,
-                            serving_bench, sharded_bench, table12_speed,
-                            table345_quality)
+                            methods_bench, requant_error, resilience_bench,
+                            roofline_report, serving_bench, sharded_bench,
+                            table12_speed, table345_quality)
     from benchmarks.common import emit
 
     modules = [
@@ -62,6 +62,7 @@ def main() -> None:
         ("adapter methods (registry sweep)", methods_bench),
         ("multi-tenant serving", serving_bench),
         ("mesh-sharded fused path", sharded_bench),
+        ("resilience (recovery + degradation)", resilience_bench),
         ("roofline artifacts", roofline_report),
     ]
     print("name,us_per_call,derived")

@@ -4,25 +4,49 @@ Checkpoints store *logical* (unsharded) arrays + the config hash; restoring
 is therefore topology-free: we rebuild the target sharding from the new
 mesh's rules and `jax.device_put` each leaf with its new NamedSharding.
 A job checkpointed on 2x(16,16) pods restarts cleanly on (16,16), (8,8), or
-a single host -- the elastic-scaling test exercises 1 -> {2,4}-device CPU
-meshes end to end.
+a single host -- the chaos suite exercises save-on-(2,4) ->
+resume-on-{(8,1),(4,2),(1,8),single-device} CPU meshes end to end with
+loss-trajectory parity (tests/test_chaos.py).
+
+Placement goes through ``fit_spec`` (distributed/sharding.py): a spec axis
+that no longer divides the leaf's dim on the NEW mesh is dropped to
+replicated rather than failing -- reshaping from a 4-way to an 8-way model
+axis must not depend on every adapter dim happening to divide the new
+axis size.
 """
 from __future__ import annotations
 
-from typing import Any, Optional
+from typing import Any, Dict, Optional, Tuple
 
 import jax
-from jax.sharding import Mesh, NamedSharding, PartitionSpec
+from jax.sharding import Mesh
 
 
 def reshard_tree(tree: Any, specs: Any, mesh: Optional[Mesh]):
-    """device_put every leaf with its PartitionSpec under `mesh` (or leave on
-    default device when mesh is None)."""
+    """device_put every leaf with its PartitionSpec fitted to the leaf's
+    shape under `mesh` (or leave on the default device when mesh is
+    None)."""
     if mesh is None:
         return jax.tree_util.tree_map(jax.numpy.asarray, tree)
+    from repro.distributed.sharding import fit_tree
+    return fit_tree(jax.tree_util.tree_map(jax.numpy.asarray, tree),
+                    specs, mesh)
 
-    def put(leaf, spec):
-        spec = spec if spec is not None else PartitionSpec()
-        return jax.device_put(leaf, NamedSharding(mesh, spec))
 
-    return jax.tree_util.tree_map(put, tree, specs)
+def restore_elastic(manager, like: Any, specs: Any = None,
+                    mesh: Optional[Mesh] = None,
+                    step: Optional[int] = None) -> Tuple[Any, Dict]:
+    """Restore from ``manager`` (newest VALID step when ``step`` is None,
+    checksum-verified with corrupt-latest fallback) and place the tree on
+    ``mesh`` per ``specs`` -- the one-call elastic-resume entry point:
+
+        state, meta = restore_elastic(mgr, like=state,
+                                      specs=model.param_specs(rules),
+                                      mesh=new_mesh)
+
+    works no matter what mesh shape (or single device) the checkpoint was
+    written under."""
+    tree, meta = manager.restore(step, like=like)
+    if mesh is None:
+        return jax.tree_util.tree_map(jax.numpy.asarray, tree), meta
+    return reshard_tree(tree, specs, mesh), meta

@@ -4,20 +4,31 @@
     writer never corrupts the latest checkpoint)
   * keep-k garbage collection
   * async: saves run on a background thread (the train loop never blocks on
-    I/O); `wait()` joins before exit / preemption flush
+    I/O); `wait()` joins before exit / preemption flush and RE-RAISES any
+    exception the writer thread hit (a crashed async save is never silent)
   * latest_step() / restore() drive auto-resume in the train loop
+  * resilience (ISSUE-7): stale ``tmp_step_*`` directories left by a
+    crashed writer are swept on init; ``restore()`` checksum-verifies and,
+    when no explicit step is requested, falls back to the newest VALID
+    step if the latest is corrupt or torn; ``arm_fault()`` lets the chaos
+    harness kill the next save mid-write.
 """
 from __future__ import annotations
 
+import logging
 import os
 import re
 import shutil
 import threading
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple
 
 from repro.checkpoint import serialization as ser
+from repro.checkpoint.serialization import CheckpointCorruptError
 
 _STEP_RE = re.compile(r"^step_(\d+)$")
+_TMP_RE = re.compile(r"^tmp_step_(\d+)$")
+
+log = logging.getLogger("repro.checkpoint")
 
 
 class CheckpointManager:
@@ -26,7 +37,25 @@ class CheckpointManager:
         self.keep = keep
         self.async_save = async_save
         self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+        self._fault: Optional[Callable[[str], None]] = None
         os.makedirs(directory, exist_ok=True)
+        self.swept = self._sweep_tmp()
+
+    def _sweep_tmp(self) -> int:
+        """Remove ``tmp_step_*`` leftovers from a writer that died mid-save
+        (the rename to ``step_N`` never happened, so they are invisible to
+        ``steps()`` but would accumulate forever)."""
+        swept = 0
+        for name in os.listdir(self.directory):
+            if _TMP_RE.match(name):
+                shutil.rmtree(os.path.join(self.directory, name),
+                              ignore_errors=True)
+                swept += 1
+        if swept:
+            log.warning("swept %d stale tmp_step_* dir(s) from %s "
+                        "(crashed writer)", swept, self.directory)
+        return swept
 
     # ------------------------------------------------------------- query --
     def steps(self):
@@ -42,17 +71,41 @@ class CheckpointManager:
         s = self.steps()
         return s[-1] if s else None
 
+    def step_path(self, step: int) -> str:
+        return os.path.join(self.directory, f"step_{step}")
+
+    def verify(self, step: int) -> bool:
+        """True when ``step_<step>`` passes full checksum validation."""
+        try:
+            ser.verify_tree(self.step_path(step))
+            return True
+        except CheckpointCorruptError:
+            return False
+
     # -------------------------------------------------------------- save --
+    def arm_fault(self, fault: Optional[Callable[[str], None]]) -> None:
+        """Install a one-shot fault hook for the NEXT save (chaos harness:
+        kill the writer at a chosen point inside ``save_tree``)."""
+        self._fault = fault
+
     def _save_sync(self, step: int, tree: Any, metadata: Dict) -> None:
         final = os.path.join(self.directory, f"step_{step}")
         tmp = os.path.join(self.directory, f"tmp_step_{step}")
         if os.path.exists(tmp):
             shutil.rmtree(tmp)
-        ser.save_tree(tmp, tree, metadata={**metadata, "step": step})
+        fault, self._fault = self._fault, None
+        ser.save_tree(tmp, tree, metadata={**metadata, "step": step},
+                      fault=fault)
         if os.path.exists(final):
             shutil.rmtree(final)
         os.rename(tmp, final)
         self._gc()
+
+    def _save_thread(self, step: int, tree: Any, metadata: Dict) -> None:
+        try:
+            self._save_sync(step, tree, metadata)
+        except BaseException as e:                          # noqa: BLE001
+            self._error = e
 
     def save(self, step: int, tree: Any, metadata: Optional[Dict] = None
              ) -> None:
@@ -66,16 +119,22 @@ class CheckpointManager:
                 lambda x: jax.device_get(x) if hasattr(x, "shape") else x,
                 tree)
             self._thread = threading.Thread(
-                target=self._save_sync, args=(step, host_tree, meta),
+                target=self._save_thread, args=(step, host_tree, meta),
                 daemon=True)
             self._thread.start()
         else:
             self._save_sync(step, tree, meta)
 
     def wait(self) -> None:
+        """Join the in-flight async save; re-raise its exception if the
+        writer thread died (a torn tmp dir is left behind for init-time
+        sweeping -- exactly what a process crash would leave)."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
 
     def _gc(self) -> None:
         steps = self.steps()
@@ -86,8 +145,26 @@ class CheckpointManager:
     # ------------------------------------------------------------ restore --
     def restore(self, step: Optional[int] = None, like: Any = None
                 ) -> Tuple[Any, Dict]:
-        step = step if step is not None else self.latest_step()
-        if step is None:
+        """Load a checkpoint (checksum-verified).
+
+        With an explicit ``step``, corruption raises
+        :class:`CheckpointCorruptError` -- the caller asked for THAT step.
+        With ``step=None``, walks steps newest -> oldest and restores the
+        newest VALID one, logging each corrupt step it skips; raises only
+        when every step on disk is corrupt."""
+        if step is not None:
+            return ser.load_tree(self.step_path(step), like=like)
+        steps = self.steps()
+        if not steps:
             raise FileNotFoundError(f"no checkpoints in {self.directory}")
-        path = os.path.join(self.directory, f"step_{step}")
-        return ser.load_tree(path, like=like)
+        last_err: Optional[CheckpointCorruptError] = None
+        for s in reversed(steps):
+            try:
+                return ser.load_tree(self.step_path(s), like=like)
+            except CheckpointCorruptError as e:
+                log.warning("checkpoint step_%d is corrupt (%s); falling "
+                            "back to the previous step", s, e)
+                last_err = e
+        raise CheckpointCorruptError(
+            f"every checkpoint in {self.directory} is corrupt "
+            f"(steps {steps})") from last_err

@@ -1,0 +1,262 @@
+"""Deterministic, seeded fault-injection (chaos) harness -- ISSUE-7.
+
+A :class:`FaultSchedule` is an explicit, replayable list of
+:class:`FaultEvent`\\ s (step -> fault kind), either hand-written, parsed
+from a CLI spec string (``--chaos "preempt@3,corrupt_latest@5"``), or
+drawn from a seed (``FaultSchedule.from_seed``).  It plugs into
+``train/loop.run_training(chaos=...)`` and, via the same objects, into the
+8-fake-device subprocess harness (``tests/_mesh.run_py``) -- every fault a
+test injects is a value, not a race, so recovery can be asserted as
+loss-trajectory parity against an uninterrupted run.
+
+Fault classes (one per production failure mode):
+
+  ``preempt``         -- SIGTERM-style maintenance event: trips the
+                         PreemptionGuard; the loop flushes a checkpoint
+                         and exits cleanly.
+  ``device_loss``     -- abrupt accelerator loss: raises
+                         :class:`DeviceLost` out of the step; the process
+                         "dies" and must restart + auto-resume
+                         (``run_with_restarts`` is the supervisor).
+  ``straggler``       -- injects ``arg`` seconds of delay INSIDE the
+                         step-timing window, so the StragglerMonitor's
+                         detection path is exercised, not bypassed.
+  ``save_crash``      -- arms the CheckpointManager so its next save dies
+                         mid-``save_tree`` (torn tmp dir, never a torn
+                         ``step_N``); the failure surfaces as
+                         :class:`SaveCrashed` (sync save or the next
+                         ``wait()``) and the restart must fall back to the
+                         previous valid checkpoint.
+  ``corrupt_latest``  -- flips bytes in the newest on-disk checkpoint's
+                         arrays file; the checksummed restore path must
+                         skip it and fall back to the newest VALID step.
+
+Each event fires exactly once even when the run restarts and replays its
+step (the schedule tracks fired events), mirroring real faults: a
+preemption consumed is a preemption gone.
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+FAULT_KINDS = ("preempt", "device_loss", "straggler", "save_crash",
+               "corrupt_latest")
+
+
+class DeviceLost(RuntimeError):
+    """Simulated abrupt accelerator/host loss: the training process is
+    gone; a fresh ``run_training`` must restart and auto-resume from the
+    newest valid checkpoint."""
+
+
+class SaveCrashed(RuntimeError):
+    """The checkpoint writer was killed mid-``save_tree`` (chaos-injected
+    fault point); the tmp directory is torn and the run must restart."""
+
+
+@dataclass(frozen=True)
+class FaultEvent:
+    """One scheduled fault.  ``arg`` is kind-specific: straggler delay in
+    seconds (default 0.25), the 0-based fault-point index a ``save_crash``
+    kills the writer at, or unused."""
+    step: int
+    kind: str
+    arg: float = -1.0
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r} "
+                             f"(known: {FAULT_KINDS})")
+        if self.step < 0:
+            raise ValueError(f"fault step must be >= 0, got {self.step}")
+
+
+def make_save_killer(kill_at: int) -> Callable[[str], None]:
+    """A ``save_tree`` fault hook that raises :class:`SaveCrashed` at the
+    ``kill_at``-th fault point (0 = before any byte is written); a
+    ``kill_at`` past the last point lets the save complete."""
+    count = [0]
+
+    def fault(point: str) -> None:
+        if count[0] == kill_at:
+            raise SaveCrashed(f"chaos: save killed at point {point!r} "
+                              f"(index {kill_at})")
+        count[0] += 1
+
+    return fault
+
+
+def corrupt_checkpoint(directory: str, step: Optional[int] = None,
+                       seed: int = 0, n_bytes: int = 64) -> int:
+    """Flip ``n_bytes`` bytes in the middle of ``step_<step>``'s arrays
+    file (newest step when ``step`` is None).  Returns the corrupted step.
+    The checksummed restore path must detect this and fall back."""
+    from repro.checkpoint.manager import CheckpointManager
+    mgr = CheckpointManager(directory, keep=0, async_save=False)
+    step = step if step is not None else mgr.latest_step()
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints to corrupt in {directory}")
+    path = os.path.join(mgr.step_path(step), "arrays.npz")
+    size = os.path.getsize(path)
+    rng = np.random.default_rng(seed)
+    with open(path, "r+b") as f:
+        # land in the middle of the data, away from the zip end-of-central-
+        # directory record, so corruption looks like bit rot, not truncation
+        start = max(size // 2 - n_bytes, 0)
+        f.seek(start)
+        orig = f.read(min(n_bytes, size - start))
+        f.seek(start)
+        f.write(bytes(b ^ int(m) for b, m in
+                      zip(orig, rng.integers(1, 256, len(orig)))))
+    return step
+
+
+class FaultSchedule:
+    """An ordered, replayable fault plan over training steps.
+
+    ``on_step(step, guard=, manager=)`` fires every not-yet-fired event
+    scheduled at ``step`` (preempt/corrupt/save_crash arm-or-act;
+    device_loss raises), and ``straggler_delay(step)`` returns the delay
+    to inject inside the step-timing window.  Both mark events fired, so a
+    restarted run replaying the same step numbers does not re-suffer
+    consumed faults."""
+
+    def __init__(self, events: Sequence[FaultEvent], log=None):
+        self.events: List[FaultEvent] = sorted(events,
+                                               key=lambda e: (e.step, e.kind))
+        self._fired = [False] * len(self.events)
+        self.log = log if log is not None else (lambda s: None)
+
+    # ---------------------------------------------------------- construct --
+    @classmethod
+    def from_seed(cls, seed: int, steps: int,
+                  rates: Dict[str, float], log=None,
+                  straggler_delay: float = 0.25) -> "FaultSchedule":
+        """Draw a schedule: each step independently suffers each fault
+        kind with probability ``rates[kind]`` -- fully determined by
+        ``seed``, so a chaos run is exactly reproducible."""
+        unknown = set(rates) - set(FAULT_KINDS)
+        if unknown:
+            raise ValueError(f"unknown fault kinds in rates: {sorted(unknown)}")
+        rng = np.random.default_rng(seed)
+        events = []
+        for step in range(steps):
+            for kind in FAULT_KINDS:
+                p = rates.get(kind, 0.0)
+                if p > 0 and rng.random() < p:
+                    arg = straggler_delay if kind == "straggler" else -1.0
+                    events.append(FaultEvent(step, kind, arg))
+        return cls(events, log=log)
+
+    @classmethod
+    def parse(cls, spec: str, log=None) -> "FaultSchedule":
+        """Parse a CLI spec: comma-separated ``kind@step`` or
+        ``kind@step:arg`` tokens, e.g.
+        ``"preempt@3,straggler@5:0.1,corrupt_latest@7"``."""
+        events = []
+        for token in (t.strip() for t in spec.split(",") if t.strip()):
+            if "@" not in token:
+                raise ValueError(
+                    f"bad chaos token {token!r} (want kind@step[:arg])")
+            kind, _, where = token.partition("@")
+            step_s, _, arg_s = where.partition(":")
+            arg = float(arg_s) if arg_s else \
+                (0.25 if kind == "straggler" else -1.0)
+            events.append(FaultEvent(int(step_s), kind, arg))
+        return cls(events, log=log)
+
+    # -------------------------------------------------------------- query --
+    def __len__(self) -> int:
+        return len(self.events)
+
+    def pending(self) -> List[FaultEvent]:
+        return [e for e, f in zip(self.events, self._fired) if not f]
+
+    def fired(self) -> List[FaultEvent]:
+        return [e for e, f in zip(self.events, self._fired) if f]
+
+    def _take(self, step: int, kinds: Tuple[str, ...]) -> List[FaultEvent]:
+        out = []
+        for i, e in enumerate(self.events):
+            if not self._fired[i] and e.step == step and e.kind in kinds:
+                self._fired[i] = True
+                out.append(e)
+        return out
+
+    # --------------------------------------------------------------- fire --
+    def on_step(self, step: int, guard=None, manager=None) -> None:
+        """Fire this step's non-straggler events.  Called by the train
+        loop at the top of each step, BEFORE the forward."""
+        for e in self._take(step, ("preempt", "save_crash",
+                                   "corrupt_latest", "device_loss")):
+            self.log(f"[chaos] step {step}: injecting {e.kind}")
+            if e.kind == "preempt":
+                if guard is None:
+                    raise ValueError("preempt fault needs a PreemptionGuard")
+                guard.trigger()
+            elif e.kind == "save_crash":
+                if manager is None:
+                    raise ValueError("save_crash fault needs a "
+                                     "CheckpointManager")
+                kill_at = int(e.arg) if e.arg >= 0 else 2
+                manager.arm_fault(make_save_killer(kill_at))
+            elif e.kind == "corrupt_latest":
+                if manager is None:
+                    raise ValueError("corrupt_latest fault needs a "
+                                     "CheckpointManager")
+                if manager.latest_step() is not None:
+                    s = corrupt_checkpoint(manager.directory)
+                    self.log(f"[chaos] corrupted checkpoint step_{s}")
+            elif e.kind == "device_loss":
+                raise DeviceLost(f"chaos: device lost at step {step}")
+
+    def straggler_delay(self, step: int) -> float:
+        """Seconds of delay to inject inside the step-timing window (0.0
+        when no straggler is scheduled at ``step``)."""
+        delay = 0.0
+        for e in self._take(step, ("straggler",)):
+            self.log(f"[chaos] step {step}: straggler +{e.arg:.3f}s")
+            delay += e.arg if e.arg >= 0 else 0.25
+        return delay
+
+
+def run_with_restarts(attempt: Callable[[], dict],
+                      max_restarts: int = 8,
+                      log=None) -> Tuple[dict, int]:
+    """Supervisor loop: call ``attempt()`` (typically a ``run_training``
+    closure) until it completes, restarting on injected
+    :class:`DeviceLost` / :class:`SaveCrashed` -- the in-process stand-in
+    for a cluster manager rescheduling a killed job.  Returns
+    ``(result, n_restarts)``; re-raises after ``max_restarts``."""
+    log = log if log is not None else (lambda s: None)
+    restarts = 0
+    while True:
+        try:
+            return attempt(), restarts
+        except (DeviceLost, SaveCrashed) as e:
+            restarts += 1
+            if restarts > max_restarts:
+                raise
+            log(f"[chaos] restart {restarts}/{max_restarts} after: {e}")
+
+
+def main(argv=None):
+    """CLI for CI chaos smokes: ``python -m repro.distributed.chaos
+    corrupt <ckpt_dir> [step]`` flips bytes in the newest (or given)
+    checkpoint, so a follow-up resume must take the fallback path."""
+    import sys
+    argv = argv if argv is not None else sys.argv[1:]
+    if not argv or argv[0] != "corrupt" or len(argv) not in (2, 3):
+        raise SystemExit("usage: python -m repro.distributed.chaos "
+                         "corrupt <ckpt_dir> [step]")
+    step = int(argv[2]) if len(argv) == 3 else None
+    s = corrupt_checkpoint(argv[1], step=step)
+    print(f"[chaos] corrupted {argv[1]}/step_{s}")
+
+
+if __name__ == "__main__":
+    main()

@@ -50,8 +50,15 @@ class Heartbeat:
         os.makedirs(directory, exist_ok=True)
 
     def beat(self) -> None:
-        with open(self.path, "w") as f:
+        # write-to-temp + os.replace: a concurrent `stale_hosts` read can
+        # never observe a truncated/empty file (the old truncate-then-write
+        # made a live host read as dead whenever the read landed between
+        # the truncate and the write)
+        tmp = self.path + ".tmp"
+        with open(tmp, "w") as f:
             f.write(str(time.time()))
+            f.flush()
+        os.replace(tmp, self.path)
 
     @staticmethod
     def stale_hosts(directory: str, timeout: float) -> List[str]:
@@ -73,18 +80,58 @@ class Heartbeat:
 
 
 class PreemptionGuard:
+    """SIGTERM/SIGINT -> ``requested`` flag the train loop polls to flush a
+    final checkpoint and exit cleanly (TPU maintenance events, scheduler
+    preemptions, operator Ctrl-C).
+
+    Both signals are installed (the docstring always promised SIGINT; now
+    it is true), the displaced handlers are remembered, and ``uninstall()``
+    restores them exactly -- also available as a context manager::
+
+        with PreemptionGuard() as guard:
+            run_training(..., guard=guard)
+        # previous handlers are back
+    """
+
+    SIGNALS = (signal.SIGTERM, signal.SIGINT)
+
     def __init__(self, install: bool = True):
         self.requested = False
         self._prev = {}
         if install:
-            for sig in (signal.SIGTERM,):
-                try:
-                    self._prev[sig] = signal.signal(sig, self._handler)
-                except ValueError:
-                    pass   # not on main thread (tests)
+            self.install()
+
+    @property
+    def installed(self) -> bool:
+        return bool(self._prev)
+
+    def install(self) -> None:
+        for sig in self.SIGNALS:
+            if sig in self._prev:
+                continue
+            try:
+                self._prev[sig] = signal.signal(sig, self._handler)
+            except ValueError:
+                pass   # not on main thread (tests)
+
+    def uninstall(self) -> None:
+        """Restore every handler this guard displaced."""
+        while self._prev:
+            sig, prev = self._prev.popitem()
+            try:
+                signal.signal(sig, prev)
+            except ValueError:
+                pass   # not on main thread (tests)
+
+    def __enter__(self) -> "PreemptionGuard":
+        self.install()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.uninstall()
 
     def _handler(self, signum, frame):
         self.requested = True
 
-    def trigger(self) -> None:      # for tests
+    def trigger(self) -> None:      # for tests / chaos injection
         self.requested = True

@@ -89,7 +89,24 @@ def _serve_multi(model, params, args, cfg):
     t0 = time.time()
     for req in requests:
         engine.submit(req)
-    results = engine.drain()
+    if args.chaos_seize > 0 and args.engine == "paged":
+        # graceful-degradation smoke: steal KV blocks mid-flight, let the
+        # engine preempt/requeue its way through, then lift the pressure
+        results = {}
+        for _ in range(3):
+            for r in engine.step():
+                results[r.rid] = r
+        seized = engine.kv.seize(args.chaos_seize)
+        print(f"[serve] chaos: seized {seized} KV blocks mid-flight")
+        for _ in range(8):
+            for r in engine.step():
+                results[r.rid] = r
+        print(f"[serve] health under pressure: {engine.health()}")
+        engine.kv.release_seized()
+        results.update(engine.drain())
+        engine.kv.audit()
+    else:
+        results = engine.drain()
     dt = time.time() - t0
     total = sum(r.n_generated for r in results.values())
     print(f"[serve] {cfg.name} multi-tenant {args.adapter}/{args.quant} "
@@ -101,6 +118,9 @@ def _serve_multi(model, params, args, cfg):
         print(f"  {r.rid} (adapter {req.adapter_id}, {r.finish_reason}, "
               f"ttft {r.ttft * 1e3:.0f}ms, latency {r.latency * 1e3:.0f}ms, "
               f"{r.prefix_blocks_shared} shared blocks): {r.tokens}")
+    h = engine.health()
+    print(f"[serve] health: inflight={h['inflight']} pending={h['pending']} "
+          f"requeued={h['requeued']} counters={h['counters']}")
 
 
 def main(argv=None):
@@ -134,6 +154,10 @@ def main(argv=None):
     ap.add_argument("--prefill-chunk", type=int, default=32,
                     help="prompt tokens prefilled per tick per request "
                          "for --engine paged")
+    ap.add_argument("--chaos-seize", type=int, default=0,
+                    help="chaos: seize N KV blocks mid-flight (paged "
+                         "engine) to exercise the preempt/requeue "
+                         "degradation path; implies a health printout")
     ap.add_argument("--mesh", default="none",
                     help="'none' | comma axis list (e.g. 'data,model') "
                          "with --mesh-shape: mesh-native serving")

@@ -72,6 +72,14 @@ def main(argv=None):
                     help="fused Pallas linears; on any mesh this selects "
                          "the mesh-native per-shard kernel path (fused_tp "
                          "rules + shard_map)")
+    ap.add_argument("--chaos", default="",
+                    help="fault-injection spec, e.g. 'preempt@3,"
+                         "straggler@5:0.1,corrupt_latest@7' (see "
+                         "repro.distributed.chaos); device_loss/save_crash "
+                         "faults are absorbed by in-process restarts")
+    ap.add_argument("--max-restarts", type=int, default=4,
+                    help="restart budget for injected device_loss/"
+                         "save_crash faults (with --chaos)")
     args = ap.parse_args(argv)
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
@@ -147,6 +155,7 @@ def main(argv=None):
                            process_index=jax.process_index(),
                            process_count=jax.process_count(), seed=0)
     guard = PreemptionGuard(install=True)
+    place_state = None
     if mesh is not None:
         specs = model.param_specs(rules)
 
@@ -156,11 +165,30 @@ def main(argv=None):
             return state._replace(base=placed["base"],
                                   adapter=placed["adapter"])
 
-        with mesh:
-            out = run_training(model, run, loader, guard=guard,
-                               place_state=place_state)
+    chaos = None
+    if args.chaos:
+        from repro.distributed.chaos import FaultSchedule
+        chaos = FaultSchedule.parse(args.chaos, log=print)
+
+    def attempt():
+        if mesh is not None:
+            with mesh:
+                return run_training(model, run, loader, guard=guard,
+                                    place_state=place_state, chaos=chaos)
+        return run_training(model, run, loader, guard=guard, chaos=chaos)
+
+    if chaos is not None:
+        from repro.distributed.chaos import run_with_restarts
+        out, restarts = run_with_restarts(attempt,
+                                          max_restarts=args.max_restarts,
+                                          log=print)
+        if restarts:
+            print(f"[train] recovered via {restarts} restart(s)")
     else:
-        out = run_training(model, run, loader, guard=guard)
+        out = attempt()
+    if out["preempted"]:
+        print(f"[train] preempted at step {out['last_step']}; checkpoint "
+              f"flushed to {args.ckpt_dir} -- rerun to resume")
     print(f"[train] final loss "
           f"{float(np.mean(out['losses'][-5:])):.4f} at step "
           f"{out['last_step']}")

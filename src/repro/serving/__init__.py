@@ -14,13 +14,17 @@ mixed-adapter batches, paged KV cache with cross-request prefix sharing.
 
 See README "Serving" for the data-flow map.
 """
-from repro.serving.api import (API_VERSION, FINISH_LENGTH, FINISH_STOP,
+from repro.serving.api import (API_VERSION, FINISH_CANCELLED,
+                               FINISH_DEADLINE, FINISH_LENGTH, FINISH_STOP,
                                GenerationResult, Request, SamplingParams)
 from repro.serving.engine import ServingEngine
-from repro.serving.kv_cache import BlockAllocator, PagedKVCache
+from repro.serving.kv_cache import (BlockAllocator, BlockPoolExhausted,
+                                    PagedKVCache)
 from repro.serving.pool import AdapterPool, init_adapters
 from repro.serving.scheduler import Scheduler
 
-__all__ = ["API_VERSION", "AdapterPool", "BlockAllocator", "FINISH_LENGTH",
-           "FINISH_STOP", "GenerationResult", "PagedKVCache", "Request",
-           "SamplingParams", "Scheduler", "ServingEngine", "init_adapters"]
+__all__ = ["API_VERSION", "AdapterPool", "BlockAllocator",
+           "BlockPoolExhausted", "FINISH_CANCELLED", "FINISH_DEADLINE",
+           "FINISH_LENGTH", "FINISH_STOP", "GenerationResult",
+           "PagedKVCache", "Request", "SamplingParams", "Scheduler",
+           "ServingEngine", "init_adapters"]

@@ -42,14 +42,21 @@ class Request:
 
     ``max_new_tokens=`` / ``eos_id=`` keyword arguments are the PR-3
     spelling; they still work (folded into ``sampling``) but new code
-    should pass ``sampling=SamplingParams(...)``."""
+    should pass ``sampling=SamplingParams(...)``.
 
-    __slots__ = ("rid", "prompt", "adapter_id", "sampling")
+    ``deadline_s`` (optional): a per-request latency budget in seconds,
+    measured from ``submit()``.  A request still unfinished when its
+    deadline passes is cancelled by the engine (wherever it is: pending,
+    requeued after a preemption, or mid-decode) and returned with
+    ``finish_reason="deadline"`` and whatever tokens it produced."""
+
+    __slots__ = ("rid", "prompt", "adapter_id", "sampling", "deadline_s")
 
     def __init__(self, rid: str, prompt: Sequence[int], adapter_id: int = 0,
                  sampling: Optional[SamplingParams] = None,
                  max_new_tokens: Optional[int] = None,
-                 eos_id: Optional[int] = None):
+                 eos_id: Optional[int] = None,
+                 deadline_s: Optional[float] = None):
         if len(prompt) == 0:
             raise ValueError(f"request {rid!r}: empty prompt")
         if sampling is None:
@@ -61,10 +68,13 @@ class Request:
             raise ValueError(
                 f"request {rid!r}: pass either sampling= or the legacy "
                 f"max_new_tokens=/eos_id= kwargs, not both")
+        if deadline_s is not None and deadline_s <= 0:
+            raise ValueError(f"request {rid!r}: deadline_s must be > 0")
         self.rid = rid
         self.prompt = prompt
         self.adapter_id = adapter_id
         self.sampling = sampling
+        self.deadline_s = deadline_s
 
     # PR-3 call sites read these off the request directly.
     @property
@@ -92,12 +102,13 @@ class GenerationResult:
     """
     rid: str
     tokens: np.ndarray             # generated ids, prompt excluded
-    finish_reason: str             # "length" | "stop"
+    finish_reason: str             # "length" | "stop" | "deadline" | "cancelled"
     prompt_len: int
     submitted_at: float = 0.0
     first_token_at: float = 0.0
     finished_at: float = 0.0
     prefix_blocks_shared: int = 0  # KV blocks reused from the prefix cache
+    retries: int = 0               # preempt/requeue cycles survived
 
     @property
     def n_generated(self) -> int:
@@ -114,3 +125,5 @@ class GenerationResult:
 
 FINISH_LENGTH = "length"
 FINISH_STOP = "stop"
+FINISH_DEADLINE = "deadline"     # per-request deadline_s expired
+FINISH_CANCELLED = "cancelled"   # explicit engine.cancel(rid)

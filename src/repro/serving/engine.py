@@ -53,9 +53,10 @@ import numpy as np
 
 from repro import methods
 from repro.models.model import Model
-from repro.serving.api import (FINISH_LENGTH, FINISH_STOP, GenerationResult,
-                               Request)
-from repro.serving.kv_cache import PagedKVCache
+from repro.serving.api import (FINISH_CANCELLED, FINISH_DEADLINE,
+                               FINISH_LENGTH, FINISH_STOP, GenerationResult,
+                               Request, SamplingParams)
+from repro.serving.kv_cache import BlockPoolExhausted, PagedKVCache
 from repro.serving.pool import AdapterPool
 from repro.serving.scheduler import Scheduler
 from repro.train import serving as base_serving
@@ -110,7 +111,8 @@ class ServingEngine:
                  n_slots: int = 4, s_max: Optional[int] = None,
                  temperature: float = 0.0, jit: bool = True, key=None,
                  mode: str = "paged", page_size: int = 16,
-                 num_blocks: Optional[int] = None, prefill_chunk: int = 32):
+                 num_blocks: Optional[int] = None, prefill_chunk: int = 32,
+                 requeue_backoff: int = 1, requeue_backoff_max: int = 8):
         if mode not in ("paged", "slots"):
             raise ValueError(f"mode must be 'paged' or 'slots', got {mode!r}")
         if prefill_chunk < 1:
@@ -134,6 +136,15 @@ class ServingEngine:
         # per-request bookkeeping, keyed by rid while unreaped
         self._gen: Dict[str, List[int]] = {}
         self._meta: Dict[str, dict] = {}
+        # degradation machinery (ISSUE-7): preempted requests wait here
+        # as (ready_tick, shadow Request) until their backoff elapses
+        self._tick = 0
+        self._admit_seq = 0
+        self._requeue: List[tuple] = []
+        self._backoff_base = max(1, int(requeue_backoff))
+        self._backoff_max = max(self._backoff_base, int(requeue_backoff_max))
+        self._counters = {"preemptions": 0, "retries": 0,
+                          "cancelled": 0, "deadline_expired": 0}
         # lazily-built data plane (needs the capacity, known at first step)
         self._state: Optional[dict] = None
         self._resolved: Optional[dict] = None
@@ -199,14 +210,25 @@ class ServingEngine:
                 f"request {rid!r} needs {need} positions but the engine "
                 f"was sized for {self._state['s_cap']} and is mid-flight; "
                 f"construct the engine with s_max={need} (or larger)")
+        now = time.perf_counter()
         self._gen[rid] = []
-        self._meta[rid] = {"req": request,
-                           "submitted": time.perf_counter(),
-                           "first": None, "shared": 0, "blocks": 0}
+        self._meta[rid] = {"req": request, "submitted": now,
+                           "first": None, "shared": 0, "blocks": 0,
+                           "plen": len(request.prompt), "retries": 0,
+                           "deadline": (None if request.deadline_s is None
+                                        else now + request.deadline_s)}
         self._sched.submit(request)
 
     def has_work(self) -> bool:
-        return self._sched.has_work()
+        return self._sched.has_work() or bool(self._requeue)
+
+    @property
+    def kv(self) -> Optional[PagedKVCache]:
+        """The paged block pool (None before the first step / slots
+        mode) -- the chaos entry point: ``engine.kv.seize(n)`` injects
+        pool pressure, ``engine.kv.release_seized()`` lifts it."""
+        st = self._state
+        return st["kv"] if (st is not None and self.mode == "paged") else None
 
     # ----------------------------------------------------------- data plane --
     def _required_cap(self) -> int:
@@ -256,6 +278,7 @@ class ServingEngine:
         st["tok"] = np.zeros((self.n_slots, 1), np.int32)
         st["pos"] = np.full((self.n_slots,), -1, np.int32)
         st["aid"] = np.zeros((self.n_slots,), np.int32)
+        st["age"] = np.zeros((self.n_slots,), np.int64)  # admission seq no.
         self._state = st
 
     # ------------------------------------------------------------- forwards --
@@ -367,18 +390,37 @@ class ServingEngine:
             st["kv"].free(req.rid)
             st["committed"] -= meta["blocks"]
             st["prefill"].pop(slot, None)
+        # meta["plen"] not len(req.prompt): after a preempt/requeue cycle
+        # the slot's request is a shadow whose prompt includes generated
+        # tokens -- the result must report the ORIGINAL prompt length
         finished.append(GenerationResult(
             rid=req.rid, tokens=tokens, finish_reason=reason,
-            prompt_len=len(req.prompt), submitted_at=meta["submitted"],
+            prompt_len=meta["plen"], submitted_at=meta["submitted"],
             first_token_at=meta["first"], finished_at=now,
-            prefix_blocks_shared=meta["shared"]))
+            prefix_blocks_shared=meta["shared"], retries=meta["retries"]))
 
     # ----------------------------------------------------------------- step --
     def step(self) -> List[GenerationResult]:
-        """One scheduler tick: admit what fits, advance every prefilling
-        slot by one prompt chunk, advance every decoding slot by one
-        token.  Returns the requests that finished this tick."""
+        """One scheduler tick: expire deadlines, readmit requeued
+        (previously preempted) requests whose backoff elapsed, admit what
+        fits, advance every prefilling slot by one prompt chunk, advance
+        every decoding slot by one token.  Returns the requests that
+        finished this tick (including deadline-cancelled ones)."""
         finished: List[GenerationResult] = []
+        self._tick += 1
+        now = time.perf_counter()
+        for rid in [r for r, m in self._meta.items()
+                    if m["deadline"] is not None and now > m["deadline"]]:
+            self._counters["deadline_expired"] += 1
+            finished.append(self._cancel_rid(rid, FINISH_DEADLINE))
+        if self._requeue:
+            ready = [r for t, r in self._requeue if t <= self._tick]
+            self._requeue = [(t, r) for t, r in self._requeue
+                             if t > self._tick]
+            # reversed: the oldest preemptee ends up at the queue front
+            for req in reversed(ready):
+                self._sched.submit_front(req)
+                self._counters["retries"] += 1
         if not self._sched.has_work():
             return finished
         self._ensure_state()
@@ -389,11 +431,68 @@ class ServingEngine:
             self._tick_slots(params, finished)
         return finished
 
+    def cancel(self, rid: str) -> GenerationResult:
+        """Cancel an unfinished request wherever it is (pending, requeued
+        after a preemption, prefilling, or decoding); frees its KV blocks
+        and returns a result with the tokens produced so far and
+        ``finish_reason="cancelled"``."""
+        if rid not in self._meta:
+            raise KeyError(f"unknown or already-finished request {rid!r}")
+        self._counters["cancelled"] += 1
+        return self._cancel_rid(rid, FINISH_CANCELLED)
+
+    def health(self) -> dict:
+        """Degradation-visible engine snapshot: queue/inflight depths,
+        preempt/retry/cancel counters, and (paged) block-pool pressure."""
+        h = {"mode": self.mode, "tick": self._tick,
+             "inflight": len(self._sched.active_slots()),
+             "pending": self._sched.pending_count,
+             "requeued": len(self._requeue),
+             "counters": dict(self._counters)}
+        st = self._state
+        if self.mode == "paged" and st is not None:
+            kv: PagedKVCache = st["kv"]
+            h["pool"] = {"free": kv.alloc.n_free, "used": kv.alloc.n_used,
+                         "cached": len(kv._cached), "seized": kv.n_seized,
+                         "capacity": kv.capacity_blocks,
+                         "committed": st["committed"]}
+            h["kv_stats"] = dict(kv.stats)
+        return h
+
+    def _cancel_rid(self, rid: str, reason: str) -> GenerationResult:
+        st = self._state
+        slot = next((s for s in self._sched.active_slots()
+                     if self._sched.slot_request(s).rid == rid), None)
+        meta = self._meta.pop(rid)
+        if slot is not None:                 # active -> st exists
+            self._sched.evict(slot)
+            st["pos"][slot] = -1
+            if self.mode == "paged":
+                st["kv"].free(rid)
+                st["committed"] -= meta["blocks"]
+                st["prefill"].pop(slot, None)
+        else:
+            self._sched.remove_pending(rid)
+            self._requeue = [(t, r) for t, r in self._requeue
+                             if r.rid != rid]
+        tokens = np.asarray(self._gen.pop(rid), np.int32)
+        now = time.perf_counter()
+        return GenerationResult(
+            rid=rid, tokens=tokens, finish_reason=reason,
+            prompt_len=meta["plen"], submitted_at=meta["submitted"],
+            first_token_at=(meta["first"] if meta["first"] is not None
+                            else now),
+            finished_at=now, prefix_blocks_shared=meta["shared"],
+            retries=meta["retries"])
+
     def drain(self) -> Dict[str, GenerationResult]:
         """Step until idle; returns {rid: GenerationResult} for everything
         that finished along the way."""
         out: Dict[str, GenerationResult] = {}
-        while self._sched.has_work():
+        # self.has_work(), not self._sched.has_work(): requests backing off
+        # in the requeue list after a preemption are live work too -- the
+        # scheduler only learns about them when their backoff elapses
+        while self.has_work():
             for res in self.step():
                 out[res.rid] = res
         return out
@@ -413,6 +512,52 @@ class ServingEngine:
         results = self.drain()
         return {rid: results[rid].tokens for rid in rids}
 
+    # ---------------------------------------------------------- degradation --
+    def _requeue_request(self, req: Request) -> None:
+        """Park ``req`` until its exponential backoff elapses (bounded by
+        ``requeue_backoff_max`` ticks)."""
+        meta = self._meta[req.rid]
+        meta["retries"] += 1
+        delay = min(self._backoff_base * (2 ** (meta["retries"] - 1)),
+                    self._backoff_max)
+        self._requeue.append((self._tick + delay, req))
+
+    def _preempt_slot(self, slot: int) -> None:
+        """Evict the request in ``slot`` under pool pressure: commit the
+        token chain it has written (so the retry re-adopts those blocks
+        through the prefix cache instead of re-prefilling), free its
+        blocks + reservation, and requeue a shadow request whose prompt is
+        prompt+generated-so-far and whose budget is what is left.  No
+        token is lost: generation resumes exactly where it stopped."""
+        st = self._state
+        kv: PagedKVCache = st["kv"]
+        req = self._sched.slot_request(slot)
+        rid = req.rid
+        meta = self._meta[rid]
+        orig = meta["req"]
+        full = [int(t) for t in orig.prompt] + self._gen[rid]
+        # positions < written are on device: prefill wrote prompt[:done];
+        # a decoding slot has written everything before st["pos"] (the
+        # pending token at pos itself is written by the NEXT forward)
+        written = (st["prefill"][slot] if slot in st["prefill"]
+                   else int(st["pos"][slot]))
+        if written > 0:
+            kv.commit_chain(rid, full[:written])
+        kv.free(rid)
+        st["committed"] -= meta["blocks"]
+        meta["blocks"] = 0
+        self._sched.evict(slot)
+        st["pos"][slot] = -1
+        st["prefill"].pop(slot, None)
+        self._counters["preemptions"] += 1
+        remaining = max(orig.max_new_tokens - len(self._gen[rid]), 1)
+        shadow = Request(rid, full, adapter_id=orig.adapter_id,
+                         sampling=SamplingParams(
+                             max_new_tokens=remaining,
+                             temperature=orig.sampling.temperature,
+                             eos_id=orig.sampling.eos_id))
+        self._requeue_request(shadow)
+
     # ------------------------------------------------------------ paged tick --
     def _tick_paged(self, params, finished: List[GenerationResult]) -> None:
         st = self._state
@@ -424,10 +569,10 @@ class ServingEngine:
             # keeps the worst-case block count honest WITHIN one tick's
             # admission sweep (not just across ticks).
             need = kv.blocks_for(len(req.prompt) + req.max_new_tokens)
-            if need > kv.capacity_blocks:
+            if need > kv.num_blocks - 1:
                 raise ValueError(
                     f"request {req.rid!r} alone needs {need} KV blocks but "
-                    f"the pool holds {kv.capacity_blocks}; raise num_blocks "
+                    f"the pool holds {kv.num_blocks - 1}; raise num_blocks "
                     f"or s_max")
             if st["committed"] + need > kv.capacity_blocks:
                 return False
@@ -435,14 +580,48 @@ class ServingEngine:
             return True
 
         for slot, req in self._sched.admit(can_admit):
-            start, shared = kv.begin(req.rid, req.prompt, req.adapter_id)
             need = kv.blocks_for(len(req.prompt) + req.max_new_tokens)
+            try:
+                start, shared = kv.begin(req.rid, req.prompt, req.adapter_id)
+            except BlockPoolExhausted:
+                # reservation raced a seized pool; undo and back off
+                st["committed"] -= need
+                self._sched.evict(slot)
+                self._requeue_request(req)
+                continue
             meta = self._meta[req.rid]
-            meta["shared"] = shared
+            meta["shared"] += shared
             meta["blocks"] = need
             st["aid"][slot] = req.adapter_id
             st["pos"][slot] = -1          # not decoding until prefill done
             st["prefill"][slot] = start
+            st["age"][slot] = self._admit_seq
+            self._admit_seq += 1
+
+        # ---- capacity phase, oldest admission first: grow every active
+        # slot's table for this tick BEFORE building the batch.  Under
+        # chaos-seized pool pressure this is where BlockPoolExhausted
+        # surfaces; the degradation policy is preempt-youngest: the newest
+        # admission loses its slot (its written blocks indexed for cheap
+        # retry) and the oldest requests keep streaming tokens.
+        while True:
+            active = self._sched.active_slots()
+            if not active:
+                return
+            C = self.prefill_chunk if st["prefill"] else 1
+            try:
+                for slot in sorted(active, key=lambda s: st["age"][s]):
+                    req = self._sched.slot_request(slot)
+                    if slot in st["prefill"]:
+                        done = st["prefill"][slot]
+                        c = min(C, len(req.prompt) - done)
+                        kv.ensure_capacity(req.rid, done + c - 1)
+                    else:
+                        kv.ensure_capacity(req.rid, int(st["pos"][slot]))
+                break
+            except BlockPoolExhausted:
+                victim = max(active, key=lambda s: st["age"][s])
+                self._preempt_slot(victim)
 
         def slot_rids():
             rids: List[Optional[str]] = [None] * self.n_slots
@@ -465,18 +644,17 @@ class ServingEngine:
         tok = np.zeros((self.n_slots, C), np.int32)
         pos = np.full((self.n_slots, C), -1, np.int32)
         spans = {}
+        # (block capacity for every span below was ensured in the
+        # capacity phase above, before any preemption decisions)
         for slot, done in st["prefill"].items():
             req = self._sched.slot_request(slot)
             c = min(C, len(req.prompt) - done)
             tok[slot, :c] = req.prompt[done:done + c]
             pos[slot, :c] = np.arange(done, done + c)
-            kv.ensure_capacity(req.rid, done + c - 1)
             spans[slot] = (req, done, c)
         for slot in decoding:
             tok[slot, 0] = st["tok"][slot, 0]
             pos[slot, 0] = st["pos"][slot]
-            kv.ensure_capacity(self._sched.slot_request(slot).rid,
-                               int(st["pos"][slot]))
         kv.flush()
         tables = kv.table_rows(slot_rids())
         greedy, logits, kv.pool = self._step_fn(
@@ -494,8 +672,13 @@ class ServingEngine:
                 else:
                     if logits_np is None:
                         logits_np = np.asarray(logits)
+                    # step index = tokens generated so far, NOT 0: after a
+                    # preempt/requeue cycle this prefill completion samples
+                    # mid-generation and must reuse the same fold-in index
+                    # an uninterrupted run would have used
                     first = self._sample(
-                        jnp.asarray(logits_np[slot, c - 1]), req, 0)
+                        jnp.asarray(logits_np[slot, c - 1]), req,
+                        len(self._gen[req.rid]))
                 st["tok"][slot, 0] = first
                 st["pos"][slot] = len(req.prompt)
                 self._record(slot, req, first, finished)

@@ -47,6 +47,15 @@ from repro.models.model import Model
 NULL_BLOCK = 0
 
 
+class BlockPoolExhausted(RuntimeError):
+    """No free or evictable block is left in the pool.  Under normal
+    operation the engine's worst-case admission accounting makes this
+    unreachable; it fires when chaos ``seize()`` shrinks the pool under
+    live requests (or on an engine accounting bug), and the engine's
+    degradation policy answers it: preempt the youngest request, free its
+    blocks, requeue it with bounded backoff."""
+
+
 @jax.jit
 def _copy_block_fn(pool, src, dst, keep):
     """Copy block ``src`` -> ``dst`` in every layer group, keeping only
@@ -192,6 +201,7 @@ class PagedKVCache:
         self._meta: Dict[int, Tuple] = {}   # bid -> index entry (reverse)
         self._cached: "OrderedDict[int, None]" = OrderedDict()  # LRU order
         self._dirty: List[int] = []  # (re)allocated since last flush()
+        self._seized: List[int] = []  # chaos-withheld (pressure injection)
         self.stats = {"shared_full_blocks": 0, "shared_partial_tokens": 0,
                       "cow_copies": 0, "evictions": 0}
 
@@ -211,11 +221,41 @@ class PagedKVCache:
 
     @property
     def capacity_blocks(self) -> int:
-        """Blocks available to requests (block 0 excluded)."""
-        return self.num_blocks - 1
+        """Blocks available to requests (block 0 and chaos-seized blocks
+        excluded)."""
+        return self.num_blocks - 1 - len(self._seized)
+
+    @property
+    def n_seized(self) -> int:
+        return len(self._seized)
 
     def blocks_for(self, n_tokens: int) -> int:
         return -(-n_tokens // self.block_size)
+
+    # --------------------------------------------------- pressure injection
+    def seize(self, n: int) -> int:
+        """Chaos hook: withhold up to ``n`` free/evictable blocks from the
+        pool (simulating a co-tenant burst or shrunk memory budget).
+        Returns how many were actually seized -- referenced blocks are
+        never stolen.  Seized blocks reduce ``capacity_blocks``, so
+        admission refuses new work and already-admitted requests can hit
+        :class:`BlockPoolExhausted` mid-flight -- exactly the condition
+        the engine's preempt/requeue degradation path must absorb."""
+        taken: List[int] = []
+        for _ in range(n):
+            if not self.alloc._free and not self._evict_cached():
+                break
+            taken.append(self.alloc._free.pop())
+        self._seized.extend(taken)
+        return len(taken)
+
+    def release_seized(self) -> int:
+        """Return every seized block to the free list (pressure over)."""
+        n = len(self._seized)
+        for bid in self._seized:
+            self.alloc.release(bid)
+        self._seized.clear()
+        return n
 
     # ----------------------------------------------------------- allocation
     def _evict_cached(self) -> bool:
@@ -232,9 +272,11 @@ class PagedKVCache:
         bid = self.alloc.alloc()
         if bid is None:
             if not self._evict_cached():
-                raise RuntimeError(
-                    "KV block pool exhausted -- admission accounting let an "
-                    "active request outgrow capacity (engine bug)")
+                raise BlockPoolExhausted(
+                    f"KV block pool exhausted ({self.n_seized} of "
+                    f"{self.num_blocks - 1} blocks seized) -- the engine "
+                    f"must preempt+requeue, or this is an admission-"
+                    f"accounting bug")
             bid = self.alloc.alloc()
             assert bid is not None
         self._dirty.append(bid)
@@ -317,7 +359,15 @@ class PagedKVCache:
         if best_m > 0:
             if best_bid in self._cached:
                 self._cached.move_to_end(best_bid)
-            dst = self._take_block()
+            try:
+                dst = self._take_block()
+            except BlockPoolExhausted:
+                # roll back the adoptions so the caller can requeue the
+                # request without leaking references
+                for bid in table:
+                    if self.alloc.decref(bid):
+                        self._retire(bid)
+                raise
             self._copy_block(best_bid, dst, keep=best_m)
             # the copy overwrites every lane, no stale-pos flush needed
             self._dirty.remove(dst)
@@ -362,19 +412,35 @@ class PagedKVCache:
         again, and a partial prompt tail only ever gains lanes *beyond*
         the indexed length."""
         prompt = self._prompts[rid]
+        assert len(self.tables[rid]) * self.block_size >= len(prompt), \
+            f"commit_prefix({rid!r}) before its prompt blocks exist"
+        self.commit_chain(rid, prompt)
+
+    def commit_chain(self, rid: str, tokens: Sequence[int]) -> None:
+        """Index the blocks holding ``tokens`` -- any WRITTEN token chain
+        of ``rid`` (prompt, or prompt + generated-so-far) -- for adoption
+        by a later request.
+
+        This is the cheap-requeue path: the engine preempts ``rid``,
+        commits the chain it has written, frees the request, and
+        resubmits it with ``prompt = chain``; on readmission ``begin``
+        re-adopts these (now cached) blocks instead of re-prefilling.
+        Only pass tokens whose KV is actually on device: full blocks are
+        indexed as shareable, a partial tail as a copy source."""
         table = self.tables[rid]
         bs = self.block_size
-        assert len(table) * bs >= len(prompt), \
-            f"commit_prefix({rid!r}) before its prompt blocks exist"
-        keys = _chain_keys(prompt, bs, self._namespaces[rid])
+        tokens = tuple(int(t) for t in tokens)
+        keys = _chain_keys(tokens, bs, self._namespaces[rid])
         for i, key in enumerate(keys):
+            if i >= len(table):
+                return
             bid = table[i]
             if key in self._full or bid in self._meta:
                 continue   # content already indexed (or block is)
             self._full[key] = bid
             self._meta[bid] = ("full", key)
-        tail = prompt[len(keys) * bs:]
-        if tail:
+        tail = tokens[len(keys) * bs:]
+        if tail and len(keys) < len(table):
             chain = keys[-1] if keys else (self._namespaces[rid],)
             bid = table[len(keys)]
             tails = self._partial.setdefault(chain, {})
@@ -428,16 +494,18 @@ class PagedKVCache:
     def audit(self) -> Dict[str, int]:
         """Check the no-leak/no-double-free invariants; raise on violation.
 
-        free + referenced + cached must partition blocks 1..NB-1, and the
-        total of allocator refcounts must equal the total of block-table
-        entries (every reference is table-held)."""
-        free = set(self.alloc._free)
-        used = set(self.alloc._ref)
-        cached = set(self._cached)
-        assert not free & used, f"free/used overlap: {free & used}"
-        assert not free & cached, f"free/cached overlap: {free & cached}"
-        assert not used & cached, f"used/cached overlap: {used & cached}"
-        every = free | used | cached
+        free + referenced + cached + seized must partition blocks
+        1..NB-1, and the total of allocator refcounts must equal the total
+        of block-table entries (every reference is table-held)."""
+        tiers = {"free": set(self.alloc._free), "used": set(self.alloc._ref),
+                 "cached": set(self._cached), "seized": set(self._seized)}
+        names = list(tiers)
+        for i, a in enumerate(names):
+            for b in names[i + 1:]:
+                assert not tiers[a] & tiers[b], \
+                    f"{a}/{b} overlap: {tiers[a] & tiers[b]}"
+        free, used, cached = tiers["free"], tiers["used"], tiers["cached"]
+        every = free | used | cached | tiers["seized"]
         expect = set(range(1, self.num_blocks))
         assert every == expect, \
             f"leaked: {expect - every}, phantom: {every - expect}"
@@ -453,4 +521,5 @@ class PagedKVCache:
         for chain, tails in self._partial.items():
             for tok, bid in tails.items():
                 assert self._meta.get(bid) == ("partial", chain, tok)
-        return {"free": len(free), "used": len(used), "cached": len(cached)}
+        return {"free": len(free), "used": len(used), "cached": len(cached),
+                "seized": len(tiers["seized"])}

@@ -61,6 +61,21 @@ class Scheduler:
         for r in requests:
             self.submit(r)
 
+    def submit_front(self, request: _Request) -> None:
+        """Queue-jump: a preempted request coming back from its backoff
+        re-enters at the FRONT of the pending queue (it already waited;
+        FIFO fairness is over arrival, not over re-arrivals)."""
+        self._pending.appendleft(request)
+
+    def remove_pending(self, rid: str) -> Optional[_Request]:
+        """Drop (and return) the pending request with id ``rid``; None
+        when it is not in the pending queue (active or unknown)."""
+        for req in self._pending:
+            if req.rid == rid:
+                self._pending.remove(req)
+                return req
+        return None
+
     # ------------------------------------------------------------- queries --
     def has_work(self) -> bool:
         return bool(self._pending) or any(s.request for s in self._slots)

@@ -1,10 +1,14 @@
 """Fault-tolerant training loop.
 
-  * auto-resume from the latest checkpoint (params + optimizer + data cursor
-    + RNG + step)
+  * auto-resume from the newest VALID checkpoint (params + optimizer + data
+    cursor + RNG + step); a corrupt or torn latest step is skipped with a
+    warning (checksum fallback in CheckpointManager.restore)
   * periodic async checkpoints (atomic keep-k)
-  * SIGTERM preemption -> final checkpoint flush + clean exit
+  * SIGTERM/SIGINT preemption -> final checkpoint flush + clean exit
   * straggler monitor on step wall-times
+  * optional chaos harness (``chaos=FaultSchedule(...)``): injected
+    preemptions / device loss / save crashes / checkpoint corruption /
+    straggler delays, all deterministic and replayable
   * works off-mesh (CPU tests/examples) or on-mesh (jit with shardings)
 """
 from __future__ import annotations
@@ -31,10 +35,15 @@ def run_training(model: Model, run: RunConfig, loader: ShardedLoader,
                  log: Callable[[str], None] = print,
                  init_key=None,
                  stop_after: Optional[int] = None,
-                 place_state: Optional[Callable] = None) -> Dict[str, Any]:
+                 place_state: Optional[Callable] = None,
+                 chaos=None) -> Dict[str, Any]:
     """``place_state`` (on-mesh launches): applied to the TrainState after
     init/restore -- device_put params to their NamedShardings so jit
-    in_shardings come from committed placement, not per-step resharding."""
+    in_shardings come from committed placement, not per-step resharding.
+
+    ``chaos`` (optional ``repro.distributed.chaos.FaultSchedule``): fires
+    scheduled faults at the top of each step and injects straggler delays
+    inside the step-timing window (so the monitor sees them)."""
     tc = run.train
     manager = manager or CheckpointManager(tc.ckpt_dir, keep=tc.ckpt_keep)
     guard = guard or PreemptionGuard(install=False)
@@ -47,14 +56,21 @@ def run_training(model: Model, run: RunConfig, loader: ShardedLoader,
     state = state_lib.create(
         params, use_compression=(run.parallel.gradient_compression == "int8"))
     start_step = 0
-    latest = manager.latest_step()
-    if latest is not None:
-        restored, meta = manager.restore(latest, like=state)
+    if manager.latest_step() is not None:
+        # step=None -> newest VALID step: a corrupt/torn latest checkpoint
+        # is skipped (with a warning) instead of killing the resume
+        restored, meta = manager.restore(like=state)
         state = jax.tree_util.tree_map(jax.numpy.asarray, restored)
-        loader.restore({"cursor": meta["data_cursor"]})
+        if "data_cursor" in meta:
+            loader.restore({"cursor": meta["data_cursor"]})
+        else:
+            log("[loop] checkpoint metadata has no data_cursor "
+                "(legacy/foreign checkpoint); data stream restarts at 0")
+        if meta.get("rng") is not None:
+            key = jax.numpy.asarray(np.asarray(meta["rng"], dtype=np.uint32))
         start_step = int(meta["step"])
         log(f"[loop] resumed from step {start_step} "
-            f"(data cursor {meta['data_cursor']})")
+            f"(data cursor {meta.get('data_cursor', 0)})")
     if place_state is not None:
         state = place_state(state)
 
@@ -62,11 +78,17 @@ def run_training(model: Model, run: RunConfig, loader: ShardedLoader,
     stragglers = 0
     t_loop = time.time()
     for step in range(start_step, tc.steps):
+        if chaos is not None:
+            chaos.on_step(step, guard=guard, manager=manager)
         batch = loader.next_batch()
         batch = jax.tree_util.tree_map(jax.numpy.asarray, batch)
         t0 = time.time()
         state, metrics = step_fn(state, batch)
         loss = float(metrics["loss"])
+        if chaos is not None:
+            delay = chaos.straggler_delay(step)
+            if delay > 0:
+                time.sleep(delay)      # inside the timed window, on purpose
         dt = time.time() - t0
         if monitor.record(step, dt):
             stragglers += 1
@@ -80,7 +102,9 @@ def run_training(model: Model, run: RunConfig, loader: ShardedLoader,
         if must_ckpt or guard.requested:
             manager.save(step + 1, state,
                          metadata={"data_cursor": loader.checkpoint()["cursor"],
-                                   "step": step + 1})
+                                   "step": step + 1,
+                                   "rng": np.asarray(key).astype(
+                                       np.uint32).tolist()})
             if guard.requested:
                 manager.wait()
                 log(f"[loop] preempted at step {step + 1}; checkpoint "

@@ -29,15 +29,19 @@ def force_device_count_flags(existing: str, devices: int) -> str:
     return " ".join([f"{_FORCE_FLAG}={devices}"] + kept)
 
 
-def run_py(code: str, devices: int = 8, timeout: int = 900) -> str:
+def run_py(code: str, devices: int = 8, timeout: int = 900,
+           extra_env: dict = None) -> str:
     """Run ``code`` (dedented) in a fresh interpreter with ``devices`` fake
     CPU devices and the repo's src/ on PYTHONPATH; assert exit 0 and return
-    stdout."""
+    stdout.  ``extra_env`` overlays the environment (e.g. a checkpoint dir
+    handed to a chaos/elastic-resume snippet)."""
     env = dict(os.environ)
     env["XLA_FLAGS"] = force_device_count_flags(env.get("XLA_FLAGS", ""),
                                                 devices)
     env["PYTHONPATH"] = os.path.join(ROOT, "src")
     env["JAX_PLATFORMS"] = "cpu"
+    if extra_env:
+        env.update({k: str(v) for k, v in extra_env.items()})
     out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
                          capture_output=True, text=True, env=env,
                          timeout=timeout)

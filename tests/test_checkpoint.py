@@ -1,0 +1,175 @@
+"""Checkpoint integrity tests (ISSUE-7): per-leaf checksums, corrupt-latest
+fallback, stale tmp-dir sweeping, tolerant metadata, and the torn-save
+property test (a writer killed at ANY point never yields a checkpoint that
+both verifies and is wrong)."""
+import os
+import shutil
+import tempfile
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.checkpoint import serialization as ser
+from repro.checkpoint.manager import CheckpointManager
+from repro.checkpoint.serialization import CheckpointCorruptError
+from repro.distributed.chaos import (SaveCrashed, corrupt_checkpoint,
+                                     make_save_killer)
+
+
+def tree_for(step: int):
+    rng = np.random.default_rng(step)
+    return {"w": rng.normal(size=(8, 8)).astype(np.float32),
+            "opt": {"m": rng.normal(size=(8, 8)).astype(np.float32),
+                    "count": np.asarray(step, np.int32)}}
+
+
+def assert_tree_equal(a, b):
+    np.testing.assert_array_equal(a["w"], b["w"])
+    np.testing.assert_array_equal(a["opt"]["m"], b["opt"]["m"])
+    np.testing.assert_array_equal(a["opt"]["count"], b["opt"]["count"])
+
+
+# ---------------------------------------------------------------- checksums
+def test_checksum_detects_bitflip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_save=False)
+    mgr.save(1, tree_for(1), metadata={"step": 1})
+    assert mgr.verify(1)
+    corrupt_checkpoint(str(tmp_path))
+    assert not mgr.verify(1)
+    with pytest.raises(CheckpointCorruptError):
+        mgr.restore(1)
+
+
+def test_verify_tree_returns_metadata(tmp_path):
+    ser.save_tree(str(tmp_path / "ck"), tree_for(3),
+                  metadata={"step": 3, "tag": "x"})
+    meta = ser.verify_tree(str(tmp_path / "ck"))
+    assert meta["step"] == 3 and meta["tag"] == "x"
+
+
+def test_legacy_manifest_without_crc_still_loads(tmp_path):
+    import msgpack
+    path = str(tmp_path / "ck")
+    ser.save_tree(path, tree_for(2), metadata={"step": 2})
+    mpath = os.path.join(path, "manifest.msgpack")
+    with open(mpath, "rb") as f:
+        manifest = msgpack.unpackb(f.read())
+    for leaf in manifest["leaves"]:
+        del leaf["crc"]
+    with open(mpath, "wb") as f:
+        f.write(msgpack.packb(manifest))
+    tree, meta = ser.load_tree(path)
+    assert meta["step"] == 2
+    assert_tree_equal(tree, tree_for(2))
+
+
+# --------------------------------------------------------- corrupt fallback
+def test_restore_falls_back_to_newest_valid_step(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=5, async_save=False)
+    for s in (1, 2, 3):
+        mgr.save(s, tree_for(s), metadata={"step": s})
+    corrupt_checkpoint(str(tmp_path))          # newest (step 3)
+    tree, meta = mgr.restore()                 # no explicit step
+    assert meta["step"] == 2
+    assert_tree_equal(tree, tree_for(2))
+
+
+def test_restore_raises_when_every_step_is_corrupt(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=5, async_save=False)
+    for s in (1, 2):
+        mgr.save(s, tree_for(s), metadata={"step": s})
+        corrupt_checkpoint(str(tmp_path), step=s)
+    with pytest.raises(CheckpointCorruptError):
+        mgr.restore()
+
+
+def test_explicit_step_does_not_fall_back(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=5, async_save=False)
+    for s in (1, 2):
+        mgr.save(s, tree_for(s), metadata={"step": s})
+    corrupt_checkpoint(str(tmp_path), step=2)
+    with pytest.raises(CheckpointCorruptError):
+        mgr.restore(2)
+    tree, meta = mgr.restore(1)
+    assert meta["step"] == 1
+
+
+# ---------------------------------------------------------------- tmp sweep
+def test_init_sweeps_stale_tmp_dirs(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_save=False)
+    mgr.save(1, tree_for(1), metadata={"step": 1})
+    stale = tmp_path / "tmp_step_7"
+    stale.mkdir()
+    (stale / "arrays.npz").write_bytes(b"torn")
+    mgr2 = CheckpointManager(str(tmp_path), keep=3, async_save=False)
+    assert mgr2.swept == 1
+    assert not stale.exists()
+    assert mgr2.steps() == [1]
+
+
+def test_async_save_error_reraised_by_wait(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_save=True)
+    mgr.save(1, tree_for(1), metadata={"step": 1})
+    mgr.wait()
+    mgr.arm_fault(make_save_killer(2))
+    mgr.save(2, tree_for(2), metadata={"step": 2})
+    with pytest.raises(SaveCrashed):
+        mgr.wait()
+    # the torn save never became step_2; step_1 is intact
+    assert mgr.latest_step() == 1
+    assert mgr.verify(1)
+
+
+# ----------------------------------------------------- tolerant train resume
+def test_loop_tolerates_missing_data_cursor(tmp_path):
+    from test_train_loop import loader_for, small_run
+    from repro.models import build
+    from repro.train import state as state_lib
+    from repro.train.loop import run_training
+
+    run = small_run(tmp_path / "run", steps=12)
+    model = build(run)
+    params = model.init(__import__("jax").random.PRNGKey(0))
+    state = state_lib.create(params)
+    mgr = CheckpointManager(run.train.ckpt_dir, keep=2, async_save=False)
+    # a legacy/foreign checkpoint: right tree, no data_cursor in metadata
+    mgr.save(5, state, metadata={"step": 5})
+    msgs = []
+    out = run_training(model, run, loader_for(run), manager=mgr,
+                       log=msgs.append)
+    assert out["last_step"] == 12
+    assert any("no data_cursor" in m for m in msgs)
+
+
+# -------------------------------------------------------- torn-save property
+@settings(max_examples=15, deadline=None)
+@given(kill_at=st.integers(0, 12))
+def test_torn_save_never_yields_invalid_latest(kill_at):
+    """Kill ``save_tree`` at an arbitrary fault point: whatever the
+    interleaving, ``latest_step()`` + ``restore()`` always produce a
+    complete checksum-valid tree (the good old step, or -- when the kill
+    point lands after the manifest -- the fully-written new one)."""
+    d = tempfile.mkdtemp(prefix="torn_save_")
+    try:
+        mgr = CheckpointManager(d, keep=5, async_save=False)
+        mgr.save(1, tree_for(1), metadata={"step": 1})
+        mgr.arm_fault(make_save_killer(kill_at))
+        crashed = False
+        try:
+            mgr.save(2, tree_for(2), metadata={"step": 2})
+        except SaveCrashed:
+            crashed = True
+        # a fresh manager = a restarted process: sweeps torn tmp dirs
+        mgr2 = CheckpointManager(d, keep=5, async_save=False)
+        latest = mgr2.latest_step()
+        assert latest in (1, 2)
+        if crashed:
+            assert latest == 1, "a killed save must never publish step_2"
+        tree, meta = mgr2.restore()
+        assert meta["step"] == latest
+        assert_tree_equal(tree, tree_for(latest))
+        assert mgr2.verify(latest)
+    finally:
+        shutil.rmtree(d, ignore_errors=True)

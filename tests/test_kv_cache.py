@@ -83,7 +83,8 @@ def test_begin_grow_free_roundtrip():
     assert len(kv.tables["r0"]) == 2
     kv.audit()
     kv.free("r0")
-    assert kv.audit() == {"free": kv.capacity_blocks, "used": 0, "cached": 0}
+    assert kv.audit() == {"free": kv.capacity_blocks, "used": 0, "cached": 0,
+                          "seized": 0}
 
 
 def test_table_rows_pads_with_null_block():
@@ -194,7 +195,7 @@ def test_freed_indexed_blocks_stay_cached_then_lru_evict():
     for pos in range(16):
         kv.ensure_capacity("c", pos)
     assert kv.stats["evictions"] == 2
-    assert kv.audit() == {"free": 0, "used": 4, "cached": 0}
+    assert kv.audit() == {"free": 0, "used": 4, "cached": 0, "seized": 0}
 
 
 def test_exhaustion_raises_when_nothing_evictable():

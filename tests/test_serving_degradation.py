@@ -1,0 +1,240 @@
+"""ISSUE-7 serving graceful degradation: KV block-pool pressure (chaos
+``kv.seize``) must preempt + requeue instead of crashing, with ZERO token
+drops -- every request still decodes exactly what the fixed-slot oracle
+produces -- plus per-request deadlines, cancellation, health snapshots,
+and bounded requeue backoff."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.serving.kv_cache import BlockPoolExhausted
+from test_serving_paged import _pooled, _prompts, _serving_model
+
+
+def _engine(model, params, pool, **kw):
+    from repro.serving import ServingEngine
+    kw.setdefault("n_slots", 4)
+    kw.setdefault("mode", "paged")
+    kw.setdefault("page_size", 4)
+    kw.setdefault("prefill_chunk", 8)
+    return ServingEngine(model, params, pool, **kw)
+
+
+def _reqs(cfg, n=4, lengths=None, gen=6):
+    from repro.serving import Request, SamplingParams
+    prompts = _prompts(cfg, lengths or [8] * n)
+    return [Request(f"r{i}", prompts[i], adapter_id=i % 2,
+                    sampling=SamplingParams(max_new_tokens=gen))
+            for i in range(n)]
+
+
+# ------------------------------------------------ preempt/requeue parity
+def test_seize_preempts_requeues_and_drops_no_tokens():
+    """Steal most of the block pool mid-flight: the engine preempts the
+    youngest requests, requeues them (prefix-cached for a cheap retry),
+    and after the pressure lifts EVERY request finishes with exactly the
+    tokens the slots-mode oracle produces."""
+    model, params, cfg = _serving_model()
+    pool, _ = _pooled(model)
+    reqs = _reqs(cfg, n=4, gen=6)
+    oracle = _engine(model, params, pool, mode="slots").run(reqs)
+
+    eng = _engine(model, params, pool, num_blocks=24)
+    for r in reqs:
+        eng.submit(r)
+    results = {}
+    for _ in range(2):
+        for res in eng.step():
+            results[res.rid] = res
+    seized = eng.kv.seize(18)
+    assert seized > 0
+    for _ in range(6):                      # survive under pressure
+        for res in eng.step():
+            results[res.rid] = res
+    h = eng.health()
+    assert h["pool"]["seized"] == seized
+    eng.kv.release_seized()
+    results.update(eng.drain())
+
+    assert eng._counters["preemptions"] >= 1
+    assert eng._counters["retries"] >= 1
+    assert any(r.retries > 0 for r in results.values())
+    for i in range(4):
+        np.testing.assert_array_equal(results[f"r{i}"].tokens,
+                                      oracle[f"r{i}"])
+    eng.kv.audit()
+
+
+def test_repeated_seize_release_cycles_stay_exact():
+    model, params, cfg = _serving_model()
+    pool, _ = _pooled(model)
+    reqs = _reqs(cfg, n=4, lengths=[5, 9, 8, 12], gen=5)
+    oracle = _engine(model, params, pool, mode="slots").run(reqs)
+    eng = _engine(model, params, pool, num_blocks=24)
+    for r in reqs:
+        eng.submit(r)
+    results = {}
+    for cycle in range(3):
+        for _ in range(2):
+            for res in eng.step():
+                results[res.rid] = res
+        eng.kv.seize(20)
+        for _ in range(2):
+            for res in eng.step():
+                results[res.rid] = res
+        eng.kv.release_seized()
+    results.update(eng.drain())
+    for i in range(4):
+        np.testing.assert_array_equal(results[f"r{i}"].tokens,
+                                      oracle[f"r{i}"])
+    audit = eng.kv.audit()
+    assert audit["used"] == 0 and audit["seized"] == 0
+
+
+def test_admission_refused_under_seize_not_crashed():
+    """A request whose worst case cannot fit RIGHT NOW (seized pool) just
+    waits in the queue; one that can NEVER fit (absolute pool size) is a
+    configuration error and raises."""
+    from repro.serving import Request, SamplingParams
+    model, params, cfg = _serving_model()
+    pool, _ = _pooled(model)
+    eng = _engine(model, params, pool, num_blocks=12)
+    # same 12-token worst case as r0: a LONGER later request would make
+    # _ensure_state rebuild the pool (between flights), dropping the seize
+    warm = Request("warm", [1, 2, 3], adapter_id=0,
+                   sampling=SamplingParams(max_new_tokens=9))
+    eng.submit(warm)
+    eng.drain()                             # materialize the pool
+    eng.kv.seize(9)
+    eng.submit(_reqs(cfg, n=1, gen=4)[0])   # needs 3 blocks, 2 available
+    assert eng.step() == [] and eng.has_work()
+    assert eng.health()["pending"] == 1     # refused, not crashed
+    eng.kv.release_seized()
+    res = eng.drain()["r0"]
+    assert res.n_generated == 4
+
+    big = Request("huge", list(range(1, 60)), adapter_id=0,
+                  sampling=SamplingParams(max_new_tokens=4))
+    eng.submit(big)
+    with pytest.raises(ValueError, match="alone needs"):
+        eng.drain()
+
+
+# --------------------------------------------------- deadlines + cancel
+def test_deadline_expires_to_partial_result():
+    from repro.serving import FINISH_DEADLINE, FINISH_LENGTH
+    model, params, cfg = _serving_model()
+    pool, _ = _pooled(model)
+    reqs = _reqs(cfg, n=2, gen=5)
+    from repro.serving import Request, SamplingParams
+    doomed = Request("doomed", _prompts(cfg, [7])[0], adapter_id=0,
+                     sampling=SamplingParams(max_new_tokens=5),
+                     deadline_s=0.001)
+    eng = _engine(model, params, pool)
+    eng.submit(reqs[0])
+    eng.submit(doomed)
+    time.sleep(0.01)
+    results = eng.drain()
+    assert results["doomed"].finish_reason == FINISH_DEADLINE
+    assert results["doomed"].n_generated < 5
+    assert results["r0"].finish_reason == FINISH_LENGTH
+    assert results["r0"].n_generated == 5
+    assert eng._counters["deadline_expired"] == 1
+    eng.kv.audit()                          # expiry freed its blocks
+
+
+def test_deadline_validation():
+    from repro.serving import Request
+    with pytest.raises(ValueError, match="deadline_s"):
+        Request("r0", [1, 2], deadline_s=0.0)
+    with pytest.raises(ValueError, match="deadline_s"):
+        Request("r0", [1, 2], deadline_s=-1.0)
+    assert Request("r0", [1, 2], deadline_s=3.5).deadline_s == 3.5
+    assert Request("r0", [1, 2]).deadline_s is None
+
+
+def test_cancel_active_pending_and_unknown():
+    from repro.serving import FINISH_CANCELLED
+    model, params, cfg = _serving_model()
+    pool, _ = _pooled(model)
+    reqs = _reqs(cfg, n=3, gen=6)
+    eng = _engine(model, params, pool, n_slots=2)   # r2 stays pending
+    for r in reqs:
+        eng.submit(r)
+    for _ in range(3):
+        eng.step()
+    active = eng.cancel("r0")               # mid-decode
+    pending = eng.cancel("r2")              # never admitted
+    assert active.finish_reason == FINISH_CANCELLED
+    assert pending.finish_reason == FINISH_CANCELLED
+    assert pending.n_generated == 0
+    with pytest.raises(KeyError):
+        eng.cancel("nope")
+    with pytest.raises(KeyError):
+        eng.cancel("r0")                    # already cancelled
+    survivor = eng.drain()["r1"]
+    oracle = _engine(model, params, pool, mode="slots").run([reqs[1]])
+    np.testing.assert_array_equal(survivor.tokens, oracle["r1"])
+    assert eng._counters["cancelled"] == 2
+    eng.kv.audit()
+
+
+# ------------------------------------------------------- health + backoff
+def test_health_snapshot_shape_and_pressure():
+    model, params, cfg = _serving_model()
+    pool, _ = _pooled(model)
+    eng = _engine(model, params, pool)
+    h0 = eng.health()
+    assert h0["mode"] == "paged" and h0["inflight"] == 0
+    assert "pool" not in h0                 # no state materialized yet
+    for r in _reqs(cfg, n=2, gen=4):
+        eng.submit(r)
+    eng.step()
+    h1 = eng.health()
+    assert set(h1) >= {"mode", "tick", "inflight", "pending", "requeued",
+                       "counters"}
+    assert h1["inflight"] == 2 and h1["tick"] >= 1
+    pool_h = h1["pool"]
+    assert pool_h["used"] > 0
+    assert pool_h["capacity"] == eng.kv.capacity_blocks
+    assert pool_h["committed"] >= pool_h["used"]
+    seized = eng.kv.seize(4)
+    assert eng.health()["pool"]["seized"] == seized
+    assert eng.health()["pool"]["capacity"] == pool_h["capacity"] - seized
+    eng.kv.release_seized()
+    eng.drain()
+
+
+def test_requeue_backoff_is_exponential_and_bounded():
+    model, params, cfg = _serving_model()
+    pool, _ = _pooled(model)
+    eng = _engine(model, params, pool, requeue_backoff=1,
+                  requeue_backoff_max=4)
+    req = _reqs(cfg, n=1)[0]
+    eng.submit(req)
+    delays = []
+    for _ in range(5):
+        eng._requeue_request(req)
+        ready, _ = eng._requeue.pop()
+        delays.append(ready - eng._tick)
+    assert delays == [1, 2, 4, 4, 4]        # doubled, capped at max
+
+
+def test_seize_never_steals_referenced_blocks():
+    model, params, cfg = _serving_model()
+    pool, _ = _pooled(model)
+    eng = _engine(model, params, pool)
+    for r in _reqs(cfg, n=2, gen=4):
+        eng.submit(r)
+    eng.step()
+    used_before = eng.kv.audit()["used"]
+    eng.kv.seize(10 ** 6)                   # ask for everything
+    audit = eng.kv.audit()
+    assert audit["used"] == used_before     # in-use blocks untouched
+    assert audit["free"] == 0 and audit["cached"] == 0
+    with pytest.raises(BlockPoolExhausted):
+        eng.kv._take_block()
+    eng.kv.release_seized()
+    eng.drain()
+    eng.kv.audit()

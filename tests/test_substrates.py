@@ -183,3 +183,54 @@ def test_heartbeat_staleness(tmp_path):
     hb.beat()
     assert Heartbeat.stale_hosts(str(tmp_path), timeout=100.0) == []
     assert Heartbeat.stale_hosts(str(tmp_path), timeout=-1.0) == ["host0"]
+
+
+def test_heartbeat_read_during_write_never_misreads(tmp_path):
+    """A beat() racing stale_hosts() must never surface as a dead host:
+    the write goes to a temp file and lands via atomic os.replace, so a
+    reader sees either the old timestamp or the new one -- never a
+    truncated/empty file (which parses as epoch 0 = very stale)."""
+    import threading
+
+    hb = Heartbeat(str(tmp_path), "host0")
+    hb.beat()
+    stop = threading.Event()
+
+    def writer():
+        while not stop.is_set():
+            hb.beat()
+
+    t = threading.Thread(target=writer)
+    t.start()
+    try:
+        for _ in range(300):
+            assert Heartbeat.stale_hosts(str(tmp_path), timeout=60.0) == []
+    finally:
+        stop.set()
+        t.join()
+
+
+def test_preemption_guard_installs_and_restores_handlers():
+    import signal
+
+    from repro.distributed.fault import PreemptionGuard
+
+    before = {s: signal.getsignal(s) for s in PreemptionGuard.SIGNALS}
+    guard = PreemptionGuard(install=True)
+    try:
+        assert guard.installed
+        for s in PreemptionGuard.SIGNALS:
+            assert signal.getsignal(s) == guard._handler
+        signal.raise_signal(signal.SIGTERM)
+        assert guard.requested
+    finally:
+        guard.uninstall()
+    assert not guard.installed
+    for s in PreemptionGuard.SIGNALS:
+        assert signal.getsignal(s) == before[s]
+    # context-manager spelling does the same round trip
+    with PreemptionGuard() as g:
+        assert g.installed
+        assert signal.getsignal(signal.SIGINT) == g._handler
+    for s in PreemptionGuard.SIGNALS:
+        assert signal.getsignal(s) == before[s]
