@@ -1,0 +1,92 @@
+"""CI gate on the exported telemetry schema (ISSUE-8).
+
+Reads the ``metrics.jsonl`` snapshots written by live smoke runs
+(``launch.train --metrics-dir`` / ``launch.serve --metrics-dir``) and
+fails when the exported metric set drifts from the documented schema
+(``repro/obs/schema.py`` -- the same table the README renders):
+
+  * a documented family missing from every artifact: an instrumented
+    call site was deleted (or the exporter broke) without updating the
+    schema, so dashboards silently go dark;
+  * a ``smoke_required`` family with zero samples across all artifacts:
+    the family is still registered but nothing feeds it -- dead
+    telemetry that looks alive in ``/metrics``;
+  * an exported family absent from the schema: undocumented telemetry
+    that the README and this gate cannot vouch for (the strictness cuts
+    both ways);
+  * fewer than 25 distinct documented families sampled, or any of the
+    four layers (train / serving / kernel / chaos) entirely unsampled --
+    the ISSUE-8 acceptance floor for the CI smoke.
+
+Usage: PYTHONPATH=src python -m benchmarks.check_metrics DIR [DIR ...]
+(each DIR holds a ``metrics.jsonl``; the LAST snapshot line per file is
+the end-of-run state).
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+from repro.obs import schema
+
+MIN_SAMPLED_FAMILIES = 25
+
+
+def load_samples(directory: str) -> dict:
+    """{family name: sample count} from the newest snapshot in
+    ``DIR/metrics.jsonl``."""
+    path = os.path.join(directory, "metrics.jsonl")
+    with open(path) as f:
+        lines = [ln for ln in f if ln.strip()]
+    if not lines:
+        raise SystemExit(f"check_metrics: {path} is empty")
+    snap = json.loads(lines[-1])
+    return {m["name"]: len(m["samples"]) for m in snap["metrics"]}
+
+
+def check(dirs) -> int:
+    merged: dict = {}
+    for d in dirs:
+        for name, n in load_samples(d).items():
+            merged[name] = merged.get(name, 0) + n
+
+    problems = []
+    for name, spec in schema.SPECS.items():
+        if name not in merged:
+            problems.append(f"documented family {name!r} missing from "
+                            f"every artifact")
+        elif spec.smoke_required and merged[name] == 0:
+            problems.append(f"family {name!r} is smoke_required but has "
+                            f"no samples")
+    for name in sorted(merged):
+        if name not in schema.SPECS:
+            problems.append(f"exported family {name!r} is not in the "
+                            f"documented schema (repro/obs/schema.py)")
+
+    sampled = {n for n, c in merged.items() if c and n in schema.SPECS}
+    if len(sampled) < MIN_SAMPLED_FAMILIES:
+        problems.append(f"only {len(sampled)} documented families carry "
+                        f"samples (floor: {MIN_SAMPLED_FAMILIES})")
+    for layer in schema.LAYERS:
+        if not any(schema.SPECS[n].layer == layer for n in sampled):
+            problems.append(f"no sampled family from the {layer!r} layer")
+
+    for p in problems:
+        print(f"check_metrics: {p}", file=sys.stderr)
+    print(f"check_metrics: {len(schema.SPECS)} documented families, "
+          f"{len(sampled)} sampled across {len(dirs)} artifact dir(s), "
+          f"{len(problems)} problem(s)")
+    return 1 if problems else 0
+
+
+def main(argv=None):
+    argv = argv if argv is not None else sys.argv[1:]
+    if not argv:
+        raise SystemExit("usage: python -m benchmarks.check_metrics "
+                         "DIR [DIR ...]")
+    raise SystemExit(check(argv))
+
+
+if __name__ == "__main__":
+    main()

@@ -73,7 +73,7 @@ def analytic_rows():
                  f"{v1_bytes / v2_bytes:.1f}x"))
     # fused-vs-unfused HBM traffic for one adapted linear at the same scale
     # (the kernel-fusion contribution on top of the paper's v1->v2 win)
-    from benchmarks.kernels_bench import linear_hbm_bytes
+    from repro.roofline.kernels import linear_hbm_bytes
     for tag, qbs in [("oftv2", 0), ("qoft_nf4", 64)]:
         hbm_u = linear_hbm_bytes(tokens, d, n, b, fused=False, quant_bs=qbs)
         hbm_f = linear_hbm_bytes(tokens, d, n, b, fused=True, quant_bs=qbs)

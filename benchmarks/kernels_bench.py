@@ -17,53 +17,7 @@ from repro.core.cayley import build_rotation
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
 from repro.roofline.hw import V5E
-
-
-def linear_hbm_bytes(t: int, k: int, n: int, b: int, fused: bool,
-                     quant_bs: int = 0, dt: int = 4) -> int:
-    """HBM bytes per fused-vs-unfused OFTv2/QOFT linear forward.
-
-    Unfused launches each stage as its own kernel, so every intermediate
-    (rotated activations; dequantized W in the QOFT path) round-trips
-    through HBM.  Fused reads x, R, W(/codes+absmax) once and writes y."""
-    r_bytes = (k // b) * b * b * dt
-    x_in, y_out = t * k * dt, t * n * dt
-    if quant_bs:
-        w_read = (k // 2) * n + (k // quant_bs) * n * 4   # codes + absmax
-        w_roundtrip = 2 * k * n * dt                      # dense W out + in
-    else:
-        w_read = k * n * dt
-        w_roundtrip = 0
-    fused_total = x_in + r_bytes + w_read + y_out
-    if fused:
-        return fused_total
-    return fused_total + w_roundtrip + 2 * t * k * dt     # + xr out + in
-
-
-def linear_bwd_hbm_bytes(t: int, k: int, n: int, b: int, fused: bool,
-                         quant_bs: int = 0, dt: int = 4) -> int:
-    """HBM bytes per fused-vs-unfused OFTv2/QOFT linear BACKWARD (frozen
-    base: dx + dR only, no dW).
-
-    Unfused is three kernels: gW = g @ Wᵀ writes the (T, K) intermediate to
-    HBM and both the dx rotation and the dR token-contraction read it back;
-    the QOFT path additionally re-materializes the dense W first (write +
-    read).  Fused reads g, x, R, W(/codes+absmax) once and writes dx + dR:
-    neither gW nor a dense W ever exists in HBM."""
-    r_bytes = (k // b) * b * b * dt
-    g_in, x_in = t * n * dt, t * k * dt
-    dx_out, dr_out = t * k * dt, r_bytes
-    if quant_bs:
-        w_read = (k // 2) * n + (k // quant_bs) * n * 4   # codes + absmax
-        w_roundtrip = 2 * k * n * dt                      # dense W out + in
-    else:
-        w_read = k * n * dt
-        w_roundtrip = 0
-    fused_total = g_in + x_in + r_bytes + w_read + dx_out + dr_out
-    if fused:
-        return fused_total
-    # + gW out once, read twice (dx stage, dR stage); + dense W roundtrip
-    return fused_total + w_roundtrip + 3 * t * k * dt
+from repro.roofline.kernels import linear_bwd_hbm_bytes, linear_hbm_bytes
 
 
 def fused_rows():

@@ -47,9 +47,10 @@ def main() -> None:
     if smoke:
         common.SMOKE = True
     from benchmarks import (fig1_oft_vs_oftv2, fig4_memory, kernels_bench,
-                            methods_bench, requant_error, resilience_bench,
-                            roofline_report, serving_bench, sharded_bench,
-                            table12_speed, table345_quality)
+                            methods_bench, obs_bench, requant_error,
+                            resilience_bench, roofline_report,
+                            serving_bench, sharded_bench, table12_speed,
+                            table345_quality)
     from benchmarks.common import emit
 
     modules = [
@@ -64,6 +65,7 @@ def main() -> None:
         ("mesh-sharded fused path", sharded_bench),
         ("resilience (recovery + degradation)", resilience_bench),
         ("roofline artifacts", roofline_report),
+        ("telemetry overhead", obs_bench),
     ]
     print("name,us_per_call,derived")
     failures = 0

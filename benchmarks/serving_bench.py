@@ -237,11 +237,6 @@ def _warm_engine(engine, cfg, prompt_lens):
         sampling=SamplingParams(max_new_tokens=4))])
 
 
-def _pct(xs, q: float) -> float:
-    xs = sorted(xs)
-    return xs[min(len(xs) - 1, int(q * len(xs)))]
-
-
 def load_rows(n_adapters: int = 4, n_requests: int | None = None):
     """The --load mode: saturating open-loop traffic against the paged
     engine vs the fixed-slot (v1) engine on the SAME workload + arrival
@@ -279,23 +274,27 @@ def load_rows(n_adapters: int = 4, n_requests: int | None = None):
     first = {}
     for _ in range(3):
         for mode in ("paged", "slots"):
-            wall, results, peak = _drive_load(fresh_engine(mode), reqs,
-                                              arrivals)
+            eng = fresh_engine(mode)
+            wall, results, peak = _drive_load(eng, reqs, arrivals)
             toks = sum(r.n_generated for r in results.values())
-            lats = [r.latency for r in results.values()]
-            stats[mode].append((toks / wall, _pct(lats, 0.99)))
+            # percentiles straight off the engine's OWN latency/TTFT
+            # histograms (repro.obs) -- the numbers a /metrics scrape of
+            # this run would report, not a bench-side recomputation
+            lat, ttft = eng.obs.latency, eng.obs.ttft
+            stats[mode].append((toks / wall, lat.quantile(0.99)))
             if mode not in first:
                 shared = sum(r.prefix_blocks_shared
                              for r in results.values())
-                first[mode] = (wall, toks / wall, _pct(lats, 0.5),
-                               _pct(lats, 0.99), peak, shared)
+                first[mode] = (wall, toks / wall, lat.quantile(0.5),
+                               lat.quantile(0.99), ttft.quantile(0.5),
+                               peak, shared)
     for mode in ("paged", "slots"):
-        wall, tok_s, p50, p99, peak, shared = first[mode]
+        wall, tok_s, p50, p99, ttft50, peak, shared = first[mode]
         rows.append((
             f"serving/load/{mode}/{tag}", wall * 1e6,
             f"tok_s={tok_s:.1f};p50_ms={p50 * 1e3:.1f};"
-            f"p99_ms={p99 * 1e3:.1f};peak_inflight={peak};"
-            f"shared_blocks={shared}"))
+            f"p99_ms={p99 * 1e3:.1f};ttft_p50_ms={ttft50 * 1e3:.1f};"
+            f"peak_inflight={peak};shared_blocks={shared}"))
     med = lambda xs: sorted(xs)[len(xs) // 2]   # noqa: E731
     tput = med([p[0] / s[0] for p, s in zip(stats["paged"],
                                             stats["slots"])])

@@ -20,8 +20,10 @@ import os
 import re
 import shutil
 import threading
+import time
 from typing import Any, Callable, Dict, Optional, Tuple
 
+from repro import obs
 from repro.checkpoint import serialization as ser
 from repro.checkpoint.serialization import CheckpointCorruptError
 
@@ -89,6 +91,7 @@ class CheckpointManager:
         self._fault = fault
 
     def _save_sync(self, step: int, tree: Any, metadata: Dict) -> None:
+        t0 = time.perf_counter()
         final = os.path.join(self.directory, f"step_{step}")
         tmp = os.path.join(self.directory, f"tmp_step_{step}")
         if os.path.exists(tmp):
@@ -100,6 +103,11 @@ class CheckpointManager:
             shutil.rmtree(final)
         os.rename(tmp, final)
         self._gc()
+        # observed from the writer thread on async saves -- the histogram
+        # is what the I/O costs, not what the train loop blocked on
+        obs.metric("train/checkpoint_save_seconds").observe(
+            time.perf_counter() - t0)
+        obs.metric("train/checkpoint_saves_total").inc()
 
     def _save_thread(self, step: int, tree: Any, metadata: Dict) -> None:
         try:
@@ -152,15 +160,23 @@ class CheckpointManager:
         With ``step=None``, walks steps newest -> oldest and restores the
         newest VALID one, logging each corrupt step it skips; raises only
         when every step on disk is corrupt."""
+        t0 = time.perf_counter()
+
+        def done(result):
+            obs.metric("train/checkpoint_restore_seconds").observe(
+                time.perf_counter() - t0)
+            obs.metric("train/checkpoint_restores_total").inc()
+            return result
+
         if step is not None:
-            return ser.load_tree(self.step_path(step), like=like)
+            return done(ser.load_tree(self.step_path(step), like=like))
         steps = self.steps()
         if not steps:
             raise FileNotFoundError(f"no checkpoints in {self.directory}")
         last_err: Optional[CheckpointCorruptError] = None
         for s in reversed(steps):
             try:
-                return ser.load_tree(self.step_path(s), like=like)
+                return done(ser.load_tree(self.step_path(s), like=like))
             except CheckpointCorruptError as e:
                 log.warning("checkpoint step_%d is corrupt (%s); falling "
                             "back to the previous step", s, e)

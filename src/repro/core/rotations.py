@@ -28,6 +28,7 @@ from __future__ import annotations
 
 from typing import Iterator, Tuple
 
+import jax
 import jax.numpy as jnp
 
 from repro import methods
@@ -75,7 +76,23 @@ def with_rotations(adapter_tree, acfg: AdapterConfig, shard=None):
     packed = [leaf["q_packed"] for _, leaf in leaves]
     flat = [q.reshape(-1, q.shape[-1]) for q in packed]
     sizes = [f.shape[0] for f in flat]
-    r_all = oft_lib.build_r({"q_packed": jnp.concatenate(flat, axis=0)}, acfg)
+    stacked = jnp.concatenate(flat, axis=0)
+    # time EAGER builds only (serving-pool stacking): under a trace this
+    # is abstract and any timing/blocking would perturb the jaxpr, which
+    # the telemetry layer is contractually forbidden from doing
+    timed = not isinstance(stacked, jax.core.Tracer)
+    if timed:
+        import time
+
+        from repro import obs
+        timed = obs.enabled()
+    if timed:
+        t0 = time.perf_counter()
+    r_all = oft_lib.build_r({"q_packed": stacked}, acfg)
+    if timed:
+        jax.block_until_ready(r_all)
+        obs.metric("oft/rotation_build_seconds").observe(
+            time.perf_counter() - t0)
 
     out = _copy_tree(adapter_tree)
     start = 0

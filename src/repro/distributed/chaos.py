@@ -43,6 +43,8 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import obs
+
 FAULT_KINDS = ("preempt", "device_loss", "straggler", "save_crash",
                "corrupt_latest")
 
@@ -194,6 +196,8 @@ class FaultSchedule:
         for e in self._take(step, ("preempt", "save_crash",
                                    "corrupt_latest", "device_loss")):
             self.log(f"[chaos] step {step}: injecting {e.kind}")
+            obs.metric("chaos/faults_fired_total").labels(kind=e.kind).inc()
+            obs.event("chaos.fault", kind=e.kind, step=step)
             if e.kind == "preempt":
                 if guard is None:
                     raise ValueError("preempt fault needs a PreemptionGuard")
@@ -220,6 +224,8 @@ class FaultSchedule:
         delay = 0.0
         for e in self._take(step, ("straggler",)):
             self.log(f"[chaos] step {step}: straggler +{e.arg:.3f}s")
+            obs.metric("chaos/faults_fired_total").labels(kind=e.kind).inc()
+            obs.event("chaos.fault", kind=e.kind, step=step, arg=e.arg)
             delay += e.arg if e.arg >= 0 else 0.25
         return delay
 
@@ -241,6 +247,8 @@ def run_with_restarts(attempt: Callable[[], dict],
             restarts += 1
             if restarts > max_restarts:
                 raise
+            obs.metric("train/restarts_total").inc()
+            obs.event("chaos.restart", attempt=restarts, cause=str(e))
             log(f"[chaos] restart {restarts}/{max_restarts} after: {e}")
 
 

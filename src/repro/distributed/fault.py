@@ -17,6 +17,8 @@ import signal
 import time
 from typing import Callable, Dict, List, Optional
 
+from repro import obs
+
 
 class StragglerMonitor:
     def __init__(self, alpha: float = 0.1, threshold: float = 2.0,
@@ -38,6 +40,9 @@ class StragglerMonitor:
                    and seconds > self.threshold * self.ewma)
         if is_slow:
             self.flagged.append(step)
+            obs.metric("train/stragglers_total").inc()
+            obs.event("train.straggler", step=step, seconds=seconds,
+                      ewma=self.ewma)
         # slow steps should not drag the baseline up
         a = self.alpha if not is_slow else self.alpha * 0.1
         self.ewma = (1 - a) * self.ewma + a * seconds

@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.runtime import resolve_interpret
+from repro.kernels.runtime import record_launch, resolve_interpret
 
 DEFAULT_TOKEN_TILE = 256
 DEFAULT_BLOCK_TILE = 8
@@ -52,6 +52,9 @@ def block_oft_apply_kernel(x3: jnp.ndarray, r_blocks: jnp.ndarray,
     interpret = resolve_interpret(interpret)
     t, rb, b = x3.shape
     grid = (t // token_tile, rb // block_tile)
+    record_launch("block_oft_apply", grid,
+                  {"token": token_tile, "block": block_tile},
+                  t=t, k=rb * b, b=b)
     return pl.pallas_call(
         _kernel,
         grid=grid,

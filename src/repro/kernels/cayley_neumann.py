@@ -22,7 +22,7 @@ import numpy as np
 from jax.experimental import pallas as pl
 
 from repro.core.skew import _unpack_gather_index, _unpack_sign, pack_dim
-from repro.kernels.runtime import resolve_interpret
+from repro.kernels.runtime import record_launch, resolve_interpret
 
 DEFAULT_BLOCK_TILE = 8
 
@@ -71,6 +71,8 @@ def cayley_neumann_kernel(q_packed: jnp.ndarray, block_size: int,
     idx = jnp.asarray(_unpack_gather_index(b))
     sign = jnp.asarray(_unpack_sign(b))
     grid = (rb // block_tile,)
+    record_launch("cayley_neumann", grid, {"block": block_tile},
+                  rb=rb, b=b, terms=neumann_terms)
     return pl.pallas_call(
         _make_kernel(neumann_terms, b),
         grid=grid,

@@ -28,7 +28,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.hoft import NORM_EPS
-from repro.kernels.runtime import resolve_interpret
+from repro.kernels.runtime import record_launch, resolve_interpret
 
 DEFAULT_TOKEN_TILE = 256
 DEFAULT_N_TILE = 256
@@ -70,6 +70,9 @@ def hoft_linear_fused_kernel(x2: jnp.ndarray, v: jnp.ndarray,
     t, k_dim = x2.shape
     n = w.shape[1]
     grid = (t // token_tile, n // n_tile)
+    record_launch("hoft_linear_fused", grid,
+                  {"token": token_tile, "n": n_tile},
+                  t=t, k=k_dim, n=n, m=v.shape[0])
     return pl.pallas_call(
         _kernel,
         grid=grid,

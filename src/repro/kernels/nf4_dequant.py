@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.runtime import resolve_interpret
+from repro.kernels.runtime import record_launch, resolve_interpret
 from repro.quant.nf4 import NF4_TABLE
 
 DEFAULT_IN_TILE = 256    # rows of the dequantized weight per program
@@ -56,6 +56,9 @@ def nf4_dequant_kernel(codes: jnp.ndarray, absmax: jnp.ndarray,
     d_out = codes.shape[1]
     table = jnp.asarray(NF4_TABLE)
     grid = (d_in // in_tile, d_out // out_tile)
+    record_launch("nf4_dequant", grid,
+                  {"in": in_tile, "out": out_tile},
+                  k=d_in, n=d_out, quant_bs=block_size)
     return pl.pallas_call(
         _make_kernel(block_size, in_tile),
         grid=grid,

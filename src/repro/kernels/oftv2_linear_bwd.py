@@ -33,7 +33,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.oftv2_linear_fused import _rotate_tile
-from repro.kernels.runtime import resolve_interpret
+from repro.kernels.runtime import record_launch, resolve_interpret
 
 DEFAULT_TOKEN_TILE = 256
 DEFAULT_N_TILE = 256
@@ -107,6 +107,9 @@ def oftv2_linear_bwd_kernel(g2: jnp.ndarray, x2: jnp.ndarray,
     n = g2.shape[1]
     rb, b, _ = r_blocks.shape
     grid = (k_dim // k_tile, t // token_tile, n // n_tile)
+    record_launch("oftv2_linear_bwd", grid,
+                  {"token": token_tile, "n": n_tile, "k": k_tile},
+                  t=t, k=k_dim, n=n, b=b)
     return pl.pallas_call(
         _kernel,
         grid=grid,

@@ -27,7 +27,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.runtime import resolve_interpret
+from repro.kernels.runtime import record_launch, resolve_interpret
 
 DEFAULT_TOKEN_TILE = 256
 DEFAULT_N_TILE = 256
@@ -79,6 +79,9 @@ def oftv2_linear_fused_kernel(x2: jnp.ndarray, r_blocks: jnp.ndarray,
     n = w.shape[1]
     rb, b, _ = r_blocks.shape
     grid = (t // token_tile, n // n_tile, k_dim // k_tile)
+    record_launch("oftv2_linear_fused", grid,
+                  {"token": token_tile, "n": n_tile, "k": k_tile},
+                  t=t, k=k_dim, n=n, b=b)
     return pl.pallas_call(
         _kernel,
         grid=grid,

@@ -34,7 +34,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels.oftv2_linear_fused import _rotate_tile
-from repro.kernels.runtime import resolve_interpret
+from repro.kernels.runtime import record_launch, resolve_interpret
 
 DEFAULT_TOKEN_TILE = 256
 DEFAULT_N_TILE = 256
@@ -86,6 +86,9 @@ def oftv2_linear_multi_kernel(x2: jnp.ndarray, ids2: jnp.ndarray,
     n = w.shape[1]
     a, rb, b, _ = r_stack.shape
     grid = (t // token_tile, n // n_tile, k_dim // k_tile)
+    record_launch("oftv2_linear_multi", grid,
+                  {"token": token_tile, "n": n_tile, "k": k_tile},
+                  t=t, k=k_dim, n=n, b=b, adapters=a)
     return pl.pallas_call(
         _kernel,
         grid=grid,

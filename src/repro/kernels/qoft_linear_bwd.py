@@ -35,7 +35,7 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels.oftv2_linear_bwd import _dr_partial, _gw_partial
 from repro.kernels.oftv2_linear_fused import _rotate_tile
 from repro.kernels.qoft_linear_fused import _dequant_tile
-from repro.kernels.runtime import resolve_interpret
+from repro.kernels.runtime import record_launch, resolve_interpret
 from repro.quant.nf4 import NF4_TABLE
 
 DEFAULT_TOKEN_TILE = 256
@@ -98,6 +98,9 @@ def qoft_linear_bwd_kernel(g2: jnp.ndarray, x2: jnp.ndarray,
     rb, b, _ = r_blocks.shape
     table = jnp.asarray(NF4_TABLE)
     grid = (k_dim // k_tile, t // token_tile, n // n_tile)
+    record_launch("qoft_linear_bwd", grid,
+                  {"token": token_tile, "n": n_tile, "k": k_tile},
+                  t=t, k=k_dim, n=n, b=b, quant_bs=block_size)
     return pl.pallas_call(
         _make_kernel(block_size, k_tile),
         grid=grid,

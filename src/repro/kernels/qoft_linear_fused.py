@@ -30,7 +30,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels.oftv2_linear_fused import _rotate_tile
-from repro.kernels.runtime import resolve_interpret
+from repro.kernels.runtime import record_launch, resolve_interpret
 from repro.quant.nf4 import NF4_TABLE
 
 DEFAULT_TOKEN_TILE = 256
@@ -92,6 +92,9 @@ def qoft_linear_fused_kernel(x2: jnp.ndarray, r_blocks: jnp.ndarray,
     rb, b, _ = r_blocks.shape
     table = jnp.asarray(NF4_TABLE)
     grid = (t // token_tile, n // n_tile, k_dim // k_tile)
+    record_launch("qoft_linear_fused", grid,
+                  {"token": token_tile, "n": n_tile, "k": k_tile},
+                  t=t, k=k_dim, n=n, b=b, quant_bs=block_size)
     return pl.pallas_call(
         _make_kernel(block_size, k_tile),
         grid=grid,

@@ -29,7 +29,7 @@ from jax.experimental import pallas as pl
 
 from repro.kernels.oftv2_linear_multi import _route_rotate
 from repro.kernels.qoft_linear_fused import _dequant_tile
-from repro.kernels.runtime import resolve_interpret
+from repro.kernels.runtime import record_launch, resolve_interpret
 from repro.quant.nf4 import NF4_TABLE
 
 DEFAULT_TOKEN_TILE = 256
@@ -75,6 +75,9 @@ def qoft_linear_multi_kernel(x2: jnp.ndarray, ids2: jnp.ndarray,
     a, rb, b, _ = r_stack.shape
     table = jnp.asarray(NF4_TABLE)
     grid = (t // token_tile, n // n_tile, k_dim // k_tile)
+    record_launch("qoft_linear_multi", grid,
+                  {"token": token_tile, "n": n_tile, "k": k_tile},
+                  t=t, k=k_dim, n=n, b=b, quant_bs=block_size, adapters=a)
     return pl.pallas_call(
         _make_kernel(block_size, k_tile),
         grid=grid,

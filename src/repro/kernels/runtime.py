@@ -7,11 +7,14 @@ jit'd wrappers in ``repro.kernels.ops`` -- previously the raw kernels
 defaulted to ``interpret=True`` and silently ran interpreted on TPU.
 
 This module must stay import-light (no ops/kernel imports) so the kernel
-modules can use it without cycles.
+modules can use it without cycles.  The launch-hook mechanism below keeps
+that property: kernels call ``record_launch(...)`` (a no-op while no hook
+is registered) and the telemetry layer (``repro.obs.kernels``) registers
+its hook from the other side.
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import Callable, List, Optional, Tuple
 
 import jax
 
@@ -24,3 +27,34 @@ def default_interpret() -> bool:
 def resolve_interpret(interpret: Optional[bool]) -> bool:
     """None -> backend auto-detection; explicit bools pass through."""
     return default_interpret() if interpret is None else bool(interpret)
+
+
+# ------------------------------------------------------------- launch hooks --
+# Hooks fire from inside each kernel entry's Python body, which runs at
+# TRACE time (the entries are jit-wrapped): one firing per distinct-shape
+# lowering, zero per steady-state executed call, and zero ops added to any
+# jaxpr.  That is exactly the contract the telemetry layer wants -- launch
+# *lowerings* are countable without perturbing the compiled hot path.
+_launch_hooks: List[Callable[..., None]] = []
+
+
+def register_launch_hook(hook: Callable[..., None]) -> None:
+    """Register ``hook(kernel, grid, tiles, **shape)``; idempotent."""
+    if hook not in _launch_hooks:
+        _launch_hooks.append(hook)
+
+
+def unregister_launch_hook(hook: Callable[..., None]) -> None:
+    if hook in _launch_hooks:
+        _launch_hooks.remove(hook)
+
+
+def record_launch(kernel: str, grid: Tuple[int, ...], tiles: dict,
+                  **shape) -> None:
+    """Report one kernel lowering to whatever hooks are installed.  The
+    empty-hook fast path is a single truthiness test, so uninstrumented
+    processes pay nothing."""
+    if not _launch_hooks:
+        return
+    for hook in list(_launch_hooks):
+        hook(kernel, tuple(int(g) for g in grid), dict(tiles), **shape)

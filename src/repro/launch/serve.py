@@ -29,7 +29,7 @@ import time
 import jax
 import numpy as np
 
-from repro import methods
+from repro import methods, obs
 from repro.config.base import (AdapterConfig, ParallelConfig, QuantConfig,
                                RunConfig)
 from repro.configs import REGISTRY, get_config, get_smoke
@@ -164,6 +164,16 @@ def main(argv=None):
     ap.add_argument("--mesh-shape", default="",
                     help="comma ints matching --mesh, e.g. '2,4'")
     ap.add_argument("--block-size", type=int, default=32)
+    ap.add_argument("--metrics-dir", default="",
+                    help="telemetry export dir: metrics.jsonl + "
+                         "metrics.prom + spans.jsonl written on exit "
+                         "(repro.obs)")
+    ap.add_argument("--metrics-port", type=int, default=-1,
+                    help="serve Prometheus-style GET /metrics on this "
+                         "port for the run's duration (0 = ephemeral)")
+    ap.add_argument("--profile-dir", default="",
+                    help="bridge obs spans into a jax.profiler trace "
+                         "written under this directory")
     args = ap.parse_args(argv)
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
@@ -198,26 +208,41 @@ def main(argv=None):
                                           or mesh is not None),
                     quant=QuantConfig(kind=args.quant),
                     parallel=pcfg)
-    if mesh is not None:
-        from repro.distributed.sharding import (fit_tree, make_constrain,
-                                                make_shard_context)
-        shard_ctx = make_shard_context(mesh, rules, run)
-        model = build(run, constrain=make_constrain(rules, mesh),
-                      shard=shard_ctx)
-        params = fit_tree(model.init(jax.random.PRNGKey(0)),
-                          model.param_specs(rules), mesh)
-        with mesh:
-            if multi:
-                _serve_multi(model, params, args, cfg)
-            else:
-                _serve_single(model, params, args, cfg)
-        return
-    model = build(run)
-    params = model.init(jax.random.PRNGKey(0))
-    if multi:
-        _serve_multi(model, params, args, cfg)
-    else:
-        _serve_single(model, params, args, cfg)
+    server = None
+    if args.metrics_port >= 0:
+        server = obs.serve_metrics(args.metrics_port)
+        print(f"[serve] metrics on "
+              f"http://127.0.0.1:{server.port}/metrics")
+    if args.profile_dir:
+        obs.TRACER.start_profile(args.profile_dir)
+    try:
+        if mesh is not None:
+            from repro.distributed.sharding import (fit_tree, make_constrain,
+                                                    make_shard_context)
+            shard_ctx = make_shard_context(mesh, rules, run)
+            model = build(run, constrain=make_constrain(rules, mesh),
+                          shard=shard_ctx)
+            params = fit_tree(model.init(jax.random.PRNGKey(0)),
+                              model.param_specs(rules), mesh)
+            with mesh:
+                if multi:
+                    _serve_multi(model, params, args, cfg)
+                else:
+                    _serve_single(model, params, args, cfg)
+            return
+        model = build(run)
+        params = model.init(jax.random.PRNGKey(0))
+        if multi:
+            _serve_multi(model, params, args, cfg)
+        else:
+            _serve_single(model, params, args, cfg)
+    finally:
+        if args.profile_dir:
+            obs.TRACER.stop_profile()
+        if args.metrics_dir:
+            obs.dump(args.metrics_dir)
+        if server is not None:
+            server.close()
 
 
 if __name__ == "__main__":

@@ -26,7 +26,7 @@ import argparse
 import jax
 import numpy as np
 
-from repro import methods
+from repro import methods, obs
 from repro.config.base import (AdapterConfig, QuantConfig, RunConfig,
                                TrainConfig)
 from repro.configs import REGISTRY, get_config, get_smoke
@@ -80,6 +80,18 @@ def main(argv=None):
     ap.add_argument("--max-restarts", type=int, default=4,
                     help="restart budget for injected device_loss/"
                          "save_crash faults (with --chaos)")
+    ap.add_argument("--metrics-dir", default="",
+                    help="telemetry export dir: metrics.jsonl + "
+                         "metrics.prom + spans.jsonl, appended at every "
+                         "checkpoint and on exit (repro.obs) -- appends "
+                         "survive chaos restarts, so one run's telemetry "
+                         "stitches across attempts")
+    ap.add_argument("--metrics-port", type=int, default=-1,
+                    help="serve Prometheus-style GET /metrics on this "
+                         "port for the run's duration (0 = ephemeral)")
+    ap.add_argument("--profile-dir", default="",
+                    help="bridge obs spans into a jax.profiler trace "
+                         "written under this directory")
     args = ap.parse_args(argv)
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
@@ -170,22 +182,40 @@ def main(argv=None):
         from repro.distributed.chaos import FaultSchedule
         chaos = FaultSchedule.parse(args.chaos, log=print)
 
+    metrics_dir = args.metrics_dir or None
+
     def attempt():
         if mesh is not None:
             with mesh:
                 return run_training(model, run, loader, guard=guard,
-                                    place_state=place_state, chaos=chaos)
-        return run_training(model, run, loader, guard=guard, chaos=chaos)
+                                    place_state=place_state, chaos=chaos,
+                                    metrics_dir=metrics_dir)
+        return run_training(model, run, loader, guard=guard, chaos=chaos,
+                            metrics_dir=metrics_dir)
 
-    if chaos is not None:
-        from repro.distributed.chaos import run_with_restarts
-        out, restarts = run_with_restarts(attempt,
-                                          max_restarts=args.max_restarts,
-                                          log=print)
-        if restarts:
-            print(f"[train] recovered via {restarts} restart(s)")
-    else:
-        out = attempt()
+    server = None
+    if args.metrics_port >= 0:
+        server = obs.serve_metrics(args.metrics_port)
+        print(f"[train] metrics on "
+              f"http://127.0.0.1:{server.port}/metrics")
+    if args.profile_dir:
+        obs.TRACER.start_profile(args.profile_dir)
+    try:
+        if chaos is not None:
+            from repro.distributed.chaos import run_with_restarts
+            out, restarts = run_with_restarts(
+                attempt, max_restarts=args.max_restarts, log=print)
+            if restarts:
+                print(f"[train] recovered via {restarts} restart(s)")
+        else:
+            out = attempt()
+    finally:
+        if args.profile_dir:
+            obs.TRACER.stop_profile()
+        if metrics_dir:
+            obs.dump(metrics_dir)
+        if server is not None:
+            server.close()
     if out["preempted"]:
         print(f"[train] preempted at step {out['last_step']}; checkpoint "
               f"flushed to {args.ckpt_dir} -- rerun to resume")

@@ -1,0 +1,99 @@
+"""Unified telemetry: metrics registry + span tracer + kernel profiling
+hooks, shared by the train loop, the serving engine, and the Pallas
+kernel layer (ISSUE-8).
+
+    from repro import obs
+
+    obs.metric("train/steps_total").inc()
+    with obs.span("engine.step", tick=3):
+        ...
+    obs.dump("/tmp/metrics")            # metrics.jsonl + .prom + spans.jsonl
+
+Everything is host-side and zero-dependency; disabled collectors
+(``obs.disable()``) are strict no-ops that leave every jaxpr untouched
+(tests/test_obs.py compares traced jaxprs with collectors on vs off).
+``obs.metric(name)`` resolves through the documented schema
+(``repro.obs.schema``), so instrumented call sites cannot drift from the
+README metric table or the ``benchmarks/check_metrics.py`` CI gate.
+"""
+from __future__ import annotations
+
+import os
+
+from repro.obs import schema as schema  # noqa: PLC0414 (re-export)
+from repro.obs.http import MetricsServer, serve_metrics  # noqa: F401
+from repro.obs.metrics import (LATENCY_BUCKETS, REGISTRY,  # noqa: F401
+                               Registry)
+from repro.obs.trace import TRACER, Tracer  # noqa: F401
+from repro.obs import kernels as _kernel_hooks
+
+schema.register_all(REGISTRY)
+_kernel_hooks.install()
+
+span = TRACER.span
+event = TRACER.event
+
+
+def metric(name: str):
+    """The schema-documented family for ``name`` (the only way the
+    instrumented layers reach the registry -- undocumented names fail
+    loudly here, not silently in exposition)."""
+    fam = REGISTRY.get(name)
+    if fam is None:
+        if name not in schema.SPECS:
+            raise KeyError(f"metric {name!r} is not in the documented "
+                           f"schema (repro/obs/schema.py)")
+        schema.register_all(REGISTRY)
+        fam = REGISTRY.get(name)
+    return fam
+
+
+def enable() -> None:
+    REGISTRY.enable()
+    TRACER.enabled = True
+
+
+def disable() -> None:
+    REGISTRY.disable()
+    TRACER.enabled = False
+
+
+def enabled() -> bool:
+    return REGISTRY.enabled
+
+
+def next_index(kind: str) -> int:
+    return REGISTRY.next_index(kind)
+
+
+def record_train_step(dt: float, loss: float, grad_norm: float, lr: float,
+                      tokens: int) -> None:
+    """Per-step train telemetry, shared by ``train/loop.py`` and the
+    ``obs_bench`` overhead measurement (so the bench times exactly what
+    the loop pays)."""
+    metric("train/step_seconds").observe(dt)
+    metric("train/steps_total").inc()
+    metric("train/loss").set(loss)
+    metric("train/grad_norm").set(grad_norm)
+    metric("train/lr").set(lr)
+    if tokens:
+        metric("train/tokens_total").inc(tokens)
+        if dt > 0:
+            metric("train/tokens_per_second").set(tokens / dt)
+
+
+def dump(directory: str) -> dict:
+    """Write/append the telemetry artifacts under ``directory``:
+
+      metrics.jsonl -- one snapshot object appended per dump (restarted
+                       runs append, so telemetry stitches across restarts)
+      metrics.prom  -- current Prometheus text exposition (rewritten)
+      spans.jsonl   -- completed spans appended (ring buffer drained)
+
+    Returns ``{"spans": n, "families": m}``."""
+    os.makedirs(directory, exist_ok=True)
+    REGISTRY.dump_jsonl(os.path.join(directory, "metrics.jsonl"))
+    with open(os.path.join(directory, "metrics.prom"), "w") as f:
+        f.write(REGISTRY.exposition())
+    n = TRACER.export_jsonl(os.path.join(directory, "spans.jsonl"))
+    return {"spans": n, "families": len(list(REGISTRY.families()))}

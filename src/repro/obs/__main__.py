@@ -1,0 +1,7 @@
+"""``python -m repro.obs``: print the documented metric schema as the
+markdown table the README "Observability" section embeds (a test pins
+the two copies to each other)."""
+from repro.obs.schema import markdown_table
+
+if __name__ == "__main__":
+    print(markdown_table())

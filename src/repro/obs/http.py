@@ -1,0 +1,54 @@
+"""Stdlib ``/metrics`` endpoint: a background ``http.server`` exposing
+the default registry in Prometheus text format (``--metrics-port``).
+
+    server = serve_metrics(port)        # port=0 -> ephemeral
+    ... curl http://localhost:<server.port>/metrics ...
+    server.close()
+"""
+from __future__ import annotations
+
+import threading
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+
+from repro.obs import metrics as metrics_lib
+
+
+class _Handler(BaseHTTPRequestHandler):
+    def do_GET(self):                                       # noqa: N802
+        if self.path.rstrip("/") not in ("", "/metrics"):
+            self.send_error(404)
+            return
+        body = metrics_lib.REGISTRY.exposition().encode()
+        self.send_response(200)
+        self.send_header("Content-Type",
+                         "text/plain; version=0.0.4; charset=utf-8")
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
+    def log_message(self, fmt, *args):                      # silence stderr
+        pass
+
+
+class MetricsServer:
+    def __init__(self, port: int = 0, host: str = "127.0.0.1"):
+        self._httpd = ThreadingHTTPServer((host, port), _Handler)
+        self.port = self._httpd.server_address[1]
+        self._thread = threading.Thread(
+            target=self._httpd.serve_forever, daemon=True)
+        self._thread.start()
+
+    def close(self) -> None:
+        self._httpd.shutdown()
+        self._httpd.server_close()
+        self._thread.join(timeout=5)
+
+    def __enter__(self) -> "MetricsServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def serve_metrics(port: int = 0, host: str = "127.0.0.1") -> MetricsServer:
+    return MetricsServer(port, host)

@@ -1,0 +1,43 @@
+"""Default kernel-launch hook: counts Pallas lowerings and attributes
+modeled FLOPs / HBM bytes from ``repro.roofline.kernels``.
+
+``repro.kernels.runtime`` fires ``record_launch`` from each kernel
+entry's Python body, which runs at TRACE time (the entries are
+jit-wrapped): one firing per distinct-shape lowering, none per
+steady-state executed call, and zero ops in any jaxpr.  The hook turns
+those firings into counters; the fused-vs-unfused byte counters make the
+paper's traffic-reduction claim a live ratio instead of a bench row.
+"""
+from __future__ import annotations
+
+from repro.kernels import runtime
+from repro.obs import metrics as metrics_lib
+from repro.roofline.kernels import kernel_cost
+
+
+def _on_launch(kernel: str, grid, tiles, **shape) -> None:
+    reg = metrics_lib.REGISTRY
+    if not reg.enabled:
+        return
+    reg.get("kernel/launches_total").labels(kernel=kernel).inc()
+    reg.get("kernel/launch_shapes_total").labels(
+        kernel=kernel,
+        grid="x".join(str(g) for g in grid),
+        tiles=",".join(f"{k}={v}" for k, v in sorted(tiles.items()))).inc()
+    cost = kernel_cost(kernel, **shape)
+    if cost is None:
+        return
+    reg.get("kernel/modeled_flops_total").labels(
+        kernel=kernel).inc(cost["flops"])
+    reg.get("kernel/modeled_hbm_bytes_total").labels(
+        kernel=kernel).inc(cost["hbm_bytes"])
+    reg.get("kernel/modeled_hbm_bytes_unfused_total").labels(
+        kernel=kernel).inc(cost["hbm_bytes_unfused"])
+
+
+def install() -> None:
+    runtime.register_launch_hook(_on_launch)
+
+
+def uninstall() -> None:
+    runtime.unregister_launch_hook(_on_launch)

@@ -1,0 +1,368 @@
+"""Typed metrics registry: Counter / Gauge / Histogram families with
+labels, Prometheus-style text exposition, and JSONL snapshot dumps.
+
+Zero dependencies beyond the stdlib.  All instruments are host-side --
+nothing here ever enters a jaxpr (tests/test_obs.py pins that down by
+comparing traced jaxprs with collectors on vs off).
+
+Naming convention: canonical metric names use the repo's slash-separated
+style (``serving/ttft_seconds``); exposition sanitizes ``/`` -> ``_`` so
+the output is valid Prometheus text format.
+
+Disabled semantics (``registry.enabled = False``): every mutation --
+``inc``/``set``/``observe`` -- is dropped entirely, values recorded
+while enabled persist, and re-enabling resumes counting.  A hypothesis
+property test asserts enable -> disable -> enable never leaks state.
+"""
+from __future__ import annotations
+
+import bisect
+import json
+import threading
+import time
+from typing import Dict, Iterable, Optional, Sequence, Tuple
+
+# Default bucket edges for latency-style histograms (seconds).  Chosen to
+# cover everything from a sub-ms serving tick on real accelerators to a
+# multi-second interpret-mode CPU step.
+LATENCY_BUCKETS = (0.0005, 0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1,
+                   0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 30.0, 60.0)
+
+_NAME_OK = frozenset("abcdefghijklmnopqrstuvwxyz"
+                     "ABCDEFGHIJKLMNOPQRSTUVWXYZ0123456789_/:")
+
+
+def sanitize(name: str) -> str:
+    """Canonical slash name -> Prometheus-legal metric name."""
+    return name.replace("/", "_").replace(":", "_")
+
+
+def _check_name(name: str) -> None:
+    if not name or not set(name) <= _NAME_OK or name[0].isdigit():
+        raise ValueError(f"bad metric name {name!r}")
+
+
+def _label_key(labels: Dict[str, str]) -> Tuple[Tuple[str, str], ...]:
+    return tuple(sorted((k, str(v)) for k, v in labels.items()))
+
+
+def _escape(v: str) -> str:
+    return v.replace("\\", r"\\").replace('"', r'\"').replace("\n", r"\n")
+
+
+class _Child:
+    """One labeled instrument inside a family.  The registry reference is
+    cached flat (``_reg``) because the enabled check runs on every
+    mutation -- the instrumented layers' hot paths -- and a property
+    chasing ``family.registry.enabled`` measurably widens the per-tick
+    telemetry cost (benchmarks/obs_bench.py gates it under 2%)."""
+
+    __slots__ = ("_family", "_reg", "labels")
+
+    def __init__(self, family: "Family", labels: Dict[str, str]):
+        self._family = family
+        self._reg = family.registry
+        self.labels = labels
+
+    @property
+    def _enabled(self) -> bool:
+        return self._reg.enabled
+
+
+class Counter(_Child):
+    __slots__ = ("_value",)
+
+    def __init__(self, family, labels):
+        super().__init__(family, labels)
+        self._value = 0.0
+
+    def inc(self, amount: float = 1.0) -> None:
+        if not self._reg.enabled:
+            return
+        if amount < 0:
+            raise ValueError("counters only go up")
+        with self._reg._lock:
+            self._value += amount
+
+    @property
+    def value(self) -> float:
+        return self._value
+
+
+class Gauge(_Child):
+    __slots__ = ("_value",)
+
+    def __init__(self, family, labels):
+        super().__init__(family, labels)
+        self._value = 0.0
+
+    def set(self, value: float) -> None:
+        if self._reg.enabled:
+            self._value = float(value)
+
+    def inc(self, amount: float = 1.0) -> None:
+        if self._reg.enabled:
+            with self._reg._lock:
+                self._value += amount
+
+    def dec(self, amount: float = 1.0) -> None:
+        self.inc(-amount)
+
+    @property
+    def value(self) -> float:
+        return self._value
+
+
+class Histogram(_Child):
+    """Fixed-bucket histogram with Prometheus ``le`` (<=) semantics:
+    ``counts[i]`` counts observations ``v <= edges[i]``; the final slot
+    is the +Inf overflow bucket."""
+
+    __slots__ = ("edges", "counts", "sum", "count")
+
+    def __init__(self, family, labels):
+        super().__init__(family, labels)
+        self.edges = family.buckets
+        self.counts = [0] * (len(self.edges) + 1)
+        self.sum = 0.0
+        self.count = 0
+
+    def observe(self, value: float) -> None:
+        if not self._reg.enabled:
+            return
+        v = float(value)
+        with self._reg._lock:
+            self.counts[bisect.bisect_left(self.edges, v)] += 1
+            self.sum += v
+            self.count += 1
+
+    def quantile(self, q: float) -> float:
+        """Approximate quantile by linear interpolation inside the bucket
+        holding the q-th observation.  The +Inf bucket clamps to the last
+        finite edge; an empty histogram returns 0.0."""
+        if not 0.0 <= q <= 1.0:
+            raise ValueError(f"q={q} outside [0, 1]")
+        if self.count == 0:
+            return 0.0
+        target = q * self.count
+        seen = 0
+        for i, c in enumerate(self.counts):
+            if seen + c >= target and c > 0:
+                lo = self.edges[i - 1] if i > 0 else 0.0
+                hi = self.edges[i] if i < len(self.edges) else self.edges[-1]
+                if i >= len(self.edges):
+                    return hi
+                frac = (target - seen) / c
+                return lo + (hi - lo) * frac
+            seen += c
+        return self.edges[-1]
+
+
+_KINDS = {"counter": Counter, "gauge": Gauge, "histogram": Histogram}
+
+
+class Family:
+    """A named metric family: one instrument per distinct label set.
+    Label-less families proxy ``inc``/``set``/``observe``/``value`` to
+    their single default child so call sites stay terse."""
+
+    def __init__(self, registry: "Registry", name: str, kind: str,
+                 help: str = "", labelnames: Sequence[str] = (),
+                 buckets: Sequence[float] = LATENCY_BUCKETS):
+        _check_name(name)
+        if kind not in _KINDS:
+            raise ValueError(f"unknown metric kind {kind!r}")
+        if kind == "histogram":
+            b = tuple(float(x) for x in buckets)
+            if not b or list(b) != sorted(set(b)):
+                raise ValueError(f"{name}: bucket edges must be strictly "
+                                 f"increasing and non-empty, got {buckets}")
+            self.buckets = b
+        else:
+            self.buckets = ()
+        self.registry = registry
+        self.name = name
+        self.kind = kind
+        self.help = help
+        self.labelnames = tuple(labelnames)
+        self._children: Dict[Tuple[Tuple[str, str], ...], _Child] = {}
+
+    def labels(self, **labels: str):
+        if set(labels) != set(self.labelnames):
+            raise ValueError(
+                f"{self.name}: expected labels {self.labelnames}, "
+                f"got {tuple(labels)}")
+        key = _label_key(labels)
+        child = self._children.get(key)
+        if child is None:
+            with self.registry._lock:
+                child = self._children.setdefault(
+                    key, _KINDS[self.kind](
+                        self, {k: str(v) for k, v in labels.items()}))
+        return child
+
+    def _default(self):
+        if self.labelnames:
+            raise ValueError(f"{self.name} is labeled "
+                             f"{self.labelnames}; call .labels(...) first")
+        return self.labels()
+
+    # label-less convenience proxies
+    def inc(self, amount: float = 1.0) -> None:
+        self._default().inc(amount)
+
+    def set(self, value: float) -> None:
+        self._default().set(value)
+
+    def observe(self, value: float) -> None:
+        self._default().observe(value)
+
+    @property
+    def value(self) -> float:
+        return self._default().value
+
+    def quantile(self, q: float) -> float:
+        return self._default().quantile(q)
+
+    def children(self) -> Iterable[_Child]:
+        return list(self._children.values())
+
+    def clear(self) -> None:
+        self._children.clear()
+
+
+class Registry:
+    """get-or-create registry of metric families.  ``enabled=False``
+    turns every mutation into a strict no-op (reads still work)."""
+
+    def __init__(self):
+        self._families: Dict[str, Family] = {}
+        self._lock = threading.RLock()
+        self.enabled = True
+        self._indices: Dict[str, int] = {}
+
+    # ------------------------------------------------------------ factories --
+    def _get_or_create(self, name, kind, help, labelnames, buckets):
+        fam = self._families.get(name)
+        if fam is not None:
+            if fam.kind != kind or (labelnames is not None
+                                    and tuple(labelnames) != fam.labelnames):
+                raise ValueError(
+                    f"metric {name!r} re-registered as {kind}"
+                    f"/{tuple(labelnames or ())} but exists as "
+                    f"{fam.kind}/{fam.labelnames}")
+            return fam
+        with self._lock:
+            fam = self._families.get(name)
+            if fam is None:
+                fam = Family(self, name, kind, help or "",
+                             tuple(labelnames or ()),
+                             buckets or LATENCY_BUCKETS)
+                self._families[name] = fam
+            return fam
+
+    def counter(self, name: str, help: str = "",
+                labels: Sequence[str] = ()) -> Family:
+        return self._get_or_create(name, "counter", help, labels, None)
+
+    def gauge(self, name: str, help: str = "",
+              labels: Sequence[str] = ()) -> Family:
+        return self._get_or_create(name, "gauge", help, labels, None)
+
+    def histogram(self, name: str, help: str = "",
+                  labels: Sequence[str] = (),
+                  buckets: Sequence[float] = LATENCY_BUCKETS) -> Family:
+        return self._get_or_create(name, "histogram", help, labels, buckets)
+
+    def get(self, name: str) -> Optional[Family]:
+        return self._families.get(name)
+
+    def families(self) -> Iterable[Family]:
+        return list(self._families.values())
+
+    def next_index(self, kind: str) -> int:
+        """Monotonic per-kind instance id, e.g. ``engine="e3"`` labels --
+        the isolation mechanism letting many engines share one registry."""
+        with self._lock:
+            i = self._indices.get(kind, 0)
+            self._indices[kind] = i + 1
+            return i
+
+    # ----------------------------------------------------------- lifecycle --
+    def enable(self) -> None:
+        self.enabled = True
+
+    def disable(self) -> None:
+        self.enabled = False
+
+    def reset(self) -> None:
+        """Drop all recorded values and children (families stay
+        registered, so exposition completeness is unaffected)."""
+        with self._lock:
+            for fam in self._families.values():
+                fam.clear()
+            self._indices.clear()
+
+    # -------------------------------------------------------------- export --
+    def exposition(self) -> str:
+        """Prometheus text format.  Every registered family is emitted
+        (HELP/TYPE) even with no samples yet, so ``/metrics`` always
+        documents the full schema."""
+        out = []
+        for name in sorted(self._families):
+            fam = self._families[name]
+            pname = sanitize(name)
+            out.append(f"# HELP {pname} {fam.help}")
+            out.append(f"# TYPE {pname} {fam.kind}")
+            for child in fam.children():
+                lbl = ",".join(f'{k}="{_escape(v)}"'
+                               for k, v in sorted(child.labels.items()))
+                if fam.kind == "histogram":
+                    cum = 0
+                    for edge, c in zip(fam.buckets, child.counts):
+                        cum += c
+                        le = ((f"{lbl}," if lbl else "")
+                              + f'le="{edge:g}"')
+                        out.append(f"{pname}_bucket{{{le}}} {cum}")
+                    cum += child.counts[-1]
+                    le = (f"{lbl}," if lbl else "") + 'le="+Inf"'
+                    out.append(f"{pname}_bucket{{{le}}} {cum}")
+                    brace = f"{{{lbl}}}" if lbl else ""
+                    out.append(f"{pname}_sum{brace} {child.sum:g}")
+                    out.append(f"{pname}_count{brace} {child.count}")
+                else:
+                    brace = f"{{{lbl}}}" if lbl else ""
+                    out.append(f"{pname}{brace} {child.value:g}")
+        return "\n".join(out) + "\n"
+
+    def snapshot(self) -> dict:
+        """One JSON-ready dict of every family + sample (canonical
+        names, not sanitized)."""
+        metrics = []
+        for name in sorted(self._families):
+            fam = self._families[name]
+            samples = []
+            for child in fam.children():
+                s: dict = {"labels": dict(child.labels)}
+                if fam.kind == "histogram":
+                    s.update(buckets=list(fam.buckets),
+                             counts=list(child.counts),
+                             sum=child.sum, count=child.count)
+                else:
+                    s["value"] = child.value
+                samples.append(s)
+            metrics.append({"name": name, "type": fam.kind,
+                            "help": fam.help,
+                            "labelnames": list(fam.labelnames),
+                            "samples": samples})
+        return {"ts": time.time(), "metrics": metrics}
+
+    def dump_jsonl(self, path: str) -> None:
+        """Append one snapshot line -- restarted runs append to the same
+        file, so telemetry stitches across restarts."""
+        with open(path, "a") as f:
+            f.write(json.dumps(self.snapshot()) + "\n")
+
+
+# The process-wide default registry every instrumented layer records into.
+REGISTRY = Registry()

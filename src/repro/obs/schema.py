@@ -1,0 +1,192 @@
+"""The documented metric schema: one spec per metric family, the single
+source of truth for
+
+  * call sites -- ``repro.obs.metric(name)`` resolves through this table,
+    so an instrumented layer cannot drift from the documentation;
+  * exposition completeness -- ``register_all`` pre-registers every
+    family, so ``/metrics`` always emits the full schema;
+  * the CI gate -- ``benchmarks/check_metrics.py`` fails when a
+    documented name is missing from a live smoke run's artifacts (or an
+    exported name is undocumented here);
+  * the README "Observability" table -- ``python -m repro.obs`` renders
+    this module as markdown, and a test pins the README copy to it.
+
+``smoke_required=True`` marks families that MUST carry at least one
+sample after the CI train+serve smoke (``--metrics-dir``); the rest are
+fault-path metrics that only fire under chaos/restart pressure.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Tuple
+
+from repro.obs import metrics as metrics_lib
+
+LAYERS = ("train", "serving", "kernel", "chaos")
+
+
+@dataclass(frozen=True)
+class MetricSpec:
+    name: str
+    kind: str                      # counter | gauge | histogram
+    layer: str                     # one of LAYERS
+    help: str
+    labels: Tuple[str, ...] = ()
+    buckets: Tuple[float, ...] = ()
+    smoke_required: bool = False
+
+
+def _s(name, kind, layer, help, labels=(), smoke=False, buckets=()):
+    return MetricSpec(name, kind, layer, help, tuple(labels),
+                      tuple(buckets), smoke)
+
+
+_E = ("engine",)    # per-engine isolation label ("e0", "e1", ...)
+_C = ("cache",)     # per-PagedKVCache label ("c0", "c1", ...)
+
+SPECS: Dict[str, MetricSpec] = {s.name: s for s in [
+    # ------------------------------------------------------------- train --
+    _s("train/step_seconds", "histogram", "train",
+       "Wall-clock per optimizer step (includes injected straggler delay)",
+       smoke=True),
+    _s("train/steps_total", "counter", "train",
+       "Optimizer steps completed", smoke=True),
+    _s("train/tokens_total", "counter", "train",
+       "Tokens consumed (batch x seq per step)", smoke=True),
+    _s("train/tokens_per_second", "gauge", "train",
+       "Instantaneous training throughput (last step)", smoke=True),
+    _s("train/loss", "gauge", "train", "Last step's loss", smoke=True),
+    _s("train/grad_norm", "gauge", "train",
+       "Last step's global gradient norm", smoke=True),
+    _s("train/lr", "gauge", "train",
+       "Last step's learning rate", smoke=True),
+    _s("train/stragglers_total", "counter", "train",
+       "Steps the EWMA StragglerMonitor flagged as slow"),
+    _s("train/restarts_total", "counter", "train",
+       "Supervisor restarts after DeviceLost/SaveCrashed"),
+    _s("train/preemptions_total", "counter", "train",
+       "Preemption-guard exits (SIGTERM/chaos preempt)"),
+    _s("train/checkpoint_save_seconds", "histogram", "train",
+       "Checkpoint write duration (sync portion + async writer)",
+       smoke=True),
+    _s("train/checkpoint_saves_total", "counter", "train",
+       "Checkpoints written", smoke=True),
+    _s("train/checkpoint_restore_seconds", "histogram", "train",
+       "Checkpoint restore duration (including corrupt-step fallbacks)"),
+    _s("train/checkpoint_restores_total", "counter", "train",
+       "Checkpoint restores (auto-resume)"),
+    _s("oft/rotation_build_seconds", "histogram", "train",
+       "Eager Cayley-Neumann rotation builds (serving pool stacking; the "
+       "traced in-step build is invisible by design -- it must not "
+       "perturb the jaxpr)", smoke=True),
+    # ------------------------------------------------------------ kernel --
+    _s("kernel/launches_total", "counter", "kernel",
+       "Pallas kernel lowerings (trace-time; steady-state executions "
+       "reuse the compiled kernel and are free)", ("kernel",), smoke=True),
+    _s("kernel/launch_shapes_total", "counter", "kernel",
+       "Lowerings by grid/tile shape", ("kernel", "grid", "tiles"),
+       smoke=True),
+    _s("kernel/modeled_flops_total", "counter", "kernel",
+       "Modeled FLOPs attributed per lowering (roofline model)",
+       ("kernel",), smoke=True),
+    _s("kernel/modeled_hbm_bytes_total", "counter", "kernel",
+       "Modeled HBM bytes for the fused kernel (roofline model)",
+       ("kernel",), smoke=True),
+    _s("kernel/modeled_hbm_bytes_unfused_total", "counter", "kernel",
+       "Modeled HBM bytes the same math would move unfused -- the live "
+       "fused-vs-unfused traffic claim", ("kernel",), smoke=True),
+    # ------------------------------------------------------------- chaos --
+    _s("chaos/faults_fired_total", "counter", "chaos",
+       "Injected faults by kind (preempt, device_loss, straggler, "
+       "save_crash, corrupt_latest)", ("kind",), smoke=True),
+    # ----------------------------------------------------------- serving --
+    _s("serving/ticks_total", "counter", "serving",
+       "Scheduler ticks", _E, smoke=True),
+    _s("serving/tick_seconds", "histogram", "serving",
+       "Wall-clock per engine tick", _E, smoke=True),
+    _s("serving/tick_utilization", "gauge", "serving",
+       "Active slots / n_slots at the last tick", _E, smoke=True),
+    _s("serving/ttft_seconds", "histogram", "serving",
+       "Submit -> first token (queueing + prefill)", _E, smoke=True),
+    _s("serving/latency_seconds", "histogram", "serving",
+       "Submit -> finish, per request", _E, smoke=True),
+    _s("serving/queue_wait_seconds", "histogram", "serving",
+       "Submit -> slot admission", _E, smoke=True),
+    _s("serving/requests_submitted_total", "counter", "serving",
+       "Requests accepted by submit()", _E, smoke=True),
+    _s("serving/requests_finished_total", "counter", "serving",
+       "Finished requests by reason (length, stop, deadline, cancelled)",
+       ("engine", "reason"), smoke=True),
+    _s("serving/tokens_generated_total", "counter", "serving",
+       "Generated tokens (prompt excluded)", _E, smoke=True),
+    _s("serving/prefill_rows_total", "counter", "serving",
+       "Paged-tick batch rows spent prefilling prompt chunks", _E,
+       smoke=True),
+    _s("serving/decode_rows_total", "counter", "serving",
+       "Paged-tick batch rows spent decoding one token", _E, smoke=True),
+    _s("serving/inflight", "gauge", "serving",
+       "Requests holding a slot", _E, smoke=True),
+    _s("serving/pending", "gauge", "serving",
+       "Requests queued for admission", _E, smoke=True),
+    _s("serving/requeued", "gauge", "serving",
+       "Preempted requests waiting out their backoff", _E, smoke=True),
+    _s("serving/preemptions_total", "counter", "serving",
+       "Slots evicted under block-pool pressure", _E, smoke=True),
+    _s("serving/retries_total", "counter", "serving",
+       "Requeued requests readmitted after backoff", _E, smoke=True),
+    _s("serving/cancelled_total", "counter", "serving",
+       "Explicit cancel() calls", _E, smoke=True),
+    _s("serving/deadline_expired_total", "counter", "serving",
+       "Requests cancelled by their deadline_s budget", _E, smoke=True),
+    _s("serving/kv/blocks_free", "gauge", "serving",
+       "Free blocks in the paged pool", _E, smoke=True),
+    _s("serving/kv/blocks_used", "gauge", "serving",
+       "Blocks held by live sequences", _E, smoke=True),
+    _s("serving/kv/blocks_cached", "gauge", "serving",
+       "Blocks resident in the prefix cache", _E, smoke=True),
+    _s("serving/kv/blocks_seized", "gauge", "serving",
+       "Blocks seized by chaos pressure injection", _E, smoke=True),
+    _s("serving/kv/blocks_committed", "gauge", "serving",
+       "Worst-case blocks reserved by admitted requests", _E, smoke=True),
+    _s("serving/kv/capacity_blocks", "gauge", "serving",
+       "Usable pool capacity (excludes null block and seized)", _E,
+       smoke=True),
+    _s("serving/kv/prefix_shared_blocks_total", "counter", "serving",
+       "Full KV blocks adopted zero-copy from the prefix cache", _C,
+       smoke=True),
+    _s("serving/kv/prefix_partial_tokens_total", "counter", "serving",
+       "Tokens copied from a partially-matching cached tail block", _C,
+       smoke=True),
+    _s("serving/kv/cow_copies_total", "counter", "serving",
+       "Copy-on-write block copies (partial tail adoption)", _C,
+       smoke=True),
+    _s("serving/kv/evictions_total", "counter", "serving",
+       "Prefix-cache blocks LRU-evicted under pressure", _C, smoke=True),
+]}
+
+
+def register_all(registry=None) -> None:
+    """Pre-register every documented family (no samples) so exposition
+    and ``/metrics`` always carry the complete schema."""
+    reg = registry if registry is not None else metrics_lib.REGISTRY
+    for spec in SPECS.values():
+        if spec.kind == "histogram":
+            reg.histogram(spec.name, spec.help, spec.labels,
+                          spec.buckets or metrics_lib.LATENCY_BUCKETS)
+        elif spec.kind == "counter":
+            reg.counter(spec.name, spec.help, spec.labels)
+        else:
+            reg.gauge(spec.name, spec.help, spec.labels)
+
+
+def markdown_table() -> str:
+    """The README "Observability" metric table, generated -- a test pins
+    the README copy to this exact text."""
+    lines = ["| metric | type | labels | layer | meaning |",
+             "|---|---|---|---|---|"]
+    for name in sorted(SPECS):
+        s = SPECS[name]
+        lbl = ", ".join(s.labels) if s.labels else "--"
+        lines.append(f"| `{s.name}` | {s.kind} | {lbl} | {s.layer} "
+                     f"| {s.help} |")
+    return "\n".join(lines)

@@ -1,0 +1,166 @@
+"""Span tracer: nested wall-clock spans with a ring buffer, JSONL export,
+and an optional ``jax.profiler`` bridge.
+
+    with TRACER.span("engine.step", tick=3):
+        ...
+
+Spans nest through a thread-local stack (each records its parent's id and
+its own depth) and land in a bounded ring buffer at exit, in completion
+order.  ``export_jsonl`` / ``drain`` serialize them; ``start_profile``
+additionally opens a ``jax.profiler`` trace in a directory and wraps every
+span in a ``TraceAnnotation`` so host spans line up with device timelines
+in TensorBoard/Perfetto.
+
+Like the metrics registry, a disabled tracer drops everything -- the
+context manager still runs the body, it just records nothing.
+"""
+from __future__ import annotations
+
+import itertools
+import json
+import threading
+import time
+from collections import deque
+from typing import List, Optional
+
+SPAN_FIELDS = ("name", "span_id", "parent_id", "depth", "ts", "dur", "attrs")
+
+
+class _Span:
+    """Hand-rolled context manager: ``span()`` sits on the per-tick hot
+    path of the serving engine, and a generator-based ``@contextmanager``
+    costs several microseconds per entry -- enough to flip the < 2%
+    overhead gate (benchmarks/obs_bench.py) on its own."""
+
+    __slots__ = ("_tracer", "name", "attrs", "sid", "parent", "_ann",
+                 "ts", "t0")
+
+    def __init__(self, tracer: "Tracer", name: str, attrs: dict):
+        self._tracer = tracer
+        self.name = name
+        self.attrs = attrs
+
+    def __enter__(self):
+        tr = self._tracer
+        if not tr.enabled:
+            self.sid = None
+            return None
+        stack = tr._stack()
+        self.sid = next(tr._ids)
+        self.parent = stack[-1] if stack else 0
+        stack.append(self.sid)
+        self._ann = None
+        if tr._profile_dir is not None:
+            try:
+                import jax.profiler
+                self._ann = jax.profiler.TraceAnnotation(self.name)
+                self._ann.__enter__()
+            except Exception:                               # noqa: BLE001
+                self._ann = None
+        self.ts = time.time()
+        self.t0 = time.perf_counter()
+        return self.sid
+
+    def __exit__(self, *exc):
+        if self.sid is None:
+            return False
+        tr = self._tracer
+        dur = time.perf_counter() - self.t0
+        if self._ann is not None:
+            self._ann.__exit__(None, None, None)
+        stack = tr._stack()
+        if stack:
+            stack.pop()
+        rec = {"name": self.name, "span_id": self.sid,
+               "parent_id": self.parent, "depth": len(stack),
+               "ts": self.ts, "dur": dur, "attrs": self.attrs}
+        with tr._lock:
+            tr._buf.append(rec)
+        return False
+
+
+class Tracer:
+    def __init__(self, capacity: int = 4096):
+        self.enabled = True
+        self.capacity = capacity
+        self._buf: deque = deque(maxlen=capacity)
+        self._ids = itertools.count(1)
+        self._tls = threading.local()
+        self._lock = threading.Lock()
+        self._profile_dir: Optional[str] = None
+
+    # ------------------------------------------------------------- recording --
+    def _stack(self) -> list:
+        st = getattr(self._tls, "stack", None)
+        if st is None:
+            st = self._tls.stack = []
+        return st
+
+    def span(self, name: str, **attrs) -> _Span:
+        """Record one nested wall-clock span around the body."""
+        return _Span(self, name, attrs)
+
+    def event(self, name: str, **attrs) -> None:
+        """A zero-duration span: chaos faults, stragglers, restarts."""
+        if not self.enabled:
+            return
+        stack = self._stack()
+        rec = {"name": name, "span_id": next(self._ids),
+               "parent_id": stack[-1] if stack else 0,
+               "depth": len(stack), "ts": time.time(), "dur": 0.0,
+               "attrs": attrs}
+        with self._lock:
+            self._buf.append(rec)
+
+    # --------------------------------------------------------------- export --
+    def spans(self) -> List[dict]:
+        with self._lock:
+            return list(self._buf)
+
+    def drain(self) -> List[dict]:
+        """Return all buffered spans and clear the buffer (so repeated
+        dumps append without duplicating)."""
+        with self._lock:
+            out = list(self._buf)
+            self._buf.clear()
+        return out
+
+    def clear(self) -> None:
+        with self._lock:
+            self._buf.clear()
+
+    def export_jsonl(self, path: str, drain: bool = True) -> int:
+        """Append one JSON object per span; returns the span count."""
+        spans = self.drain() if drain else self.spans()
+        with open(path, "a") as f:
+            for rec in spans:
+                f.write(json.dumps(rec) + "\n")
+        return len(spans)
+
+    # ------------------------------------------------------- profiler bridge --
+    def start_profile(self, profile_dir: str) -> bool:
+        """Open a ``jax.profiler`` trace under ``profile_dir`` (the
+        ``--profile-dir`` flag); spans become TraceAnnotations until
+        ``stop_profile``.  Returns False when the profiler is unavailable
+        (the tracer still records spans normally)."""
+        try:
+            import jax.profiler
+            jax.profiler.start_trace(profile_dir)
+        except Exception:                                   # noqa: BLE001
+            return False
+        self._profile_dir = profile_dir
+        return True
+
+    def stop_profile(self) -> None:
+        if self._profile_dir is None:
+            return
+        self._profile_dir = None
+        try:
+            import jax.profiler
+            jax.profiler.stop_trace()
+        except Exception:                                   # noqa: BLE001
+            pass
+
+
+# Process-wide default tracer (repro.obs re-exports `span`).
+TRACER = Tracer()

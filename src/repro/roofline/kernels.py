@@ -1,0 +1,152 @@
+"""Analytic per-kernel cost models: modeled FLOPs and HBM bytes for every
+Pallas kernel in ``repro.kernels``.
+
+``linear_hbm_bytes`` / ``linear_bwd_hbm_bytes`` moved here from
+``benchmarks/kernels_bench.py`` so the live telemetry layer
+(``repro.obs.kernels``) and the offline bench rows attribute traffic from
+the SAME model -- the fused-vs-unfused claim is one formula, not two.
+
+``kernel_cost(name, **shape)`` is the telemetry entry point: given the
+shape kwargs a kernel entry passes to ``runtime.record_launch``, it
+returns ``{"flops", "hbm_bytes", "hbm_bytes_unfused"}`` (or None for a
+kernel with no model).  ``hbm_bytes`` is the fused kernel's traffic;
+``hbm_bytes_unfused`` is what the same math staged through separate XLA
+kernels would move, so the ratio of the two live counters reproduces the
+paper's traffic-reduction claim on real traffic.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional
+
+
+def linear_hbm_bytes(t: int, k: int, n: int, b: int, fused: bool,
+                     quant_bs: int = 0, dt: int = 4) -> int:
+    """HBM bytes per fused-vs-unfused OFTv2/QOFT linear forward.
+
+    Unfused launches each stage as its own kernel, so every intermediate
+    (rotated activations; dequantized W in the QOFT path) round-trips
+    through HBM.  Fused reads x, R, W(/codes+absmax) once and writes y."""
+    r_bytes = (k // b) * b * b * dt
+    x_in, y_out = t * k * dt, t * n * dt
+    if quant_bs:
+        w_read = (k // 2) * n + (k // quant_bs) * n * 4   # codes + absmax
+        w_roundtrip = 2 * k * n * dt                      # dense W out + in
+    else:
+        w_read = k * n * dt
+        w_roundtrip = 0
+    fused_total = x_in + r_bytes + w_read + y_out
+    if fused:
+        return fused_total
+    return fused_total + w_roundtrip + 2 * t * k * dt     # + xr out + in
+
+
+def linear_bwd_hbm_bytes(t: int, k: int, n: int, b: int, fused: bool,
+                         quant_bs: int = 0, dt: int = 4) -> int:
+    """HBM bytes per fused-vs-unfused OFTv2/QOFT linear BACKWARD (frozen
+    base: dx + dR only, no dW).
+
+    Unfused is three kernels: gW = g @ Wᵀ writes the (T, K) intermediate to
+    HBM and both the dx rotation and the dR token-contraction read it back;
+    the QOFT path additionally re-materializes the dense W first (write +
+    read).  Fused reads g, x, R, W(/codes+absmax) once and writes dx + dR:
+    neither gW nor a dense W ever exists in HBM."""
+    r_bytes = (k // b) * b * b * dt
+    g_in, x_in = t * n * dt, t * k * dt
+    dx_out, dr_out = t * k * dt, r_bytes
+    if quant_bs:
+        w_read = (k // 2) * n + (k // quant_bs) * n * 4   # codes + absmax
+        w_roundtrip = 2 * k * n * dt                      # dense W out + in
+    else:
+        w_read = k * n * dt
+        w_roundtrip = 0
+    fused_total = g_in + x_in + r_bytes + w_read + dx_out + dr_out
+    if fused:
+        return fused_total
+    # + gW out once, read twice (dx stage, dR stage); + dense W roundtrip
+    return fused_total + w_roundtrip + 3 * t * k * dt
+
+
+def linear_flops(t: int, k: int, n: int, b: int) -> int:
+    """Block-diagonal rotate (2TKb) + dense matmul (2TKN)."""
+    return 2 * t * k * b + 2 * t * k * n
+
+
+def linear_bwd_flops(t: int, k: int, n: int, b: int) -> int:
+    """gW = g @ Wᵀ (2TKN) + rotate-back dx (2TKb) + dR contraction
+    (2TKb)."""
+    return 2 * t * k * n + 4 * t * k * b
+
+
+def _linear_fwd(quant: bool):
+    def cost(t, k, n, b, quant_bs=0, dt=4, **_):
+        qbs = quant_bs if quant else 0
+        return {"flops": linear_flops(t, k, n, b),
+                "hbm_bytes": linear_hbm_bytes(t, k, n, b, True, qbs, dt),
+                "hbm_bytes_unfused":
+                    linear_hbm_bytes(t, k, n, b, False, qbs, dt)}
+    return cost
+
+
+def _linear_bwd(quant: bool):
+    def cost(t, k, n, b, quant_bs=0, dt=4, **_):
+        qbs = quant_bs if quant else 0
+        return {"flops": linear_bwd_flops(t, k, n, b),
+                "hbm_bytes": linear_bwd_hbm_bytes(t, k, n, b, True, qbs, dt),
+                "hbm_bytes_unfused":
+                    linear_bwd_hbm_bytes(t, k, n, b, False, qbs, dt)}
+    return cost
+
+
+def _block_oft_apply(t, k, b, dt=4, **_):
+    # single-stage op: fused == unfused (nothing to round-trip)
+    by = t * k * dt * 2 + (k // b) * b * b * dt
+    return {"flops": 2 * t * k * b, "hbm_bytes": by,
+            "hbm_bytes_unfused": by}
+
+
+def _cayley_neumann(rb, b, terms, dt=4, **_):
+    # per block: one b×b inverse-free Neumann series, (terms-1) b³ matmuls
+    blk = rb * b * b * dt
+    return {"flops": rb * 2 * b * b * b * max(terms - 1, 1),
+            "hbm_bytes": 2 * blk, "hbm_bytes_unfused": 2 * blk}
+
+
+def _nf4_dequant(k, n, quant_bs, dt=4, **_):
+    codes = (k // 2) * n + (k // max(quant_bs, 1)) * n * 4
+    by = codes + k * n * dt
+    return {"flops": k * n, "hbm_bytes": by, "hbm_bytes_unfused": by}
+
+
+def _hoft_linear(t, k, n, m, dt=4, **_):
+    # m full-width Householder reflections (4TK each) + dense matmul
+    fused = t * k * dt + m * k * dt + k * n * dt + t * n * dt
+    # unfused stages each reflection through HBM: m (T, K) round-trips
+    return {"flops": 4 * t * k * m + 2 * t * k * n,
+            "hbm_bytes": fused,
+            "hbm_bytes_unfused": fused + 2 * m * t * k * dt}
+
+
+KERNEL_COSTS: Dict[str, Callable[..., dict]] = {
+    "oftv2_linear_fused": _linear_fwd(quant=False),
+    "oftv2_linear_multi": _linear_fwd(quant=False),
+    "qoft_linear_fused": _linear_fwd(quant=True),
+    "qoft_linear_multi": _linear_fwd(quant=True),
+    "oftv2_linear_bwd": _linear_bwd(quant=False),
+    "qoft_linear_bwd": _linear_bwd(quant=True),
+    "block_oft_apply": _block_oft_apply,
+    "cayley_neumann": _cayley_neumann,
+    "nf4_dequant": _nf4_dequant,
+    "hoft_linear_fused": _hoft_linear,
+}
+
+
+def kernel_cost(name: str, **shape) -> Optional[dict]:
+    """Modeled cost for one launch of ``name`` at ``shape``; None when the
+    kernel has no cost model (it is still counted, just not attributed)."""
+    fn = KERNEL_COSTS.get(name)
+    if fn is None:
+        return None
+    try:
+        return fn(**shape)
+    except TypeError:
+        return None

@@ -45,13 +45,14 @@ identical to the single-device engine (tests/test_sharded_fused.py).
 from __future__ import annotations
 
 import time
+import warnings
 from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import methods
+from repro import methods, obs
 from repro.models.model import Model
 from repro.serving.api import (FINISH_CANCELLED, FINISH_DEADLINE,
                                FINISH_LENGTH, FINISH_STOP, GenerationResult,
@@ -89,6 +90,57 @@ def _scatter_slot(caches: dict, slot_caches: dict, slot: int) -> dict:
         lambda big, one: jax.lax.dynamic_update_index_in_dim(
             big, one[:, 0].astype(big.dtype), slot, axis=1),
         caches, slot_caches)
+
+
+class _EngineObs:
+    """One engine's serving metrics, bound eagerly to registry children
+    labeled ``engine="eN"`` so the full serving schema is present in the
+    exposition from construction (not first use) and per-instance counts
+    never collide between engines in one process.  This object IS the
+    engine's counter state: ``health()`` is a read-only view over it."""
+
+    def __init__(self, engine_id: str):
+        self.engine_id = engine_id
+        lbl = {"engine": engine_id}
+        m = obs.metric
+        self.ticks = m("serving/ticks_total").labels(**lbl)
+        self.tick_seconds = m("serving/tick_seconds").labels(**lbl)
+        self.tick_utilization = m("serving/tick_utilization").labels(**lbl)
+        self.ttft = m("serving/ttft_seconds").labels(**lbl)
+        self.latency = m("serving/latency_seconds").labels(**lbl)
+        self.queue_wait = m("serving/queue_wait_seconds").labels(**lbl)
+        self.submitted = m("serving/requests_submitted_total").labels(**lbl)
+        self.tokens = m("serving/tokens_generated_total").labels(**lbl)
+        self.prefill_rows = m("serving/prefill_rows_total").labels(**lbl)
+        self.decode_rows = m("serving/decode_rows_total").labels(**lbl)
+        self.inflight = m("serving/inflight").labels(**lbl)
+        self.pending = m("serving/pending").labels(**lbl)
+        self.requeued = m("serving/requeued").labels(**lbl)
+        self.preemptions = m("serving/preemptions_total").labels(**lbl)
+        self.retries = m("serving/retries_total").labels(**lbl)
+        self.cancelled = m("serving/cancelled_total").labels(**lbl)
+        self.deadline_expired = \
+            m("serving/deadline_expired_total").labels(**lbl)
+        self.pool = {
+            "free": m("serving/kv/blocks_free").labels(**lbl),
+            "used": m("serving/kv/blocks_used").labels(**lbl),
+            "cached": m("serving/kv/blocks_cached").labels(**lbl),
+            "seized": m("serving/kv/blocks_seized").labels(**lbl),
+            "committed": m("serving/kv/blocks_committed").labels(**lbl),
+            "capacity": m("serving/kv/capacity_blocks").labels(**lbl),
+        }
+        self._finished = m("serving/requests_finished_total")
+
+    def finished(self, reason: str) -> None:
+        self._finished.labels(engine=self.engine_id, reason=reason).inc()
+
+    def counters(self) -> Dict[str, int]:
+        """The legacy ``health()['counters']`` dict, read back from the
+        registry (exact old shape and key names)."""
+        return {"preemptions": int(self.preemptions.value),
+                "retries": int(self.retries.value),
+                "cancelled": int(self.cancelled.value),
+                "deadline_expired": int(self.deadline_expired.value)}
 
 
 class ServingEngine:
@@ -143,12 +195,23 @@ class ServingEngine:
         self._requeue: List[tuple] = []
         self._backoff_base = max(1, int(requeue_backoff))
         self._backoff_max = max(self._backoff_base, int(requeue_backoff_max))
-        self._counters = {"preemptions": 0, "retries": 0,
-                          "cancelled": 0, "deadline_expired": 0}
+        self.obs = _EngineObs(f"e{obs.next_index('engine')}")
         # lazily-built data plane (needs the capacity, known at first step)
         self._state: Optional[dict] = None
         self._resolved: Optional[dict] = None
         self._resolved_key: Optional[int] = None
+
+    @property
+    def _counters(self) -> Dict[str, int]:
+        """Deprecated alias: the degradation counters live in the metrics
+        registry now (labeled ``engine="eN"``).  Read
+        ``health()["counters"]`` instead; this property keeps old callers
+        working (same dict shape) under a DeprecationWarning."""
+        warnings.warn(
+            "ServingEngine._counters is deprecated; the counters are "
+            "registry-backed -- read health()['counters']",
+            DeprecationWarning, stacklevel=2)
+        return self.obs.counters()
 
     # -------------------------------------------------------------- params --
     @property
@@ -218,6 +281,7 @@ class ServingEngine:
                            "deadline": (None if request.deadline_s is None
                                         else now + request.deadline_s)}
         self._sched.submit(request)
+        self.obs.submitted.inc()
 
     def has_work(self) -> bool:
         return self._sched.has_work() or bool(self._requeue)
@@ -372,7 +436,9 @@ class ServingEngine:
         now = time.perf_counter()
         if meta["first"] is None:
             meta["first"] = now
+            self.obs.ttft.observe(now - meta["submitted"])
         self._gen[req.rid].append(token)
+        self.obs.tokens.inc()
         if self._sched.record_token(slot, token):
             self._finish(slot, req, token, finished, now)
 
@@ -393,6 +459,8 @@ class ServingEngine:
         # meta["plen"] not len(req.prompt): after a preempt/requeue cycle
         # the slot's request is a shadow whose prompt includes generated
         # tokens -- the result must report the ORIGINAL prompt length
+        self.obs.latency.observe(now - meta["submitted"])
+        self.obs.finished(reason)
         finished.append(GenerationResult(
             rid=req.rid, tokens=tokens, finish_reason=reason,
             prompt_len=meta["plen"], submitted_at=meta["submitted"],
@@ -406,12 +474,28 @@ class ServingEngine:
         fits, advance every prefilling slot by one prompt chunk, advance
         every decoding slot by one token.  Returns the requests that
         finished this tick (including deadline-cancelled ones)."""
+        o = self.obs
+        t0 = time.perf_counter()
+        with obs.span("engine.step", engine=o.engine_id,
+                      tick=self._tick + 1):
+            finished = self._step_inner()
+        o.ticks.inc()
+        o.tick_seconds.observe(time.perf_counter() - t0)
+        inflight = len(self._sched.active_slots())
+        o.inflight.set(inflight)
+        o.pending.set(self._sched.pending_count)
+        o.requeued.set(len(self._requeue))
+        o.tick_utilization.set(inflight / self.n_slots)
+        self._sync_pool_gauges()
+        return finished
+
+    def _step_inner(self) -> List[GenerationResult]:
         finished: List[GenerationResult] = []
         self._tick += 1
         now = time.perf_counter()
         for rid in [r for r, m in self._meta.items()
                     if m["deadline"] is not None and now > m["deadline"]]:
-            self._counters["deadline_expired"] += 1
+            self.obs.deadline_expired.inc()
             finished.append(self._cancel_rid(rid, FINISH_DEADLINE))
         if self._requeue:
             ready = [r for t, r in self._requeue if t <= self._tick]
@@ -420,7 +504,7 @@ class ServingEngine:
             # reversed: the oldest preemptee ends up at the queue front
             for req in reversed(ready):
                 self._sched.submit_front(req)
-                self._counters["retries"] += 1
+                self.obs.retries.inc()
         if not self._sched.has_work():
             return finished
         self._ensure_state()
@@ -431,6 +515,21 @@ class ServingEngine:
             self._tick_slots(params, finished)
         return finished
 
+    def _sync_pool_gauges(self) -> None:
+        """Mirror the live block-pool pressure into the registry gauges
+        (the pool dict in ``health()`` is read back from these)."""
+        st = self._state
+        if self.mode != "paged" or st is None:
+            return
+        kv: PagedKVCache = st["kv"]
+        p = self.obs.pool
+        p["free"].set(kv.alloc.n_free)
+        p["used"].set(kv.alloc.n_used)
+        p["cached"].set(len(kv._cached))
+        p["seized"].set(kv.n_seized)
+        p["committed"].set(st["committed"])
+        p["capacity"].set(kv.capacity_blocks)
+
     def cancel(self, rid: str) -> GenerationResult:
         """Cancel an unfinished request wherever it is (pending, requeued
         after a preemption, prefilling, or decoding); frees its KV blocks
@@ -438,25 +537,26 @@ class ServingEngine:
         ``finish_reason="cancelled"``."""
         if rid not in self._meta:
             raise KeyError(f"unknown or already-finished request {rid!r}")
-        self._counters["cancelled"] += 1
+        self.obs.cancelled.inc()
         return self._cancel_rid(rid, FINISH_CANCELLED)
 
     def health(self) -> dict:
         """Degradation-visible engine snapshot: queue/inflight depths,
-        preempt/retry/cancel counters, and (paged) block-pool pressure."""
+        preempt/retry/cancel counters, and (paged) block-pool pressure.
+        Every number is a view over the metrics registry (the engine's
+        labeled children) -- the same state ``/metrics`` exports -- so the
+        dict shape stays what PR-7 callers expect with zero double
+        bookkeeping."""
         h = {"mode": self.mode, "tick": self._tick,
              "inflight": len(self._sched.active_slots()),
              "pending": self._sched.pending_count,
              "requeued": len(self._requeue),
-             "counters": dict(self._counters)}
+             "counters": self.obs.counters()}
         st = self._state
         if self.mode == "paged" and st is not None:
-            kv: PagedKVCache = st["kv"]
-            h["pool"] = {"free": kv.alloc.n_free, "used": kv.alloc.n_used,
-                         "cached": len(kv._cached), "seized": kv.n_seized,
-                         "capacity": kv.capacity_blocks,
-                         "committed": st["committed"]}
-            h["kv_stats"] = dict(kv.stats)
+            self._sync_pool_gauges()
+            h["pool"] = {k: int(g.value) for k, g in self.obs.pool.items()}
+            h["kv_stats"] = dict(st["kv"].stats)
         return h
 
     def _cancel_rid(self, rid: str, reason: str) -> GenerationResult:
@@ -549,7 +649,9 @@ class ServingEngine:
         self._sched.evict(slot)
         st["pos"][slot] = -1
         st["prefill"].pop(slot, None)
-        self._counters["preemptions"] += 1
+        self.obs.preemptions.inc()
+        obs.event("engine.preempt", engine=self.obs.engine_id, rid=rid,
+                  tick=self._tick)
         remaining = max(orig.max_new_tokens - len(self._gen[rid]), 1)
         shadow = Request(rid, full, adapter_id=orig.adapter_id,
                          sampling=SamplingParams(
@@ -590,6 +692,8 @@ class ServingEngine:
                 self._requeue_request(req)
                 continue
             meta = self._meta[req.rid]
+            self.obs.queue_wait.observe(time.perf_counter()
+                                        - meta["submitted"])
             meta["shared"] += shared
             meta["blocks"] = need
             st["aid"][slot] = req.adapter_id
@@ -655,6 +759,8 @@ class ServingEngine:
         for slot in decoding:
             tok[slot, 0] = st["tok"][slot, 0]
             pos[slot, 0] = st["pos"][slot]
+        self.obs.prefill_rows.inc(len(spans))
+        self.obs.decode_rows.inc(len(decoding))
         kv.flush()
         tables = kv.table_rows(slot_rids())
         greedy, logits, kv.pool = self._step_fn(
@@ -706,6 +812,9 @@ class ServingEngine:
             decode = self._decode = self._make_decode()
 
         for slot, req in self._sched.admit():
+            self.obs.queue_wait.observe(
+                time.perf_counter() - self._meta[req.rid]["submitted"])
+            self.obs.prefill_rows.inc()
             logits_last, slot_caches = self._prefill_slots(
                 req, st["s_cap"], params)
             st["caches"] = _scatter_slot(st["caches"], slot_caches, slot)
@@ -718,6 +827,7 @@ class ServingEngine:
         active = self._sched.active_slots()
         if not active:
             return
+        self.obs.decode_rows.inc(len(active))
 
         # rows of free slots compute garbage and are ignored (row
         # independence is what the kernel tests pin down, bitwise); their

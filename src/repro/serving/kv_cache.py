@@ -41,6 +41,7 @@ import numpy as np
 
 import jax
 
+from repro import obs
 from repro.models import transformer as tfm
 from repro.models.model import Model
 
@@ -202,8 +203,26 @@ class PagedKVCache:
         self._cached: "OrderedDict[int, None]" = OrderedDict()  # LRU order
         self._dirty: List[int] = []  # (re)allocated since last flush()
         self._seized: List[int] = []  # chaos-withheld (pressure injection)
-        self.stats = {"shared_full_blocks": 0, "shared_partial_tokens": 0,
-                      "cow_copies": 0, "evictions": 0}
+        # prefix-sharing counters live in the repro.obs registry (one
+        # source of truth), isolated per cache instance by label; the
+        # `stats` property keeps the PR-6 dict shape as a read-only view
+        lbl = {"cache": f"c{obs.next_index('cache')}"}
+        self._stats = {
+            "shared_full_blocks": obs.metric(
+                "serving/kv/prefix_shared_blocks_total").labels(**lbl),
+            "shared_partial_tokens": obs.metric(
+                "serving/kv/prefix_partial_tokens_total").labels(**lbl),
+            "cow_copies": obs.metric(
+                "serving/kv/cow_copies_total").labels(**lbl),
+            "evictions": obs.metric(
+                "serving/kv/evictions_total").labels(**lbl),
+        }
+
+    @property
+    def stats(self) -> Dict[str, int]:
+        """Prefix-sharing stats, a dict view over the registry counters
+        (same keys/values as the PR-6 ``self.stats`` dict)."""
+        return {k: int(c.value) for k, c in self._stats.items()}
 
     # ---------------------------------------------------------------- pool
     def _make_pool(self, model: Model):
@@ -265,7 +284,7 @@ class PagedKVCache:
         bid, _ = self._cached.popitem(last=False)
         self._unindex(bid)
         self.alloc.release(bid)
-        self.stats["evictions"] += 1
+        self._stats["evictions"].inc()
         return True
 
     def _take_block(self) -> int:
@@ -334,7 +353,7 @@ class PagedKVCache:
             chain = key
             matched += bs
         shared = len(table)
-        self.stats["shared_full_blocks"] += shared
+        self._stats["shared_full_blocks"].inc(shared)
         # longest-common-prefix match against cached partial tails under
         # the same chain; the winner is COPIED (eager copy-on-write) with
         # only the matched lanes kept valid, so both sides diverge freely.
@@ -374,8 +393,8 @@ class PagedKVCache:
             table.append(dst)
             matched += best_m
             shared += 1
-            self.stats["cow_copies"] += 1
-            self.stats["shared_partial_tokens"] += best_m
+            self._stats["cow_copies"].inc()
+            self._stats["shared_partial_tokens"].inc(best_m)
         self.tables[rid] = table
         self._prompts[rid] = prompt_t
         self._namespaces[rid] = adapter_id
@@ -402,7 +421,7 @@ class PagedKVCache:
             table[need - 1] = dst
             if self.alloc.decref(tail):   # pragma: no cover (defensive)
                 self._retire(tail)
-            self.stats["cow_copies"] += 1
+            self._stats["cow_copies"].inc()
 
     def commit_prefix(self, rid: str) -> None:
         """Index ``rid``'s prompt blocks for cross-request sharing.

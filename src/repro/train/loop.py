@@ -19,6 +19,7 @@ from typing import Any, Callable, Dict, Optional
 import jax
 import numpy as np
 
+from repro import obs
 from repro.checkpoint.manager import CheckpointManager
 from repro.config.base import RunConfig
 from repro.data.loader import ShardedLoader
@@ -36,14 +37,20 @@ def run_training(model: Model, run: RunConfig, loader: ShardedLoader,
                  init_key=None,
                  stop_after: Optional[int] = None,
                  place_state: Optional[Callable] = None,
-                 chaos=None) -> Dict[str, Any]:
+                 chaos=None,
+                 metrics_dir: Optional[str] = None) -> Dict[str, Any]:
     """``place_state`` (on-mesh launches): applied to the TrainState after
     init/restore -- device_put params to their NamedShardings so jit
     in_shardings come from committed placement, not per-step resharding.
 
     ``chaos`` (optional ``repro.distributed.chaos.FaultSchedule``): fires
     scheduled faults at the top of each step and injects straggler delays
-    inside the step-timing window (so the monitor sees them)."""
+    inside the step-timing window (so the monitor sees them).
+
+    ``metrics_dir`` (optional): telemetry artifacts (metrics.jsonl /
+    metrics.prom / spans.jsonl) are dumped there at every checkpoint and
+    at exit; the JSONL files append, so a restarted run's telemetry
+    stitches across restarts."""
     tc = run.train
     manager = manager or CheckpointManager(tc.ckpt_dir, keep=tc.ckpt_keep)
     guard = guard or PreemptionGuard(install=False)
@@ -74,49 +81,66 @@ def run_training(model: Model, run: RunConfig, loader: ShardedLoader,
     if place_state is not None:
         state = place_state(state)
 
+    def dump_metrics():
+        if metrics_dir is not None:
+            obs.dump(metrics_dir)
+
     losses = []
     stragglers = 0
     t_loop = time.time()
     for step in range(start_step, tc.steps):
-        if chaos is not None:
-            chaos.on_step(step, guard=guard, manager=manager)
-        batch = loader.next_batch()
-        batch = jax.tree_util.tree_map(jax.numpy.asarray, batch)
-        t0 = time.time()
-        state, metrics = step_fn(state, batch)
-        loss = float(metrics["loss"])
-        if chaos is not None:
-            delay = chaos.straggler_delay(step)
-            if delay > 0:
-                time.sleep(delay)      # inside the timed window, on purpose
-        dt = time.time() - t0
+        with obs.span("train.step", step=step):
+            if chaos is not None:
+                chaos.on_step(step, guard=guard, manager=manager)
+            batch = loader.next_batch()
+            batch = jax.tree_util.tree_map(jax.numpy.asarray, batch)
+            t0 = time.time()
+            state, metrics = step_fn(state, batch)
+            loss = float(metrics["loss"])
+            if chaos is not None:
+                delay = chaos.straggler_delay(step)
+                if delay > 0:
+                    time.sleep(delay)  # inside the timed window, on purpose
+            dt = time.time() - t0
         if monitor.record(step, dt):
             stragglers += 1
             log(f"[loop] straggler step {step}: {dt:.3f}s "
                 f"(ewma {monitor.ewma:.3f}s)")
         losses.append(loss)
+        obs.record_train_step(dt, loss, float(metrics["grad_norm"]),
+                              float(metrics["lr"]),
+                              int(np.size(batch["tokens"]))
+                              if "tokens" in batch else 0)
         if tc.log_every and step % tc.log_every == 0:
             log(f"[loop] step {step} loss {loss:.4f} "
                 f"lr {float(metrics['lr']):.2e} {dt * 1e3:.0f}ms")
         must_ckpt = (tc.ckpt_every and (step + 1) % tc.ckpt_every == 0)
         if must_ckpt or guard.requested:
-            manager.save(step + 1, state,
-                         metadata={"data_cursor": loader.checkpoint()["cursor"],
-                                   "step": step + 1,
-                                   "rng": np.asarray(key).astype(
-                                       np.uint32).tolist()})
+            with obs.span("train.checkpoint", step=step + 1):
+                manager.save(step + 1, state,
+                             metadata={"data_cursor":
+                                       loader.checkpoint()["cursor"],
+                                       "step": step + 1,
+                                       "rng": np.asarray(key).astype(
+                                           np.uint32).tolist()})
+            dump_metrics()
             if guard.requested:
                 manager.wait()
+                obs.metric("train/preemptions_total").inc()
+                obs.event("train.preempted", step=step + 1)
                 log(f"[loop] preempted at step {step + 1}; checkpoint "
                     f"flushed, exiting")
+                dump_metrics()
                 return {"state": state, "losses": losses,
                         "preempted": True, "last_step": step + 1,
                         "stragglers": stragglers}
         if stop_after is not None and step + 1 >= stop_after:
             manager.wait()
+            dump_metrics()
             return {"state": state, "losses": losses, "preempted": False,
                     "last_step": step + 1, "stragglers": stragglers}
     manager.wait()
+    dump_metrics()
     return {"state": state, "losses": losses, "preempted": False,
             "last_step": tc.steps, "stragglers": stragglers,
             "wall_time": time.time() - t_loop}

@@ -1,0 +1,387 @@
+"""ISSUE-8 telemetry correctness: histogram bucket math against a numpy
+oracle, span nesting/export round-trips, the enable->disable->enable
+no-leak property, jaxpr identity with collectors on vs off, and the
+instrumented layers' registry views (engine health, chaos counters,
+kernel launch hooks, /metrics HTTP)."""
+import json
+import urllib.request
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro import obs
+from repro.obs.metrics import LATENCY_BUCKETS, Registry
+from repro.obs.trace import SPAN_FIELDS, Tracer
+
+
+@pytest.fixture(autouse=True)
+def _obs_enabled():
+    """Every test starts (and leaves) the global collectors enabled --
+    the repo default -- no matter how it toggles them internally."""
+    obs.enable()
+    yield
+    obs.enable()
+
+
+# ---------------------------------------------------------------------------
+# histogram bucket math vs a numpy oracle
+# ---------------------------------------------------------------------------
+def test_histogram_buckets_match_numpy_oracle():
+    reg = Registry()
+    hist = reg.histogram("t/h", buckets=LATENCY_BUCKETS)
+    rng = np.random.default_rng(0)
+    # span below the first edge, across all finite buckets, and overflow
+    vals = np.concatenate([
+        rng.uniform(0.0, LATENCY_BUCKETS[-1] * 1.2, size=500),
+        np.asarray(LATENCY_BUCKETS),          # exactly-on-edge values
+        np.asarray([0.0, 1e-9, 1e6]),
+    ])
+    for v in vals:
+        hist.observe(float(v))
+
+    # Prometheus le semantics: counts[i] counts v <= edges[i]; searchsorted
+    # side="left" gives the first edge >= v, i.e. the same bucket.
+    oracle = np.zeros(len(LATENCY_BUCKETS) + 1, dtype=int)
+    idx = np.searchsorted(np.asarray(LATENCY_BUCKETS), vals, side="left")
+    for i in idx:
+        oracle[i] += 1
+
+    child = hist.labels()
+    assert child.counts == oracle.tolist()
+    assert child.count == len(vals)
+    assert child.sum == pytest.approx(float(vals.sum()))
+
+    # exposition emits CUMULATIVE bucket counts ending in the total
+    expo = reg.exposition()
+    cum = np.cumsum(oracle)
+    for edge, c in zip(LATENCY_BUCKETS, cum):
+        assert f'le="{edge:g}"}} {c}' in expo
+    assert f'le="+Inf"}} {len(vals)}' in expo
+
+
+@settings(max_examples=25, deadline=None)
+@given(q=st.floats(0.0, 1.0))
+def test_histogram_quantile_within_buckets(q):
+    reg = Registry()
+    hist = reg.histogram("t/q", buckets=(1.0, 2.0, 4.0))
+    assert hist.quantile(q) == 0.0                  # empty histogram
+    for v in (0.5, 1.5, 1.7, 3.0, 9.0):
+        hist.observe(v)
+    est = hist.quantile(q)
+    assert 0.0 <= est <= 4.0                        # clamped to last edge
+    assert hist.quantile(1.0) >= hist.quantile(q) >= hist.quantile(0.0)
+
+
+def test_histogram_quantile_interpolates():
+    reg = Registry()
+    hist = reg.histogram("t/qi", buckets=(1.0, 2.0))
+    for _ in range(100):
+        hist.observe(1.5)
+    # all mass in (1, 2]: the median interpolates inside that bucket
+    assert 1.0 < hist.quantile(0.5) <= 2.0
+
+
+def test_bad_bucket_edges_rejected():
+    reg = Registry()
+    with pytest.raises(ValueError):
+        reg.histogram("t/bad", buckets=(2.0, 1.0))
+    with pytest.raises(ValueError):
+        reg.histogram("t/bad2", buckets=(1.0, 1.0, 2.0))
+    # empty buckets fall back to the default latency edges
+    assert reg.histogram("t/ok", buckets=()).buckets == LATENCY_BUCKETS
+
+
+# ---------------------------------------------------------------------------
+# counters / gauges / registry semantics
+# ---------------------------------------------------------------------------
+def test_counter_monotone_and_labels():
+    reg = Registry()
+    fam = reg.counter("t/c", labels=("kind",))
+    fam.labels(kind="a").inc()
+    fam.labels(kind="a").inc(2)
+    fam.labels(kind="b").inc()
+    assert fam.labels(kind="a").value == 3
+    assert fam.labels(kind="b").value == 1
+    with pytest.raises(ValueError):
+        fam.labels(kind="a").inc(-1)
+    with pytest.raises(ValueError):
+        fam.labels(wrong="a")
+
+
+def test_reregistration_conflicts_fail_loudly():
+    reg = Registry()
+    reg.counter("t/x")
+    with pytest.raises(ValueError):
+        reg.gauge("t/x")
+    with pytest.raises(ValueError):
+        reg.counter("t/x", labels=("k",))
+    assert reg.counter("t/x") is reg.counter("t/x")   # idempotent get
+
+
+@settings(max_examples=20, deadline=None)
+@given(a=st.integers(1, 50), dropped=st.integers(1, 50),
+       b=st.integers(1, 50))
+def test_enable_disable_enable_never_leaks(a, dropped, b):
+    """Mutations while disabled vanish entirely; values recorded while
+    enabled persist and re-enabling resumes exactly where it left off."""
+    reg = Registry()
+    c = reg.counter("t/c")
+    g = reg.gauge("t/g")
+    h = reg.histogram("t/h", buckets=(1.0,))
+    for _ in range(a):
+        c.inc()
+    g.set(a)
+    h.observe(0.5)
+    reg.disable()
+    for _ in range(dropped):
+        c.inc()
+        h.observe(0.5)
+    g.set(-1)
+    assert c.value == a and g.value == a and h.labels().count == 1
+    reg.enable()
+    for _ in range(b):
+        c.inc()
+    assert c.value == a + b
+    assert h.labels().count == 1 and g.value == a
+
+
+def test_snapshot_roundtrips_through_json(tmp_path):
+    reg = Registry()
+    reg.counter("t/c").inc(3)
+    reg.histogram("t/h", buckets=(1.0, 2.0)).observe(1.5)
+    path = tmp_path / "m.jsonl"
+    reg.dump_jsonl(str(path))
+    reg.counter("t/c").inc()
+    reg.dump_jsonl(str(path))                        # appends
+    lines = [json.loads(ln) for ln in path.read_text().splitlines()]
+    assert len(lines) == 2
+    by_name = {m["name"]: m for m in lines[-1]["metrics"]}
+    assert by_name["t/c"]["samples"][0]["value"] == 4
+    assert by_name["t/h"]["samples"][0]["count"] == 1
+
+
+# ---------------------------------------------------------------------------
+# span tracer
+# ---------------------------------------------------------------------------
+def test_span_nesting_and_export_roundtrip(tmp_path):
+    tr = Tracer()
+    with tr.span("outer", tick=1):
+        with tr.span("inner_a"):
+            pass
+        with tr.span("inner_b"):
+            tr.event("blip", kind="x")
+    spans = {s["name"]: s for s in tr.spans()}
+    assert set(spans) == {"outer", "inner_a", "inner_b", "blip"}
+    outer = spans["outer"]
+    assert outer["parent_id"] == 0 and outer["depth"] == 0
+    for name in ("inner_a", "inner_b"):
+        assert spans[name]["parent_id"] == outer["span_id"]
+        assert spans[name]["depth"] == 1
+    # the event fired inside inner_b parents to it, one level deeper
+    assert spans["blip"]["parent_id"] == spans["inner_b"]["span_id"]
+    assert spans["blip"]["depth"] == 2
+    assert spans["blip"]["dur"] == 0.0
+    assert outer["attrs"] == {"tick": 1}
+    # completion order: children land before the outer span
+    order = [s["name"] for s in tr.spans()]
+    assert order.index("inner_a") < order.index("outer")
+
+    path = tmp_path / "spans.jsonl"
+    n = tr.export_jsonl(str(path))
+    assert n == 4
+    recs = [json.loads(ln) for ln in path.read_text().splitlines()]
+    assert [set(r) for r in recs] == [set(SPAN_FIELDS)] * 4
+    assert tr.spans() == []                          # drained
+    assert tr.export_jsonl(str(path)) == 0           # nothing duplicated
+
+
+def test_disabled_tracer_runs_body_records_nothing():
+    tr = Tracer()
+    tr.enabled = False
+    ran = []
+    with tr.span("ghost"):
+        ran.append(True)
+    tr.event("ghost_event")
+    assert ran == [True] and tr.spans() == []
+    tr.enabled = True
+    with tr.span("real"):
+        pass
+    assert [s["name"] for s in tr.spans()] == ["real"]
+
+
+def test_span_ring_buffer_bounded():
+    tr = Tracer(capacity=8)
+    for i in range(20):
+        with tr.span("s", i=i):
+            pass
+    spans = tr.spans()
+    assert len(spans) == 8
+    assert [s["attrs"]["i"] for s in spans] == list(range(12, 20))
+
+
+# ---------------------------------------------------------------------------
+# jaxpr identity: collectors on vs off leave traced computations untouched
+# ---------------------------------------------------------------------------
+def _jaxpr_str(fn, *args):
+    return str(jax.make_jaxpr(fn)(*args))
+
+
+def test_jaxpr_identity_fused_linear():
+    """The serving/train hot kernel: record_launch fires at trace time,
+    so this is exactly where instrumentation could perturb a jaxpr."""
+    from repro.kernels import ops as kops
+    x = jnp.ones((2, 8, 64), jnp.float32)
+    r = jnp.tile(jnp.eye(16, dtype=jnp.float32), (4, 1, 1))
+    w = jnp.ones((64, 32), jnp.float32)
+    obs.enable()
+    on = _jaxpr_str(kops.oftv2_linear_fused, x, r, w)
+    obs.disable()
+    off = _jaxpr_str(kops.oftv2_linear_fused, x, r, w)
+    assert on == off
+
+
+@pytest.mark.slow
+def test_jaxpr_identity_fused_train_step():
+    from benchmarks.obs_bench import _build_train
+    step_fn, state, batch = _build_train()
+    obs.enable()
+    on = _jaxpr_str(step_fn, state, batch)
+    obs.disable()
+    off = _jaxpr_str(step_fn, state, batch)
+    assert on == off
+
+
+# ---------------------------------------------------------------------------
+# kernel launch hooks
+# ---------------------------------------------------------------------------
+def test_kernel_launch_hook_counts_and_byte_model():
+    from repro.kernels import runtime
+
+    def launches(kernel):
+        fam = obs.metric("kernel/launches_total")
+        return fam.labels(kernel=kernel).value
+
+    before = launches("oftv2_linear_fused")
+    runtime.record_launch("oftv2_linear_fused", (4, 2), {"tm": 128},
+                          t=512, k=64, n=64, b=16)
+    assert launches("oftv2_linear_fused") == before + 1
+
+    fused = obs.metric("kernel/modeled_hbm_bytes_total")
+    unfused = obs.metric("kernel/modeled_hbm_bytes_unfused_total")
+    f = fused.labels(kernel="oftv2_linear_fused").value
+    u = unfused.labels(kernel="oftv2_linear_fused").value
+    assert 0 < f < u                # fusion strictly reduces modeled bytes
+
+    # disabled hook is a strict no-op
+    obs.disable()
+    runtime.record_launch("oftv2_linear_fused", (4, 2), {"tm": 128},
+                          t=512, k=64, n=64, b=16)
+    assert launches("oftv2_linear_fused") == before + 1
+
+
+# ---------------------------------------------------------------------------
+# chaos / fault telemetry
+# ---------------------------------------------------------------------------
+def test_straggler_monitor_counts_and_events():
+    from repro.distributed.fault import StragglerMonitor
+    fam = obs.metric("train/stragglers_total")
+    before = fam.value
+    obs.TRACER.clear()
+    mon = StragglerMonitor(alpha=0.5, threshold=2.0, warmup=2)
+    for s in range(6):
+        mon.record(s, 0.1)
+    assert mon.record(6, 10.0) is True
+    assert fam.value == before + 1
+    names = [s["name"] for s in obs.TRACER.spans()]
+    assert "train.straggler" in names
+
+
+def test_chaos_schedule_counts_fired_faults():
+    from repro.distributed.chaos import FaultSchedule
+    fam = obs.metric("chaos/faults_fired_total")
+    before = fam.labels(kind="straggler").value
+    sched = FaultSchedule.parse("straggler@1:0.0")
+    sched.straggler_delay(1)
+    assert fam.labels(kind="straggler").value == before + 1
+    assert [s["name"] for s in obs.TRACER.spans()].count("chaos.fault") >= 1
+
+
+# ---------------------------------------------------------------------------
+# /metrics HTTP endpoint
+# ---------------------------------------------------------------------------
+def test_metrics_http_endpoint_smoke():
+    obs.metric("train/steps_total").inc()
+    with obs.serve_metrics(port=0) as server:
+        url = f"http://127.0.0.1:{server.port}/metrics"
+        body = urllib.request.urlopen(url, timeout=10).read().decode()
+        assert "# TYPE train_steps_total counter" in body
+        assert "serving_ttft_seconds" in body        # full schema emitted
+        with pytest.raises(urllib.error.HTTPError):
+            urllib.request.urlopen(
+                f"http://127.0.0.1:{server.port}/nope", timeout=10)
+
+
+# ---------------------------------------------------------------------------
+# schema <-> docs sync
+# ---------------------------------------------------------------------------
+def test_schema_covers_all_layers_and_readme_in_sync():
+    from repro.obs import schema
+    layers = {spec.layer for spec in schema.SPECS.values()}
+    assert layers == set(schema.LAYERS)
+    assert len(schema.SPECS) >= 25
+    table = schema.markdown_table()
+    readme = open("README.md").read()
+    for line in table.splitlines():
+        assert line in readme, f"README Observability table stale: {line!r}"
+
+
+def test_undocumented_metric_name_fails_loudly():
+    with pytest.raises(KeyError):
+        obs.metric("train/not_a_real_metric")
+
+
+# ---------------------------------------------------------------------------
+# engine health as a registry view
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_engine_health_is_registry_view_and_counters_deprecated():
+    from test_serving_paged import _pooled, _prompts, _serving_model
+
+    from repro.serving import Request, SamplingParams, ServingEngine
+    model, params, cfg = _serving_model()
+    pool, _ = _pooled(model)
+    eng = ServingEngine(model, params, pool, n_slots=2, mode="paged",
+                        page_size=4, prefill_chunk=8)
+    prompts = _prompts(cfg, [8, 8])
+    reqs = [Request(f"r{i}", prompts[i], adapter_id=i,
+                    sampling=SamplingParams(max_new_tokens=4))
+            for i in range(2)]
+    results = eng.run(reqs)
+    assert len(results) == 2
+
+    h = eng.health()
+    o = eng.obs
+    assert h["counters"] == {"preemptions": int(o.preemptions.value),
+                             "retries": int(o.retries.value),
+                             "cancelled": int(o.cancelled.value),
+                             "deadline_expired":
+                                 int(o.deadline_expired.value)}
+    assert h["pool"]["capacity"] == eng.kv.capacity_blocks
+    assert h["kv_stats"] == eng.kv.stats            # registry-backed dict
+    assert o.ticks.value > 0
+    assert o.latency.count == 2 and o.ttft.count == 2
+
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        legacy = eng._counters
+    assert any(issubclass(x.category, DeprecationWarning) for x in w)
+    assert legacy == h["counters"]
+
+    # engine telemetry lands in the shared exposition under its own label
+    expo = obs.REGISTRY.exposition()
+    assert f'serving_ticks_total{{engine="{o.engine_id}"}}' in expo

@@ -57,8 +57,8 @@ def test_seize_preempts_requeues_and_drops_no_tokens():
     eng.kv.release_seized()
     results.update(eng.drain())
 
-    assert eng._counters["preemptions"] >= 1
-    assert eng._counters["retries"] >= 1
+    assert eng.health()["counters"]["preemptions"] >= 1
+    assert eng.health()["counters"]["retries"] >= 1
     assert any(r.retries > 0 for r in results.values())
     for i in range(4):
         np.testing.assert_array_equal(results[f"r{i}"].tokens,
@@ -140,7 +140,7 @@ def test_deadline_expires_to_partial_result():
     assert results["doomed"].n_generated < 5
     assert results["r0"].finish_reason == FINISH_LENGTH
     assert results["r0"].n_generated == 5
-    assert eng._counters["deadline_expired"] == 1
+    assert eng.health()["counters"]["deadline_expired"] == 1
     eng.kv.audit()                          # expiry freed its blocks
 
 
@@ -176,7 +176,7 @@ def test_cancel_active_pending_and_unknown():
     survivor = eng.drain()["r1"]
     oracle = _engine(model, params, pool, mode="slots").run([reqs[1]])
     np.testing.assert_array_equal(survivor.tokens, oracle["r1"])
-    assert eng._counters["cancelled"] == 2
+    assert eng.health()["counters"]["cancelled"] == 2
     eng.kv.audit()
 
 
