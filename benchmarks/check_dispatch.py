@@ -3,54 +3,37 @@
 
 PR 4 retired the ~52 ``acfg.kind == "..."`` / ``acfg.is_oft`` dispatch
 sites scattered across the framework in favor of the ``repro.methods``
-registry.  This gate greps the source tree and fails the build if any of
-them grow back -- the registry is worthless the day one branch bypasses
-it.  (Quant-kind dispatch, ``qcfg.kind == "nf4"`` etc., is a different
-axis and stays where it is.)
+registry.  This gate fails the build if any of them grow back -- the
+registry is worthless the day one branch bypasses it.  (Quant-kind
+dispatch, ``qcfg.kind == "nf4"`` etc., is a different axis and stays
+where it is.)
+
+Since ISSUE-9 this is a thin wrapper over the ``registry-dispatch`` AST
+rule of ``repro.analysis``: the banned patterns are matched on parsed
+syntax, so a docstring or comment QUOTING ``acfg.kind == ...`` no longer
+fails the build (the regex predecessor's false positive), while actual
+code sites are caught exactly as before.
 
 Usage: python -m benchmarks.check_dispatch   (no arguments; exits 1 on hits)
 """
 from __future__ import annotations
 
-import re
 import sys
 from pathlib import Path
 
-SRC = Path(__file__).resolve().parents[1] / "src" / "repro"
-ALLOWED = SRC / "methods"
 
-# (pattern, why it is banned)
-PATTERNS = [
-    (re.compile(r"\bacfg\.kind\s*(?:==|!=)"),
-     "adapter-kind comparison -- query repro.methods instead"),
-    (re.compile(r"\.is_oft\b"),
-     "is_oft predicate -- retired; use the method's capability flags"),
-    (re.compile(r"\badapter\s*(?:==|!=)\s*[\"']"),
-     "adapter-kind literal comparison -- query repro.methods instead"),
-    (re.compile(r"\bkind\s*(?:==|!=)\s*[\"'](?:oftv1|oftv2|lora|hoft)[\"']"),
-     "adapter-kind literal comparison -- query repro.methods instead"),
-    (re.compile(r"\b(?:acfg|adapter)\.kind\s+(?:not\s+)?in\s"),
-     "adapter-kind membership test (the old is_oft shape) -- use the "
-     "method's capability flags"),
-    (re.compile(r"\b(?:acfg|adapter)\.kind\.startswith\b"),
-     "adapter-kind prefix test -- use the method's capability flags"),
-]
-
-
-def check(root: Path = SRC) -> int:
+def check(root: Path = None) -> int:
+    """Scan ``src/repro`` under ``root`` (the repo root; default:
+    auto-detected) with the registry-dispatch rule; 0 iff clean."""
+    from repro.analysis import core, pyast
+    core._load_shipped()
+    rule = core.get("registry-dispatch")
     hits = []
-    for path in sorted(root.rglob("*.py")):
-        if ALLOWED in path.parents:
-            continue
-        for lineno, line in enumerate(path.read_text().splitlines(), 1):
-            for pat, why in PATTERNS:
-                if pat.search(line):
-                    hits.append((path.relative_to(root.parents[1]),
-                                 lineno, line.strip(), why))
-    for path, lineno, line, why in hits:
-        print(f"check_dispatch: {path}:{lineno}: {line}\n    ^ {why}",
-              file=sys.stderr)
-    print(f"check_dispatch: scanned {root} (allowing {ALLOWED.name}/), "
+    for module in pyast.iter_modules(root):
+        hits.extend(rule.check(module))
+    for f in hits:
+        print(f"check_dispatch: {f.where}: {f.message}", file=sys.stderr)
+    print(f"check_dispatch: scanned src/repro (allowing methods/), "
           f"{len(hits)} banned dispatch site(s)")
     return 1 if hits else 0
 

@@ -3,18 +3,15 @@
 ``kernels_bench.fusion_plan_rows`` (and ``serving_bench`` for the
 multi-adapter kernels) emit one ``fusion_plan/.../expect_X`` row per
 adapted linear per representative config, with the mode the dispatcher
-ACTUALLY picked in the derived column (``got=Y``).  This script reads the
-benchmark JSON artifact (``run.py --json``) and fails if any
-expected-fused path silently fell back to the unfused oracle -- a perf
-regression the test suite can't see, since unfused is numerically
-identical.
+ACTUALLY picked in the derived column (``got=Y``); ``.../expect_ge_T``
+ratio rows self-describe their thresholds.  This script reads the
+benchmark JSON artifact (``run.py --json``) and fails on any silent
+fused->unfused fallback or below-threshold ratio.
 
-It also enforces every ``.../expect_ge_T`` ratio row:
-``serving/speedup/...`` (multi-adapter batched decode >= T times the
-N-sequential-batches baseline, the ISSUE-3 acceptance number) and
-``serving/load/...`` (ISSUE-6: paged-engine saturation throughput >= the
-fixed-slot scheduler, and its p99 latency not collapsing, under open-loop
-Poisson traffic with shared system prompts).
+Since ISSUE-9 the detectors live in ``repro.analysis`` (the
+``fusion-plan`` and ``ratio-threshold`` bench-layer rules, also run by
+``python -m repro.analysis --bench``); this wrapper keeps the historical
+CLI and exit codes.
 
 Usage: python -m benchmarks.check_fusion bench-smoke.json
 """
@@ -25,38 +22,16 @@ import sys
 
 
 def check(rows) -> int:
-    plan = [r for r in rows if r["name"].startswith("fusion_plan/")]
-    if not plan:
-        print("check_fusion: no fusion_plan/* rows in the report -- the "
-              "benchmark no longer emits the plan", file=sys.stderr)
-        return 1
-    bad = []
-    for r in plan:
-        expect = r["name"].rsplit("/expect_", 1)[-1]
-        got = dict(kv.split("=", 1) for kv in r["derived"].split(";"))["got"]
-        if got != expect:
-            bad.append((r["name"], got))
-    for name, got in bad:
-        print(f"check_fusion: {name} fell back to '{got}'", file=sys.stderr)
-
-    # every ratio row self-describes its gate: .../expect_ge_T with the
-    # measured value in the derived column (key `ratio`, or the legacy
-    # `multi_over_seq` spelling on the serving/speedup rows)
-    speedups = [r for r in rows if "/expect_ge_" in r["name"]]
-    slow = []
-    for r in speedups:
-        threshold = float(r["name"].rsplit("/expect_ge_", 1)[-1])
-        kv = dict(p.split("=", 1) for p in r["derived"].split(";"))
-        ratio = float(kv.get("ratio", kv.get("multi_over_seq")))
-        if ratio < threshold:
-            slow.append((r["name"], ratio, threshold))
-    for name, ratio, threshold in slow:
-        print(f"check_fusion: {name} measured {ratio:.2f}x "
-              f"(< {threshold}x)", file=sys.stderr)
-    print(f"check_fusion: {len(plan)} fusion-plan rows checked, "
-          f"{len(bad)} unexpected fallbacks; {len(speedups)} serving "
-          f"speedup rows checked, {len(slow)} below threshold")
-    return 1 if (bad or slow) else 0
+    from repro.analysis import core
+    core._load_shipped()
+    report = core.run_layer("bench", [core.BenchRows(rows)])
+    for f in report.findings:
+        print(f"check_fusion: {f.where}: {f.message}", file=sys.stderr)
+    n_plan = sum(1 for r in rows if r["name"].startswith("fusion_plan/"))
+    n_ratio = sum(1 for r in rows if "/expect_ge_" in r["name"])
+    print(f"check_fusion: {n_plan} fusion-plan rows and {n_ratio} ratio "
+          f"rows checked, {len(report.findings)} finding(s)")
+    return 1 if report.findings else 0
 
 
 def main() -> None:

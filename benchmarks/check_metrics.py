@@ -3,20 +3,14 @@
 Reads the ``metrics.jsonl`` snapshots written by live smoke runs
 (``launch.train --metrics-dir`` / ``launch.serve --metrics-dir``) and
 fails when the exported metric set drifts from the documented schema
-(``repro/obs/schema.py`` -- the same table the README renders):
+(``repro/obs/schema.py`` -- the same table the README renders): missing
+documented families, unsampled ``smoke_required`` families, undocumented
+exports, or the ISSUE-8 coverage floor (>= 25 sampled families spanning
+all four layers) not met.
 
-  * a documented family missing from every artifact: an instrumented
-    call site was deleted (or the exporter broke) without updating the
-    schema, so dashboards silently go dark;
-  * a ``smoke_required`` family with zero samples across all artifacts:
-    the family is still registered but nothing feeds it -- dead
-    telemetry that looks alive in ``/metrics``;
-  * an exported family absent from the schema: undocumented telemetry
-    that the README and this gate cannot vouch for (the strictness cuts
-    both ways);
-  * fewer than 25 distinct documented families sampled, or any of the
-    four layers (train / serving / kernel / chaos) entirely unsampled --
-    the ISSUE-8 acceptance floor for the CI smoke.
+Since ISSUE-9 the detector is the ``metrics-schema`` rule of
+``repro.analysis`` (also run by ``python -m repro.analysis
+--metrics-dir``); this wrapper keeps the historical CLI and exit codes.
 
 Usage: PYTHONPATH=src python -m benchmarks.check_metrics DIR [DIR ...]
 (each DIR holds a ``metrics.jsonl``; the LAST snapshot line per file is
@@ -27,10 +21,6 @@ from __future__ import annotations
 import json
 import os
 import sys
-
-from repro.obs import schema
-
-MIN_SAMPLED_FAMILIES = 25
 
 
 def load_samples(directory: str) -> dict:
@@ -46,38 +36,21 @@ def load_samples(directory: str) -> dict:
 
 
 def check(dirs) -> int:
+    from repro.analysis import core
+    core._load_shipped()
     merged: dict = {}
     for d in dirs:
         for name, n in load_samples(d).items():
             merged[name] = merged.get(name, 0) + n
-
-    problems = []
-    for name, spec in schema.SPECS.items():
-        if name not in merged:
-            problems.append(f"documented family {name!r} missing from "
-                            f"every artifact")
-        elif spec.smoke_required and merged[name] == 0:
-            problems.append(f"family {name!r} is smoke_required but has "
-                            f"no samples")
-    for name in sorted(merged):
-        if name not in schema.SPECS:
-            problems.append(f"exported family {name!r} is not in the "
-                            f"documented schema (repro/obs/schema.py)")
-
+    report = core.run_layer("metrics", [core.MetricsExport(merged)])
+    for f in report.findings:
+        print(f"check_metrics: {f.message}", file=sys.stderr)
+    from repro.obs import schema
     sampled = {n for n, c in merged.items() if c and n in schema.SPECS}
-    if len(sampled) < MIN_SAMPLED_FAMILIES:
-        problems.append(f"only {len(sampled)} documented families carry "
-                        f"samples (floor: {MIN_SAMPLED_FAMILIES})")
-    for layer in schema.LAYERS:
-        if not any(schema.SPECS[n].layer == layer for n in sampled):
-            problems.append(f"no sampled family from the {layer!r} layer")
-
-    for p in problems:
-        print(f"check_metrics: {p}", file=sys.stderr)
     print(f"check_metrics: {len(schema.SPECS)} documented families, "
           f"{len(sampled)} sampled across {len(dirs)} artifact dir(s), "
-          f"{len(problems)} problem(s)")
-    return 1 if problems else 0
+          f"{len(report.findings)} problem(s)")
+    return 1 if report.findings else 0
 
 
 def main(argv=None):

@@ -1,0 +1,55 @@
+"""repro.analysis: a unified static contract checker over jaxprs,
+compiled HLO, and the Python AST (ISSUE-9).
+
+One declarative rule engine, three walkers:
+
+  * :mod:`repro.analysis.jaxprs` -- traverse closed jaxprs, recursing
+    into nested pjit/scan/cond/custom_vjp/shard_map bodies (pallas
+    kernel interiors stay out of scope; their HBM operands/results do
+    not);
+  * :mod:`repro.analysis.hlo` -- parse ``lowered.compile().as_text()``
+    into an op stream (the layer where GSPMD-inserted collectives are
+    visible);
+  * :mod:`repro.analysis.pyast` -- parsed source modules (comments and
+    docstrings can never trip a gate).
+
+Rules implement the :class:`~repro.analysis.core.Rule` protocol (id,
+layer, severity, description, ``check``, and a seeded known-bad
+``fixture`` that proves the detector live).  ``python -m repro.analysis``
+runs the full tree: AST rules over ``src/repro``, the jaxpr/HLO/trace
+rules over representative fused, multi-adapter, serving, and sharded
+programs (:mod:`repro.analysis.fixtures`), and -- given the artifacts --
+the bench/metrics gates.  ``benchmarks/check_dispatch.py``,
+``check_fusion.py`` and ``check_metrics.py`` are thin wrappers over this
+engine.
+
+Tests assert through :mod:`repro.analysis.checks`, so pytest and the CI
+gate share one detector per contract.
+"""
+from repro.analysis.core import (BenchRows, ERROR, Finding, INFO, LAYERS,
+                                 MetricsExport, Program, Report, Rule,
+                                 SEVERITIES, TraceCounts, WARNING,
+                                 all_rules, get, register, rules_for_layer,
+                                 rules_table_md, run_layer, selftest)
+from repro.analysis.checks import (assert_collective_budget,
+                                   assert_no_dense_w,
+                                   assert_no_host_sync,
+                                   assert_no_w_gathers_hlo,
+                                   assert_not_baked, assert_traces_once)
+from repro.analysis.jaxprs import (first_divergence, float_outvar_shapes,
+                                   float_shapes, iter_eqns,
+                                   jaxpr_fingerprint, open_jaxpr,
+                                   primitive_names, structural_fingerprint,
+                                   subjaxprs, trace)
+
+__all__ = [
+    "BenchRows", "ERROR", "Finding", "INFO", "LAYERS", "MetricsExport",
+    "Program", "Report", "Rule", "SEVERITIES", "TraceCounts", "WARNING",
+    "all_rules", "get", "register", "rules_for_layer", "rules_table_md",
+    "run_layer", "selftest",
+    "assert_collective_budget", "assert_no_dense_w", "assert_no_host_sync",
+    "assert_no_w_gathers_hlo", "assert_not_baked", "assert_traces_once",
+    "first_divergence", "float_outvar_shapes", "float_shapes", "iter_eqns",
+    "jaxpr_fingerprint", "open_jaxpr", "primitive_names",
+    "structural_fingerprint", "subjaxprs", "trace",
+]

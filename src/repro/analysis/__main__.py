@@ -1,0 +1,111 @@
+"""The analysis CLI: ``python -m repro.analysis``.
+
+Runs every registered rule over its layer's targets --
+
+  * ``ast``:    every module under ``src/repro``;
+  * ``jaxpr`` / ``hlo`` / ``trace``: the representative programs of
+    :mod:`repro.analysis.fixtures` (fused fwd+bwd kernels, multi-adapter
+    routing, an NF4 fused train step, the paged serving engine in steady
+    state, and -- with >= 2 devices -- the mesh-sharded fused step);
+  * ``bench``:  a ``benchmarks/run.py --json`` artifact (``--bench``);
+  * ``metrics``: live-smoke ``metrics.jsonl`` dirs (``--metrics-dir``).
+
+Exit code 1 if any finding has severity ``error``, else 0.  Layers with
+no targets are reported in the skip notes, never silently dropped.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _load_metrics(dirs) -> dict:
+    """Merged {family: sample count} across the newest snapshot of each
+    ``DIR/metrics.jsonl`` (same artifact format check_metrics gates)."""
+    import os
+    merged: dict = {}
+    for d in dirs:
+        path = os.path.join(d, "metrics.jsonl")
+        with open(path) as f:
+            lines = [ln for ln in f if ln.strip()]
+        if not lines:
+            raise SystemExit(f"analysis: {path} is empty")
+        for m in json.loads(lines[-1])["metrics"]:
+            merged[m["name"]] = merged.get(m["name"], 0) + len(m["samples"])
+    return merged
+
+
+def main(argv=None) -> int:
+    from repro.analysis import core
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="unified static contract checker "
+                    "(jaxpr + HLO + AST + trace + artifacts)")
+    parser.add_argument("--list-rules", action="store_true",
+                        help="print the rule table (markdown) and exit")
+    parser.add_argument("--rules", default="",
+                        help="comma-separated rule ids to run (default all)")
+    parser.add_argument("--ast-only", action="store_true",
+                        help="skip the traced fixtures (fast source-level "
+                             "pass)")
+    parser.add_argument("--no-sharded", action="store_true",
+                        help="skip the mesh-sharded fixture")
+    parser.add_argument("--bench", default=None, metavar="JSON",
+                        help="benchmarks/run.py --json artifact to gate")
+    parser.add_argument("--metrics-dir", action="append", default=[],
+                        metavar="DIR",
+                        help="metrics.jsonl dir to gate (repeatable)")
+    parser.add_argument("--json", default=None, metavar="PATH",
+                        help="write the findings report as JSON")
+    args = parser.parse_args(argv)
+
+    core._load_shipped()
+    if args.list_rules:
+        print(core.rules_table_md())
+        return 0
+    picked = None
+    if args.rules:
+        picked = [core.get(r.strip()) for r in args.rules.split(",")
+                  if r.strip()]
+
+    report = core.Report()
+
+    from repro.analysis import pyast
+    report.merge(core.run_layer("ast", pyast.iter_modules(), rules=picked))
+
+    if args.ast_only:
+        report.skipped.append("jaxpr/hlo/trace layers: --ast-only")
+    else:
+        from repro.analysis import fixtures
+        targets = fixtures.collect(sharded=not args.no_sharded)
+        report.merge(core.run_layer("jaxpr", targets["programs"],
+                                    rules=picked))
+        report.merge(core.run_layer("hlo", targets["programs"],
+                                    rules=picked))
+        report.merge(core.run_layer("trace", targets["traces"],
+                                    rules=picked))
+        report.skipped.extend(targets["skipped"])
+
+    if args.bench:
+        with open(args.bench) as f:
+            rows = json.load(f)
+        report.merge(core.run_layer("bench", [core.BenchRows(rows)],
+                                    rules=picked))
+    else:
+        report.skipped.append("bench layer: no --bench artifact given")
+
+    if args.metrics_dir:
+        export = core.MetricsExport(_load_metrics(args.metrics_dir))
+        report.merge(core.run_layer("metrics", [export], rules=picked))
+    else:
+        report.skipped.append("metrics layer: no --metrics-dir given")
+
+    print(report.render())
+    if args.json:
+        report.write_json(args.json)
+    return 1 if report.errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

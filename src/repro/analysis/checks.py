@@ -1,0 +1,91 @@
+"""Test-facing assertion wrappers: each one builds a target for exactly
+the rule CI runs (``python -m repro.analysis``) and raises AssertionError
+with the findings.  Tests become one-line callers of the shared engine --
+the same detector fires in pytest and in the CI gate, so they cannot
+drift apart (previously each test carried its own copy-pasted walker).
+"""
+from __future__ import annotations
+
+from typing import Iterable, Optional, Sequence
+
+from repro.analysis import core, hlo, jaxprs
+
+
+def _run(rule_id: str, target) -> None:
+    findings = core.get(rule_id).check(target)
+    if findings:
+        raise AssertionError(
+            f"{rule_id}: {len(findings)} finding(s):\n"
+            + "\n".join(f"  {f}" for f in findings))
+
+
+def assert_no_dense_w(fn, args: Sequence, banned_shapes: Iterable[tuple],
+                      name: str = "program") -> None:
+    """The fused program of ``fn(*args)`` never materializes a float
+    intermediate of any banned (W-like) shape outside VMEM tiles."""
+    core._load_shipped()
+    _run("no-dense-w-in-hbm", core.Program(
+        name, [jaxprs.trace(fn, *args)],
+        meta={"banned_float_shapes": {tuple(s) for s in banned_shapes}}))
+
+
+def assert_collective_budget(fn, args: Sequence, model_shards: int,
+                             kind: str = "oftv2",
+                             allowed: Optional[Sequence[str]] = None,
+                             name: str = "program") -> None:
+    """``fn(*args)``'s jaxpr emits only the collectives budgeted by the
+    ``kind`` method's registry entry (``shard_collectives``), and a
+    budgeted psum actually appears when the model axis is sharded."""
+    core._load_shipped()
+    if allowed is None:
+        from repro import methods
+        allowed = methods.get(kind).shard_collectives
+    _run("collective-budget", core.Program(
+        name, [jaxprs.trace(fn, *args)],
+        meta={"allowed_collectives": tuple(allowed),
+              "model_shards": int(model_shards)}))
+
+
+def assert_no_w_gathers_hlo(fn, args: Sequence, cfg, kind: str = "oftv2",
+                            allowed: Optional[Sequence[str]] = None,
+                            name: str = "program") -> None:
+    """Compiled-HLO twin of the collective budget: compile ``fn(*args)``
+    under the ambient mesh and scan the optimized HLO -- no off-budget
+    all-to-all, and no all-gather carrying a W / NF4-codes / absmax
+    trailing shape of ``cfg`` (tiny adapter-state gathers are allowed)."""
+    core._load_shipped()
+    if allowed is None:
+        from repro import methods
+        allowed = methods.get(kind).shard_collectives
+    _run("hlo-collective-budget", core.Program(
+        name, [], hlo=hlo.compile_text(fn, *args),
+        meta={"allowed_collectives": tuple(allowed),
+              "w_shapes": hlo.weight_shapes(cfg)}))
+
+
+def assert_not_baked(make_fn, variants: Sequence[Sequence], *,
+                     mask_top_literals: bool = False,
+                     name: str = "program") -> None:
+    """``make_fn(*variant)`` traced at every variant (same shapes,
+    different values) fingerprints identically -- no value baked into the
+    jaxpr as a constant."""
+    core._load_shipped()
+    _run("no-baked-scalar", core.Program(
+        name, [jaxprs.trace(make_fn, *v) for v in variants],
+        meta={"mask_top_literals": mask_top_literals}))
+
+
+def assert_no_host_sync(fn, args: Sequence, name: str = "program") -> None:
+    """``fn(*args)``'s jaxpr contains no host-callback primitives."""
+    core._load_shipped()
+    _run("no-host-sync", core.Program(
+        name, [jaxprs.trace(fn, *args)], meta={"hot": True}))
+
+
+def assert_traces_once(fn, calls: Sequence[Sequence], budget: int = 1,
+                       name: str = "program") -> None:
+    """Jit ``fn``, run every call, and require at most ``budget``
+    compiles -- the steady-state no-retrace contract."""
+    from repro.analysis import rules_trace
+    core._load_shipped()
+    _run("no-retrace", rules_trace.measure_jit(name, fn, calls, budget))

@@ -1,0 +1,262 @@
+"""The contract-checker core: ``Finding``, the ``Rule`` protocol, the rule
+registry, and the findings ``Report``.
+
+A *rule* is one static contract the runtime cannot see (a fused kernel
+never round-tripping dense W through HBM, a sharded path emitting only its
+budgeted collectives, dispatch staying inside the method registry, ...).
+Each rule declares the *layer* it inspects -- a traced jaxpr, the compiled
+HLO text, the Python AST, a jit-cache trace count, or a benchmark/metrics
+artifact -- and carries its own seeded known-bad **fixture**: a target that
+MUST produce findings.  ``selftest(rule)`` runs the fixture, so every rule
+in the registry is proven live (tests/test_analysis.py sweeps them all);
+a rule whose detector silently rots fails its own fixture, not a future
+incident review.
+
+The walkers live next door (``jaxprs`` / ``hlo`` / ``pyast``), the shipped
+rules in ``rules_*`` modules, and the representative traced programs of
+the real tree in ``fixtures``.  ``python -m repro.analysis`` drives the
+whole thing.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Sequence
+
+ERROR = "error"
+WARNING = "warning"
+INFO = "info"
+SEVERITIES = (ERROR, WARNING, INFO)
+
+#: Layers a rule can inspect.  ast/jaxpr/hlo are the ISSUE-9 tentpole
+#: walkers; trace counts jit-cache growth; bench/metrics lift the legacy
+#: check_fusion / check_metrics artifact gates onto the same engine.
+LAYERS = ("ast", "jaxpr", "hlo", "trace", "bench", "metrics")
+
+
+@dataclass
+class Finding:
+    """One contract violation, with enough provenance to act on:
+    ``where`` is ``file:line`` for AST findings, ``program::eqn-path`` for
+    jaxpr findings, and ``program::hlo:<line>`` for HLO findings."""
+    rule: str
+    severity: str
+    where: str
+    message: str
+
+    def __str__(self) -> str:
+        return f"[{self.severity}] {self.rule} @ {self.where}: {self.message}"
+
+    def to_json(self) -> dict:
+        return {"rule": self.rule, "severity": self.severity,
+                "where": self.where, "message": self.message}
+
+
+# ---------------------------------------------------------------------------
+# targets (what a rule inspects, by layer)
+# ---------------------------------------------------------------------------
+@dataclass
+class Program:
+    """A traced program: one or more jaxpr variants (>= 2 means the traces
+    were taken at different *values* of the same-shaped inputs, which the
+    ``no-baked-scalar`` rule compares), optional compiled-HLO text, and
+    rule-facing metadata:
+
+    ``banned_float_shapes``  set of float shapes that must not appear as
+                             jaxpr intermediates (``no-dense-w-in-hbm``);
+    ``allowed_collectives``  the method's collective budget
+                             (``collective-budget`` / HLO twin);
+    ``model_shards``         model-axis size (psum presence is required
+                             only when > 1);
+    ``w_shapes``             trailing W shapes the HLO gather rule bans;
+    ``hot``                  True marks a hot path (``no-host-sync``);
+    ``mask_top_literals``    the no-baked-scalar fingerprint masks literal
+                             values OUTSIDE the first jit boundary (set by
+                             programs traced at an eager call site).
+    """
+    name: str
+    jaxprs: List = field(default_factory=list)
+    hlo: Optional[str] = None
+    meta: dict = field(default_factory=dict)
+
+
+@dataclass
+class TraceCounts:
+    """Jit-cache compile counts from a steady-state smoke:
+    ``counts[label] = (compiles, budget)``; ``no-retrace`` flags any label
+    whose compiles exceed its budget."""
+    name: str
+    counts: Dict[str, tuple] = field(default_factory=dict)
+
+
+@dataclass
+class BenchRows:
+    """Rows of a ``benchmarks/run.py --json`` report (the fusion-plan and
+    expect_ge ratio gates run over these)."""
+    rows: List[dict] = field(default_factory=list)
+
+
+@dataclass
+class MetricsExport:
+    """Merged ``{family: sample count}`` from live-smoke metrics.jsonl
+    snapshots (the documented-schema export gate runs over this)."""
+    samples: Dict[str, int] = field(default_factory=dict)
+
+
+# ---------------------------------------------------------------------------
+# Rule protocol + registry
+# ---------------------------------------------------------------------------
+class Rule:
+    """One declarative contract.  Subclass, set the class attrs, implement
+    ``check(target)`` for the layer's target type, and ``fixture()``
+    returning a seeded known-bad target that ``check`` MUST flag."""
+
+    id: str = ""
+    layer: str = ""
+    severity: str = ERROR
+    description: str = ""          # one line; the README table renders it
+
+    def check(self, target) -> List[Finding]:
+        raise NotImplementedError(self.id)
+
+    def fixture(self):
+        raise NotImplementedError(self.id)
+
+    def finding(self, where: str, message: str,
+                severity: Optional[str] = None) -> Finding:
+        return Finding(self.id, severity or self.severity, where, message)
+
+    def __repr__(self) -> str:
+        return f"<Rule {self.id!r} ({self.layer})>"
+
+
+_RULES: Dict[str, Rule] = {}
+
+
+def register(rule_cls):
+    """Register a ``Rule`` subclass (usable as a class decorator).
+    Duplicate ids are an error -- a silently shadowed gate is a gate that
+    no longer gates."""
+    rule = rule_cls() if isinstance(rule_cls, type) else rule_cls
+    if not rule.id:
+        raise ValueError(f"{rule!r} has no id")
+    if rule.layer not in LAYERS:
+        raise ValueError(f"rule {rule.id!r}: unknown layer {rule.layer!r} "
+                         f"(layers: {', '.join(LAYERS)})")
+    if rule.severity not in SEVERITIES:
+        raise ValueError(f"rule {rule.id!r}: unknown severity "
+                         f"{rule.severity!r}")
+    if rule.id in _RULES:
+        raise ValueError(f"rule {rule.id!r} already registered")
+    _RULES[rule.id] = rule
+    return rule_cls
+
+
+def get(rule_id: str) -> Rule:
+    try:
+        return _RULES[rule_id]
+    except KeyError:
+        raise ValueError(f"unknown rule {rule_id!r}; registered: "
+                         f"{', '.join(sorted(_RULES))}") from None
+
+
+def all_rules() -> List[Rule]:
+    _load_shipped()
+    return [_RULES[k] for k in sorted(_RULES)]
+
+
+def rules_for_layer(layer: str) -> List[Rule]:
+    return [r for r in all_rules() if r.layer == layer]
+
+
+def _load_shipped() -> None:
+    """Import the shipped rule modules exactly once (registration is an
+    import side effect, like ``repro.methods``)."""
+    from repro.analysis import (rules_ast, rules_bench,  # noqa: F401
+                                rules_hlo, rules_jaxpr, rules_trace)
+
+
+def selftest(rule: Rule) -> List[Finding]:
+    """Prove ``rule`` live: its seeded known-bad fixture must produce at
+    least one finding.  Returns the findings for inspection."""
+    findings = rule.check(rule.fixture())
+    if not findings:
+        raise AssertionError(
+            f"rule {rule.id!r} reported ZERO findings on its own known-bad "
+            f"fixture -- the detector is dead")
+    return findings
+
+
+def rules_table_md() -> str:
+    """The shipped rule set as a markdown table.  README embeds this
+    verbatim (``python -m repro.analysis --list-rules``) and
+    tests/test_analysis.py pins the embed, like the capability matrix."""
+    lines = ["| rule | layer | severity | checks |",
+             "|---|---|---|---|"]
+    for r in all_rules():
+        lines.append(f"| `{r.id}` | {r.layer} | {r.severity} | "
+                     f"{r.description} |")
+    return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# Report
+# ---------------------------------------------------------------------------
+@dataclass
+class Report:
+    """Everything one analysis run saw: findings, how many targets each
+    layer covered, and what was skipped (and WHY -- a skipped sharded
+    fixture must be visible, or 'ran clean' overstates the coverage)."""
+    findings: List[Finding] = field(default_factory=list)
+    checked: Dict[str, int] = field(default_factory=dict)
+    skipped: List[str] = field(default_factory=list)
+
+    @property
+    def errors(self) -> List[Finding]:
+        return [f for f in self.findings if f.severity == ERROR]
+
+    def merge(self, other: "Report") -> "Report":
+        self.findings.extend(other.findings)
+        for layer, n in other.checked.items():
+            self.checked[layer] = self.checked.get(layer, 0) + n
+        self.skipped.extend(other.skipped)
+        return self
+
+    def to_json(self) -> dict:
+        return {"findings": [f.to_json() for f in self.findings],
+                "checked": dict(self.checked),
+                "skipped": list(self.skipped),
+                "errors": len(self.errors)}
+
+    def render(self) -> str:
+        out = []
+        for f in self.findings:
+            out.append(str(f))
+        cov = ", ".join(f"{layer}={n}" for layer, n in
+                        sorted(self.checked.items())) or "nothing"
+        out.append(f"analysis: checked {cov}; {len(self.findings)} "
+                   f"finding(s), {len(self.errors)} at severity error")
+        for note in self.skipped:
+            out.append(f"analysis: skipped {note}")
+        return "\n".join(out)
+
+    def write_json(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_json(), f, indent=2)
+
+
+def run_layer(layer: str, targets: Iterable,
+              rules: Optional[Sequence[Rule]] = None) -> Report:
+    """Run every registered rule of ``layer`` (or the given subset) over
+    each target; rules skip targets lacking their metadata by returning
+    no findings."""
+    picked = [r for r in (rules if rules is not None
+                          else rules_for_layer(layer)) if r.layer == layer]
+    report = Report()
+    n = 0
+    for target in targets:
+        n += 1
+        for rule in picked:
+            report.findings.extend(rule.check(target))
+    report.checked[layer] = n
+    return report

@@ -1,0 +1,365 @@
+"""Representative programs of the REAL tree for the analysis CLI: tiny
+but faithful instances of every hot path the rules gate -- the fused
+oftv2/qoft forward+backward kernels, the multi-adapter serving kernels,
+a full NF4 fused train step, a paged serving engine driven through a
+steady-state workload twice, and (devices permitting) the mesh-sharded
+fused step with its compiled HLO.
+
+Everything here mirrors an existing test/bench builder (obs_bench's
+``_build_train``, test_serving_paged's ``_serving_model``,
+test_sharded_fused's ``make_run``/``make_sharded``) at the same tiny
+shapes, so one ``python -m repro.analysis`` run traces the same programs
+CI already exercises -- and the rules see the tree as it is actually
+executed, not a hand-maintained approximation.
+
+``collect()`` returns programs + trace targets + explicit skip notes
+(a sharded fixture that cannot run on this host is REPORTED skipped,
+never silently dropped).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.analysis import hlo, jaxprs, rules_trace
+from repro.analysis.core import Program, TraceCounts
+
+
+# ---------------------------------------------------------------------------
+# kernel-level programs (fused fwd+bwd, multi-adapter routing)
+# ---------------------------------------------------------------------------
+def _kernel_inputs(d=64, n=48, b=16, t=24, seed=0):
+    import jax
+    import jax.numpy as jnp
+    from repro.core import skew
+    from repro.core.cayley import build_rotation
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (t, d), jnp.float32)
+    w = jax.random.normal(key, (d, n), jnp.float32) / np.sqrt(d)
+    qp = skew.random_skew(key, (d // b,), b, scale=0.1)
+    r = build_rotation(qp, b, 5)
+    return x, r, w
+
+
+def kernel_programs() -> List[Program]:
+    import jax
+    import jax.numpy as jnp
+    from repro.config.base import QuantConfig
+    from repro.kernels import ops as kops
+    from repro.quant import nf4
+
+    d, n, b, bs = 64, 48, 16, 32
+    x, r, w = _kernel_inputs(d, n, b)
+    programs = []
+
+    # fused OFTv2 fwd+bwd: hot path, host-sync-free
+    def oftv2_loss(x, r, w):
+        return jnp.sum(jnp.sin(kops.oftv2_linear_fused(x, r, w)))
+
+    programs.append(Program(
+        "kernels/oftv2_fused_grad",
+        [jaxprs.trace(jax.grad(oftv2_loss, argnums=(0, 1, 2)), x, r, w)],
+        meta={"hot": True}))
+
+    # fused QOFT fwd+bwd: additionally, the dense (d, n) W must never
+    # materialize as a float intermediate (the paper's memory claim)
+    q = nf4.quantize(0.1 * w, QuantConfig(kind="nf4", block_size=bs,
+                                          double_quant=False))
+
+    def qoft_loss(x, r):
+        return jnp.sum(kops.qoft_linear_fused(x, r, q["nf4_codes"],
+                                              q["absmax"], bs))
+
+    programs.append(Program(
+        "kernels/qoft_fused_grad",
+        [jaxprs.trace(jax.grad(qoft_loss, argnums=(0, 1)), x, r)],
+        meta={"hot": True, "banned_float_shapes": {(d, n)}}))
+
+    # multi-adapter routing kernel traced at two different adapter-id /
+    # token mixes (same shapes): the trace must not depend on the values
+    from repro.core import skew
+    from repro.core.cayley import build_rotation
+    key = jax.random.PRNGKey(1)
+    r2 = build_rotation(skew.random_skew(key, (d // b,), b, scale=0.1), b, 5)
+    r_stack = jnp.stack([r, r2])
+    aid_a = np.array([0, 1, 0, 1], np.int32)
+    aid_b = np.array([1, 0, 1, 1], np.int32)
+    xb = jax.random.normal(key, (4, d), jnp.float32)
+
+    def multi(aid):
+        return lambda x, rs, w: kops.oftv2_linear_multi(x, rs, aid, w)
+
+    programs.append(Program(
+        "kernels/oftv2_multi_routing",
+        [jaxprs.trace(multi(aid_a), xb, r_stack, w),
+         jaxprs.trace(multi(aid_b), xb, r_stack, w)],
+        meta={"hot": True, "mask_top_literals": True}))
+    return programs
+
+
+# ---------------------------------------------------------------------------
+# train-step program (tiny NF4 fused model; obs_bench's builder shapes)
+# ---------------------------------------------------------------------------
+def _build_train():
+    import jax
+    import jax.numpy as jnp
+    from repro.config.base import (AdapterConfig, ModelConfig, QuantConfig,
+                                   RunConfig, TrainConfig)
+    from repro.data.loader import ShardedLoader
+    from repro.data.synthetic import SyntheticSpec
+    from repro.models import build
+    from repro.train import state as state_lib
+    from repro.train.step import make_train_step
+    cfg = ModelConfig(name="analysis-train", family="dense", num_layers=2,
+                      d_model=64, num_heads=2, num_kv_heads=1, head_dim=32,
+                      d_ff=128, vocab_size=256, rope_theta=1e4)
+    # seq_len 24 -> 48 tokens per step: the flattened activation shapes
+    # (48, d) must NOT collide with any banned W shape (64, *) / (128, *),
+    # or legitimate activations would read as dense-W materializations
+    run = RunConfig(model=cfg,
+                    adapter=AdapterConfig(kind="oftv2", block_size=16,
+                                          neumann_terms=5,
+                                          fuse_linear=True),
+                    quant=QuantConfig(kind="nf4", block_size=32,
+                                      double_quant=False),
+                    train=TrainConfig(global_batch=2, seq_len=24, steps=1))
+    model = build(run)
+    state = state_lib.create(model.init(jax.random.PRNGKey(0)))
+    step = make_train_step(model, run)
+    spec = SyntheticSpec(vocab_size=cfg.vocab_size, seq_len=24, kind="lm")
+    loader = ShardedLoader(spec, global_batch=2, process_index=0,
+                           process_count=1, seed=0)
+    batch = jax.tree_util.tree_map(jnp.asarray, loader.next_batch())
+    return run, step, state, batch
+
+
+def _quantized_banned_shapes(run) -> set:
+    """Every per-layer linear the fusion plan routes through qoft_fused:
+    its dense (d_in, d_out) float shape is banned from the step's jaxpr --
+    the no-dequant-to-HBM contract, derived from the SAME plan the
+    check_fusion gate pins."""
+    from repro.models.linears import layer_linear_shapes, model_fusion_plan
+    plan = model_fusion_plan(run.model, run.adapter, run.quant)
+    shapes = layer_linear_shapes(run.model)
+    return {shapes[name] for name, mode in plan.items()
+            if mode == "qoft_fused"}
+
+
+def train_targets() -> Tuple[List[Program], List[TraceCounts]]:
+    run, step, state, batch = _build_train()
+    banned = _quantized_banned_shapes(run)
+    program = Program(
+        "train/nf4_fused_step",
+        [jaxprs.trace(step, state, batch)],
+        hlo=hlo.compile_text(step, state, batch),
+        meta={"hot": True, "banned_float_shapes": banned,
+              # single device: the compiled step must emit NO collectives
+              "allowed_collectives": (),
+              "w_shapes": hlo.weight_shapes(run.model)})
+    counts = rules_trace.measure_jit(
+        "train/nf4_fused_step", step,
+        [(state, batch), (state, batch), (state, batch)], budget=1)
+    return [program], [counts]
+
+
+# ---------------------------------------------------------------------------
+# paged serving engine: steady-state retrace accounting + value-baking
+# ---------------------------------------------------------------------------
+def _serving_setup():
+    import jax
+    from repro.config.base import (AdapterConfig, ModelConfig, QuantConfig,
+                                   RunConfig)
+    from repro.models import build
+    from repro.serving import AdapterPool, init_adapters
+    cfg = ModelConfig(name="analysis-serve", num_layers=2, d_model=64,
+                      num_heads=4, num_kv_heads=2, d_ff=128,
+                      vocab_size=128, rope_theta=1e4)
+    run = RunConfig(model=cfg,
+                    adapter=AdapterConfig(kind="oftv2", block_size=16,
+                                          neumann_terms=5,
+                                          fuse_linear=True),
+                    quant=QuantConfig(kind="none", block_size=32))
+    model = build(run)
+    params = model.init(jax.random.PRNGKey(0))
+    pool = AdapterPool(model)
+    for i, tree in enumerate(init_adapters(model, 2, jax.random.PRNGKey(7))):
+        pool.register(f"t{i}", tree)
+    return model, params, pool, cfg
+
+
+def _requests(cfg, seed=3):
+    import jax
+    from repro.serving import Request, SamplingParams
+    prompts = [np.asarray(jax.random.randint(
+        jax.random.fold_in(jax.random.PRNGKey(seed), i), (n,), 0,
+        cfg.vocab_size)) for i, n in enumerate([3, 6, 11, 9])]
+    return [Request(f"r{i}", prompts[i], adapter_id=i % 2,
+                    sampling=SamplingParams(max_new_tokens=4))
+            for i in range(4)]
+
+
+def _jit_snapshot(model) -> Dict[str, int]:
+    from repro.serving import kv_cache
+    snap = dict(rules_trace.model_cache_counts(model))
+    snap["kv/copy_block"] = rules_trace.jit_cache_size(
+        kv_cache._copy_block_fn)
+    snap["kv/flush"] = rules_trace.jit_cache_size(kv_cache._flush_fn)
+    return snap
+
+
+def serving_targets() -> Tuple[List[Program], List[TraceCounts]]:
+    import jax.numpy as jnp
+    from repro.serving import ServingEngine, kv_cache
+
+    model, params, pool, cfg = _serving_setup()
+
+    def engine():
+        return ServingEngine(model, params, pool, n_slots=4, mode="paged",
+                             page_size=4, prefill_chunk=8)
+
+    # warm every jit cache with one full drain, snapshot, then rerun the
+    # IDENTICAL workload on a fresh engine: growth budget is zero
+    engine().run(_requests(cfg))
+    before = _jit_snapshot(model)
+    eng = engine()
+    orig_step, captured = eng._step_fn, {}
+
+    def capturing_step(*args):
+        captured.setdefault("args", args)
+        return orig_step(*args)
+
+    eng._step_fn = capturing_step
+    eng.run(_requests(cfg))
+    counts = rules_trace.steady_state_counts(
+        "serving/paged_steady_state", before, _jit_snapshot(model))
+
+    programs = []
+    # the paged step traced at two value-perturbed copies of one real
+    # tick's operands (token/adapter-id values changed, shapes identical):
+    # the PR-6 bug class -- a block id / token value baked into the trace
+    p, kv_pool, tok, pos, tables, aid = captured["args"]
+
+    def step_at(tok_v, aid_v):
+        return lambda p_, pool_: orig_step(p_, pool_, tok_v, pos, tables,
+                                           aid_v)
+
+    programs.append(Program(
+        "serving/paged_step",
+        [jaxprs.trace(step_at(tok, aid), p, kv_pool),
+         jaxprs.trace(step_at((tok + 1) % cfg.vocab_size, 1 - aid),
+                      p, kv_pool)],
+        meta={"hot": True, "mask_top_literals": True}))
+
+    # the paged-KV block copy invoked exactly like PagedKV._copy_block
+    # does (eager host ints wrapped at the call site): different
+    # src/dst/keep values must not perturb the trace
+    def copy_at(src, dst, keep):
+        return lambda pool_: kv_cache._copy_block_fn(
+            pool_, jnp.int32(src), jnp.int32(dst), jnp.int32(keep))
+
+    programs.append(Program(
+        "serving/kv_block_copy",
+        [jaxprs.trace(copy_at(3, 2, 2), kv_pool),
+         jaxprs.trace(copy_at(1, 4, 3), kv_pool)],
+        meta={"hot": True, "mask_top_literals": True}))
+    return programs, [counts]
+
+
+# ---------------------------------------------------------------------------
+# mesh-sharded fused step (jaxpr + compiled-HLO collective budgets)
+# ---------------------------------------------------------------------------
+def sharded_targets() -> Tuple[List[Program], List[str]]:
+    import jax
+    n_dev = len(jax.devices())
+    if n_dev >= 8:
+        mesh_shape = (2, 4)
+    elif n_dev >= 2:
+        mesh_shape = (1, 2)
+    else:
+        return [], [f"sharded fixture: only {n_dev} device(s) visible "
+                    f"(need >= 2; CI runs with "
+                    f"XLA_FLAGS=--xla_force_host_platform_device_count=8)"]
+
+    from jax.sharding import NamedSharding
+    from repro import methods
+    from repro.config.base import (AdapterConfig, ModelConfig,
+                                   ParallelConfig, QuantConfig, RunConfig,
+                                   TrainConfig)
+    from repro.distributed.sharding import (batch_spec, fit_tree,
+                                            make_constrain,
+                                            make_shard_context)
+    from repro.models import build
+    from repro.models.spec import rules_variant
+    from repro.train import state as state_lib
+    from repro.train.step import make_train_step
+
+    pcfg = ParallelConfig(mesh_shape=mesh_shape,
+                          mesh_axes=("data", "model"))
+    cfg = ModelConfig(name="analysis-shard", num_layers=2, d_model=64,
+                      num_heads=8, num_kv_heads=2, d_ff=256, vocab_size=256,
+                      rope_theta=1e4).with_mesh_padding(pcfg.model_axis_size)
+    run = RunConfig(
+        model=cfg,
+        adapter=AdapterConfig(kind="oftv2", block_size=16, neumann_terms=4,
+                              fuse_linear=True),
+        quant=QuantConfig(kind="none", block_size=16),
+        parallel=pcfg,
+        train=TrainConfig(global_batch=8, seq_len=32, learning_rate=1e-3,
+                          steps=1, warmup_steps=0))
+
+    mesh = jax.make_mesh(mesh_shape, pcfg.mesh_axes)
+    rules = rules_variant(pcfg, "fused_tp")
+    ctx = make_shard_context(mesh, rules, run)
+    model = build(run, constrain=make_constrain(rules, mesh), shard=ctx)
+    params = fit_tree(model.init(jax.random.PRNGKey(0)),
+                      model.param_specs(rules), mesh)
+    state = state_lib.create(params)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (8, 32), 0,
+                                cfg.vocab_size)
+    batch = {"tokens": jax.device_put(
+        tokens, NamedSharding(mesh, batch_spec(pcfg, 2)))}
+    step = make_train_step(model, run)
+    # the budget comes from the METHOD's registry entry, not a hardcoded
+    # psum-only list: a future method (BOFT butterfly exchanges, ...)
+    # widens its own budget by declaring shard_collectives
+    allowed = methods.get(run.adapter.kind).shard_collectives
+    with mesh:
+        program = Program(
+            f"sharded/train_step/{mesh_shape[0]}x{mesh_shape[1]}",
+            [jaxprs.trace(step, state, batch)],
+            hlo=hlo.compile_text(step, state, batch),
+            meta={"allowed_collectives": allowed,
+                  "model_shards": pcfg.model_axis_size,
+                  "w_shapes": hlo.weight_shapes(cfg)})
+    return [program], []
+
+
+# ---------------------------------------------------------------------------
+# the full collection the CLI drives
+# ---------------------------------------------------------------------------
+def collect(sharded: bool = True) -> dict:
+    """All representative targets: ``{"programs": [...], "traces": [...],
+    "skipped": [...]}``.  ``sharded=False`` leaves the mesh fixture out
+    (and says so in ``skipped``) -- for fast local runs."""
+    programs: List[Program] = []
+    traces: List[TraceCounts] = []
+    skipped: List[str] = []
+
+    programs.extend(kernel_programs())
+
+    t_programs, t_counts = train_targets()
+    programs.extend(t_programs)
+    traces.extend(t_counts)
+
+    s_programs, s_counts = serving_targets()
+    programs.extend(s_programs)
+    traces.extend(s_counts)
+
+    if sharded:
+        m_programs, m_skips = sharded_targets()
+        programs.extend(m_programs)
+        skipped.extend(m_skips)
+    else:
+        skipped.append("sharded fixture: disabled (--no-sharded)")
+    return {"programs": programs, "traces": traces, "skipped": skipped}

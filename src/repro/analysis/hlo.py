@@ -1,0 +1,96 @@
+"""The compiled-HLO walker: parse ``lowered.compile().as_text()`` into a
+stream of ops with result shapes and line provenance.
+
+The jaxpr layer cannot see GSPMD: partitioning runs AFTER tracing, so the
+collectives the compiler inserts (resharding all-gathers, halo exchanges)
+never appear in any jaxpr.  Rules that budget collectives therefore run
+twice -- once on the jaxpr (what the program asked for) and once here
+(what the compiler actually emitted).  PR 5's W-gather incident is the
+motivating case: the jaxpr was clean while GSPMD was quietly replicating
+the TP-sharded NF4 codes through an all-gather.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import List, Tuple
+
+# `%name = <result types> opcode(...)`; ROOT-prefixed and tuple-shaped
+# results included.  XLA's collective combiner can merge several
+# all-gathers into ONE tuple-shaped instruction, so EVERY shape on the
+# left-hand side is captured, not just a single-operand form.
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(?P<lhs>.*?)\s*"
+    r"(?P<op>[a-zA-Z][\w\-]*)\(")
+_SHAPE = re.compile(r"\w+\[([0-9,]*)\]")
+
+
+@dataclass
+class HloOp:
+    """One HLO instruction: opcode, every result shape, and the 1-based
+    line it came from (findings provenance)."""
+    opcode: str
+    result_shapes: List[Tuple[int, ...]] = field(default_factory=list)
+    lineno: int = 0
+    text: str = ""
+
+
+def parse_hlo(text: str) -> List[HloOp]:
+    """Parse optimized-HLO text into an op stream.  Robust to the fusion
+    bodies / metadata noise of ``as_text()``: anything that does not look
+    like ``lhs = types opcode(`` is skipped."""
+    ops = []
+    for lineno, line in enumerate(text.splitlines(), 1):
+        m = _INSTR.match(line)
+        if not m:
+            continue
+        shapes = []
+        for sm in _SHAPE.finditer(m.group("lhs")):
+            dims = sm.group(1)
+            shapes.append(tuple(int(d) for d in dims.split(","))
+                          if dims else ())
+        ops.append(HloOp(m.group("op"), shapes, lineno, line.strip()))
+    return ops
+
+
+def compile_text(fn, *args) -> str:
+    """``jax.jit(fn).lower(*args).compile().as_text()`` -- the input every
+    HLO rule inspects."""
+    import jax
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+#: HLO collective opcodes -> the jaxpr-level collective family they
+#: implement.  A method's budget is declared in jaxpr terms (the
+#: registry's ``shard_collectives``); this map translates it for the
+#: compiled side.  psum lowers to all-reduce, and XLA may rewrite an
+#: all-reduce into reduce-scatter + all-gather pairs only when it can
+#: prove equivalence -- reduce-scatter therefore rides the psum budget.
+COLLECTIVE_FAMILY = {
+    "all-reduce": "psum",
+    "reduce-scatter": "psum",
+    "all-gather": "all_gather",
+    "all-to-all": "all_to_all",
+    "collective-permute": "ppermute",
+}
+
+
+def collectives(ops: List[HloOp]) -> List[HloOp]:
+    return [op for op in ops if op.opcode in COLLECTIVE_FAMILY]
+
+
+def weight_shapes(cfg) -> set:
+    """Trailing-2D shapes that identify a per-layer weight (or its NF4
+    codes / absmax) of ``cfg`` in compiled HLO: the full (d_in, d_out),
+    the packed-codes (d_in/2, d_out), and the absmax rows for the swept
+    block sizes.  Gathering any of these is the scaling regression the
+    HLO collective rule pins down; tiny adapter-state gathers (q_packed,
+    dR re-gathers) deliberately do not match."""
+    from repro.models.linears import layer_linear_shapes
+    shapes = set()
+    for din, dout in layer_linear_shapes(cfg).values():
+        shapes |= {(din, dout), (din // 2, dout)}
+        for bs in (16, 32, 64):
+            if din % bs == 0:
+                shapes.add((din // bs, dout))
+    return shapes

@@ -1,0 +1,190 @@
+"""The jaxpr walker: traverse closed jaxprs, recursing into every nested
+sub-jaxpr a primitive carries in its params -- ``pjit`` bodies, ``scan`` /
+``while`` / ``cond`` branches, ``custom_vjp``/``custom_jvp`` call jaxprs,
+``shard_map`` bodies -- with one deliberate exception: ``pallas_call``
+kernel bodies are NOT entered by default.  A Pallas kernel's inner tiles
+live in VMEM; what the HBM-contract rules care about is the pallas_call
+eqn's *own* operands and results (which are HBM buffers), so those are
+always visited while the VMEM interior stays out of scope.
+
+This is the single implementation of the jaxpr-walking idiom that used to
+be copy-pasted across tests/test_fused_bwd.py (``_float_shapes`` /
+``_subjaxprs``), tests/test_sharded_fused.py (``collect_prims``) and
+tests/test_obs.py (``_jaxpr_str``).
+"""
+from __future__ import annotations
+
+from typing import Iterator, List, Optional, Sequence, Set, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.extend.core import ClosedJaxpr, Jaxpr, Literal
+
+
+def open_jaxpr(jx) -> Jaxpr:
+    """Accept a ClosedJaxpr or a raw Jaxpr (or anything with ``.jaxpr``)."""
+    if isinstance(jx, ClosedJaxpr):
+        return jx.jaxpr
+    if isinstance(jx, Jaxpr):
+        return jx
+    inner = getattr(jx, "jaxpr", None)
+    if inner is not None:
+        return open_jaxpr(inner)
+    raise TypeError(f"not a jaxpr: {type(jx).__name__}")
+
+
+def subjaxprs(val) -> Iterator[Jaxpr]:
+    """Every jaxpr buried in one eqn-param value (params hold Jaxprs,
+    ClosedJaxprs, and lists/tuples of either -- cond carries a tuple of
+    branches, custom_vjp a closed call_jaxpr, ...)."""
+    if isinstance(val, ClosedJaxpr):
+        yield val.jaxpr
+    elif isinstance(val, Jaxpr):
+        yield val
+    elif isinstance(val, (list, tuple)):
+        for v in val:
+            yield from subjaxprs(v)
+
+
+def iter_eqns(jx, into_pallas: bool = False,
+              _path: Tuple[str, ...] = ()) -> Iterator[tuple]:
+    """Yield ``(eqn, path)`` for every eqn in ``jx`` and its sub-jaxprs.
+    ``path`` is the chain of enclosing primitives (e.g. ``('pjit',
+    'scan')``) -- the eqn-level provenance findings report."""
+    for eqn in open_jaxpr(jx).eqns:
+        name = eqn.primitive.name
+        yield eqn, _path
+        if name == "pallas_call" and not into_pallas:
+            continue
+        for val in eqn.params.values():
+            for sub in subjaxprs(val):
+                yield from iter_eqns(sub, into_pallas, _path + (name,))
+
+
+def trace(fn, *args, axis_env: Optional[Sequence[tuple]] = None,
+          **kwargs) -> ClosedJaxpr:
+    """``jax.make_jaxpr`` with the axis_env passthrough the collective
+    rules use to trace sharded bodies without devices."""
+    if axis_env is not None:
+        return jax.make_jaxpr(fn, axis_env=list(axis_env))(*args, **kwargs)
+    return jax.make_jaxpr(fn)(*args, **kwargs)
+
+
+def primitive_names(jx) -> Set[str]:
+    """All primitive names anywhere in the jaxpr (sub-jaxprs included;
+    pallas bodies excluded, like every walker here)."""
+    return {eqn.primitive.name for eqn, _ in iter_eqns(jx)}
+
+
+def float_outvar_shapes(jx) -> List[tuple]:
+    """``(shape, primitive, path)`` for every floating-point eqn output.
+    A pallas_call's own outvars ARE recorded (they are HBM buffers), its
+    VMEM interior is not -- so a kernel that materializes a dense W to HBM
+    (e.g. an unfused nf4 dequant) is caught while in-kernel tiles pass."""
+    out = []
+    for eqn, path in iter_eqns(jx):
+        for v in eqn.outvars:
+            aval = v.aval
+            if (hasattr(aval, "shape") and hasattr(aval, "dtype")
+                    and jnp.issubdtype(aval.dtype, jnp.floating)):
+                out.append((tuple(aval.shape), eqn.primitive.name, path))
+    return out
+
+
+def float_shapes(jx) -> List[tuple]:
+    """Just the shapes of :func:`float_outvar_shapes` (the historical
+    tests/test_fused_bwd.py helper surface)."""
+    return [s for s, _, _ in float_outvar_shapes(jx)]
+
+
+def jaxpr_fingerprint(fn, *args, **kwargs) -> str:
+    """The full printed jaxpr of ``fn(*args)`` -- the identity check the
+    telemetry tests use (collectors on vs off must not perturb a trace)."""
+    return str(jax.make_jaxpr(fn)(*args, **kwargs))
+
+
+def _aval_str(v) -> str:
+    aval = v.aval
+    dtype = getattr(aval, "dtype", "?")
+    return f"{dtype}{tuple(getattr(aval, 'shape', ()))}"
+
+
+def _param_str(val) -> str:
+    """Static eqn params, minus the sub-jaxprs (walked separately) and
+    anything unhashably rich; slice starts / broadcast dims / static ints
+    DO print, because a baked scalar often lands exactly there."""
+    if isinstance(val, (ClosedJaxpr, Jaxpr)):
+        return "<jaxpr>"
+    if isinstance(val, (list, tuple)):
+        return "(" + ",".join(_param_str(v) for v in val) + ")"
+    if isinstance(val, (int, float, bool, str, bytes, type(None))):
+        return repr(val)
+    return type(val).__name__
+
+
+def structural_fingerprint(jx, mask_top_literals: bool = False) -> str:
+    """A value-sensitive canonical print of a jaxpr: primitive names,
+    operand/result avals, static params -- and, crucially, **literal
+    values**.  Two traces of the same function at different input VALUES
+    (same shapes) produce identical fingerprints unless some value was
+    baked into the trace as a constant: that divergence is exactly the
+    block-table-baking bug class ``no-baked-scalar`` detects.
+
+    ``mask_top_literals=True`` hides literal values at depth 0 only: a
+    program traced at an *eager* call site (e.g. the serving engine
+    calling an independently-jitted block copy with host-side ints) keeps
+    those ints outside the jit boundary, where they are recompile-free by
+    construction; values inside any nested jaxpr are always compared.
+    """
+    closed = jx if isinstance(jx, ClosedJaxpr) else None
+    lines = []
+    if closed is not None:
+        for c in closed.consts:
+            shape = tuple(getattr(c, "shape", ()))
+            scalar = shape == () or (len(shape) == 1 and shape[0] == 1)
+            # Top-level consts sit outside the first jit boundary exactly
+            # like depth-0 literals (an eager `jnp.int32(x)` argument
+            # closes over as a const) -- mask their values together.
+            if scalar and not mask_top_literals:
+                try:
+                    lines.append(f"const={float(jnp.asarray(c))}")
+                    continue
+                except (TypeError, ValueError):
+                    pass
+            lines.append(f"const:{getattr(c, 'dtype', '?')}{shape}")
+
+    def walk(jaxpr: Jaxpr, depth: int) -> None:
+        for eqn in jaxpr.eqns:
+            name = eqn.primitive.name
+            ins = []
+            for v in eqn.invars:
+                if isinstance(v, Literal):
+                    if depth == 0 and mask_top_literals:
+                        ins.append(f"lit[{_aval_str(v)}]")
+                    else:
+                        ins.append(f"lit[{_aval_str(v)}]={v.val}")
+                else:
+                    ins.append(_aval_str(v))
+            params = ",".join(f"{k}={_param_str(v)}"
+                              for k, v in sorted(eqn.params.items()))
+            outs = ",".join(_aval_str(v) for v in eqn.outvars)
+            lines.append(f"{'.' * depth}{name}({';'.join(ins)})"
+                         f"[{params}]->{outs}")
+            if name == "pallas_call":
+                continue
+            for val in eqn.params.values():
+                for sub in subjaxprs(val):
+                    walk(sub, depth + 1)
+
+    walk(open_jaxpr(jx), 0)
+    return "\n".join(lines)
+
+
+def first_divergence(a: str, b: str) -> str:
+    """The first differing line of two structural fingerprints -- the
+    provenance a no-baked-scalar finding reports."""
+    for la, lb in zip(a.splitlines(), b.splitlines()):
+        if la != lb:
+            return f"{la!r} != {lb!r}"
+    return f"fingerprint lengths differ ({len(a.splitlines())} vs "\
+           f"{len(b.splitlines())} lines)"

@@ -1,0 +1,105 @@
+"""The Python AST walker: parse source files into ``PyModule`` targets the
+AST rules inspect.
+
+This replaces the line-regex idiom of the original
+``benchmarks/check_dispatch.py`` gate: a regex cannot tell a banned
+dispatch site from a docstring *mentioning* one (a comment quoting
+``acfg.kind ==`` used to fail the build).  AST nodes are code by
+construction -- comments never parse, and string constants are
+``ast.Constant`` leaves no Compare/Attribute rule ever visits.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Iterator, List, Optional
+
+
+@dataclass
+class PyModule:
+    """One parsed source file.  ``relpath`` is posix-style relative to the
+    repo root -- rules scope themselves by it (e.g. the wallclock rule
+    applies only under ``src/repro/kernels/``)."""
+    path: Path
+    relpath: str
+    source: str
+    tree: ast.Module
+
+    def line(self, lineno: int) -> str:
+        lines = self.source.splitlines()
+        return lines[lineno - 1].strip() if 0 < lineno <= len(lines) else ""
+
+    def where(self, node: ast.AST) -> str:
+        return f"{self.relpath}:{getattr(node, 'lineno', 0)}"
+
+
+def parse_module(path: Path, root: Optional[Path] = None) -> PyModule:
+    path = Path(path)
+    source = path.read_text()
+    rel = (path.relative_to(root) if root and path.is_absolute()
+           else path)
+    return PyModule(path, rel.as_posix(), source,
+                    ast.parse(source, filename=str(path)))
+
+
+def parse_source(source: str, relpath: str = "<fixture>") -> PyModule:
+    """A PyModule from literal source -- rule fixtures and tests."""
+    return PyModule(Path(relpath), relpath, source, ast.parse(source))
+
+
+def repo_root() -> Path:
+    return Path(__file__).resolve().parents[3]
+
+
+def iter_modules(root: Optional[Path] = None,
+                 subdirs: tuple = ("src/repro",)) -> Iterator[PyModule]:
+    """Every parseable ``*.py`` under ``root``'s ``subdirs`` as PyModule
+    targets, sorted for stable reports."""
+    root = Path(root) if root else repo_root()
+    for sub in subdirs:
+        base = root / sub
+        if not base.exists():
+            continue
+        for path in sorted(base.rglob("*.py")):
+            yield parse_module(path, root)
+
+
+def walk(tree: ast.AST) -> Iterator[ast.AST]:
+    yield from ast.walk(tree)
+
+
+def call_name(node: ast.Call) -> str:
+    """The trailing name of a call target: ``obs.metric(...)`` ->
+    ``metric``, ``metric(...)`` -> ``metric``, ``a.b.c(...)`` -> ``c``."""
+    fn = node.func
+    if isinstance(fn, ast.Attribute):
+        return fn.attr
+    if isinstance(fn, ast.Name):
+        return fn.id
+    return ""
+
+
+def dotted(node: ast.AST) -> str:
+    """Best-effort dotted name of an expression: ``time.perf_counter`` ->
+    ``'time.perf_counter'``; non-name parts collapse to ``?``."""
+    if isinstance(node, ast.Attribute):
+        return f"{dotted(node.value)}.{node.attr}"
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Call):
+        return dotted(node.func)
+    return "?"
+
+
+def str_arg(node: ast.Call, index: int = 0) -> Optional[str]:
+    """The ``index``-th positional argument if it is a string literal."""
+    if len(node.args) > index:
+        arg = node.args[index]
+        if isinstance(arg, ast.Constant) and isinstance(arg.value, str):
+            return arg.value
+    return None
+
+
+def compare_sides(node: ast.Compare) -> List[ast.AST]:
+    return [node.left, *node.comparators]

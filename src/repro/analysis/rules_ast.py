@@ -1,0 +1,218 @@
+"""AST-layer rules: source-level contracts, checked on parsed code so
+comments, strings, and docstrings can never trip a gate (the failure mode
+of the retired line-regex ``check_dispatch``).
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Tuple
+
+from repro.analysis import core, pyast
+from repro.analysis.core import Finding, Rule
+from repro.analysis.pyast import PyModule
+
+#: Fallback adapter kinds for the dispatch rule when the registry is not
+#: importable (e.g. analyzing a checkout without jax); kept in sync lazily
+#: -- the live registry wins whenever it loads.
+_KNOWN_KINDS = ("hoft", "lora", "none", "oftv1", "oftv2")
+
+
+def _registered_kinds() -> Tuple[str, ...]:
+    try:
+        from repro import methods
+        return methods.available()
+    except Exception:
+        return _KNOWN_KINDS
+
+
+def _in_scope(module: PyModule, prefix: str = "src/repro/",
+              exclude: Tuple[str, ...] = ()) -> bool:
+    rel = module.relpath
+    return rel.startswith(prefix) and not any(rel.startswith(e)
+                                              for e in exclude)
+
+
+def _is_kind_attr(node: ast.AST, owners=("acfg", "adapter")) -> bool:
+    return (isinstance(node, ast.Attribute) and node.attr == "kind"
+            and isinstance(node.value, ast.Name)
+            and node.value.id in owners)
+
+
+def _is_any_kind(node: ast.AST) -> bool:
+    return ((isinstance(node, ast.Name) and node.id == "kind")
+            or (isinstance(node, ast.Attribute) and node.attr == "kind"))
+
+
+@core.register
+class RegistryDispatch(Rule):
+    """Adapter-kind dispatch is allowed only inside ``repro.methods``:
+    everywhere else, comparing / membership-testing / prefix-testing an
+    adapter kind bypasses the registry the framework dispatches through.
+    The AST port of benchmarks/check_dispatch.py -- same patterns, but a
+    docstring QUOTING a banned pattern no longer fails the build."""
+
+    id = "registry-dispatch"
+    layer = "ast"
+    severity = core.ERROR
+    description = ("adapter-kind string dispatch (acfg.kind ==, is_oft, "
+                   "kind in (...), kind.startswith) appears only inside "
+                   "src/repro/methods/ -- matched on the AST, so "
+                   "docstrings and comments are exempt")
+
+    def check(self, module: PyModule) -> List[Finding]:
+        if not _in_scope(module, exclude=("src/repro/methods/",)):
+            return []
+        # "none" is excluded from the literal-kind set: `self.kind !=
+        # "none"` (has-an-adapter predicate) and `qcfg.kind == "none"`
+        # (quant-kind dispatch, a different axis) are legitimate -- the
+        # historical regex gate drew the same line
+        kinds = set(_registered_kinds()) - {"none"}
+        findings = []
+
+        def flag(node: ast.AST, why: str) -> None:
+            findings.append(self.finding(
+                module.where(node),
+                f"{module.line(node.lineno)!r}: {why}"))
+
+        for node in pyast.walk(module.tree):
+            if isinstance(node, ast.Attribute) and node.attr == "is_oft":
+                flag(node, "is_oft predicate -- retired; use the "
+                           "method's capability flags")
+            elif isinstance(node, ast.Compare):
+                sides = pyast.compare_sides(node)
+                eq_like = all(isinstance(op, (ast.Eq, ast.NotEq))
+                              for op in node.ops)
+                in_like = any(isinstance(op, (ast.In, ast.NotIn))
+                              for op in node.ops)
+                if eq_like and any(_is_kind_attr(s) for s in sides):
+                    flag(node, "adapter-kind comparison -- query "
+                               "repro.methods instead")
+                elif in_like and _is_kind_attr(node.left):
+                    flag(node, "adapter-kind membership test (the old "
+                               "is_oft shape) -- use the method's "
+                               "capability flags")
+                elif eq_like and any(_is_any_kind(s) for s in sides) and any(
+                        isinstance(s, ast.Constant) and s.value in kinds
+                        for s in sides):
+                    flag(node, "adapter-kind literal comparison -- query "
+                               "repro.methods instead")
+                elif (eq_like and isinstance(node.left, ast.Name)
+                      and node.left.id == "adapter"
+                      and any(isinstance(s, ast.Constant)
+                              and isinstance(s.value, str)
+                              for s in node.comparators)):
+                    flag(node, "adapter-kind literal comparison -- query "
+                               "repro.methods instead")
+            elif (isinstance(node, ast.Call)
+                  and isinstance(node.func, ast.Attribute)
+                  and node.func.attr == "startswith"
+                  and _is_kind_attr(node.func.value)):
+                flag(node, "adapter-kind prefix test -- use the method's "
+                           "capability flags")
+        return findings
+
+    def fixture(self) -> PyModule:
+        """An out-of-registry dispatch branch -- plus a docstring and a
+        comment quoting the same pattern, which must NOT flag (the regex
+        gate's false positive, now fixed by construction)."""
+        return pyast.parse_source(
+            '"""Docs may say acfg.kind == "oftv2" freely."""\n'
+            "def route(acfg, adapter, kind):\n"
+            "    # comment: acfg.kind == 'lora' is also just prose\n"
+            '    if acfg.kind == "oftv2":\n'
+            "        return 1\n"
+            '    if kind != "lora" or adapter.kind in ("oftv1",):\n'
+            "        return 2\n"
+            '    if adapter.kind.startswith("oft") or acfg.is_oft:\n'
+            "        return 3\n",
+            relpath="src/repro/serving/fixture_dispatch.py")
+
+
+@core.register
+class DocumentedMetrics(Rule):
+    """Every literal ``obs.metric("...")`` call site statically resolves
+    against the documented schema (``repro/obs/schema.py``) -- the static
+    twin of the runtime KeyError, catching names that only fire on cold
+    paths CI never executes."""
+
+    id = "documented-metrics"
+    layer = "ast"
+    severity = core.ERROR
+    description = ("every literal obs.metric(...) call-site name resolves "
+                   "against the documented schema in repro/obs/schema.py")
+
+    def check(self, module: PyModule) -> List[Finding]:
+        if not _in_scope(module):
+            return []
+        try:
+            from repro.obs import schema
+            specs = schema.SPECS
+        except Exception:                      # pragma: no cover
+            return []
+        findings = []
+        for node in pyast.walk(module.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            if pyast.call_name(node) != "metric":
+                continue
+            name = pyast.str_arg(node)
+            if name is not None and name not in specs:
+                findings.append(self.finding(
+                    module.where(node),
+                    f"metric {name!r} is not in the documented schema "
+                    f"(repro/obs/schema.py) -- this call site raises the "
+                    f"first time the path executes"))
+        return findings
+
+    def fixture(self) -> PyModule:
+        return pyast.parse_source(
+            "from repro import obs\n"
+            "def tick():\n"
+            '    obs.metric("serving/definitely_not_documented").inc()\n',
+            relpath="src/repro/serving/fixture_metric.py")
+
+
+@core.register
+class NoWallclockInKernels(Rule):
+    """Kernel modules never read the wall clock: their Python bodies run
+    at TRACE time, so a ``time.time()`` there measures tracing (once) and
+    silently lies forever after.  Timing belongs to the host-side obs
+    layer around the jitted call."""
+
+    id = "no-wallclock-in-kernels"
+    layer = "ast"
+    severity = core.ERROR
+    description = ("src/repro/kernels/ never calls time.*/datetime.now: "
+                   "kernel bodies run at trace time, so a wall-clock read "
+                   "there measures tracing once and lies forever")
+
+    BANNED = frozenset({
+        "time.time", "time.time_ns", "time.perf_counter",
+        "time.perf_counter_ns", "time.monotonic", "time.monotonic_ns",
+        "time.process_time", "time.sleep", "datetime.now",
+        "datetime.utcnow", "datetime.datetime.now",
+        "datetime.datetime.utcnow",
+    })
+
+    def check(self, module: PyModule) -> List[Finding]:
+        if not module.relpath.startswith("src/repro/kernels/"):
+            return []
+        findings = []
+        for node in pyast.walk(module.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = pyast.dotted(node.func)
+            if name in self.BANNED:
+                findings.append(self.finding(
+                    module.where(node),
+                    f"wall-clock call `{name}()` in a kernel module -- "
+                    f"this executes at trace time, not per launch"))
+        return findings
+
+    def fixture(self) -> PyModule:
+        return pyast.parse_source(
+            "import time\n"
+            "def kernel_entry(x):\n"
+            "    t0 = time.perf_counter()\n"
+            "    return x, t0\n",
+            relpath="src/repro/kernels/fixture_timed.py")

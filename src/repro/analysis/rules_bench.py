@@ -1,0 +1,142 @@
+"""Bench/metrics-layer rules: the legacy artifact gates
+(``benchmarks/check_fusion.py``, ``benchmarks/check_metrics.py``) lifted
+onto the rule engine, so one CLI run gates code, traces, AND the smoke
+artifacts -- and one findings report carries all the provenance.  The
+benchmark scripts stay thin wrappers with their historical CLIs.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.analysis import core
+from repro.analysis.core import BenchRows, Finding, MetricsExport, Rule
+
+#: ISSUE-8 acceptance floor for the CI smoke: distinct documented
+#: families that must carry samples.
+MIN_SAMPLED_FAMILIES = 25
+
+
+@core.register
+class FusionPlan(Rule):
+    """Every ``fusion_plan/.../expect_X`` row's dispatcher-chosen mode
+    (``got=Y``) matches its expectation: a fused path silently falling
+    back to the unfused oracle is a perf regression the test suite cannot
+    see, since unfused is numerically identical."""
+
+    id = "fusion-plan"
+    layer = "bench"
+    severity = core.ERROR
+    description = ("no fusion_plan/* bench row fell back from its "
+                   "expected fused mode (silent unfused fallbacks are "
+                   "invisible to numeric tests); the plan rows must "
+                   "exist at all")
+
+    def check(self, target: BenchRows) -> List[Finding]:
+        plan = [r for r in target.rows
+                if r["name"].startswith("fusion_plan/")]
+        if not plan:
+            return [self.finding(
+                "bench-report", "no fusion_plan/* rows in the report -- "
+                "the benchmark no longer emits the plan")]
+        findings = []
+        for r in plan:
+            expect = r["name"].rsplit("/expect_", 1)[-1]
+            got = dict(kv.split("=", 1)
+                       for kv in r["derived"].split(";"))["got"]
+            if got != expect:
+                findings.append(self.finding(
+                    r["name"], f"fell back to '{got}'"))
+        return findings
+
+    def fixture(self) -> BenchRows:
+        return BenchRows([{"name": "fusion_plan/layer/q/expect_qoft_fused",
+                           "derived": "got=unfused"}])
+
+
+@core.register
+class RatioThreshold(Rule):
+    """Every self-describing ``.../expect_ge_T`` ratio row measured at or
+    above its threshold (serving speedups, load throughput/p99, obs
+    overhead, resume parity -- any gate spelled in the row name)."""
+
+    id = "ratio-threshold"
+    layer = "bench"
+    severity = core.ERROR
+    description = ("every .../expect_ge_T bench ratio row (serving "
+                   "speedup, load p99, obs overhead, ...) measured at or "
+                   "above its self-declared threshold")
+
+    def check(self, target: BenchRows) -> List[Finding]:
+        findings = []
+        for r in target.rows:
+            if "/expect_ge_" not in r["name"]:
+                continue
+            threshold = float(r["name"].rsplit("/expect_ge_", 1)[-1])
+            kv = dict(p.split("=", 1) for p in r["derived"].split(";"))
+            ratio = float(kv.get("ratio", kv.get("multi_over_seq")))
+            if ratio < threshold:
+                findings.append(self.finding(
+                    r["name"],
+                    f"measured {ratio:.2f}x (< {threshold}x)"))
+        return findings
+
+    def fixture(self) -> BenchRows:
+        return BenchRows([{"name": "serving/speedup/n4/expect_ge_2.0",
+                           "derived": "multi_over_seq=1.20"}])
+
+
+@core.register
+class MetricsSchema(Rule):
+    """Live-smoke metric exports match the documented schema both ways:
+    every documented family present, every smoke_required family sampled,
+    no undocumented exports, and the ISSUE-8 coverage floor (>= 25
+    sampled families spanning all four layers) holds."""
+
+    id = "metrics-schema"
+    layer = "metrics"
+    severity = core.ERROR
+    description = ("live-smoke metric exports match repro/obs/schema.py "
+                   "both ways (documented families present + sampled, no "
+                   "undocumented exports, >= 25 families across all four "
+                   "layers)")
+
+    def check(self, target: MetricsExport) -> List[Finding]:
+        from repro.obs import schema
+        merged = target.samples
+        findings = []
+        for name, spec in schema.SPECS.items():
+            if name not in merged:
+                findings.append(self.finding(
+                    f"metrics::{name}", "documented family missing from "
+                    "every artifact -- an instrumented call site was "
+                    "deleted (or the exporter broke)"))
+            elif spec.smoke_required and merged[name] == 0:
+                findings.append(self.finding(
+                    f"metrics::{name}", "smoke_required family has no "
+                    "samples -- dead telemetry that looks alive in "
+                    "/metrics"))
+        for name in sorted(merged):
+            if name not in schema.SPECS:
+                findings.append(self.finding(
+                    f"metrics::{name}", "exported family is not in the "
+                    "documented schema (repro/obs/schema.py)"))
+        sampled = {n for n, c in merged.items()
+                   if c and n in schema.SPECS}
+        if len(sampled) < MIN_SAMPLED_FAMILIES:
+            findings.append(self.finding(
+                "metrics::coverage",
+                f"only {len(sampled)} documented families carry samples "
+                f"(floor: {MIN_SAMPLED_FAMILIES})"))
+        for layer in schema.LAYERS:
+            if not any(schema.SPECS[n].layer == layer for n in sampled):
+                findings.append(self.finding(
+                    f"metrics::layer/{layer}",
+                    f"no sampled family from the {layer!r} layer"))
+        return findings
+
+    def fixture(self) -> MetricsExport:
+        """One undocumented export, one unsampled smoke_required family,
+        and a coverage hole -- each strand of the gate fires."""
+        from repro.obs import schema
+        smoke = next(n for n, s in schema.SPECS.items() if s.smoke_required)
+        return MetricsExport({smoke: 0, "bogus/family_total": 3})

@@ -1,0 +1,77 @@
+"""HLO-layer rules: what the compiler actually emitted, after GSPMD.
+
+The jaxpr collective budget cannot see compiler-inserted resharding; this
+is the compiled twin that caught PR 5's replicated-NF4-codes all-gather.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.analysis import core, hlo
+from repro.analysis.core import Finding, Program, Rule
+
+
+@core.register
+class HloCollectiveBudget(Rule):
+    """Compiled-HLO twin of ``collective-budget``: no collective opcode
+    outside the method's budget -- with one tolerance, matching the
+    historical gate: an off-budget ``all-gather`` is flagged only when its
+    result carries a W / NF4-codes / absmax trailing shape.  GSPMD
+    legitimately re-gathers tiny adapter state (q_packed, dR) around the
+    concatenated rotation build; gathering a weight-shaped tensor is the
+    scaling regression."""
+
+    id = "hlo-collective-budget"
+    layer = "hlo"
+    severity = core.ERROR
+    description = ("compiled HLO emits no off-budget collectives: no "
+                   "all-to-all, and no all-gather whose result carries a "
+                   "W/NF4-codes/absmax shape (GSPMD resharding caught "
+                   "after the jaxpr layer goes blind)")
+
+    def check(self, program: Program) -> List[Finding]:
+        if program.hlo is None or "allowed_collectives" not in program.meta:
+            return []
+        allowed = frozenset(program.meta["allowed_collectives"])
+        w_shapes = {tuple(s) for s in program.meta.get("w_shapes", ())}
+        findings = []
+        for op in hlo.collectives(hlo.parse_hlo(program.hlo)):
+            family = hlo.COLLECTIVE_FAMILY[op.opcode]
+            if family in allowed:
+                continue
+            if op.opcode == "all-gather":
+                gathered = [s for s in op.result_shapes
+                            if len(s) >= 2 and s[-2:] in w_shapes]
+                if not gathered:
+                    continue
+                msg = (f"all-gather of weight-shaped result(s) "
+                       f"{gathered} -- the kernels must consume local "
+                       f"shards")
+            else:
+                msg = (f"`{op.opcode}` is outside the method's budget "
+                       f"{sorted(allowed)}")
+            findings.append(self.finding(
+                f"{program.name}::hlo:{op.lineno}", msg))
+        return findings
+
+    def fixture(self) -> Program:
+        """Synthetic optimized-HLO with a W-shaped all-gather AND an
+        all-to-all, against a psum-only budget: both must flag, while the
+        budgeted all-reduce and a tiny (adapter-state) gather pass."""
+        text = "\n".join([
+            "HloModule fixture, is_scheduled=true",
+            "ENTRY %main (p0: f32[8,8,48]) -> f32[8,64,48] {",
+            "  %p0 = f32[8,8,48]{2,1,0} parameter(0)",
+            "  %ar = f32[8,8,48]{2,1,0} all-reduce(f32[8,8,48]{2,1,0} "
+            "%p0), replica_groups={}",
+            "  %small = f32[8,4]{1,0} all-gather(f32[8,1]{1,0} %q), "
+            "dimensions={1}",
+            "  %bad = f32[8,64,48]{2,1,0} all-gather(f32[8,8,48]{2,1,0} "
+            "%ar), dimensions={1}",
+            "  %worse = f32[8,16]{1,0} all-to-all(f32[8,16]{1,0} %x), "
+            "dimensions={0}",
+            "}",
+        ])
+        return Program("fixture/w-gather-hlo", [], hlo=text,
+                       meta={"allowed_collectives": ("psum",),
+                             "w_shapes": {(64, 48)}})

@@ -1,0 +1,221 @@
+"""Jaxpr-layer rules: the contracts a traced program must satisfy before
+it ever reaches a compiler.
+
+Each rule reads the ``Program`` metadata it needs and skips programs that
+do not declare it -- the fixtures in ``repro.analysis.fixtures`` attach
+the right metadata to each representative traced program of the tree.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import core, jaxprs
+from repro.analysis.core import Finding, Program, Rule
+
+#: Primitives that force a device->host round trip (or a host callback)
+#: inside a traced computation: poison for a hot path, where one sync
+#: serializes the device queue.
+HOST_SYNC_PRIMS = frozenset({
+    "pure_callback", "io_callback", "debug_callback", "debug_print",
+    "host_callback_call", "infeed", "outfeed",
+})
+
+#: Collective primitive families the budget rule recognizes; anything in a
+#: jaxpr that starts with one of these names is charged to that family
+#: (e.g. ``all_gather_invariant`` -> ``all_gather``).
+COLLECTIVE_FAMILIES = ("psum_scatter", "psum", "all_gather", "all_to_all",
+                       "ppermute", "pbroadcast", "pmax", "pmin", "pgather",
+                       "reduce_scatter")
+
+
+def collective_family(prim: str) -> str:
+    for fam in COLLECTIVE_FAMILIES:
+        if prim.startswith(fam):
+            return fam
+    return ""
+
+
+@core.register
+class NoDenseWInHbm(Rule):
+    """The paper's matrix-free OFTv2 claim, as a detector: a fused program
+    over a quantized (or frozen) base must never materialize a W-shaped
+    float intermediate -- every dequant happens tile-by-tile in VMEM."""
+
+    id = "no-dense-w-in-hbm"
+    layer = "jaxpr"
+    severity = core.ERROR
+    description = ("fused fwd/bwd/multi jaxprs never materialize a "
+                   "W-shaped dense/dequantized float intermediate in HBM "
+                   "(pallas-internal VMEM tiles exempt)")
+
+    def check(self, program: Program) -> List[Finding]:
+        banned = {tuple(s) for s in
+                  program.meta.get("banned_float_shapes", ())}
+        if not banned or not program.jaxprs:
+            return []
+        findings = []
+        shaped = jaxprs.float_outvar_shapes(program.jaxprs[0])
+        if not shaped:
+            findings.append(self.finding(
+                program.name, "detector saw no float intermediates at all "
+                "-- the traced program is empty or the walker regressed"))
+        for shape, prim, path in shaped:
+            if shape in banned:
+                where = f"{program.name}::{'/'.join(path) or '<top>'}"
+                findings.append(self.finding(
+                    where, f"dense {shape} weight-shaped float "
+                    f"materialized by `{prim}` -- the fused path must "
+                    f"keep it in VMEM tiles"))
+        return findings
+
+    def fixture(self) -> Program:
+        """A deliberately unfused quantized linear: dequantize the whole
+        W, then matmul -- the (64, 48) dense weight hits HBM."""
+        codes = jnp.zeros((64, 48), jnp.int8)
+        absmax = jnp.ones((64 // 16, 48), jnp.float32)
+
+        def unfused_linear(x, codes, absmax):
+            w = codes.astype(jnp.float32).reshape(4, 16, 48)
+            w = (w * absmax[:, None, :]).reshape(64, 48)   # dense dequant
+            return x @ w
+
+        jx = jaxprs.trace(unfused_linear, jnp.ones((8, 64)), codes, absmax)
+        return Program("fixture/unfused-dequant-linear", [jx],
+                       meta={"banned_float_shapes": {(64, 48)}})
+
+
+@core.register
+class CollectiveBudget(Rule):
+    """Sharded programs emit ONLY the collectives their method's registry
+    entry budgets (``AdapterMethod.shard_collectives``) -- generalizing
+    the hardcoded psum-only gate so methods that legitimately need more
+    (BOFT's cross-block mixing) declare it instead of bypassing the
+    gate."""
+
+    id = "collective-budget"
+    layer = "jaxpr"
+    severity = core.ERROR
+    description = ("sharded jaxprs contain only the collectives budgeted "
+                   "by the method registry's `shards` capability; "
+                   "budgeted psums must actually appear when the model "
+                   "axis is sharded")
+
+    def check(self, program: Program) -> List[Finding]:
+        if "allowed_collectives" not in program.meta or not program.jaxprs:
+            return []
+        allowed = frozenset(program.meta["allowed_collectives"])
+        findings = []
+        seen_families = set()
+        for eqn, path in jaxprs.iter_eqns(program.jaxprs[0]):
+            fam = collective_family(eqn.primitive.name)
+            if not fam:
+                continue
+            seen_families.add(fam)
+            if fam not in allowed:
+                where = (f"{program.name}::"
+                         f"{'/'.join(path) or '<top>'}")
+                findings.append(self.finding(
+                    where, f"collective `{eqn.primitive.name}` is outside "
+                    f"the method's budget {sorted(allowed)}"))
+        if (program.meta.get("model_shards", 1) > 1 and "psum" in allowed
+                and "psum" not in seen_families):
+            findings.append(self.finding(
+                program.name, "model axis is sharded but no psum appears "
+                "-- partial outputs are never reduced (or the program "
+                "silently fell back to a replicated path)"))
+        return findings
+
+    def fixture(self) -> Program:
+        """A psum-budgeted program that also all-gathers: the gather must
+        be flagged.  ``axis_env`` traces the collective without devices."""
+        def leaky(x):
+            return jax.lax.psum(jax.lax.all_gather(x, "model"), "model")
+
+        jx = jaxprs.trace(leaky, jnp.ones((4,)),
+                          axis_env=[("model", 2)])
+        return Program("fixture/extra-all-gather", [jx],
+                       meta={"allowed_collectives": ("psum",),
+                             "model_shards": 2})
+
+
+@core.register
+class NoBakedScalar(Rule):
+    """Traced block ids / step counters must stay traced: the program is
+    traced at >= 2 different input VALUES (same shapes) and the
+    structural fingerprints must be identical.  A divergence means some
+    value was captured as a jaxpr constant -- the PR-6 block-table baking
+    bug class, where every distinct id triggered its own XLA compile."""
+
+    id = "no-baked-scalar"
+    layer = "jaxpr"
+    severity = core.ERROR
+    description = ("traced scalars (block ids, adapter ids, step "
+                   "counters) never bake into jaxprs as constants: "
+                   "variant traces at different values fingerprint "
+                   "identically")
+
+    def check(self, program: Program) -> List[Finding]:
+        if len(program.jaxprs) < 2:
+            return []
+        mask = bool(program.meta.get("mask_top_literals", False))
+        prints = [jaxprs.structural_fingerprint(jx, mask_top_literals=mask)
+                  for jx in program.jaxprs]
+        findings = []
+        for i, fp in enumerate(prints[1:], 1):
+            if fp != prints[0]:
+                findings.append(self.finding(
+                    program.name,
+                    f"variant trace {i} diverges from variant 0 -- a "
+                    f"value is baked as a constant: "
+                    f"{jaxprs.first_divergence(prints[0], fp)}"))
+        return findings
+
+    def fixture(self) -> Program:
+        """A block id captured as a Python int: the two variants bake
+        different constants and the fingerprints diverge."""
+        pool = jnp.zeros((8, 4))
+
+        def copy_with_baked_id(block_id):
+            return lambda p: p.at[block_id].set(p[0])
+
+        return Program(
+            "fixture/baked-block-id",
+            [jaxprs.trace(copy_with_baked_id(i), pool) for i in (3, 5)])
+
+
+@core.register
+class NoHostSync(Rule):
+    """Hot paths (train step, decode tick, fused kernels) must stay on
+    device: no pure_callback / debug printing / io_callback primitives
+    anywhere in the trace."""
+
+    id = "no-host-sync"
+    layer = "jaxpr"
+    severity = core.ERROR
+    description = ("hot-path jaxprs contain no host-callback primitives "
+                   "(pure_callback / debug.print / io_callback): nothing "
+                   "forces a device-to-host sync per step")
+
+    def check(self, program: Program) -> List[Finding]:
+        if not program.meta.get("hot") or not program.jaxprs:
+            return []
+        findings = []
+        for eqn, path in jaxprs.iter_eqns(program.jaxprs[0]):
+            if eqn.primitive.name in HOST_SYNC_PRIMS:
+                where = f"{program.name}::{'/'.join(path) or '<top>'}"
+                findings.append(self.finding(
+                    where, f"host-sync primitive `{eqn.primitive.name}` "
+                    f"in a hot path"))
+        return findings
+
+    def fixture(self) -> Program:
+        def chatty(x):
+            jax.debug.print("x = {x}", x=x)
+            return x + 1.0
+
+        return Program("fixture/debug-print-in-hot-path",
+                       [jaxprs.trace(chatty, jnp.ones((4,)))],
+                       meta={"hot": True})

@@ -1,0 +1,83 @@
+"""Trace-layer rule: jit cache-miss accounting across steady-state smokes.
+
+Retracing is invisible to every other layer -- the jaxpr is fine, the HLO
+is fine, there are just N of them.  The fixtures run a representative
+steady-state workload (train steps at fixed shapes; a second serving
+drain over an identical-shape request mix) and hand this rule the
+compile counts against their budgets.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+import jax
+
+from repro.analysis import core
+from repro.analysis.core import Finding, Rule, TraceCounts
+
+
+def jit_cache_size(jitted) -> int:
+    """Compiled-variant count of a ``jax.jit`` wrapper (0 when the object
+    carries no cache, e.g. the ``jit=False`` escape hatch)."""
+    probe = getattr(jitted, "_cache_size", None)
+    return int(probe()) if callable(probe) else 0
+
+
+def measure_jit(label: str, fn, calls: Sequence[tuple],
+                budget: int = 1) -> TraceCounts:
+    """Jit ``fn``, execute every ``calls`` tuple, report compiles vs
+    ``budget`` as a ``no-retrace`` target."""
+    jitted = jax.jit(fn)
+    for args in calls:
+        jax.block_until_ready(jitted(*args))
+    return TraceCounts(label, {label: (jit_cache_size(jitted), budget)})
+
+
+def model_cache_counts(model) -> Dict[str, int]:
+    """Per-entry compile counts of a model's serving jit cache
+    (``repro.train.serving.model_jit_fn``)."""
+    cache = getattr(model, "_jit_cache", {}) or {}
+    return {name: jit_cache_size(fn) for name, fn in cache.items()}
+
+
+def steady_state_counts(name: str, before: Dict[str, int],
+                        after: Dict[str, int]) -> TraceCounts:
+    """Compile GROWTH between two snapshots of the same jit caches; a
+    steady-state rerun of an identical-shape workload has budget 0."""
+    counts = {}
+    for label in sorted(set(before) | set(after)):
+        counts[label] = (after.get(label, 0) - before.get(label, 0), 0)
+    return TraceCounts(name, counts)
+
+
+@core.register
+class NoRetrace(Rule):
+    """Engine ticks and train steps trace once: steady-state smokes at
+    fixed shapes must not grow any jit cache past its budget."""
+
+    id = "no-retrace"
+    layer = "trace"
+    severity = core.ERROR
+    description = ("steady-state smokes compile once: train steps and "
+                   "serving ticks at fixed shapes never grow a jit cache "
+                   "past its budget")
+
+    def check(self, target: TraceCounts) -> List[Finding]:
+        findings = []
+        for label, (compiles, budget) in sorted(target.counts.items()):
+            if compiles > budget:
+                findings.append(self.finding(
+                    f"{target.name}::{label}",
+                    f"{compiles} compile(s) against a budget of {budget} "
+                    f"-- something retraces per call (baked shape/value, "
+                    f"or a fresh closure jitted per tick)"))
+        return findings
+
+    def fixture(self) -> TraceCounts:
+        """A jitted fn fed three distinct shapes compiles three times --
+        measured live through the same cache probe the real smokes use,
+        so the accounting itself is proven, not just the comparison."""
+        import jax.numpy as jnp
+        return measure_jit(
+            "shape-unstable-step", lambda x: x * 2.0,
+            [(jnp.ones((n,)),) for n in (4, 5, 6)], budget=1)

@@ -49,6 +49,15 @@ class AdapterMethod:
     supports_quantized_base: bool = True   # works over an NF4/AWQ/int8 base
     supports_sharding: bool = False        # mesh-native shard_map fused path
 
+    #: Collective primitives the method's mesh-sharded fused path is
+    #: allowed to emit (jaxpr-family names: "psum", "all_gather", ...).
+    #: The repro.analysis collective-budget rules read this instead of
+    #: hardcoding psum-only, so a method whose sharded algebra genuinely
+    #: needs e.g. a butterfly exchange (BOFT) budgets it HERE -- in its
+    #: registry entry -- and the CI gate follows.  Empty for methods
+    #: without the ``shards`` capability.
+    shard_collectives: Tuple[str, ...] = ()
+
     # ------------------------------------------------------ required hooks --
     def init(self, key, name: str, d_in: int, d_out: int, acfg,
              dtype=jnp.float32) -> dict:

@@ -83,6 +83,9 @@ class OFTv2Method(_OFTBase):
     supports_hoisted_rotations = True  # core/rotations once-per-step build
     supports_multi_tenant = True       # r_stack pooling + per-row routing
     supports_sharding = True           # mesh-native shard_map fused path
+    # the K-sharded partial-y / dx / dR reductions; NO gathers -- kernels
+    # consume local W / quant-state / rotation shards (DESIGN.md §3)
+    shard_collectives = ("psum",)
 
     def apply(self, x, w, adapter, acfg):
         return oft_lib.oftv2_linear(x, adapter, acfg, w)

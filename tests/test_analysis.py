@@ -1,0 +1,359 @@
+"""ISSUE-9: the unified static contract checker (``repro.analysis``).
+
+What is pinned down:
+  * every registered rule is LIVE: its seeded known-bad fixture produces
+    findings (a silently-dead detector fails its own selftest);
+  * the AST rules flag code only -- the docstring/comment lines of the
+    registry-dispatch fixture, which QUOTE banned patterns, must not
+    flag (the regex predecessor's false positive, fixed by construction);
+  * the real tree is clean under the AST layer;
+  * the walkers themselves: jaxpr recursion into pjit/scan bodies with
+    pallas interiors excluded, value-sensitive structural fingerprints
+    (and their top-literal masking), HLO text parsing, axis_env traces;
+  * the trace layer measures real jit caches, not a mock;
+  * the README rule table and the CLI stay in sync with the registry;
+  * the benchmark gate wrappers keep their historical APIs/exit codes.
+"""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import analysis
+from repro.analysis import core, hlo, jaxprs, pyast
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+# ---------------------------------------------------------------------------
+# every rule is proven live by its own seeded fixture
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("rule", core.all_rules(), ids=lambda r: r.id)
+def test_rule_selftest_fixture_produces_findings(rule):
+    findings = core.selftest(rule)
+    assert all(f.rule == rule.id for f in findings)
+    assert all(f.severity in core.SEVERITIES for f in findings)
+    assert all(f.where and f.message for f in findings)
+
+
+def test_registry_is_complete_and_unique():
+    rules = core.all_rules()
+    ids = [r.id for r in rules]
+    assert len(set(ids)) == len(ids)
+    assert {r.layer for r in rules} == set(core.LAYERS), (
+        "some layer ships no rules -- the CLI would silently cover "
+        "nothing there")
+    # the ISSUE-9 rule set, by name
+    for rid in ("no-dense-w-in-hbm", "collective-budget",
+                "hlo-collective-budget", "no-baked-scalar", "no-retrace",
+                "no-host-sync", "registry-dispatch", "documented-metrics",
+                "no-wallclock-in-kernels"):
+        assert core.get(rid).id == rid
+
+
+def test_duplicate_rule_id_is_rejected():
+    class Dup(core.Rule):
+        id = "no-host-sync"
+        layer = "jaxpr"
+
+    with pytest.raises(ValueError, match="already registered"):
+        core.register(Dup)
+
+
+# ---------------------------------------------------------------------------
+# AST layer: docstrings/comments are exempt; the real tree is clean
+# ---------------------------------------------------------------------------
+def test_dispatch_rule_ignores_docstrings_and_comments():
+    """The fixture's first lines QUOTE banned patterns inside a docstring
+    and a comment; only the real code lines below may flag."""
+    rule = core.get("registry-dispatch")
+    module = rule.fixture()
+    flagged = {int(f.where.rsplit(":", 1)[1]) for f in rule.check(module)}
+    doc_lines = {1, 3}                  # docstring + comment quoting bans
+    assert not flagged & doc_lines, (
+        f"docstring/comment lines flagged: {sorted(flagged & doc_lines)}")
+    assert flagged, "fixture's genuine violations were missed"
+
+
+def test_dispatch_rule_allows_methods_package_and_non_repro_paths():
+    rule = core.get("registry-dispatch")
+    bad = 'def f(acfg):\n    return acfg.kind == "oftv2"\n'
+    assert rule.check(pyast.parse_source(
+        bad, relpath="src/repro/methods/newmethod.py")) == []
+    assert rule.check(pyast.parse_source(
+        bad, relpath="benchmarks/foo.py")) == []
+    assert rule.check(pyast.parse_source(
+        bad, relpath="src/repro/serving/x.py"))
+
+
+def test_dispatch_rule_allows_none_kind_and_quant_kind():
+    """`self.kind != "none"` (has-adapter predicate) and quant-kind
+    dispatch stay legal -- the historical regex drew the same line."""
+    rule = core.get("registry-dispatch")
+    ok = ('def f(self, qcfg):\n'
+          '    return self.kind != "none" and qcfg.kind == "none"\n')
+    assert rule.check(pyast.parse_source(
+        ok, relpath="src/repro/config/x.py")) == []
+
+
+def test_ast_layer_clean_on_real_tree():
+    report = core.run_layer("ast", pyast.iter_modules(ROOT))
+    assert report.checked["ast"] > 50
+    assert report.findings == [], "\n".join(map(str, report.findings))
+
+
+def test_documented_metrics_rule_accepts_documented_name():
+    from repro.obs import schema
+    rule = core.get("documented-metrics")
+    name = next(iter(schema.SPECS))
+    src = f'from repro import obs\nobs.metric("{name}").inc()\n'
+    assert rule.check(pyast.parse_source(
+        src, relpath="src/repro/serving/x.py")) == []
+
+
+# ---------------------------------------------------------------------------
+# jaxpr walker
+# ---------------------------------------------------------------------------
+def test_iter_eqns_recurses_into_nested_bodies_with_path():
+    def inner(x):
+        return jax.lax.scan(lambda c, t: (c + t, c), x, jnp.ones((3,)))[0]
+
+    jx = jaxprs.trace(jax.jit(inner), jnp.float32(0.0))
+    names = jaxprs.primitive_names(jx)
+    assert "scan" in names and "add" in names
+    paths = {path for eqn, path in jaxprs.iter_eqns(jx)
+             if eqn.primitive.name == "add"}
+    assert any("scan" in p for p in paths), paths
+
+
+def test_walker_skips_pallas_interiors_but_sees_outvars():
+    from repro.kernels import ops as kops
+    x = jnp.ones((8, 64))
+    r = jnp.tile(jnp.eye(16), (4, 1, 1))
+    w = jnp.ones((64, 32))
+    jx = jaxprs.trace(kops.oftv2_linear_fused, x, r, w)
+    shaped = jaxprs.float_outvar_shapes(jx)
+    prims = {prim for _, prim, _ in shaped}
+    assert "pallas_call" in prims          # the kernel's HBM result
+    assert (8, 32) in [s for s, p, _ in shaped if p == "pallas_call"]
+    # nothing from inside the kernel body (its eqns are not walked)
+    for _, _, path in shaped:
+        assert "pallas_call" not in path
+
+
+def test_structural_fingerprint_catches_baked_literal():
+    def at(i):
+        return lambda p: p.at[i].set(0.0)
+
+    a = jaxprs.structural_fingerprint(jaxprs.trace(at(1), jnp.zeros((4,))))
+    b = jaxprs.structural_fingerprint(jaxprs.trace(at(2), jnp.zeros((4,))))
+    assert a != b
+    assert "!=" in jaxprs.first_divergence(a, b)
+
+
+def test_mask_top_literals_hides_only_depth0_values():
+    """An eager call site's host ints (top-level consts/literals) are
+    masked; the same value baked INSIDE a jit boundary still diverges."""
+    jitted = jax.jit(lambda p, i: p.at[i].set(0.0))
+
+    def eager(i):
+        return lambda p: jitted(p, jnp.int32(i))      # traced operand
+
+    def baked(i):
+        return lambda p: jax.jit(lambda q: q.at[i].set(0.0))(p)
+
+    fp = [jaxprs.structural_fingerprint(
+        jaxprs.trace(eager(i), jnp.zeros((4,))), mask_top_literals=True)
+        for i in (1, 2)]
+    assert fp[0] == fp[1]
+    fp = [jaxprs.structural_fingerprint(
+        jaxprs.trace(baked(i), jnp.zeros((4,))), mask_top_literals=True)
+        for i in (1, 2)]
+    assert fp[0] != fp[1]
+
+
+def test_axis_env_trace_sees_collectives():
+    jx = jaxprs.trace(lambda x: jax.lax.psum(x, "model"), jnp.ones((4,)),
+                      axis_env=[("model", 2)])
+    assert "psum" in jaxprs.primitive_names(jx)
+
+
+# ---------------------------------------------------------------------------
+# HLO walker
+# ---------------------------------------------------------------------------
+def test_parse_hlo_opcodes_and_result_shapes():
+    text = "\n".join([
+        "HloModule m",
+        "ENTRY %main (p0: f32[8,8]) -> f32[8,64] {",
+        "  %p0 = f32[8,8]{1,0} parameter(0)",
+        "  ROOT %ag = f32[8,64]{1,0} all-gather(f32[8,8]{1,0} %p0), "
+        "dimensions={1}",
+        "}",
+    ])
+    ops = hlo.parse_hlo(text)
+    ag = [op for op in ops if op.opcode == "all-gather"]
+    assert len(ag) == 1 and (8, 64) in ag[0].result_shapes
+    assert [op.opcode for op in hlo.collectives(ops)] == ["all-gather"]
+
+
+def test_hlo_rule_tolerates_small_gathers_flags_w_gathers():
+    rule = core.get("hlo-collective-budget")
+    findings = core.selftest(rule)
+    msgs = " ".join(f.message for f in findings)
+    assert "all-gather" in msgs and "all-to-all" in msgs
+    # the tiny adapter-state gather in the fixture did NOT flag
+    assert "(8, 4)" not in msgs
+
+
+def test_compile_text_single_device_has_no_collectives():
+    txt = hlo.compile_text(lambda x: x * 2.0, jnp.ones((4,)))
+    assert hlo.collectives(hlo.parse_hlo(txt)) == []
+
+
+# ---------------------------------------------------------------------------
+# trace layer measures real caches
+# ---------------------------------------------------------------------------
+def test_no_retrace_passes_stable_and_flags_unstable():
+    from repro.analysis import rules_trace
+    rule = core.get("no-retrace")
+    stable = rules_trace.measure_jit(
+        "stable", lambda x: x + 1.0, [(jnp.ones((4,)),)] * 3, budget=1)
+    assert rule.check(stable) == []
+    unstable = rules_trace.measure_jit(
+        "unstable", lambda x: x + 1.0,
+        [(jnp.ones((n,)),) for n in (3, 4, 5)], budget=1)
+    assert len(rule.check(unstable)) == 1
+
+
+# ---------------------------------------------------------------------------
+# checks API (what the other test files call)
+# ---------------------------------------------------------------------------
+def test_assert_helpers_raise_with_findings():
+    with pytest.raises(AssertionError, match="no-dense-w-in-hbm"):
+        analysis.assert_no_dense_w(
+            lambda c: c.astype(jnp.float32) * 2.0,
+            (jnp.zeros((64, 48), jnp.int8),), {(64, 48)})
+    with pytest.raises(AssertionError, match="no-host-sync"):
+        analysis.assert_no_host_sync(
+            lambda x: (jax.debug.print("{x}", x=x), x + 1)[1],
+            (jnp.ones(3),))
+    # clean programs pass
+    analysis.assert_no_host_sync(lambda x: x + 1, (jnp.ones(3),))
+    analysis.assert_traces_once(lambda x: x * 2, [(jnp.ones(3),)] * 2)
+
+
+def test_collective_budget_defaults_from_method_registry():
+    """The budget is the registry's shard_collectives -- the satellite
+    generalizing the psum-only gate (a BOFT-style method widens its own
+    budget by declaring it)."""
+    from repro import methods
+    assert methods.get("oftv2").shard_collectives == ("psum",)
+    assert methods.AdapterMethod.shard_collectives == ()
+
+    def reduces(x):
+        return jax.lax.psum(x, "model")
+
+    def gathers(x):
+        return jax.lax.all_gather(x, "model")
+
+    args = (jnp.ones((4,)),)
+    trace_kw = dict(axis_env=[("model", 2)])
+    prog_ok = core.Program("ok", [jaxprs.trace(reduces, *args, **trace_kw)],
+                           meta={"allowed_collectives":
+                                 methods.get("oftv2").shard_collectives,
+                                 "model_shards": 2})
+    assert core.get("collective-budget").check(prog_ok) == []
+    prog_bad = core.Program(
+        "bad", [jaxprs.trace(gathers, *args, **trace_kw)],
+        meta={"allowed_collectives":
+              methods.get("oftv2").shard_collectives, "model_shards": 2})
+    assert core.get("collective-budget").check(prog_bad)
+
+
+# ---------------------------------------------------------------------------
+# wrappers keep their historical CLIs / exit codes
+# ---------------------------------------------------------------------------
+def test_check_dispatch_wrapper_clean_tree():
+    sys.path.insert(0, str(ROOT))
+    from benchmarks.check_dispatch import check
+    assert check() == 0
+
+
+def test_check_fusion_wrapper_exit_codes():
+    sys.path.insert(0, str(ROOT))
+    from benchmarks.check_fusion import check
+    good = [{"name": "fusion_plan/layer/q/expect_qoft_fused",
+             "derived": "got=qoft_fused"},
+            {"name": "serving/speedup/n4/expect_ge_2.0",
+             "derived": "multi_over_seq=3.10"}]
+    assert check(good) == 0
+    bad = [{"name": "fusion_plan/layer/q/expect_qoft_fused",
+            "derived": "got=unfused"}]
+    assert check(bad) == 1
+    assert check([{"name": "other", "derived": ""}]) == 1   # plan missing
+
+
+def test_check_metrics_wrapper_roundtrip(tmp_path):
+    sys.path.insert(0, str(ROOT))
+    from benchmarks.check_metrics import check, load_samples
+    from repro.obs import schema
+    snap = {"metrics": [{"name": n, "samples": [1.0]}
+                        for n in schema.SPECS]}
+    d = tmp_path / "m"
+    d.mkdir()
+    (d / "metrics.jsonl").write_text(json.dumps(snap) + "\n")
+    assert load_samples(str(d)) == {n: 1 for n in schema.SPECS}
+    assert check([str(d)]) == 0
+    # drop one smoke_required family's samples -> gate fails
+    smoke = next(n for n, s in schema.SPECS.items() if s.smoke_required)
+    snap["metrics"] = [{"name": n, "samples": [] if n == smoke else [1.0]}
+                       for n in schema.SPECS]
+    (d / "metrics.jsonl").write_text(json.dumps(snap) + "\n")
+    assert check([str(d)]) == 1
+
+
+# ---------------------------------------------------------------------------
+# docs + CLI
+# ---------------------------------------------------------------------------
+def test_rules_table_is_embedded_in_readme():
+    """The README rule table is GENERATED (rules_table_md); this keeps
+    the embed from rotting, like the capability-matrix embed."""
+    assert core.rules_table_md() in (ROOT / "README.md").read_text(), (
+        "README rule table is stale -- regenerate with `PYTHONPATH=src "
+        "python -m repro.analysis --list-rules` and paste")
+
+
+def test_cli_list_rules_and_ast_only():
+    env_path = f"{ROOT / 'src'}"
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--list-rules"],
+        capture_output=True, text=True, cwd=ROOT,
+        env={**__import__('os').environ, "PYTHONPATH": env_path})
+    assert out.returncode == 0
+    assert out.stdout.strip() == core.rules_table_md()
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--ast-only", "--rules",
+         "registry-dispatch,no-wallclock-in-kernels"],
+        capture_output=True, text=True, cwd=ROOT,
+        env={**__import__('os').environ, "PYTHONPATH": env_path})
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "checked ast=" in out.stdout
+
+
+def test_report_merge_json_and_severity_gate(tmp_path):
+    r1 = core.Report([core.Finding("a", core.ERROR, "w", "m")], {"ast": 3},
+                     ["note"])
+    r2 = core.Report([core.Finding("b", core.WARNING, "w2", "m2")],
+                     {"ast": 1, "jaxpr": 2}, [])
+    r1.merge(r2)
+    assert r1.checked == {"ast": 4, "jaxpr": 2}
+    assert len(r1.errors) == 1
+    path = tmp_path / "f.json"
+    r1.write_json(str(path))
+    data = json.loads(path.read_text())
+    assert data["errors"] == 1 and len(data["findings"]) == 2
+    assert "note" in data["skipped"]

@@ -140,40 +140,14 @@ def test_fused_bwd_neumann0_exact_cayley_fallback():
 
 
 # ------------------------------------------------- no dense W in the bwd ----
-def _float_shapes(jaxpr, out):
-    """All float outvar shapes in a jaxpr, recursing into sub-jaxprs but NOT
-    into Pallas kernel bodies: a pallas_call's inner tiles live in VMEM.
-    The pallas_call eqn's own outvars ARE recorded, so a kernel that
-    materializes a dense W to HBM (e.g. nf4_dequant) is still caught."""
-    for eqn in jaxpr.eqns:
-        for v in eqn.outvars:
-            aval = v.aval
-            if (hasattr(aval, "shape") and hasattr(aval, "dtype")
-                    and jnp.issubdtype(aval.dtype, jnp.floating)):
-                out.append(tuple(aval.shape))
-        if eqn.primitive.name == "pallas_call":
-            continue
-        for val in eqn.params.values():
-            for sub in _subjaxprs(val):
-                _float_shapes(sub, out)
-    return out
-
-
-def _subjaxprs(val):
-    from jax._src import core as jcore
-    if isinstance(val, jcore.Jaxpr):
-        yield val
-    elif isinstance(val, jcore.ClosedJaxpr):
-        yield val.jaxpr
-    elif isinstance(val, (list, tuple)):
-        for v in val:
-            yield from _subjaxprs(v)
-
-
 def test_qoft_bwd_never_materializes_dense_weight():
     """Acceptance: the QOFT backward performs zero full-weight dequants to
     HBM -- no (d_in, d_out) float array exists anywhere in the fwd+bwd
-    jaxpr outside kernel-internal VMEM tiles."""
+    jaxpr outside kernel-internal VMEM tiles.  The walker is the shared
+    ``repro.analysis`` jaxpr walker -- the same detector the CI
+    ``no-dense-w-in-hbm`` rule runs (this file used to carry its own
+    copy)."""
+    from repro import analysis
     d, n, b, bs = 128, 96, 16, 32
     x, r, w, _ = _inputs((16,), d, n, b, seed=2)
     q = nf4.quantize(0.1 * w, QuantConfig(kind="nf4", block_size=bs,
@@ -183,16 +157,13 @@ def test_qoft_bwd_never_materializes_dense_weight():
         return jnp.sum(kops.qoft_linear_fused(x, r, q["nf4_codes"],
                                               q["absmax"], bs))
 
-    jaxpr = jax.make_jaxpr(jax.grad(loss, argnums=(0, 1)))(x, r)
-    shapes = _float_shapes(jaxpr.jaxpr, [])
-    assert shapes, "detector saw no float intermediates at all"
-    assert (d, n) not in shapes, \
-        f"dense ({d}, {n}) weight materialized in the QOFT bwd"
+    analysis.assert_no_dense_w(jax.grad(loss, argnums=(0, 1)), (x, r),
+                               {(d, n)}, name="qoft_fused_grad")
 
     # detector sanity: an explicit full dequant IS caught
     dq_jaxpr = jax.make_jaxpr(
         lambda c, a: kops.nf4_dequant(c, a, bs))(q["nf4_codes"], q["absmax"])
-    assert (d, n) in _float_shapes(dq_jaxpr.jaxpr, [])
+    assert (d, n) in analysis.float_shapes(dq_jaxpr)
 
 
 # ------------------------------------------ rotation hoisting / reuse ----

@@ -227,8 +227,9 @@ def test_span_ring_buffer_bounded():
 # ---------------------------------------------------------------------------
 # jaxpr identity: collectors on vs off leave traced computations untouched
 # ---------------------------------------------------------------------------
-def _jaxpr_str(fn, *args):
-    return str(jax.make_jaxpr(fn)(*args))
+# the shared repro.analysis fingerprint (this file used to carry its own
+# make_jaxpr stringifier)
+from repro.analysis import jaxpr_fingerprint as _jaxpr_str
 
 
 def test_jaxpr_identity_fused_linear():

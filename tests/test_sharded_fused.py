@@ -65,62 +65,12 @@ def make_sharded(run):
     model = build(run, constrain=make_constrain(rules, mesh), shard=ctx)
     return mesh, rules, model
 
-def collect_prims(jaxpr, prims):
-    from jax.extend.core import ClosedJaxpr, Jaxpr
-    for eqn in jaxpr.eqns:
-        prims.add(eqn.primitive.name)
-        for v in eqn.params.values():
-            vs = v if isinstance(v, (tuple, list)) else (v,)
-            for u in vs:
-                if isinstance(u, ClosedJaxpr):
-                    collect_prims(u.jaxpr, prims)
-                elif isinstance(u, Jaxpr):
-                    collect_prims(u, prims)
-    return prims
-
-def assert_collective_budget(fn, args, model_shards):
-    prims = collect_prims(jax.make_jaxpr(fn)(*args).jaxpr, set())
-    gathers = sorted(p for p in prims
-                     if "all_gather" in p or "all_to_all" in p)
-    assert not gathers, f"sharded fused path gathers: {gathers}"
-    if model_shards > 1:
-        assert any("psum" in p for p in prims), sorted(prims)
-
-def assert_no_w_gathers_hlo(fn, args, cfg):
-    \"\"\"Compiled-HLO twin of the jaxpr budget: GSPMD-inserted collectives
-    never appear in the jaxpr, so also scan the optimized HLO -- no
-    all-to-all at all, and no all-gather whose result carries a trailing
-    W / NF4-codes / absmax shape.  Tiny adapter-state gathers (q_packed and
-    dR re-gathers around the concatenated rotation build) are expected and
-    allowed; gathering a weight-shaped tensor is the scaling regression
-    this pins down.\"\"\"
-    import re
-    from repro.models.linears import layer_linear_shapes
-    txt = jax.jit(fn).lower(*args).compile().as_text()
-    assert "all-to-all" not in txt, "all-to-all in compiled HLO"
-    w_shapes = set()
-    for din, dout in layer_linear_shapes(cfg).values():
-        w_shapes |= {(din, dout), (din // 2, dout)}
-        for bs in (16, 32, 64):
-            if din % bs == 0:
-                w_shapes.add((din // bs, dout))
-    gathered = []
-    for line in txt.splitlines():
-        if " all-gather(" not in line:
-            continue
-        # result type(s) live between '=' and 'all-gather('; XLA's
-        # all-gather combiner can merge several into ONE tuple-shaped
-        # instruction, so scan EVERY shape on the left-hand side, not
-        # just a single-operand form
-        pre = line.split(" all-gather(", 1)[0]
-        if "=" not in pre:
-            continue
-        lhs = pre.split("=", 1)[1]
-        for m in re.finditer(r"\\[([0-9,]+)\\]", lhs):
-            dims = tuple(int(d) for d in m.group(1).split(","))
-            if len(dims) >= 2 and dims[-2:] in w_shapes:
-                gathered.append(dims)
-    assert not gathered, f"W-shaped all-gathers in compiled HLO: {gathered}"
+# the collective-budget assertions are the SHARED repro.analysis
+# detectors (the same ones CI's `collective-budget` / `hlo-collective-
+# budget` rules run); the budget itself comes from the method registry's
+# shard_collectives, not a hardcoded psum-only list.  This preamble used
+# to carry its own jaxpr walker + HLO scanner -- now deduped.
+from repro.analysis import assert_collective_budget, assert_no_w_gathers_hlo
 """
 
 
