@@ -35,15 +35,20 @@ def assert_collective_budget(fn, args: Sequence, model_shards: int,
                              name: str = "program") -> None:
     """``fn(*args)``'s jaxpr emits only the collectives budgeted by the
     ``kind`` method's registry entry (``shard_collectives``), and a
-    budgeted psum actually appears when the model axis is sharded."""
+    budgeted psum actually appears when the model axis is sharded.
+
+    When ``allowed`` is None the budget resolves through the rule's own
+    registry lookup (``adapter_kind`` metadata), so an unregistered or
+    shard-incapable ``kind`` surfaces as a rule finding in the
+    AssertionError -- not a ValueError out of the registry."""
     core._load_shipped()
+    meta = {"model_shards": int(model_shards)}
     if allowed is None:
-        from repro import methods
-        allowed = methods.get(kind).shard_collectives
+        meta["adapter_kind"] = kind
+    else:
+        meta["allowed_collectives"] = tuple(allowed)
     _run("collective-budget", core.Program(
-        name, [jaxprs.trace(fn, *args)],
-        meta={"allowed_collectives": tuple(allowed),
-              "model_shards": int(model_shards)}))
+        name, [jaxprs.trace(fn, *args)], meta=meta))
 
 
 def assert_no_w_gathers_hlo(fn, args: Sequence, cfg, kind: str = "oftv2",
@@ -52,15 +57,17 @@ def assert_no_w_gathers_hlo(fn, args: Sequence, cfg, kind: str = "oftv2",
     """Compiled-HLO twin of the collective budget: compile ``fn(*args)``
     under the ambient mesh and scan the optimized HLO -- no off-budget
     all-to-all, and no all-gather carrying a W / NF4-codes / absmax
-    trailing shape of ``cfg`` (tiny adapter-state gathers are allowed)."""
+    trailing shape of ``cfg`` (tiny adapter-state gathers are allowed).
+    Like ``assert_collective_budget``, a None ``allowed`` defers to the
+    rule's registry resolution of ``kind``."""
     core._load_shipped()
+    meta = {"w_shapes": hlo.weight_shapes(cfg)}
     if allowed is None:
-        from repro import methods
-        allowed = methods.get(kind).shard_collectives
+        meta["adapter_kind"] = kind
+    else:
+        meta["allowed_collectives"] = tuple(allowed)
     _run("hlo-collective-budget", core.Program(
-        name, [], hlo=hlo.compile_text(fn, *args),
-        meta={"allowed_collectives": tuple(allowed),
-              "w_shapes": hlo.weight_shapes(cfg)}))
+        name, [], hlo=hlo.compile_text(fn, *args), meta=meta))
 
 
 def assert_not_baked(make_fn, variants: Sequence[Sequence], *,

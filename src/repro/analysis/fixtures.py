@@ -282,7 +282,6 @@ def sharded_targets() -> Tuple[List[Program], List[str]]:
                     f"XLA_FLAGS=--xla_force_host_platform_device_count=8)"]
 
     from jax.sharding import NamedSharding
-    from repro import methods
     from repro.config.base import (AdapterConfig, ModelConfig,
                                    ParallelConfig, QuantConfig, RunConfig,
                                    TrainConfig)
@@ -299,40 +298,50 @@ def sharded_targets() -> Tuple[List[Program], List[str]]:
     cfg = ModelConfig(name="analysis-shard", num_layers=2, d_model=64,
                       num_heads=8, num_kv_heads=2, d_ff=256, vocab_size=256,
                       rope_theta=1e4).with_mesh_padding(pcfg.model_axis_size)
-    run = RunConfig(
-        model=cfg,
-        adapter=AdapterConfig(kind="oftv2", block_size=16, neumann_terms=4,
-                              fuse_linear=True),
-        quant=QuantConfig(kind="none", block_size=16),
-        parallel=pcfg,
-        train=TrainConfig(global_batch=8, seq_len=32, learning_rate=1e-3,
-                          steps=1, warmup_steps=0))
-
+    # one psum-only method (oftv2: rotations shard like W, zero
+    # resharding) and one that budgets a cross-shard exchange (boft: the
+    # butterfly mixes blocks across K shards, so its sharded step
+    # all-gathers activations by declaration)
+    adapters = [
+        AdapterConfig(kind="oftv2", block_size=16, neumann_terms=4,
+                      fuse_linear=True),
+        AdapterConfig(kind="boft", block_size=16, neumann_terms=4,
+                      fuse_linear=True),
+    ]
     mesh = jax.make_mesh(mesh_shape, pcfg.mesh_axes)
     rules = rules_variant(pcfg, "fused_tp")
-    ctx = make_shard_context(mesh, rules, run)
-    model = build(run, constrain=make_constrain(rules, mesh), shard=ctx)
-    params = fit_tree(model.init(jax.random.PRNGKey(0)),
-                      model.param_specs(rules), mesh)
-    state = state_lib.create(params)
-    tokens = jax.random.randint(jax.random.PRNGKey(1), (8, 32), 0,
-                                cfg.vocab_size)
-    batch = {"tokens": jax.device_put(
-        tokens, NamedSharding(mesh, batch_spec(pcfg, 2)))}
-    step = make_train_step(model, run)
-    # the budget comes from the METHOD's registry entry, not a hardcoded
-    # psum-only list: a future method (BOFT butterfly exchanges, ...)
-    # widens its own budget by declaring shard_collectives
-    allowed = methods.get(run.adapter.kind).shard_collectives
-    with mesh:
-        program = Program(
-            f"sharded/train_step/{mesh_shape[0]}x{mesh_shape[1]}",
-            [jaxprs.trace(step, state, batch)],
-            hlo=hlo.compile_text(step, state, batch),
-            meta={"allowed_collectives": allowed,
-                  "model_shards": pcfg.model_axis_size,
-                  "w_shapes": hlo.weight_shapes(cfg)})
-    return [program], []
+    programs = []
+    for acfg in adapters:
+        run = RunConfig(
+            model=cfg, adapter=acfg,
+            quant=QuantConfig(kind="none", block_size=16),
+            parallel=pcfg,
+            train=TrainConfig(global_batch=8, seq_len=32,
+                              learning_rate=1e-3, steps=1, warmup_steps=0))
+        ctx = make_shard_context(mesh, rules, run)
+        model = build(run, constrain=make_constrain(rules, mesh), shard=ctx)
+        params = fit_tree(model.init(jax.random.PRNGKey(0)),
+                          model.param_specs(rules), mesh)
+        state = state_lib.create(params)
+        tokens = jax.random.randint(jax.random.PRNGKey(1), (8, 32), 0,
+                                    cfg.vocab_size)
+        batch = {"tokens": jax.device_put(
+            tokens, NamedSharding(mesh, batch_spec(pcfg, 2)))}
+        step = make_train_step(model, run)
+        with mesh:
+            # the budget comes from the METHOD's registry entry via the
+            # rules' own `adapter_kind` resolution, not a hardcoded
+            # psum-only list: a method that legitimately needs more
+            # (boft) widens its own budget by declaring shard_collectives
+            programs.append(Program(
+                f"sharded/train_step/{acfg.kind}/"
+                f"{mesh_shape[0]}x{mesh_shape[1]}",
+                [jaxprs.trace(step, state, batch)],
+                hlo=hlo.compile_text(step, state, batch),
+                meta={"adapter_kind": acfg.kind,
+                      "model_shards": pcfg.model_axis_size,
+                      "w_shapes": hlo.weight_shapes(cfg)}))
+    return programs, []
 
 
 # ---------------------------------------------------------------------------

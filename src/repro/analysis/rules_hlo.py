@@ -9,6 +9,7 @@ from typing import List
 
 from repro.analysis import core, hlo
 from repro.analysis.core import Finding, Program, Rule
+from repro.analysis.rules_jaxpr import resolve_budget
 
 
 @core.register
@@ -30,9 +31,13 @@ class HloCollectiveBudget(Rule):
                    "after the jaxpr layer goes blind)")
 
     def check(self, program: Program) -> List[Finding]:
-        if program.hlo is None or "allowed_collectives" not in program.meta:
+        if program.hlo is None:
             return []
-        allowed = frozenset(program.meta["allowed_collectives"])
+        allowed, reason = resolve_budget(program.meta)
+        if reason is not None:
+            return [self.finding(program.name, reason)]
+        if allowed is None:
+            return []
         w_shapes = {tuple(s) for s in program.meta.get("w_shapes", ())}
         findings = []
         for op in hlo.collectives(hlo.parse_hlo(program.hlo)):

@@ -38,6 +38,38 @@ def collective_family(prim: str) -> str:
     return ""
 
 
+def resolve_budget(meta: dict):
+    """Resolve a program's collective budget from its metadata.
+
+    An explicit ``allowed_collectives`` tuple wins; otherwise
+    ``adapter_kind`` is looked up in the method registry
+    (``AdapterMethod.shard_collectives``).  Returns ``(allowed, None)``
+    on success, ``(None, None)`` when the program opts into neither key
+    (the rule skips it), and ``(None, reason)`` when the kind CANNOT
+    resolve -- unregistered, or registered without the ``shards``
+    capability.  Callers turn the reason into a clean severity-error
+    Finding: an analyzer run over a misconfigured fixture must report
+    the misconfiguration, not die mid-run on the registry's ValueError
+    (both budget rules share this helper, so jaxpr and HLO agree)."""
+    if "allowed_collectives" in meta:
+        return frozenset(meta["allowed_collectives"]), None
+    kind = meta.get("adapter_kind")
+    if kind is None:
+        return None, None
+    from repro import methods
+    try:
+        method = methods.get(kind)
+    except ValueError as e:
+        return None, f"cannot resolve collective budget: {e}"
+    if not method.supports_sharding:
+        return None, (
+            f"adapter kind {kind!r} has no `shards` capability "
+            f"(shard_collectives={method.shard_collectives!r}): a sharded "
+            f"program was built for a method that cannot shard -- methods "
+            f"that can: {', '.join(methods.supporting('supports_sharding'))}")
+    return frozenset(method.shard_collectives), None
+
+
 @core.register
 class NoDenseWInHbm(Rule):
     """The paper's matrix-free OFTv2 claim, as a detector: a fused program
@@ -104,9 +136,11 @@ class CollectiveBudget(Rule):
                    "axis is sharded")
 
     def check(self, program: Program) -> List[Finding]:
-        if "allowed_collectives" not in program.meta or not program.jaxprs:
+        allowed, reason = resolve_budget(program.meta)
+        if reason is not None:
+            return [self.finding(program.name, reason)]
+        if allowed is None or not program.jaxprs:
             return []
-        allowed = frozenset(program.meta["allowed_collectives"])
         findings = []
         seen_families = set()
         for eqn, path in jaxprs.iter_eqns(program.jaxprs[0]):
@@ -129,15 +163,17 @@ class CollectiveBudget(Rule):
         return findings
 
     def fixture(self) -> Program:
-        """A psum-budgeted program that also all-gathers: the gather must
-        be flagged.  ``axis_env`` traces the collective without devices."""
+        """A program that all-gathers under oftv2's psum-only budget: the
+        budget resolves through the method REGISTRY (``adapter_kind``
+        metadata, the production path) and the gather must be flagged.
+        ``axis_env`` traces the collective without devices."""
         def leaky(x):
             return jax.lax.psum(jax.lax.all_gather(x, "model"), "model")
 
         jx = jaxprs.trace(leaky, jnp.ones((4,)),
                           axis_env=[("model", 2)])
         return Program("fixture/extra-all-gather", [jx],
-                       meta={"allowed_collectives": ("psum",),
+                       meta={"adapter_kind": "oftv2",
                              "model_shards": 2})
 
 

@@ -183,8 +183,9 @@ class AdapterConfig:
     """The paper's technique + baselines + registry methods.
 
     ``kind`` names an ``AdapterMethod`` registered in ``repro.methods``
-    (built-ins: none | oftv1 | oftv2 | lora | hoft); everything the
-    framework does with it is a registry query, never string dispatch."""
+    (built-ins: none | oftv1 | oftv2 | lora | hoft | boft | goft);
+    everything the framework does with it is a registry query, never
+    string dispatch."""
 
     kind: str = "oftv2"        # an adapter method registered in repro.methods
     block_size: int = 32       # OFT block size b
@@ -193,6 +194,9 @@ class AdapterConfig:
     alpha: float = 16.0        # LoRA scaling
     reflections: int = 8       # HOFT Householder count m (even: paired
                                # vectors make the init-time chain identity)
+    butterfly_stages: int = 0  # BOFT stage count (0 = auto: log2(d/b)+1,
+                               # the full log-depth butterfly)
+    givens_passes: int = 4     # GOFT brick-wall Givens passes (1..d_in)
     targets: Tuple[str, ...] = ("q", "k", "v", "o", "gate", "up", "down",
                                 "in_proj", "out_proj")
     adapt_experts: bool = False

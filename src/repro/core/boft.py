@@ -1,0 +1,198 @@
+"""BOFT: butterfly-factorized orthogonal finetuning (Liu et al.,
+"Parameter-Efficient Orthogonal Finetuning via Butterfly Factorization"),
+input-centric.
+
+OFTv2 keeps the rotation block-diagonal, so features never mix across
+blocks.  BOFT composes ``s`` stages, each a block-diagonal rotation
+conjugated by an involutive butterfly permutation, so log-depth stages
+mix every feature with every other while each stage stays matvec-cheap:
+
+    y = (x @ B_1 @ B_2 @ ... @ B_s) @ W,
+    B_1 = R_bd^{(1)}                       (plain block rotation)
+    B_k = P_k @ R_bd^{(k)} @ P_k, k >= 2   (stride h = 2^{k-2} exchange)
+
+``P_k`` pairs block ``i`` with block ``i + h`` and swaps half of each
+block's features between the two -- the classic butterfly wiring,
+expressed as a reshape/transpose so it is free inside a VMEM tile (the
+rotated activations never visit HBM; see
+``repro.kernels.boft_linear_fused``).  ``P_k = P_k^T = P_k^{-1}`` (it is
+a swap of two size-2 axes), so each stage -- and the whole composition --
+is exactly as orthogonal as its Cayley blocks.
+
+Row-vector convention throughout: ``x @ R`` means each stage applies its
+blocks on the right, matching ``repro.core.oft``.
+
+Constraints (validated at CONFIG time, uniformly in init / param_count /
+param_defs, so a launch-time dry run can never report shapes for a config
+that cannot build -- the ISSUE-10 validation pattern):
+
+  * ``d_in`` must be a power-of-two multiple of ``block_size`` (the
+    butterfly halves the block count each stride doubling);
+  * ``1 <= stages <= log2(d_in/block_size) + 1`` (stage k >= 2 needs
+    stride ``2^{k-2} <= r/2``);
+  * ``block_size`` must be even when stages >= 2 (half-block exchange).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.config.base import AdapterConfig
+from repro.core import cayley, skew
+
+
+def _is_pow2(n: int) -> bool:
+    return n > 0 and (n & (n - 1)) == 0
+
+
+def num_blocks(d_in: int, acfg: AdapterConfig) -> int:
+    b = acfg.block_size
+    if d_in % b != 0:
+        raise ValueError(
+            f"BOFT: d_in={d_in} not divisible by block size {b}")
+    r = d_in // b
+    if not _is_pow2(r):
+        raise ValueError(
+            f"BOFT: d_in={d_in} must be a power-of-two multiple of the "
+            f"block size {b} (got {r} blocks; the butterfly exchange "
+            f"halves the block pairing each stage)")
+    return r
+
+
+def max_stages(r: int) -> int:
+    """Full butterfly depth for ``r`` blocks: one unpermuted stage plus
+    one stage per stride doubling (h = 1, 2, ..., r/2)."""
+    return r.bit_length()  # log2(r) + 1 for power-of-two r
+
+
+def num_stages(d_in: int, acfg: AdapterConfig) -> int:
+    """Validated stage count for one adapted linear (0 = auto: the full
+    log-depth butterfly)."""
+    r = num_blocks(d_in, acfg)
+    limit = max_stages(r)
+    s = acfg.butterfly_stages or limit
+    if not 1 <= s <= limit:
+        raise ValueError(
+            f"BOFT: butterfly_stages={acfg.butterfly_stages} out of range "
+            f"for d_in={d_in}, block_size={acfg.block_size}: need "
+            f"1 <= stages <= log2({r}) + 1 = {limit} (0 selects the full "
+            f"depth)")
+    if s >= 2 and acfg.block_size % 2 != 0:
+        raise ValueError(
+            f"BOFT: block_size={acfg.block_size} must be even for "
+            f"permuted stages (the butterfly exchanges half of each "
+            f"block); stages={s}")
+    return s
+
+
+def stage_strides(s: int) -> tuple:
+    """Static per-stage butterfly strides: 0 marks the unpermuted stage,
+    stage k >= 2 exchanges blocks ``i`` and ``i + 2^(k-2)``."""
+    return (0,) + tuple(1 << k for k in range(s - 1))
+
+
+def boft_init(d_in: int, acfg: AdapterConfig, dtype=jnp.float32) -> dict:
+    """Zero-init packed skew params for every stage => every stage's
+    blocks are I => the whole butterfly is exactly the identity at init
+    (permute-identity-permute = identity)."""
+    r = num_blocks(d_in, acfg)
+    s = num_stages(d_in, acfg)
+    return {"boft_q": jnp.zeros((s, r, skew.pack_dim(acfg.block_size)),
+                                dtype=dtype)}
+
+
+def boft_param_count(d_in: int, acfg: AdapterConfig) -> int:
+    return (num_stages(d_in, acfg) * num_blocks(d_in, acfg)
+            * skew.pack_dim(acfg.block_size))
+
+
+def build_stage_rotations(params: dict, cfg: AdapterConfig) -> jnp.ndarray:
+    """(s, r, p) packed skew -> (s, r, b, b) per-stage block rotations via
+    the same Cayley(-Neumann) builder as OFTv2 (``neumann_terms=0`` gives
+    the exact Cayley transform: every block exactly orthogonal, so the
+    composed butterfly is orthogonal to machine precision -- the property
+    tests pin this)."""
+    q = params["boft_q"]
+    s, r, p = q.shape
+    rot = cayley.build_rotation(q.reshape(s * r, p), cfg.block_size,
+                                cfg.neumann_terms)
+    return rot.reshape(s, r, cfg.block_size, cfg.block_size)
+
+
+def butterfly_permute(x3: jnp.ndarray, h: int) -> jnp.ndarray:
+    """The stride-``h`` butterfly involution on blocked activations.
+
+    x3: (..., r, b).  Viewing the block index as (g, p, j) with
+    ``i = g*2h + p*h + j`` and the feature index as (q, c) with halves
+    ``q``, the permutation swaps the pair selector ``p`` with the half
+    selector ``q``: the new block ``(g, p, j)`` is [half p of block
+    (g, 0, j) | half p of block (g, h, j)].  A swap of two size-2 axes is
+    its own inverse and transpose, so conjugating a block rotation by it
+    stays orthogonal."""
+    lead = x3.shape[:-2]
+    r, b = x3.shape[-2:]
+    g = r // (2 * h)
+    x6 = x3.reshape(lead + (g, 2, h, 2, b // 2))
+    nd = x6.ndim
+    perm = list(range(nd))
+    perm[nd - 4], perm[nd - 2] = perm[nd - 2], perm[nd - 4]
+    return x6.transpose(perm).reshape(lead + (r, b))
+
+
+def apply_block_rotations(x3: jnp.ndarray, r_blocks: jnp.ndarray
+                          ) -> jnp.ndarray:
+    """x3: (..., r, b) @ per-block rotations (r, b, b), blockwise."""
+    return jnp.einsum("...rb,rbc->...rc", x3, r_blocks.astype(x3.dtype))
+
+
+def boft_apply(x: jnp.ndarray, rot_stages: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., d) through the full butterfly; rot_stages: (s, r, b, b).
+
+    fp32 chain, cast back -- the jnp reference the Pallas kernel is tested
+    against (``repro.kernels.ref.boft_linear_ref``)."""
+    s, r, b, _ = rot_stages.shape
+    lead = x.shape[:-1]
+    x3 = x.astype(jnp.float32).reshape(lead + (r, b))
+    rot = rot_stages.astype(jnp.float32)
+    for k, h in enumerate(stage_strides(s)):
+        if h:
+            x3 = butterfly_permute(x3, h)
+        x3 = apply_block_rotations(x3, rot[k])
+        if h:
+            x3 = butterfly_permute(x3, h)
+    return x3.reshape(lead + (r * b,)).astype(x.dtype)
+
+
+def boft_linear(x: jnp.ndarray, params: dict, cfg: AdapterConfig,
+                w: jnp.ndarray) -> jnp.ndarray:
+    """Full input-centric adapted linear: y = (x @ B_1..B_s) @ W.
+
+    With cfg.fuse_linear the whole multi-stage rotate + matmul runs as ONE
+    Pallas kernel (``kernels/boft_linear_fused``): the per-stage rotated
+    activations never hit HBM.  Its VJP is the jnp reference (no fused
+    backward kernel -- the capability matrix says so)."""
+    rot_stages = build_stage_rotations(params, cfg)
+    if cfg.fuse_linear:
+        from repro.kernels import ops as kops
+        return kops.boft_linear_fused(x, rot_stages, w)
+    return boft_apply(x, rot_stages) @ w
+
+
+def boft_merge(w: jnp.ndarray, params: dict,
+               cfg: AdapterConfig) -> jnp.ndarray:
+    """W' = B @ W for deployment, where ``boft_apply(x) == x @ B``:
+    materialize B once by pushing the identity through the butterfly
+    (merge-time only, never in the train loop)."""
+    d_in = w.shape[0]
+    b_full = boft_apply(jnp.eye(d_in, dtype=jnp.float32),
+                        build_stage_rotations(params, cfg))
+    return (b_full @ w.astype(jnp.float32)).astype(w.dtype)
+
+
+def boft_flops_per_step(d_in: int, tokens: int, acfg: AdapterConfig) -> int:
+    """Analytic adapter-overhead FLOPs: s stages, each a blockdiag apply
+    (2 T d b) plus the per-stage Cayley builds."""
+    r = num_blocks(d_in, acfg)
+    s = num_stages(d_in, acfg)
+    b = acfg.block_size
+    build = s * r * max(acfg.neumann_terms, 1) * 2 * b ** 3
+    return build + s * 2 * tokens * d_in * b

@@ -1,0 +1,147 @@
+"""GOFT: quasi-orthogonal finetuning via Givens rotations (Ma et al.,
+"Parameter Efficient Quasi-Orthogonal Fine-Tuning via Givens Rotation"),
+input-centric.
+
+The sparse limit of the structured-orthogonality family: where OFTv2
+rotates b-dim blocks and BOFT composes butterflies of them, GOFT applies
+``p`` brick-wall passes of 2x2 Givens rotations -- d/2 independent plane
+rotations per pass, adjacent pairs, odd passes offset by one so the
+bricks interleave and any feature can reach any other in ~d passes:
+
+    pass 0 (even): rotate pairs (0,1), (2,3), ...
+    pass 1 (odd):  rotate pairs (1,2), (3,4), ..., (d-1,0)  (wraparound)
+
+Each plane rotation is the trig-free Cayley form of one angle parameter
+theta (c = 1/sqrt(1+theta^2), s = theta*c -- exactly c^2 + s^2 = 1 in
+exact arithmetic, so each pass is orthogonal and the float residual of
+the COMPOSITION grows only with accumulated rounding, not with theta;
+the property tests bound it as passes accumulate).  theta = 0 gives the
+exact identity, so zero-init is identity-at-init for free.
+
+Row-vector convention: for the pair (i, j) with angle params (c, s),
+
+    y_i = c*x_i - s*x_j,   y_j = s*x_i + c*x_j.
+
+The kernel-friendly formulation avoids any (d/2, 2) reshape in the lane
+dimension: expand per-pair (c, s) to per-LANE vectors cos_k (d,) and a
+SIGNED sin_k (d,) with ``new = cos_k*x + sin_k*partner`` where partner
+is the pair sibling (roll by -1 on even lanes of the pass, +1 on odd)
+-- see ``expand_pass_coeffs`` and ``repro.kernels.goft_linear_fused``.
+
+Config-time validation (uniform across init / param_count / param_defs):
+``d_in`` must be even (complete pairing) and ``1 <= givens_passes <=
+d_in`` (beyond d passes every plane has been revisited with no added
+reach -- a config asking for more is a bug, not a preference).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import AdapterConfig
+
+
+def num_passes(d_in: int, acfg: AdapterConfig) -> int:
+    """Validated brick-wall pass count for one adapted linear."""
+    if d_in % 2 != 0:
+        raise ValueError(
+            f"GOFT: d_in={d_in} must be even (Givens rotations pair "
+            f"adjacent features)")
+    p = acfg.givens_passes
+    if not 1 <= p <= d_in:
+        raise ValueError(
+            f"GOFT: givens_passes={p} out of range for d_in={d_in}: need "
+            f"1 <= passes <= d_in (full mixing reach is ~d passes; more "
+            f"adds parameters with no added connectivity)")
+    return p
+
+
+def goft_init(d_in: int, acfg: AdapterConfig, dtype=jnp.float32) -> dict:
+    """theta = 0 => every plane rotation is I => exact identity at init."""
+    p = num_passes(d_in, acfg)
+    return {"thetas": jnp.zeros((p, d_in // 2), dtype=dtype)}
+
+
+def goft_param_count(d_in: int, acfg: AdapterConfig) -> int:
+    return num_passes(d_in, acfg) * (d_in // 2)
+
+
+def givens_cs(thetas: jnp.ndarray):
+    """Trig-free Cayley-Givens coefficients: (c, s) with c^2 + s^2 = 1.
+
+    tan(angle/2) parameterization -- smooth, unbounded thetas, no trig
+    on-device, and exactly orthogonal per-plane in exact arithmetic."""
+    t = thetas.astype(jnp.float32)
+    c = jax.lax.rsqrt(1.0 + t * t)
+    return c, t * c
+
+
+def expand_pass_coeffs(thetas: jnp.ndarray):
+    """(p, d/2) angles -> per-lane (cos_k, sin_k), each (p, d).
+
+    cos_k[k, i] is the cosine the lane-i feature sees in pass k; sin_k is
+    SIGNED: -s on the first lane of its pair, +s on the second, so every
+    lane computes ``new = cos_k*x + sin_k*partner`` uniformly.  Odd
+    passes are handled by the caller rotating the lane view, so the
+    expansion itself is pass-shape-agnostic."""
+    c, s = givens_cs(thetas)
+    cos_k = jnp.repeat(c, 2, axis=-1)
+    sin_k = jnp.stack([-s, s], axis=-1).reshape(s.shape[:-1] + (-1,))
+    return cos_k, sin_k
+
+
+def _rotate_pairs(x: jnp.ndarray, cos_k: jnp.ndarray,
+                  sin_k: jnp.ndarray) -> jnp.ndarray:
+    """One even-aligned pass on (..., d): partner of lane 2i is 2i+1 and
+    vice versa, i.e. roll within each pair."""
+    d = x.shape[-1]
+    x2 = x.reshape(x.shape[:-1] + (d // 2, 2))
+    partner = x2[..., ::-1].reshape(x.shape)
+    return cos_k * x + sin_k * partner
+
+
+def goft_apply(x: jnp.ndarray, thetas: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., d) through p brick-wall Givens passes; thetas: (p, d/2).
+
+    fp32 chain, cast back -- the jnp reference the Pallas kernel is
+    tested against (``repro.kernels.ref.goft_linear_ref``).  Odd passes
+    are conjugated by a roll: shift the lanes left by one, apply an
+    even-aligned pass, shift back -- which rotates pairs (1,2), (3,4),
+    ..., (d-1,0) including the wraparound brick."""
+    p = thetas.shape[0]
+    xf = x.astype(jnp.float32)
+    cos_k, sin_k = expand_pass_coeffs(thetas)
+    for k in range(p):
+        if k % 2 == 1:
+            xf = jnp.roll(xf, -1, axis=-1)
+        xf = _rotate_pairs(xf, cos_k[k], sin_k[k])
+        if k % 2 == 1:
+            xf = jnp.roll(xf, 1, axis=-1)
+    return xf.astype(x.dtype)
+
+
+def goft_linear(x: jnp.ndarray, params: dict, cfg: AdapterConfig,
+                w: jnp.ndarray) -> jnp.ndarray:
+    """y = GOFT(x) @ W; with cfg.fuse_linear all p passes run on the
+    activation tile in VMEM inside one Pallas kernel before the matmul
+    (``kernels/goft_linear_fused``)."""
+    if cfg.fuse_linear:
+        from repro.kernels import ops as kops
+        return kops.goft_linear_fused(x, params["thetas"], w)
+    return goft_apply(x, params["thetas"]) @ w
+
+
+def goft_merge(w: jnp.ndarray, params: dict,
+               cfg: AdapterConfig) -> jnp.ndarray:
+    """W' = G @ W where ``goft_apply(x) == x @ G``: push the identity
+    through the passes once at merge time."""
+    d_in = w.shape[0]
+    g_full = goft_apply(jnp.eye(d_in, dtype=jnp.float32), params["thetas"])
+    return (g_full @ w.astype(jnp.float32)).astype(w.dtype)
+
+
+def goft_flops_per_step(d_in: int, tokens: int, acfg: AdapterConfig) -> int:
+    """Each pass is 4 flops/feature (2 mul + 1 add per output, x2 lanes
+    share the pair) -- linear in d, the sparse limit of the family."""
+    p = num_passes(d_in, acfg)
+    return p * 4 * tokens * d_in

@@ -2,6 +2,8 @@
 interpret mode on CPU; compiled path on real TPUs):
 
   block_oft_apply    -- OFTv2's input-centric block-diagonal transform
+                        (also home of the shared multi-stage
+                        rotate-in-VMEM primitives the BOFT kernels use)
   cayley_neumann     -- packed-skew -> rotation builder (the paper's CUDA
                         kernel, TPU-adapted)
   nf4_dequant        -- QOFT/QLoRA frozen-weight LUT dequantization
@@ -15,12 +17,21 @@ interpret mode on CPU; compiled path on real TPUs):
                         frozen base
   hoft_linear_fused  -- Householder-chain reflection + matmul in one kernel
                         (the HOFT method's fused forward)
+  boft_linear_fused  -- log-depth butterfly stages + matmul in one kernel
+                        (no intermediate stage ever exists in HBM);
+                        boft_rotate is the rotate-only variant for the
+                        sharded gather-rotate-slice path
+  goft_linear_fused  -- brick-wall Givens passes + matmul in one kernel
+                        (the sparse limit of the rotate-in-VMEM family)
 """
-from repro.kernels.ops import (block_oft_apply, cayley_neumann,
-                               hoft_linear_fused, nf4_dequant,
-                               oftv2_linear_fused, oftv2_linear_multi,
-                               qoft_linear_fused, qoft_linear_multi)
+from repro.kernels.ops import (block_oft_apply, boft_linear_fused,
+                               boft_rotate, cayley_neumann,
+                               goft_linear_fused, hoft_linear_fused,
+                               nf4_dequant, oftv2_linear_fused,
+                               oftv2_linear_multi, qoft_linear_fused,
+                               qoft_linear_multi)
 
-__all__ = ["block_oft_apply", "cayley_neumann", "hoft_linear_fused",
+__all__ = ["block_oft_apply", "boft_linear_fused", "boft_rotate",
+           "cayley_neumann", "goft_linear_fused", "hoft_linear_fused",
            "nf4_dequant", "oftv2_linear_fused", "oftv2_linear_multi",
            "qoft_linear_fused", "qoft_linear_multi"]

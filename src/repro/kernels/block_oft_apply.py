@@ -1,16 +1,32 @@
-"""Pallas TPU kernel: block-diagonal orthogonal transform of activations.
+"""Pallas TPU kernels: (multi-stage) block-diagonal orthogonal transforms
+of activations -- the shared rotate-in-VMEM primitive.
 
-The OFTv2 hot loop: y[t, i, :] = x[t, i, :] @ R_i for every token t and OFT
-block i.  TPU adaptation of the paper's input-centric matvec (DESIGN.md §4):
+The OFTv2 hot loop is y[t, i, :] = x[t, i, :] @ R_i for every token t and
+OFT block i; BOFT composes log-depth such stages with a butterfly
+permutation between them.  Both are built from the same three value-level
+helpers, which operate on VMEM-resident tiles and are reused verbatim by
+``boft_linear_fused`` (so the fused kernels and this standalone one
+cannot drift apart):
 
-  * grid = (token tiles, block tiles); each program owns a
-    (TOKEN_TILE, BLOCK_TILE, b) activation tile and the matching
-    (BLOCK_TILE, b, b) rotation tile, both VMEM-resident.
-  * the batched small-matmul maps to the MXU as a dot_general with the OFT
-    block index as a batch dim; token tiles of 256 keep the operand matrix
-    (256 x b) MXU-aligned for b in {16, 32, 64}.
-  * x is never materialized in transformed form in HBM beyond the output
-    tile -- matching the paper's "matrix-free" framing.
+  * ``rotate_blocks``   -- the batched small-matmul on the MXU (block
+    index as a dot_general batch dim);
+  * ``butterfly_mix``   -- the stride-h butterfly involution as a
+    reshape/transpose, free inside a tile (no HBM traffic, no gather);
+  * ``multi_stage_rotate`` -- the statically-unrolled stage loop
+    (permute - rotate - permute per stage).
+
+TPU adaptation of the paper's input-centric matvec (DESIGN.md §4):
+
+  * single-stage ``block_oft_apply_kernel``: grid = (token tiles, block
+    tiles); each program owns a (TOKEN_TILE, BLOCK_TILE, b) activation
+    tile and the matching (BLOCK_TILE, b, b) rotation tile.
+  * multi-stage ``multi_stage_rotate_kernel``: the butterfly mixes
+    across blocks, so each program owns the FULL feature dim --
+    grid = (token tiles,), tiles (TOKEN_TILE, r, b) + (s, r, b, b);
+    every intermediate rotated stage lives and dies in VMEM.
+  * token tiles of 256 keep the operand matrix (256 x b) MXU-aligned for
+    b in {16, 32, 64}; x is never materialized in transformed form in
+    HBM beyond the output tile -- matching the "matrix-free" framing.
 """
 from __future__ import annotations
 
@@ -26,16 +42,60 @@ DEFAULT_TOKEN_TILE = 256
 DEFAULT_BLOCK_TILE = 8
 
 
-def _kernel(x_ref, r_ref, o_ref):
-    x = x_ref[...]          # (TT, RT, b)
-    r = r_ref[...]          # (RT, b, b)
-    o_ref[...] = jax.lax.dot_general(
-        x.astype(jnp.float32),
-        r.astype(jnp.float32),
-        # contract x's last dim with r's middle dim; batch over the block dim
+# ---------------------------------------------------------------------------
+# Shared value-level primitives (used inside kernel bodies; pure jnp/lax,
+# so they also serve the jnp oracles' intuition -- see kernels/ref.py).
+# ---------------------------------------------------------------------------
+def rotate_blocks(x3, r_blocks):
+    """(TT, r, b) @ per-block (r, b, b) -> (TT, r, b), fp32 on the MXU.
+
+    Contract x's feature dim with r's input dim, batch over the block
+    index; dot_general emits (r, TT, b), transpose back.
+    """
+    return jax.lax.dot_general(
+        x3.astype(jnp.float32),
+        r_blocks.astype(jnp.float32),
         dimension_numbers=(((2,), (1,)), ((1,), (0,))),
         preferred_element_type=jnp.float32,
-    ).transpose(1, 0, 2).astype(o_ref.dtype)
+    ).transpose(1, 0, 2)
+
+
+def butterfly_mix(x3, h: int):
+    """Stride-``h`` butterfly involution on a (TT, r, b) tile.
+
+    View the block index as (g, pair, h) and the feature dim as
+    (half, b/2); swapping the pair axis with the half axis exchanges
+    half of each block's features with its stride-h partner block.
+    P = P^T = P^-1 (a swap of two size-2 axes), and as a
+    reshape/transpose it costs no HBM traffic inside the tile.
+    """
+    tt, r, b = x3.shape
+    g = r // (2 * h)
+    x6 = x3.reshape(tt, g, 2, h, 2, b // 2)
+    return x6.transpose(0, 1, 4, 3, 2, 5).reshape(tt, r, b)
+
+
+def multi_stage_rotate(x3, rot_stages, strides):
+    """Statically-unrolled multi-stage rotate on a VMEM tile.
+
+    x3: (TT, r, b); rot_stages: (s, r, b, b); strides: static tuple from
+    ``core.boft.stage_strides`` (0 = unpermuted stage, h >= 1 = butterfly
+    conjugation).  Every intermediate stays in registers/VMEM.
+    """
+    for k, h in enumerate(strides):
+        if h:
+            x3 = butterfly_mix(x3, h)
+        x3 = rotate_blocks(x3, rot_stages[k])
+        if h:
+            x3 = butterfly_mix(x3, h)
+    return x3
+
+
+# ---------------------------------------------------------------------------
+# Single-stage kernel (the OFTv2 standalone apply)
+# ---------------------------------------------------------------------------
+def _kernel(x_ref, r_ref, o_ref):
+    o_ref[...] = rotate_blocks(x_ref[...], r_ref[...]).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("token_tile", "block_tile",
@@ -67,3 +127,43 @@ def block_oft_apply_kernel(x3: jnp.ndarray, r_blocks: jnp.ndarray,
         out_shape=jax.ShapeDtypeStruct((t, rb, b), x3.dtype),
         interpret=interpret,
     )(x3, r_blocks)
+
+
+# ---------------------------------------------------------------------------
+# Multi-stage rotate-only kernel (BOFT's sharded path: rotate the gathered
+# activations in VMEM, then slice + matmul against the local W shard)
+# ---------------------------------------------------------------------------
+def _multi_kernel(strides, x_ref, r_ref, o_ref):
+    x3 = x_ref[...].astype(jnp.float32)        # (TT, r, b)
+    o_ref[...] = multi_stage_rotate(x3, r_ref[...], strides).astype(
+        o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("strides", "token_tile",
+                                             "interpret"))
+def multi_stage_rotate_kernel(x3: jnp.ndarray, rot_stages: jnp.ndarray,
+                              strides: tuple,
+                              token_tile: int = DEFAULT_TOKEN_TILE,
+                              interpret: bool = None) -> jnp.ndarray:
+    """x3: (T, r, b), rot_stages: (s, r, b, b) -> (T, r, b) through the
+    full butterfly.  The cross-block mix means each program needs the
+    whole feature dim: grid = (T // token_tile,), the stage rotations are
+    broadcast to every program, and no intermediate stage touches HBM.
+    """
+    interpret = resolve_interpret(interpret)
+    t, rb, b = x3.shape
+    s = rot_stages.shape[0]
+    grid = (t // token_tile,)
+    record_launch("multi_stage_rotate", grid,
+                  {"token": token_tile}, t=t, k=rb * b, b=b, s=s)
+    return pl.pallas_call(
+        functools.partial(_multi_kernel, strides),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((token_tile, rb, b), lambda i: (i, 0, 0)),
+            pl.BlockSpec((s, rb, b, b), lambda i: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((token_tile, rb, b), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, rb, b), x3.dtype),
+        interpret=interpret,
+    )(x3, rot_stages)

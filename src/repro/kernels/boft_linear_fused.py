@@ -1,0 +1,79 @@
+"""Pallas TPU kernel: fused BOFT linear -- the multi-stage butterfly
+rotation pipeline applied to the input tile feeding straight into the
+x @ W matmul.
+
+Unfused, every butterfly stage writes its rotated activations (T x K) to
+HBM and reads them back for the next stage -- s+1 round trips for an
+s-stage butterfly.  Fused, each program keeps its (TOKEN_TILE, r, b)
+activation tile in VMEM, runs ALL stages in registers via the shared
+``multi_stage_rotate`` primitive (``block_oft_apply.py``: block-batched
+MXU matmuls with reshape/transpose butterfly mixes between them -- the
+permutation is free inside the tile), flattens, and contracts with its
+(K, N_TILE) weight tile:
+
+  * grid = (token tiles, out tiles).  Like the HOFT kernel there is NO
+    k grid dim: the butterfly mixes across blocks, so each program owns
+    a full-K activation stripe and the full (s, r, b, b) stage-rotation
+    stack (small: s*K*b floats).  Stages are recomputed per n tile --
+    O(s T K b) MXU flops, cheap next to the O(T K N) matmul they feed.
+  * HBM traffic per call: x + rotations + W + y once each; NO
+    intermediate stage ever exists in HBM -- asserted by the
+    ``no-dense-w-in-hbm`` jaxpr rule on the fused train step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.block_oft_apply import multi_stage_rotate
+from repro.kernels.runtime import record_launch, resolve_interpret
+
+DEFAULT_TOKEN_TILE = 256
+DEFAULT_N_TILE = 256
+
+
+def _kernel(strides, x_ref, r_ref, w_ref, o_ref):
+    tt, k_dim = x_ref.shape
+    s, rb, b, _ = r_ref.shape
+    x3 = x_ref[...].astype(jnp.float32).reshape(tt, rb, b)
+    xr = multi_stage_rotate(x3, r_ref[...], strides).reshape(tt, k_dim)
+    o_ref[...] = jnp.dot(xr, w_ref[...].astype(jnp.float32),
+                         preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("strides", "token_tile",
+                                             "n_tile", "interpret"))
+def boft_linear_fused_kernel(x2: jnp.ndarray, rot_stages: jnp.ndarray,
+                             w: jnp.ndarray, strides: tuple,
+                             token_tile: int = DEFAULT_TOKEN_TILE,
+                             n_tile: int = DEFAULT_N_TILE,
+                             interpret: bool = None) -> jnp.ndarray:
+    """x2: (T, K) activations, rot_stages: (s, r, b, b) with r*b == K,
+    strides: static tuple from ``core.boft.stage_strides``, w: (K, N) ->
+    (T, N) fp32 (callers cast).  T % token_tile == N % n_tile == 0
+    (ops.py pads/picks); K is un-tiled (the butterfly couples the full
+    width).  interpret=None auto-detects: compiled on TPU, interpreted
+    elsewhere."""
+    interpret = resolve_interpret(interpret)
+    t, k_dim = x2.shape
+    n = w.shape[1]
+    s, rb, b, _ = rot_stages.shape
+    grid = (t // token_tile, n // n_tile)
+    record_launch("boft_linear_fused", grid,
+                  {"token": token_tile, "n": n_tile},
+                  t=t, k=k_dim, n=n, s=s, b=b)
+    return pl.pallas_call(
+        functools.partial(_kernel, strides),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((token_tile, k_dim), lambda i, j: (i, 0)),
+            pl.BlockSpec((s, rb, b, b), lambda i, j: (0, 0, 0, 0)),
+            pl.BlockSpec((k_dim, n_tile), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((token_tile, n_tile), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((t, n), jnp.float32),
+        interpret=interpret,
+    )(x2, rot_stages, w)

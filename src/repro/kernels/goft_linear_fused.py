@@ -1,0 +1,105 @@
+"""Pallas TPU kernel: fused GOFT linear -- brick-wall Givens passes on
+the input tile feeding straight into the x @ W matmul.
+
+GOFT is the sparse limit of the rotate-in-VMEM family: each pass is d/2
+independent 2x2 plane rotations, pure VPU work (two multiplies and an
+add per lane), no MXU until the final matmul.  Unfused, every pass is a
+(T x K) HBM round trip; fused, each program keeps its (TOKEN_TILE, K)
+activation tile in VMEM and runs all p passes in registers:
+
+  * the pair structure never reshapes the lane dim (TPU lane layouts
+    punish (K/2, 2) views): the wrapper precomputes per-LANE coefficient
+    rows cos_k and SIGNED sin_k, (p, K) each (``core.goft.
+    expand_pass_coeffs``), so every lane uniformly computes
+    ``new = cos_k*x + sin_k*partner``.
+  * the pair partner is a +-1 lane roll selected by a parity mask from a
+    2-D ``broadcasted_iota`` (TPU requires >= 2-D iota); rolls are
+    concatenates of two static slices -- in-tile data movement only.
+  * odd (offset) passes are conjugated by a wraparound lane roll:
+    shift left, apply an even-aligned pass, shift back -- exactly the
+    jnp oracle's formulation, so the two cannot disagree on brick
+    layout.
+  * grid = (token tiles, out tiles), full-K stripe like the HOFT/BOFT
+    kernels; passes are recomputed per n tile -- O(p T K) VPU flops,
+    cheap next to the O(T K N) matmul.  HBM traffic per call: x +
+    coefficients + W + y once each; no intermediate pass exists in HBM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.runtime import record_launch, resolve_interpret
+
+DEFAULT_TOKEN_TILE = 256
+DEFAULT_N_TILE = 256
+
+
+def _roll_lanes(x: jnp.ndarray, shift: int) -> jnp.ndarray:
+    """Wraparound roll of the lane (last) dim by +-1, as two static
+    slices + concatenate (jnp.roll's gather lowering is TPU-hostile)."""
+    if shift == -1:
+        return jnp.concatenate([x[:, 1:], x[:, :1]], axis=1)
+    return jnp.concatenate([x[:, -1:], x[:, :-1]], axis=1)
+
+
+def givens_passes_tile(x: jnp.ndarray, cos_k: jnp.ndarray,
+                       sin_k: jnp.ndarray) -> jnp.ndarray:
+    """(TT, K) tile through p brick-wall passes; cos_k/sin_k: (p, K).
+
+    Python loop over the (static) pass count: the chain is inherently
+    sequential, so it unrolls into p rotate steps, all VMEM-resident."""
+    tt, k_dim = x.shape
+    even = (jax.lax.broadcasted_iota(jnp.int32, (tt, k_dim), 1) % 2) == 0
+    for k in range(cos_k.shape[0]):
+        xv = _roll_lanes(x, -1) if k % 2 == 1 else x
+        partner = jnp.where(even, _roll_lanes(xv, -1), _roll_lanes(xv, 1))
+        xv = cos_k[k:k + 1, :] * xv + sin_k[k:k + 1, :] * partner
+        x = _roll_lanes(xv, 1) if k % 2 == 1 else xv
+    return x
+
+
+def _kernel(x_ref, c_ref, s_ref, w_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)   # (TT, K)
+    c = c_ref[...].astype(jnp.float32)   # (P, K)
+    s = s_ref[...].astype(jnp.float32)   # (P, K)
+    w = w_ref[...].astype(jnp.float32)   # (K, NT)
+    o_ref[...] = jnp.dot(givens_passes_tile(x, c, s), w,
+                         preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("token_tile", "n_tile",
+                                             "interpret"))
+def goft_linear_fused_kernel(x2: jnp.ndarray, cos_k: jnp.ndarray,
+                             sin_k: jnp.ndarray, w: jnp.ndarray,
+                             token_tile: int = DEFAULT_TOKEN_TILE,
+                             n_tile: int = DEFAULT_N_TILE,
+                             interpret: bool = None) -> jnp.ndarray:
+    """x2: (T, K) activations, cos_k/sin_k: (P, K) per-lane expanded
+    coefficients, w: (K, N) -> (T, N) fp32 (callers cast).
+    T % token_tile == N % n_tile == 0 (ops.py pads/picks); K is un-tiled
+    (odd passes wrap around the full width).  interpret=None
+    auto-detects: compiled on TPU, interpreted elsewhere."""
+    interpret = resolve_interpret(interpret)
+    t, k_dim = x2.shape
+    n = w.shape[1]
+    grid = (t // token_tile, n // n_tile)
+    record_launch("goft_linear_fused", grid,
+                  {"token": token_tile, "n": n_tile},
+                  t=t, k=k_dim, n=n, p=cos_k.shape[0])
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((token_tile, k_dim), lambda i, j: (i, 0)),
+            pl.BlockSpec(cos_k.shape, lambda i, j: (0, 0)),
+            pl.BlockSpec(sin_k.shape, lambda i, j: (0, 0)),
+            pl.BlockSpec((k_dim, n_tile), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((token_tile, n_tile), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((t, n), jnp.float32),
+        interpret=interpret,
+    )(x2, cos_k, sin_k, w)

@@ -32,8 +32,11 @@ from repro.core import cayley as _cayley
 from repro.core import skew as _skew
 from repro.kernels import ref as kref
 from repro.kernels import runtime as _runtime
-from repro.kernels.block_oft_apply import block_oft_apply_kernel
+from repro.kernels.block_oft_apply import (block_oft_apply_kernel,
+                                           multi_stage_rotate_kernel)
+from repro.kernels.boft_linear_fused import boft_linear_fused_kernel
 from repro.kernels.cayley_neumann import cayley_neumann_kernel
+from repro.kernels.goft_linear_fused import goft_linear_fused_kernel
 from repro.kernels.hoft_linear_fused import hoft_linear_fused_kernel
 from repro.kernels.nf4_dequant import nf4_dequant_kernel
 from repro.kernels.oftv2_linear_bwd import oftv2_linear_bwd_kernel
@@ -355,6 +358,116 @@ def _hlf_bwd(res, g):
 
 
 hoft_linear_fused.defvjp(_hlf_fwd, _hlf_bwd)
+
+
+# ----------------------------------------------------- fused BOFT linear ----
+def _boft_strides(rot_stages: jnp.ndarray) -> tuple:
+    from repro.core.boft import stage_strides
+    return stage_strides(rot_stages.shape[0])
+
+
+def _boft_fused_raw(x: jnp.ndarray, rot_stages: jnp.ndarray,
+                    w: jnp.ndarray) -> jnp.ndarray:
+    x2, lead, t = _flatten_tokens(x)
+    k_dim, n = w.shape
+    # k_align=1: the kernel takes the full K per program (the butterfly
+    # couples all blocks), so the k tile is unused
+    token_tile, t_pad, n_tile, _ = _fused_tiles(t, k_dim, n, 1)
+    if t_pad != t:
+        x2 = jnp.pad(x2, ((0, t_pad - t), (0, 0)))
+    y2 = boft_linear_fused_kernel(x2, rot_stages, w,
+                                  _boft_strides(rot_stages),
+                                  token_tile=token_tile, n_tile=n_tile,
+                                  interpret=_interpret())
+    return y2[:t].astype(x.dtype).reshape(lead + (n,))
+
+
+@jax.custom_vjp
+def boft_linear_fused(x: jnp.ndarray, rot_stages: jnp.ndarray,
+                      w: jnp.ndarray) -> jnp.ndarray:
+    """y = (x @ B_1..B_s) @ W in one Pallas kernel: every butterfly
+    stage's rotated activations stay in VMEM, never HBM.  x: (..., K),
+    rot_stages: (s, K//b, b, b), w: (K, N) -> (..., N).
+
+    The backward is the jnp reference VJP (no fused bwd kernel --
+    ``repro.methods`` reports supports_fused_vjp=False for boft), so
+    training works everywhere while only the forward hot path is fused."""
+    return _boft_fused_raw(x, rot_stages, w)
+
+
+def _blf_fwd(x, rot_stages, w):
+    return _boft_fused_raw(x, rot_stages, w), (x, rot_stages, w)
+
+
+def _blf_bwd(res, g):
+    x, rot_stages, w = res
+    _, vjp = jax.vjp(kref.boft_linear_ref, x, rot_stages, w)
+    return vjp(g)
+
+
+boft_linear_fused.defvjp(_blf_fwd, _blf_bwd)
+
+
+def boft_rotate(x: jnp.ndarray, rot_stages: jnp.ndarray) -> jnp.ndarray:
+    """Rotate-only multi-stage butterfly on (..., K) -- the Pallas path of
+    BOFT's sharded forward (rotate the gathered full-width activations in
+    VMEM, then each shard slices its K-slab for the local matmul).  No
+    custom VJP: the sharded method builds its own backward from the jnp
+    oracle so its collective set stays exactly the declared budget."""
+    s, rb, b, _ = rot_stages.shape
+    x2, lead, t = _flatten_tokens(x)
+    t_pad = _round_up(max(t, 1), 8)
+    if t_pad != t:
+        x2 = jnp.pad(x2, ((0, t_pad - t), (0, 0)))
+    token_tile = _pick_tile(t_pad, [256, 128, 64, 32, 16, 8])
+    y3 = multi_stage_rotate_kernel(x2.reshape(t_pad, rb, b), rot_stages,
+                                   _boft_strides(rot_stages),
+                                   token_tile=token_tile,
+                                   interpret=_interpret())
+    return y3.reshape(t_pad, rb * b)[:t].reshape(x.shape)
+
+
+# ----------------------------------------------------- fused GOFT linear ----
+def _goft_fused_raw(x: jnp.ndarray, thetas: jnp.ndarray,
+                    w: jnp.ndarray) -> jnp.ndarray:
+    from repro.core.goft import expand_pass_coeffs
+    x2, lead, t = _flatten_tokens(x)
+    k_dim, n = w.shape
+    # k_align=1: full-K stripe (odd passes wrap around the whole width)
+    token_tile, t_pad, n_tile, _ = _fused_tiles(t, k_dim, n, 1)
+    if t_pad != t:
+        x2 = jnp.pad(x2, ((0, t_pad - t), (0, 0)))
+    cos_k, sin_k = expand_pass_coeffs(thetas)
+    y2 = goft_linear_fused_kernel(x2, cos_k, sin_k, w,
+                                  token_tile=token_tile, n_tile=n_tile,
+                                  interpret=_interpret())
+    return y2[:t].astype(x.dtype).reshape(lead + (n,))
+
+
+@jax.custom_vjp
+def goft_linear_fused(x: jnp.ndarray, thetas: jnp.ndarray,
+                      w: jnp.ndarray) -> jnp.ndarray:
+    """y = (x @ G_1..G_p) @ W in one Pallas kernel: every Givens pass
+    stays in VMEM, never HBM.  x: (..., K), thetas: (p, K//2) angle
+    params, w: (K, N) -> (..., N).
+
+    The backward is the jnp reference VJP (supports_fused_vjp=False),
+    differentiating through the trig-free coefficient expansion so
+    d(theta) is exact."""
+    return _goft_fused_raw(x, thetas, w)
+
+
+def _glf_fwd(x, thetas, w):
+    return _goft_fused_raw(x, thetas, w), (x, thetas, w)
+
+
+def _glf_bwd(res, g):
+    x, thetas, w = res
+    _, vjp = jax.vjp(kref.goft_linear_ref, x, thetas, w)
+    return vjp(g)
+
+
+goft_linear_fused.defvjp(_glf_fwd, _glf_bwd)
 
 
 # ------------------------------------------- multi-adapter fused linears ----

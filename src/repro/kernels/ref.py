@@ -42,6 +42,33 @@ def hoft_linear_ref(x: jnp.ndarray, v: jnp.ndarray,
     return (xr @ w.astype(jnp.float32)).astype(x.dtype)
 
 
+def boft_apply_ref(x: jnp.ndarray, rot_stages: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., d) through the s-stage butterfly; rot_stages: (s, r, b, b)."""
+    from repro.core import boft as _boft
+    return _boft.boft_apply(x, rot_stages)
+
+
+def boft_linear_ref(x: jnp.ndarray, rot_stages: jnp.ndarray,
+                    w: jnp.ndarray) -> jnp.ndarray:
+    """Fused BOFT linear oracle: (x @ B_1..B_s) @ W, fp32 accumulate."""
+    xr = boft_apply_ref(x.astype(jnp.float32),
+                        rot_stages.astype(jnp.float32))
+    return (xr @ w.astype(jnp.float32)).astype(x.dtype)
+
+
+def goft_apply_ref(x: jnp.ndarray, thetas: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., d) through p brick-wall Givens passes; thetas: (p, d/2)."""
+    from repro.core import goft as _goft
+    return _goft.goft_apply(x, thetas)
+
+
+def goft_linear_ref(x: jnp.ndarray, thetas: jnp.ndarray,
+                    w: jnp.ndarray) -> jnp.ndarray:
+    """Fused GOFT linear oracle: (x @ G_1..G_p) @ W, fp32 accumulate."""
+    xr = goft_apply_ref(x.astype(jnp.float32), thetas)
+    return (xr @ w.astype(jnp.float32)).astype(x.dtype)
+
+
 def oftv2_linear_ref(x: jnp.ndarray, r_blocks: jnp.ndarray,
                      w: jnp.ndarray) -> jnp.ndarray:
     """Fused OFTv2 linear oracle: (x @ blockdiag(R)) @ W, fp32 accumulate."""

@@ -4,8 +4,8 @@ The paper's reformulation is method-shaped: an adapter method is an
 orthogonal (or low-rank) transform plus the capabilities the serving /
 training system can exploit.  This package owns that shape --
 ``AdapterMethod`` is the protocol, ``register`` the entry point, and the
-built-in methods (OFTv2/QOFT, OFTv1, LoRA, HOFT, none) are ordinary
-registrants.  All adapter-kind dispatch in the framework is a query
+built-in methods (OFTv2/QOFT, OFTv1, LoRA, HOFT, BOFT, GOFT, none) are
+ordinary registrants.  All adapter-kind dispatch in the framework is a query
 against this registry; ``benchmarks/check_dispatch.py`` (CI-gated) fails
 the build if ``acfg.kind == ...`` string dispatch reappears anywhere else
 under ``src/repro``.
@@ -22,6 +22,8 @@ from repro.methods import none as _none      # noqa: F401,E402
 from repro.methods import oft as _oft        # noqa: F401,E402
 from repro.methods import lora as _lora      # noqa: F401,E402
 from repro.methods import hoft as _hoft      # noqa: F401,E402
+from repro.methods import boft as _boft      # noqa: F401,E402
+from repro.methods import goft as _goft      # noqa: F401,E402
 
 __all__ = ["AdapterMethod", "available", "capability_matrix",
            "capability_matrix_md", "get", "register", "supporting"]

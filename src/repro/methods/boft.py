@@ -1,0 +1,208 @@
+"""BOFT (butterfly orthogonal finetuning) as a registered
+``AdapterMethod`` -- the method that deliberately BREAKS the "rotations
+shard like the weight, zero resharding" invariant.
+
+Math in ``repro.core.boft``; fused forward kernel in
+``repro.kernels.boft_linear_fused`` (multi-stage rotate-in-VMEM + matmul;
+its VJP is the jnp reference, so ``supports_fused_vjp`` stays False).
+
+Why BOFT cannot shard collective-free: the butterfly's whole point is
+cross-block mixing, so a K-sharded linear (o/down under TP) cannot rotate
+its local block range independently -- stage k >= 2 exchanges features
+with blocks that live on OTHER shards.  The sharded algebra here is
+gather -> rotate -> slice:
+
+    fwd:  x_full  = all_gather(x_local)            [budgeted all_gather]
+          xr_full = butterfly(x_full)              (rotate-only Pallas
+                                                    kernel, all stages in
+                                                    VMEM)
+          y       = psum(xr_full[my K-slab] @ W_local)   [budgeted psum]
+    bwd:  gW_full = all_gather(g @ W_local^T)      [budgeted all_gather]
+          (dx_full, dRot) = VJP(butterfly)(gW_full) on re-gathered x
+          dx      = dx_full[my K-slab]; dRot psum'd over data/n axes
+
+Both directions are HAND-WRITTEN shard_map bodies under one custom_vjp:
+letting jax transpose the forward's ``all_gather`` would emit a
+``psum_scatter`` -- a collective family OUTSIDE this method's declared
+budget -- so the backward re-gathers instead, keeping the emitted set
+exactly ``shard_collectives = ("psum", "all_gather")``.  The
+``repro.analysis`` collective-budget rules (jaxpr + compiled HLO) assert
+the fused sharded train step against this declaration; remove
+"all_gather" from it and both rules fail (tests/test_boft_goft.py proves
+it).  The stage rotations themselves replicate: they are tiny
+(s * K * b floats) and every shard needs ALL of them -- the exact
+opposite of OFTv2's block-aligned sharding, which is the point.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.core import boft as boft_lib
+from repro.core import skew
+from repro.methods.base import AdapterMethod, register
+from repro.methods.oft import _fit_axis
+
+
+@register
+class BOFTMethod(AdapterMethod):
+    kind = "boft"
+    stochastic_init = False          # zero skew => exact identity at init
+    supports_fused_forward = True    # boft_linear_fused (dense W)
+    supports_fused_vjp = False       # backward = jnp reference VJP
+    supports_hoisted_rotations = False
+    supports_multi_tenant = False
+    supports_sharding = True
+    # the first non-psum budget: the butterfly exchange is an all_gather
+    # of the K-sharded activations (fwd) and of gW (bwd) -- declared HERE
+    # so the repro.analysis collective-budget rules allow exactly this
+    # and nothing more (no all-to-all, no psum_scatter).
+    shard_collectives = ("psum", "all_gather")
+
+    def init(self, key, name, d_in, d_out, acfg, dtype=jnp.float32):
+        # key accepted (uniform signature) and unused: deterministic init
+        return boft_lib.boft_init(d_in, acfg, dtype=dtype)
+
+    def param_count(self, name, d_in, d_out, acfg) -> int:
+        return boft_lib.boft_param_count(d_in, acfg)
+
+    def param_defs(self, name, d_in, d_out, acfg, model_axis_size=1):
+        from repro.models.spec import ParamDef
+        r = boft_lib.num_blocks(d_in, acfg)
+        s = boft_lib.num_stages(d_in, acfg)
+        # replicated on purpose: every shard needs every stage's blocks
+        # (cross-block mixing), and the tensor is tiny -- see module doc.
+        return {"boft_q": ParamDef((s, r, skew.pack_dim(acfg.block_size)),
+                                   (None, None, None), "zeros")}
+
+    def apply(self, x, w, adapter, acfg):
+        return boft_lib.boft_linear(x, adapter, acfg, w)
+
+    def fusion_mode(self, acfg, qcfg, qstate_keys=()) -> str:
+        # the BOFT kernel rotates into a DENSE weight tile: quantized
+        # bases are dequantized first (no in-kernel dequant variant yet)
+        return "boft_fused" if acfg.fuse_linear else "unfused"
+
+    def merge(self, w, adapter, acfg):
+        return boft_lib.boft_merge(w, adapter, acfg)
+
+    # ------------------------------------------- mesh-sharded execution --
+    def check_sharding(self, name, d_in, d_out, acfg, qcfg, k_shards,
+                       n_shards):
+        # config-time validation first: stage/block bounds fail here, not
+        # mid-trace (the uniform ISSUE-10 pattern)
+        boft_lib.num_stages(d_in, acfg)
+        if k_shards > 1 and d_in % k_shards:
+            raise ValueError(
+                f"{name}: BOFT in-features {d_in} not divisible by the "
+                f"{k_shards}-way model axis (the gather-rotate-slice path "
+                f"slices equal K-slabs)")
+        if n_shards > 1 and d_out % n_shards:
+            raise ValueError(
+                f"{name}: out-features {d_out} not divisible by the "
+                f"{n_shards}-way model axis")
+
+    def shard_forward(self, x, qstate, adapter, acfg, qcfg, shard,
+                      adapter_id=None):
+        mode = self.fusion_mode(acfg, qcfg, qstate.keys())
+        if mode == "unfused":
+            # jnp path: GSPMD partitions plain einsums/matmuls fine
+            return self.forward(x, qstate, adapter, acfg, qcfg)
+        from repro.quant.common import dequantize_linear
+        w = dequantize_linear(qstate, qcfg, x.dtype)
+        rot = boft_lib.build_stage_rotations(adapter, acfg)
+        mesh = shard.mesh
+        data = _fit_axis(mesh, shard.data, x.shape[0])
+        k_ax = _fit_axis(mesh, shard.k, w.shape[0])
+        n_ax = _fit_axis(mesh, shard.n, w.shape[1])
+        fn = _sharded_boft_fused(mesh, data, k_ax, n_ax, x.ndim)
+        return fn(x, rot, w)
+
+    def shard_specs(self, tree, shard):
+        """BOFT adapter params replicate on the mesh (every shard needs
+        every stage; the tensor is tiny), so every leaf's spec is empty."""
+        if isinstance(tree, dict):
+            return {k: self.shard_specs(v, shard) for k, v in tree.items()}
+        return P()
+
+
+# ---------------------------------------------------------------------------
+# The mesh-sharded fused linear: gather -> rotate-in-VMEM -> slice -> matmul.
+# lru_cached on the (mesh, resolved axes, rank) key like the OFTv2 factories
+# so repeated traces reuse one callable.
+# ---------------------------------------------------------------------------
+def _sliced(full, ax_name, local_dim: int, axis: int):
+    """This shard's slab of a gathered/full-width tensor."""
+    start = jax.lax.axis_index(ax_name) * local_dim
+    return jax.lax.dynamic_slice_in_dim(full, start, local_dim, axis=axis)
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_boft_fused(mesh, data, k_ax, n_ax, nd: int):
+    """(x, rot_stages, w) -> y; frozen W; custom_vjp with hand-written
+    shard_map bodies so the collective set is exactly the declared
+    ("psum", "all_gather") budget in BOTH directions (module doc)."""
+    from repro.kernels import ops as kops
+    from repro.kernels import ref as kref
+    mid = (None,) * (nd - 2)
+    xs = P(data, *mid, k_ax)
+    rs = P(None, None, None, None)     # (s, r, b, b) replicated
+    ws, ys = P(k_ax, n_ax), P(data, *mid, n_ax)
+    f32 = jnp.float32
+
+    def fwd_body(x, rot, w):
+        if k_ax is None:
+            # full-width x on every shard: the whole thing is ONE fused
+            # kernel against the local (K, N_loc) weight slab
+            return kops._boft_fused_raw(x, rot, w)
+        k_loc = x.shape[-1]
+        x_full = jax.lax.all_gather(x, k_ax, axis=nd - 1, tiled=True)
+        xr = _sliced(kops.boft_rotate(x_full, rot), k_ax, k_loc, nd - 1)
+        y = jnp.einsum("...k,kn->...n", xr.astype(f32), w.astype(f32))
+        return jax.lax.psum(y, k_ax).astype(x.dtype)
+
+    fwd = shard_map(fwd_body, mesh=mesh, in_specs=(xs, rs, ws),
+                    out_specs=ys, check_rep=False)
+
+    def bwd_body(g, x, rot, w):
+        gw = jnp.einsum("...n,kn->...k", g.astype(f32), w.astype(f32))
+        if k_ax is None:
+            _, vjp = jax.vjp(kref.boft_apply_ref, x, rot)
+            dx, drot = vjp(gw.astype(x.dtype))
+            if n_ax is not None:
+                dx = jax.lax.psum(dx, n_ax)
+                drot = jax.lax.psum(drot, n_ax)
+        else:
+            k_loc = x.shape[-1]
+            # re-gather instead of transposing the forward's gather: jax
+            # would transpose all_gather into psum_scatter -- off-budget
+            gw_full = jax.lax.all_gather(gw, k_ax, axis=nd - 1, tiled=True)
+            x_full = jax.lax.all_gather(x, k_ax, axis=nd - 1, tiled=True)
+            _, vjp = jax.vjp(kref.boft_apply_ref, x_full, rot)
+            dx_full, drot = vjp(gw_full.astype(x.dtype))
+            dx = _sliced(dx_full, k_ax, k_loc, nd - 1)
+        if data is not None:
+            drot = jax.lax.psum(drot, data)
+        return dx, drot
+
+    bwd = shard_map(bwd_body, mesh=mesh, in_specs=(ys, xs, rs, ws),
+                    out_specs=(xs, rs), check_rep=False)
+
+    @jax.custom_vjp
+    def fused(x, rot, w):
+        return fwd(x, rot, w)
+
+    def fused_fwd(x, rot, w):
+        return fwd(x, rot, w), (x, rot, w)
+
+    def fused_bwd(res, g):
+        x, rot, w = res
+        dx, drot = bwd(g, x, rot, w)
+        return dx, drot, jnp.zeros_like(w)   # frozen base
+
+    fused.defvjp(fused_fwd, fused_bwd)
+    return fused

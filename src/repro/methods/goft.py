@@ -1,0 +1,55 @@
+"""GOFT (Givens-rotation quasi-orthogonal finetuning) as a registered
+``AdapterMethod`` -- the sparse limit of the structured-orthogonality
+family.
+
+Math in ``repro.core.goft``; fused forward kernel in
+``repro.kernels.goft_linear_fused`` (all brick-wall passes on the
+activation tile in VMEM, then the matmul; its VJP is the jnp reference,
+so ``supports_fused_vjp`` stays False).  No hoisting (the trig-free
+coefficient expansion is O(p d) -- cheaper than storing it), no
+multi-tenant routing, no sharded path yet: Givens pairs straddle any
+K-shard boundary (the odd passes wrap clear around the feature dim), so
+a correct sharded GOFT needs the same gather-rotate-slice algebra as
+BOFT -- left for when a workload wants it; until then the base hooks
+raise loudly.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import goft as goft_lib
+from repro.methods.base import AdapterMethod, register
+
+
+@register
+class GOFTMethod(AdapterMethod):
+    kind = "goft"
+    stochastic_init = False          # zero thetas => exact identity at init
+    supports_fused_forward = True    # goft_linear_fused (dense W)
+    supports_fused_vjp = False       # backward = jnp reference VJP
+    supports_hoisted_rotations = False
+    supports_multi_tenant = False
+    supports_sharding = False
+
+    def init(self, key, name, d_in, d_out, acfg, dtype=jnp.float32):
+        # key accepted (uniform signature) and unused: deterministic init
+        return goft_lib.goft_init(d_in, acfg, dtype=dtype)
+
+    def param_count(self, name, d_in, d_out, acfg) -> int:
+        return goft_lib.goft_param_count(d_in, acfg)
+
+    def param_defs(self, name, d_in, d_out, acfg, model_axis_size=1):
+        from repro.models.spec import ParamDef
+        p = goft_lib.num_passes(d_in, acfg)
+        return {"thetas": ParamDef((p, d_in // 2), (None, None), "zeros")}
+
+    def apply(self, x, w, adapter, acfg):
+        return goft_lib.goft_linear(x, adapter, acfg, w)
+
+    def fusion_mode(self, acfg, qcfg, qstate_keys=()) -> str:
+        # the GOFT kernel rotates into a DENSE weight tile: quantized
+        # bases are dequantized first (no in-kernel dequant variant yet)
+        return "goft_fused" if acfg.fuse_linear else "unfused"
+
+    def merge(self, w, adapter, acfg):
+        return goft_lib.goft_merge(w, adapter, acfg)

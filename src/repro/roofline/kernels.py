@@ -117,6 +117,36 @@ def _nf4_dequant(k, n, quant_bs, dt=4, **_):
     return {"flops": k * n, "hbm_bytes": by, "hbm_bytes_unfused": by}
 
 
+def _multi_stage_rotate(t, k, b, s, dt=4, **_):
+    # s butterfly stages fused on the tile: the permutes are reshapes in
+    # VMEM, so fused traffic is one x round-trip + the stage rotations;
+    # unfused stages each rotated (T, K) intermediate through HBM
+    r_bytes = s * (k // b) * b * b * dt
+    fused = 2 * t * k * dt + r_bytes
+    return {"flops": s * 2 * t * k * b, "hbm_bytes": fused,
+            "hbm_bytes_unfused": fused + 2 * (s - 1) * t * k * dt}
+
+
+def _boft_linear(t, k, n, b, s, dt=4, **_):
+    # s block-rotation stages (2TKb each) + dense matmul
+    r_bytes = s * (k // b) * b * b * dt
+    fused = t * k * dt + r_bytes + k * n * dt + t * n * dt
+    # unfused: every stage's rotated activations round-trip through HBM
+    return {"flops": s * 2 * t * k * b + 2 * t * k * n,
+            "hbm_bytes": fused,
+            "hbm_bytes_unfused": fused + 2 * s * t * k * dt}
+
+
+def _goft_linear(t, k, n, p, dt=4, **_):
+    # p brick-wall Givens passes (4 flops/lane) + dense matmul; the
+    # per-lane coefficients are 2 (p, K) fp32 reads
+    coeff = 2 * p * k * dt
+    fused = t * k * dt + coeff + k * n * dt + t * n * dt
+    return {"flops": p * 4 * t * k + 2 * t * k * n,
+            "hbm_bytes": fused,
+            "hbm_bytes_unfused": fused + 2 * p * t * k * dt}
+
+
 def _hoft_linear(t, k, n, m, dt=4, **_):
     # m full-width Householder reflections (4TK each) + dense matmul
     fused = t * k * dt + m * k * dt + k * n * dt + t * n * dt
@@ -137,6 +167,9 @@ KERNEL_COSTS: Dict[str, Callable[..., dict]] = {
     "cayley_neumann": _cayley_neumann,
     "nf4_dequant": _nf4_dequant,
     "hoft_linear_fused": _hoft_linear,
+    "multi_stage_rotate": _multi_stage_rotate,
+    "boft_linear_fused": _boft_linear,
+    "goft_linear_fused": _goft_linear,
 }
 
 

@@ -274,6 +274,64 @@ def test_collective_budget_defaults_from_method_registry():
     assert core.get("collective-budget").check(prog_bad)
 
 
+def test_budget_resolves_adapter_kind_through_registry():
+    """The rules resolve `adapter_kind` metadata themselves (the
+    production fixtures no longer pre-resolve the budget), so the jaxpr
+    and HLO layers cannot disagree about a method's budget."""
+    from repro.analysis.rules_jaxpr import resolve_budget
+    assert resolve_budget({"allowed_collectives": ("psum",)}) == (
+        frozenset({"psum"}), None)
+    assert resolve_budget({}) == (None, None)
+    assert resolve_budget({"adapter_kind": "oftv2"}) == (
+        frozenset({"psum"}), None)
+    allowed, reason = resolve_budget({"adapter_kind": "boft"})
+    assert allowed == frozenset({"psum", "all_gather"}) and reason is None
+
+
+def test_budget_unresolvable_kind_is_clean_finding_not_crash():
+    """ISSUE-10 satellite: an unregistered kind (or one without the
+    `shards` capability, like kind="none") used to escape as the
+    registry's ValueError and kill the whole analyzer run; now each
+    budget rule reports it as an ordinary severity-error Finding."""
+    trace_kw = dict(axis_env=[("model", 2)])
+    jx = jaxprs.trace(lambda x: jax.lax.psum(x, "model"), jnp.ones((4,)),
+                      **trace_kw)
+    rule = core.get("collective-budget")
+    for kind, frag in (("principal-subspace", "cannot resolve"),
+                       ("none", "no `shards` capability"),
+                       ("goft", "no `shards` capability")):
+        findings = rule.check(core.Program(
+            f"p/{kind}", [jx], meta={"adapter_kind": kind,
+                                     "model_shards": 2}))
+        assert len(findings) == 1 and findings[0].severity == core.ERROR
+        assert frag in findings[0].message, findings[0]
+    hlo_rule = core.get("hlo-collective-budget")
+    findings = hlo_rule.check(core.Program(
+        "p/hlo", [], hlo="HloModule m\n",
+        meta={"adapter_kind": "principal-subspace"}))
+    assert len(findings) == 1 and "cannot resolve" in findings[0].message
+
+
+def test_checks_api_surfaces_bad_kind_as_assertion():
+    """The one-line test wrappers go through the same resolution: a bad
+    `kind` raises AssertionError WITH the finding, never ValueError."""
+    from repro.config.base import ModelConfig
+    cfg = ModelConfig(name="t", num_layers=1, d_model=16, num_heads=2,
+                      num_kv_heads=1, d_ff=32, vocab_size=32)
+    with pytest.raises(AssertionError, match="cannot resolve"):
+        analysis.assert_collective_budget(lambda x: x * 2.0,
+                                          (jnp.ones((4,)),), 1,
+                                          kind="principal-subspace")
+    with pytest.raises(AssertionError, match="no `shards` capability"):
+        analysis.assert_no_w_gathers_hlo(lambda x: x * 2.0,
+                                         (jnp.ones((4,)),), cfg,
+                                         kind="none")
+    # explicit allowed= still bypasses resolution entirely
+    analysis.assert_collective_budget(lambda x: x * 2.0, (jnp.ones((4,)),),
+                                      1, kind="principal-subspace",
+                                      allowed=())
+
+
 # ---------------------------------------------------------------------------
 # wrappers keep their historical CLIs / exit codes
 # ---------------------------------------------------------------------------

@@ -28,7 +28,10 @@ from repro.core import adapter as ad
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
 
-D_IN, D_OUT = 48, 33          # misaligned d_out on purpose
+# misaligned d_out on purpose; d_in must satisfy the STRICTEST registered
+# validator (BOFT: a power-of-two multiple of the block size) so the
+# conformance sweep covers every method with one shape
+D_IN, D_OUT = 64, 33
 PARAM_KINDS = [k for k in methods.available() if methods.get(k).has_params]
 
 
@@ -54,12 +57,13 @@ def _leaf_count(tree) -> int:
 # ---------------------------------------------------------------- registry --
 def test_unknown_kind_fails_loudly():
     with pytest.raises(ValueError, match="unknown adapter kind"):
-        methods.get("boft")
+        methods.get("principal-subspace")
     with pytest.raises(ValueError, match="registered"):
-        methods.get("boft")  # message lists what IS registered
+        methods.get("principal-subspace")  # message lists what IS registered
     # the built-ins are present; a newly registered method must NOT break
     # this (the suite picks it up from the registry automatically)
-    assert set(PARAM_KINDS) >= {"hoft", "lora", "oftv1", "oftv2"}
+    assert set(PARAM_KINDS) >= {"boft", "goft", "hoft", "lora", "oftv1",
+                                "oftv2"}
 
 
 def test_reregistering_a_kind_is_an_error():
